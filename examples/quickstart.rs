@@ -1,0 +1,40 @@
+//! Quickstart: prune a Mamba checkpoint with SparseSSM in ~40 lines.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads (or trains once and caches) the m130 checkpoint, runs Algorithm 1
+//! at 50% SSM sparsity, and compares dense vs pruned quality.
+
+use anyhow::Result;
+use sparsessm::coordinator::{Pipeline, SsmMethod};
+use sparsessm::tasks::Suite;
+
+fn main() -> Result<()> {
+    // fast=true keeps the demo snappy (fewer eval windows / items).
+    let pipe = Pipeline::new("artifacts", "runs", true)?;
+    let cfg = "m130";
+
+    // 1. a trained checkpoint (cached under runs/ after the first call)
+    let dense = pipe.ensure_trained(cfg)?;
+    let layout = pipe.layout(cfg)?;
+
+    // 2. Phase-1 calibration: Σ h² statistics from the fused Pallas kernel
+    let stats = pipe.collect_ssm_stats(&layout, &dense, 16)?;
+
+    // 3. Algorithm 1: per-time-step OBS candidates + frequency voting
+    let mut pruned = dense.clone();
+    pipe.prune_ssm(&mut pruned, SsmMethod::SparseSsm, 0.5, &stats)?;
+    println!("SSM sparsity: {:.1}%", 100.0 * pruned.ssm_sparsity());
+
+    // 4. evaluate
+    let ev = pipe.evaluator(layout);
+    let corpora = pipe.eval_corpora();
+    for (label, params) in [("dense", &dense), ("sparsessm@50%", &pruned)] {
+        let ppl = ev.perplexity(params, &corpora[0])?;
+        let acc = ev.zero_shot(params, Suite::FreqEasy)?;
+        println!("{label:>14}: wiki-sub ppl {ppl:7.2}   freq-easy acc {acc:5.1}%");
+    }
+    Ok(())
+}

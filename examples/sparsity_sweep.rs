@@ -1,0 +1,39 @@
+//! Sparsity sweep (the Figure-3 shape): SSM-only pruning of m130 across
+//! sparsity levels, SparseSSM vs MP — shows where the one-shot methods
+//! diverge as the budget tightens.
+//!
+//! ```bash
+//! cargo run --release --example sparsity_sweep [-- --config m130]
+//! ```
+
+use anyhow::Result;
+use sparsessm::coordinator::{Pipeline, SsmMethod};
+use sparsessm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &[])?;
+    let cfg = args.get_or("config", "m130").to_string();
+    let pipe = Pipeline::new("artifacts", "runs", true)?;
+    let params = pipe.ensure_trained(&cfg)?;
+    let layout = pipe.layout(&cfg)?;
+    let stats = pipe.collect_ssm_stats(&layout, &params, 16)?;
+    let ev = pipe.evaluator(layout.clone());
+    let corpora = pipe.eval_corpora();
+
+    let dense = ev.perplexity(&params, &corpora[0])?;
+    println!("{cfg} dense wiki-sub ppl: {dense:.2}\n");
+    println!("{:>9} {:>14} {:>14}", "sparsity", "MP ppl", "SparseSSM ppl");
+    for pct in [30, 40, 50, 60, 70, 80] {
+        let s = pct as f64 / 100.0;
+        let mut row = format!("{pct:>8}%");
+        for method in [SsmMethod::Mp, SsmMethod::SparseSsm] {
+            let mut p = params.clone();
+            pipe.prune_ssm(&mut p, method, s, &stats)?;
+            let ppl = ev.perplexity(&p, &corpora[0])?;
+            row.push_str(&format!(" {ppl:>14.2}"));
+        }
+        println!("{row}");
+    }
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Structured pruning = real speedup (paper §4.3, Tables 3 & 5).
+//!
+//! Unlike mask-based sparsity, SparseSSM's structured mode drops whole
+//! state columns and *resizes* the model: this example (1) times the bare
+//! SSM module at d_state 16/12/8 through the AOT `ssm_only` artifacts, and
+//! (2) runs the column-pruned m370 through its genuinely smaller seq_nll
+//! artifact to show accuracy holds.
+//!
+//! ```bash
+//! cargo run --release --example structured_speedup
+//! ```
+
+use anyhow::Result;
+use sparsessm::benchx;
+use sparsessm::coordinator::Pipeline;
+use sparsessm::runtime::lit_f32;
+use sparsessm::rngx::Pcg;
+
+fn main() -> Result<()> {
+    let pipe = Pipeline::new("artifacts", "runs", true)?;
+    let layout = pipe.layout("m370")?;
+    let meta = &layout.meta;
+    let (b, l, di) = (meta.batch_eval, meta.seq_len, meta.d_inner);
+    let mut rng = Pcg::seeded(3);
+
+    println!("== native SSM scan wall-clock vs d_state (m370 dims: B={b} L={l} D={di}) ==");
+    let mut dense = 0.0;
+    for (n, label) in [(16usize, "dense"), (12, "25% structured"), (8, "50% structured")] {
+        let mk = |rng: &mut Pcg, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.normal() as f32).collect()
+        };
+        let a: Vec<f32> = (0..di * n).map(|_| -(0.1 + rng.uniform()) as f32).collect();
+        let delta: Vec<f32> =
+            (0..b * l * di).map(|_| (0.01 + 0.1 * rng.uniform()) as f32).collect();
+        let (bm, cm) = (mk(&mut rng, b * l * n), mk(&mut rng, b * l * n));
+        let (x, dp) = (mk(&mut rng, b * l * di), mk(&mut rng, di));
+        let inp = sparsessm::ssm::SsmInputs {
+            a: &a,
+            delta: &delta,
+            b: &bm,
+            c: &cm,
+            x: &x,
+            dp: &dp,
+            dims: (b, l, di, n),
+        };
+        let r = benchx::bench_for(label, 800.0, || {
+            benchx::black_box(sparsessm::ssm::selective_scan(&inp));
+        });
+        if n == 16 {
+            dense = r.p50_ms;
+        }
+        println!(
+            "  d_state={n:<2} ({label:<16}) p50 {:.3} ms   speedup {:.2}x",
+            r.p50_ms,
+            dense / r.p50_ms
+        );
+    }
+
+    println!("\n== accuracy after real column surgery (m370 → d_state 8) ==");
+    let params = pipe.ensure_trained("m370")?;
+    let stats = pipe.collect_ssm_stats(&layout, &params, 16)?;
+    let reduced = pipe.prune_structured(&params, "m370_ds8", true, &stats)?;
+    let corpora = pipe.eval_corpora();
+    let ppl_dense = pipe.evaluator(layout).perplexity(&params, &corpora[0])?;
+    let ppl_small = pipe.evaluator(pipe.layout("m370_ds8")?).perplexity(&reduced, &corpora[0])?;
+    println!("  wiki-sub ppl: dense {ppl_dense:.2}  → structured-50% {ppl_small:.2}");
+    Ok(())
+}

@@ -1,0 +1,180 @@
+"""AOT driver: lower every L2 entry point to HLO *text* + layout metadata.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Output tree (consumed by rust/src/runtime/artifact.rs):
+
+  artifacts/
+    manifest.json                       # configs + standalone executables
+    <cfg>/layout.json                   # param offsets + executable I/O sigs
+    <cfg>/{init,train_step,seq_nll,ssm_stats,ffn_hessian}.hlo.txt
+    m370_ds{12,8}/{layout.json,seq_nll.hlo.txt}      # structured variants
+    ssm_only_n{16,12,8}.hlo.txt         # bare-SSM timing (Table 3)
+
+Python runs ONCE (`make artifacts`); the Rust binary is self-contained
+afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+FULL_CONFIGS = ["m130", "m370", "m790", "m1400"]
+VARIANT_CONFIGS = ["m370_ds12", "m370_ds8"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args):
+    return [
+        {"dtype": str(a.dtype), "shape": list(a.shape)} for a in args
+    ]
+
+
+def lower_and_write(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *args)
+    leaves = jax.tree_util.tree_leaves(outs)
+    return {"inputs": _sig(args), "outputs": _sig(leaves), "hlo": os.path.basename(path)}
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def emit_config(cfg: M.ModelConfig, out_dir: str, *, full: bool) -> None:
+    d = os.path.join(out_dir, cfg.name)
+    os.makedirs(d, exist_ok=True)
+    table, total = M.param_offsets(cfg)
+    L, Bt, Be, Bc = cfg.seq_len, cfg.batch_train, cfg.batch_eval, cfg.batch_calib
+    P = total
+    executables = {}
+
+    print(f"[aot] {cfg.name}: P={P} layers={cfg.n_layer} d_model={cfg.d_model}")
+
+    executables["seq_nll"] = lower_and_write(
+        functools.partial(M.seq_nll, cfg),
+        (f32(P), i32(Be, L + 1), f32(Be, L)),
+        os.path.join(d, "seq_nll.hlo.txt"),
+    )
+    if full:
+        executables["init"] = lower_and_write(
+            functools.partial(M.init_params, cfg),
+            (i32(),),
+            os.path.join(d, "init.hlo.txt"),
+        )
+        executables["train_step"] = lower_and_write(
+            functools.partial(M.train_step, cfg),
+            (f32(P), f32(P), f32(P), f32(), f32(), i32(Bt, L + 1)),
+            os.path.join(d, "train_step.hlo.txt"),
+        )
+        executables["ssm_stats"] = lower_and_write(
+            functools.partial(M.ssm_stats, cfg),
+            (f32(P), i32(Bc, L)),
+            os.path.join(d, "ssm_stats.hlo.txt"),
+        )
+        executables["ffn_hessian"] = lower_and_write(
+            functools.partial(M.ffn_hessian, cfg),
+            (f32(P), i32(Bc, L)),
+            os.path.join(d, "ffn_hessian.hlo.txt"),
+        )
+
+    layout = {
+        "config": {
+            "name": cfg.name,
+            "n_layer": cfg.n_layer,
+            "d_model": cfg.d_model,
+            "d_inner": cfg.d_inner,
+            "d_state": cfg.d_state,
+            "dt_rank": cfg.dt_rank,
+            "d_conv": cfg.d_conv,
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "batch_train": cfg.batch_train,
+            "batch_eval": cfg.batch_eval,
+            "batch_calib": cfg.batch_calib,
+        },
+        "total_params": P,
+        "tensors": [
+            {"name": name, "offset": off, "shape": list(shape)}
+            for name, (off, shape) in table.items()
+        ],
+        "executables": executables,
+    }
+    with open(os.path.join(d, "layout.json"), "w") as f:
+        json.dump(layout, f, indent=1)
+
+
+def emit_ssm_only(out_dir: str) -> dict:
+    """Bare-SSM executables at m370 dimensions for the Table-3 timing."""
+    base = M.CONFIGS["m370"]
+    di, L, Bt = base.d_inner, base.seq_len, base.batch_eval
+    entries = {}
+    for n in (16, 12, 8):
+        name = f"ssm_only_n{n}"
+        entries[name] = lower_and_write(
+            M.ssm_only,
+            (f32(di, n), f32(Bt, L, di), f32(Bt, L, n), f32(Bt, L, n), f32(Bt, L, di), f32(di)),
+            os.path.join(out_dir, f"{name}.hlo.txt"),
+        )
+        print(f"[aot] {name}")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default=",".join(FULL_CONFIGS),
+        help="comma-separated subset of " + ",".join(FULL_CONFIGS),
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    wanted = [c for c in args.configs.split(",") if c]
+    for name in wanted:
+        emit_config(M.CONFIGS[name], args.out_dir, full=True)
+    # Structured-pruning eval variants ride along with m370.
+    if "m370" in wanted:
+        for name in VARIANT_CONFIGS:
+            emit_config(M.CONFIGS[name], args.out_dir, full=False)
+    ssm_entries = emit_ssm_only(args.out_dir)
+
+    manifest = {
+        "configs": wanted + (VARIANT_CONFIGS if "m370" in wanted else []),
+        "standalone": ssm_entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("[aot] manifest written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references used by pytest (kernel-vs-ref) and by
+the hand-derived BPTT backward pass.  They implement the selective-scan
+recurrence of Mamba's SSM module exactly as the paper states it (Eq. 1/4):
+
+    h_t = exp(delta_t * A) ⊙ h_{t-1} + (delta_t * x_t) ⊗ B_t
+    y_t = h_t · C_t + D ⊙ x_t
+
+Shapes (Bt = batch, L = seq, Dm = d_inner, N = d_state):
+    x, delta : [Bt, L, Dm]
+    A        : [Dm, N]        (A = -exp(A_log), always negative)
+    B, C     : [Bt, L, N]
+    D        : [Dm]
+    y        : [Bt, L, Dm]
+    h        : [Bt, Dm, N]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, delta, A, B, C, D):
+    """Reference selective scan via lax.scan over the time axis."""
+    Bt, L, Dm = x.shape
+    N = A.shape[1]
+
+    def step(h, inp):
+        x_t, d_t, B_t, C_t = inp  # [Bt,Dm], [Bt,Dm], [Bt,N], [Bt,N]
+        dA = jnp.exp(d_t[:, :, None] * A[None, :, :])  # [Bt,Dm,N]
+        dBx = (d_t * x_t)[:, :, None] * B_t[:, None, :]  # [Bt,Dm,N]
+        h = dA * h + dBx
+        y_t = jnp.einsum("bdn,bn->bd", h, C_t) + D[None, :] * x_t
+        return h, y_t
+
+    h0 = jnp.zeros((Bt, Dm, N), dtype=x.dtype)
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(delta, 1, 0),
+        jnp.moveaxis(B, 1, 0),
+        jnp.moveaxis(C, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def selective_scan_with_states_ref(x, delta, A, B, C, D):
+    """Like selective_scan_ref but also returns the full state sequence
+    h[Bt, L, Dm, N] (state *after* each step).  Used by the BPTT backward
+    and by scan-statistics checks."""
+    Bt, L, Dm = x.shape
+    N = A.shape[1]
+
+    def step(h, inp):
+        x_t, d_t, B_t, C_t = inp
+        dA = jnp.exp(d_t[:, :, None] * A[None, :, :])
+        dBx = (d_t * x_t)[:, :, None] * B_t[:, None, :]
+        h = dA * h + dBx
+        y_t = jnp.einsum("bdn,bn->bd", h, C_t) + D[None, :] * x_t
+        return h, (y_t, h)
+
+    h0 = jnp.zeros((Bt, Dm, N), dtype=x.dtype)
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(delta, 1, 0),
+        jnp.moveaxis(B, 1, 0),
+        jnp.moveaxis(C, 1, 0),
+    )
+    _, (ys, hs) = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), jnp.moveaxis(hs, 0, 1)
+
+
+def scan_stats_ref(x, delta, A, B, C, D):
+    """Reference for the fused scan+statistics kernel.
+
+    Returns (y, S, HN):
+      S[t, d, n]  = sum_b h_{b,t,d,n}^2      — Phase-1 statistic of
+                    SparseSSM Algorithm 1 (batch-summed squared state).
+      HN[n1, n2]  = sum_{b,t,d} h[...,n1] h[...,n2] — the hidden-state Gram
+                    matrix used as the calibration Hessian by the "naive
+                    SparseGPT on A" baseline (paper Appendix B.1)."""
+    y, hs = selective_scan_with_states_ref(x, delta, A, B, C, D)
+    S = jnp.sum(hs * hs, axis=0)  # [L, Dm, N]
+    HN = jnp.einsum("bldm,bldn->mn", hs, hs)
+    return y, S, HN
+
+
+def selective_scan_bwd_ref(res, dy):
+    """Hand-derived BPTT backward for the selective scan (paper App. A:
+    the analysis that yields Theorem 1 is exactly this reverse recurrence).
+
+    res = (x, delta, A, B, C, D) saved by the forward.
+    dy  : [Bt, L, Dm] cotangent of y.
+    Returns cotangents (dx, ddelta, dA, dB, dC, dD).
+
+    Reverse recurrence:  g_t = dy_t ⊗ C_t + a_{t+1} ⊙ g_{t+1}
+    with a_t = exp(delta_t A).  Then with u_t = delta_t x_t B_t:
+        dC_t  = Σ_d dy_{t,d} h_{t,d,:}
+        dD    = Σ_{b,t} dy ⊙ x
+        da_t  = g_t ⊙ h_{t-1}
+        dδ_t  = Σ_n (da_t ⊙ a_t) A + Σ_n g_t x_t B_t
+        dx_t  = dy_t D + Σ_n g_t δ_t B_t
+        dB_t  = Σ_d g_t δ_t x_t
+        dA    = Σ_{b,t} da_t ⊙ a_t ⊙ δ_t
+    """
+    x, delta, A, B, C, D = res
+    Bt, L, Dm = x.shape
+    N = A.shape[1]
+    # Recompute the state trajectory (memory-for-compute tradeoff chosen at
+    # AOT time; the trajectory is not a forward output).
+    _, hs = selective_scan_with_states_ref(x, delta, A, B, C, D)
+    h_prev = jnp.concatenate(
+        [jnp.zeros((Bt, 1, Dm, N), x.dtype), hs[:, :-1]], axis=1
+    )  # state entering each step
+
+    a = jnp.exp(delta[:, :, :, None] * A[None, None, :, :])  # [Bt,L,Dm,N]
+
+    def step(g_next, inp):
+        # iterate t = L-1 .. 0; g_next already includes the a_{t+1} factor
+        dy_t, C_t, a_t, hprev_t, d_t, x_t, B_t = inp
+        g = dy_t[:, :, None] * C_t[:, None, :] + g_next  # [Bt,Dm,N]
+        da = g * hprev_t
+        dA_t = jnp.sum(da * a_t * d_t[:, :, None], axis=0)  # [Dm,N]
+        ddelta_t = jnp.sum(da * a_t * A[None, :, :], axis=2) + jnp.sum(
+            g * (x_t[:, :, None] * B_t[:, None, :]), axis=2
+        )
+        dx_t = jnp.sum(g * d_t[:, :, None] * B_t[:, None, :], axis=2)
+        dB_t = jnp.sum(g * (d_t * x_t)[:, :, None], axis=1)  # [Bt,N]
+        g_prev = a_t * g
+        return g_prev, (dA_t, ddelta_t, dx_t, dB_t)
+
+    xs = (
+        jnp.moveaxis(dy, 1, 0),
+        jnp.moveaxis(C, 1, 0),
+        jnp.moveaxis(a, 1, 0),
+        jnp.moveaxis(h_prev, 1, 0),
+        jnp.moveaxis(delta, 1, 0),
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(B, 1, 0),
+    )
+    xs_rev = jax.tree_util.tree_map(lambda t: t[::-1], xs)
+    g0 = jnp.zeros((Bt, Dm, N), x.dtype)
+    _, (dA_ts, ddelta_ts, dx_ts, dB_ts) = jax.lax.scan(step, g0, xs_rev)
+
+    dA = jnp.sum(dA_ts, axis=0)
+    ddelta = jnp.moveaxis(ddelta_ts[::-1], 0, 1)
+    dx = jnp.moveaxis(dx_ts[::-1], 0, 1) + dy * D[None, None, :]
+    dB = jnp.moveaxis(dB_ts[::-1], 0, 1)
+    dC = jnp.einsum("bld,bldn->bln", dy, hs)
+    dD = jnp.einsum("bld,bld->d", dy, x)
+    return dx, ddelta, dA, dB, dC, dD

@@ -1,0 +1,205 @@
+"""L1 Pallas kernels: the selective-scan hot spot of the Mamba SSM module.
+
+Two kernels are provided:
+
+* ``selective_scan_fwd_pallas`` — the inference/training forward recurrence
+      h_t = exp(δ_t A) ⊙ h_{t-1} + (δ_t x_t) ⊗ B_t ;  y_t = h_t·C_t + D x_t
+  The grid is (batch, d_inner / BLOCK_D); each grid step owns a stripe of
+  BLOCK_D channels and scans the full sequence with the running state kept
+  in registers/VMEM (carried through the in-kernel ``fori_loop``).
+
+* ``scan_stats_pallas`` — the *fused* scan + Algorithm-1 Phase-1 statistic:
+  in one pass it also accumulates  S[t, d, n] = Σ_b h²_{b,t,d,n}, the
+  batch-summed squared hidden state that SparseSSM's Hessian estimate
+  (Theorem 1) consumes.  Fusing avoids a second sweep over the sequence and
+  avoids materialising the [B, L, D, N] state tensor in HBM.
+
+TPU adaptation note (paper kernel is CUDA): the threadblock/shared-memory
+chunking of the original selective-scan maps here to BlockSpec stripes of
+``d_inner`` with the state resident in VMEM across the sequential L loop;
+(x, δ) tiles stream HBM→VMEM per grid step.  These kernels MUST be lowered
+with ``interpret=True`` in this environment — real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.  Correctness is
+pinned to ``ref.py`` by pytest.
+
+A ``jax.custom_vjp`` wrapper exposes a differentiable ``selective_scan``
+whose backward pass is the hand-derived BPTT recurrence from the paper's
+Appendix A (``ref.selective_scan_bwd_ref``), so the AOT train-step graph
+runs the Pallas kernel on the forward hot path and an analytic reverse scan
+on the backward.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default channel stripe; all model configs use d_inner that is a multiple
+# of 64.  128 keeps the VMEM footprint of (x, δ, y stripes + h state) within
+# ~1.3 MB at L=128, N=16 (see DESIGN.md §8).
+DEFAULT_BLOCK_D = 128
+
+
+def _pick_block_d(dm: int) -> int:
+    for cand in (DEFAULT_BLOCK_D, 64, 32, 16, 8, 4, 2, 1):
+        if dm % cand == 0:
+            return cand
+    return 1
+
+
+def _scan_kernel(x_ref, d_ref, a_ref, b_ref, c_ref, dp_ref, y_ref, *, L, N):
+    """One channel-stripe grid step: scan L steps for BLOCK_D channels,
+    vectorised over the whole batch (one grid axis — the batch dimension
+    lives inside the kernel so the interpret/TPU loop runs |grid| = Dm/BD
+    times instead of Bt·Dm/BD; §Perf in EXPERIMENTS.md measures the win).
+
+    Block shapes:
+      x_ref, d_ref : [Bt, L, BD]    b_ref, c_ref : [Bt, L, N]
+      a_ref        : [BD, N]        dp_ref       : [BD]
+      y_ref        : [Bt, L, BD]
+    """
+    A = a_ref[...]  # [BD, N]
+    Dp = dp_ref[...]  # [BD]
+    Bt = x_ref.shape[0]
+    bd = A.shape[0]
+
+    def body(t, h):  # h: [Bt, BD, N]
+        xt = pl.load(x_ref, (slice(None), pl.dslice(t, 1), slice(None)))[:, 0]
+        dt = pl.load(d_ref, (slice(None), pl.dslice(t, 1), slice(None)))[:, 0]
+        Btk = pl.load(b_ref, (slice(None), pl.dslice(t, 1), slice(None)))[:, 0]
+        Ctk = pl.load(c_ref, (slice(None), pl.dslice(t, 1), slice(None)))[:, 0]
+        dA = jnp.exp(dt[:, :, None] * A[None, :, :])  # [Bt,BD,N]
+        h = dA * h + (dt * xt)[:, :, None] * Btk[:, None, :]
+        yt = jnp.sum(h * Ctk[:, None, :], axis=2) + Dp[None, :] * xt
+        pl.store(y_ref, (slice(None), pl.dslice(t, 1), slice(None)), yt[:, None, :])
+        return h
+
+    jax.lax.fori_loop(0, L, body, jnp.zeros((Bt, bd, N), dtype=x_ref.dtype))
+
+
+def selective_scan_fwd_pallas(x, delta, A, B, C, D, *, block_d: int | None = None):
+    """Pallas forward selective scan.  Shapes as in ref.py."""
+    Bt, L, Dm = x.shape
+    N = A.shape[1]
+    bd = block_d or _pick_block_d(Dm)
+    grid = (Dm // bd,)
+    kernel = functools.partial(_scan_kernel, L=L, N=N)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bt, L, bd), lambda d: (0, 0, d)),  # x
+            pl.BlockSpec((Bt, L, bd), lambda d: (0, 0, d)),  # delta
+            pl.BlockSpec((bd, N), lambda d: (d, 0)),  # A
+            pl.BlockSpec((Bt, L, N), lambda d: (0, 0, 0)),  # B
+            pl.BlockSpec((Bt, L, N), lambda d: (0, 0, 0)),  # C
+            pl.BlockSpec((bd,), lambda d: (d,)),  # D
+        ],
+        out_specs=pl.BlockSpec((Bt, L, bd), lambda d: (0, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((Bt, L, Dm), x.dtype),
+        interpret=True,
+    )(x, delta, A, B, C, D)
+
+
+def _scan_stats_kernel(x_ref, d_ref, a_ref, b_ref, c_ref, dp_ref, y_ref, s_ref, hn_ref, *, L, N):
+    """Fused scan + Algorithm-1 statistics.  Grid is (d_inner/BD,): each
+    grid step owns a channel stripe and vectorises over the *whole* batch
+    so the batch reduction of S happens in-register.
+
+    Besides y and S[t,d,n] = Σ_b h², the kernel accumulates the state Gram
+    HN[n1,n2] = Σ_{b,t,d} h[..,n1] h[..,n2] across grid steps (the HN
+    output block is revisited by every stripe; interpret/TPU grids iterate
+    sequentially so read-modify-write accumulation is well-defined).
+
+    Block shapes:
+      x_ref, d_ref, y_ref : [Bt, L, BD]   b_ref, c_ref : [Bt, L, N]
+      a_ref : [BD, N]   dp_ref : [BD]     s_ref : [L, BD, N]   hn_ref : [N, N]
+    """
+    A = a_ref[...]
+    Dp = dp_ref[...]
+    Bt = x_ref.shape[0]
+    bd = A.shape[0]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init_hn():
+        hn_ref[...] = jnp.zeros((N, N), dtype=x_ref.dtype)
+
+    def body(t, carry):  # h: [Bt, BD, N], hn: [N, N]
+        h, hn = carry
+        xt = pl.load(x_ref, (slice(None), pl.dslice(t, 1), slice(None)))[:, 0]
+        dt = pl.load(d_ref, (slice(None), pl.dslice(t, 1), slice(None)))[:, 0]
+        Btk = pl.load(b_ref, (slice(None), pl.dslice(t, 1), slice(None)))[:, 0]
+        Ctk = pl.load(c_ref, (slice(None), pl.dslice(t, 1), slice(None)))[:, 0]
+        dA = jnp.exp(dt[:, :, None] * A[None, :, :])  # [Bt,BD,N]
+        h = dA * h + (dt * xt)[:, :, None] * Btk[:, None, :]
+        yt = jnp.sum(h * Ctk[:, None, :], axis=2) + Dp[None, :] * xt
+        pl.store(y_ref, (slice(None), pl.dslice(t, 1), slice(None)), yt[:, None, :])
+        st = jnp.sum(h * h, axis=0)  # [BD, N]
+        pl.store(s_ref, (pl.dslice(t, 1), slice(None), slice(None)), st[None])
+        hn = hn + jnp.einsum("bdm,bdn->mn", h, h)
+        return h, hn
+
+    h0 = jnp.zeros((Bt, bd, N), dtype=x_ref.dtype)
+    hn0 = jnp.zeros((N, N), dtype=x_ref.dtype)
+    _, hn = jax.lax.fori_loop(0, L, body, (h0, hn0))
+    hn_ref[...] += hn
+
+
+def scan_stats_pallas(x, delta, A, B, C, D, *, block_d: int | None = None):
+    """Fused Pallas scan returning (y, S, HN) — see `_scan_stats_kernel`."""
+    Bt, L, Dm = x.shape
+    N = A.shape[1]
+    bd = block_d or _pick_block_d(Dm)
+    grid = (Dm // bd,)
+    kernel = functools.partial(_scan_stats_kernel, L=L, N=N)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bt, L, bd), lambda d: (0, 0, d)),  # x
+            pl.BlockSpec((Bt, L, bd), lambda d: (0, 0, d)),  # delta
+            pl.BlockSpec((bd, N), lambda d: (d, 0)),  # A
+            pl.BlockSpec((Bt, L, N), lambda d: (0, 0, 0)),  # B
+            pl.BlockSpec((Bt, L, N), lambda d: (0, 0, 0)),  # C
+            pl.BlockSpec((bd,), lambda d: (d,)),  # D
+        ],
+        out_specs=[
+            pl.BlockSpec((Bt, L, bd), lambda d: (0, 0, d)),
+            pl.BlockSpec((L, bd, N), lambda d: (0, d, 0)),
+            pl.BlockSpec((N, N), lambda d: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, L, Dm), x.dtype),
+            jax.ShapeDtypeStruct((L, Dm, N), x.dtype),
+            jax.ShapeDtypeStruct((N, N), x.dtype),
+        ],
+        interpret=True,
+    )(x, delta, A, B, C, D)
+
+
+# --------------------------------------------------------------------------
+# Differentiable wrapper: Pallas forward + analytic BPTT backward.
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def selective_scan(x, delta, A, B, C, D):
+    """Differentiable selective scan (Pallas fwd, hand-derived BPTT bwd)."""
+    return selective_scan_fwd_pallas(x, delta, A, B, C, D)
+
+
+def _ss_fwd(x, delta, A, B, C, D):
+    y = selective_scan_fwd_pallas(x, delta, A, B, C, D)
+    return y, (x, delta, A, B, C, D)
+
+
+def _ss_bwd(res, dy):
+    return ref.selective_scan_bwd_ref(res, dy)
+
+
+selective_scan.defvjp(_ss_fwd, _ss_bwd)

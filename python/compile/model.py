@@ -1,0 +1,336 @@
+"""L2: the Mamba language model in JAX (build-time only).
+
+Everything the Rust coordinator executes is AOT-lowered from the functions
+in this file.  The calling convention is a **single flat f32[P] parameter
+vector** (see DESIGN.md §1): `param_spec` defines the canonical tensor
+order/offsets, `aot.py` serialises it to `layout.json`, and the Rust side
+manipulates parameters (masking, OBS reconstruction, structural surgery)
+through those offsets.
+
+Functions lowered to HLO:
+  init_params(seed)                          -> params[P]
+  train_step(params, m, v, step, lr, toks)   -> (params', m', v', loss)
+  seq_nll(params, toks[B,L+1], mask[B,L])    -> (nll_sum[B], tok_cnt[B])
+  ssm_stats(params, toks[B,L])               -> S[n_layer, L, d_inner, d_state]
+  ffn_hessian(params, toks[B,L])             -> (H_in, H_conv, H_x, H_dt, H_out)
+  ssm_only(A_log, delta, B, C, x, D)         -> y      (Table 3 timing)
+
+The selective scan is the Pallas kernel from kernels/selective_scan.py
+(forward) with the hand-derived BPTT backward (kernels/ref.py) — the paper's
+Appendix-A recurrence — wired in through jax.custom_vjp, so both inference
+and training graphs run the L1 kernel on the hot path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.selective_scan import (
+    scan_stats_pallas,
+    selective_scan,
+    selective_scan_fwd_pallas,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Scaled analogue of a public Mamba checkpoint (see DESIGN.md §2)."""
+
+    name: str
+    n_layer: int
+    d_model: int
+    d_state: int = 16
+    dt_rank: int = 8
+    d_conv: int = 4
+    vocab: int = 256
+    seq_len: int = 128
+    batch_train: int = 8
+    batch_eval: int = 8
+    batch_calib: int = 8
+    expand: int = 2
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+
+# The four paper scales (130M/370M/790M/1.4B) mapped to laptop-scale configs
+# with identical module structure, plus the structured-pruning variants of
+# the 370M analogue (d_state 16 -> 12 -> 8 for Table 5 / Table 3).
+CONFIGS: Dict[str, ModelConfig] = {
+    "m130": ModelConfig("m130", n_layer=4, d_model=128, dt_rank=8),
+    "m370": ModelConfig("m370", n_layer=6, d_model=192, dt_rank=12),
+    "m790": ModelConfig("m790", n_layer=8, d_model=256, dt_rank=16, batch_train=4),
+    "m1400": ModelConfig("m1400", n_layer=10, d_model=320, dt_rank=20, batch_train=4),
+    "m370_ds12": ModelConfig("m370_ds12", n_layer=6, d_model=192, dt_rank=12, d_state=12),
+    "m370_ds8": ModelConfig("m370_ds8", n_layer=6, d_model=192, dt_rank=12, d_state=8),
+}
+
+
+# --------------------------------------------------------------------------
+# Flat parameter convention
+# --------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical (name, shape) order for the flat parameter vector."""
+    di, dm, ds, dr, dc = cfg.d_inner, cfg.d_model, cfg.d_state, cfg.dt_rank, cfg.d_conv
+    spec: List[Tuple[str, Tuple[int, ...]]] = [("embedding", (cfg.vocab, dm))]
+    for i in range(cfg.n_layer):
+        p = f"layers.{i}."
+        spec += [
+            (p + "norm", (dm,)),
+            (p + "in_proj", (dm, 2 * di)),
+            (p + "conv1d_w", (di, dc)),
+            (p + "conv1d_b", (di,)),
+            (p + "x_proj", (di, dr + 2 * ds)),
+            (p + "dt_proj_w", (dr, di)),
+            (p + "dt_proj_b", (di,)),
+            (p + "A_log", (di, ds)),
+            (p + "D", (di,)),
+            (p + "out_proj", (di, dm)),
+        ]
+    spec.append(("norm_f", (dm,)))
+    return spec
+
+
+def param_offsets(cfg: ModelConfig):
+    """(name -> (offset, shape)) plus total length P."""
+    off, table = 0, {}
+    for name, shape in param_spec(cfg):
+        n = int(np.prod(shape))
+        table[name] = (off, shape)
+        off += n
+    return table, off
+
+
+def unpack(cfg: ModelConfig, flat):
+    table, total = param_offsets(cfg)
+    assert flat.shape == (total,), (flat.shape, total)
+    out = {}
+    for name, (off, shape) in table.items():
+        n = int(np.prod(shape))
+        out[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+    return out
+
+
+def pack(cfg: ModelConfig, tree: Dict[str, jax.Array]):
+    table, _ = param_offsets(cfg)
+    parts = [tree[name].reshape(-1) for name, _ in param_spec(cfg)]
+    del table
+    return jnp.concatenate(parts)
+
+
+# --------------------------------------------------------------------------
+# Initialisation (Mamba-style)
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed):
+    """Flat parameter init from an int32 seed scalar (AOT entry point)."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    tree: Dict[str, jax.Array] = {}
+    di, dm, ds, dr, dc = cfg.d_inner, cfg.d_model, cfg.d_state, cfg.dt_rank, cfg.d_conv
+
+    def nrm(key, shape, std):
+        return std * jax.random.normal(key, shape, jnp.float32)
+
+    keys = jax.random.split(key, 6 * cfg.n_layer + 2)
+    ki = iter(range(len(keys)))
+    tree["embedding"] = nrm(keys[next(ki)], (cfg.vocab, dm), 0.02)
+    for i in range(cfg.n_layer):
+        p = f"layers.{i}."
+        tree[p + "norm"] = jnp.ones((dm,), jnp.float32)
+        tree[p + "in_proj"] = nrm(keys[next(ki)], (dm, 2 * di), (1.0 / dm) ** 0.5)
+        tree[p + "conv1d_w"] = nrm(keys[next(ki)], (di, dc), (1.0 / dc) ** 0.5)
+        tree[p + "conv1d_b"] = jnp.zeros((di,), jnp.float32)
+        tree[p + "x_proj"] = nrm(keys[next(ki)], (di, dr + 2 * ds), (1.0 / di) ** 0.5)
+        # dt_proj: weight small-uniform, bias = softplus^-1(dt) with dt
+        # log-uniform in [1e-3, 1e-1]  (Mamba reference init).
+        tree[p + "dt_proj_w"] = nrm(keys[next(ki)], (dr, di), dr**-0.5)
+        u = jax.random.uniform(keys[next(ki)], (di,), jnp.float32)
+        dt = jnp.exp(u * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+        tree[p + "dt_proj_b"] = dt + jnp.log(-jnp.expm1(-dt))  # softplus^-1
+        # S4D-real init: A = -(1..N) per channel  => A_log = log(1..N)
+        tree[p + "A_log"] = jnp.broadcast_to(
+            jnp.log(jnp.arange(1, ds + 1, dtype=jnp.float32))[None, :], (di, ds)
+        )
+        tree[p + "D"] = jnp.ones((di,), jnp.float32)
+        tree[p + "out_proj"] = nrm(keys[next(ki)], (di, dm), (0.5 / di) ** 0.5)
+    tree["norm_f"] = jnp.ones((dm,), jnp.float32)
+    return pack(cfg, tree)
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv over the sequence axis.
+
+    x: [B, L, D], w: [D, K], b: [D]  (unrolled over the small K=4)."""
+    Bt, L, Dm = x.shape
+    K = w.shape[1]
+    xpad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    acc = jnp.zeros_like(x)
+    for k in range(K):
+        acc = acc + xpad[:, k : k + L, :] * w[None, None, :, k]
+    return acc + b[None, None, :]
+
+
+def _conv_windows(x, K):
+    """Unfolded causal windows U[b, l, d, k] such that
+    conv_out[b,l,d] = sum_k U[b,l,d,k] * w[d,k]."""
+    Bt, L, Dm = x.shape
+    xpad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return jnp.stack([xpad[:, k : k + L, :] for k in range(K)], axis=-1)
+
+
+def block_forward(cfg: ModelConfig, p: Dict[str, jax.Array], prefix: str, x,
+                  *, scan_impl: str = "pallas", collect: str | None = None):
+    """One Mamba block.  Returns (out, extras) where extras depends on
+    `collect`: None -> {},  "stats" -> {"S": [L,di,ds]},
+    "hessian" -> dict of per-module input Grams."""
+    di, ds, dr, K = cfg.d_inner, cfg.d_state, cfg.dt_rank, cfg.d_conv
+    xn = rmsnorm(x, p[prefix + "norm"])
+    xr = xn @ p[prefix + "in_proj"]  # [B,L,2di]
+    x_in, res = jnp.split(xr, [di], axis=-1)
+    conv_out = causal_conv1d(x_in, p[prefix + "conv1d_w"], p[prefix + "conv1d_b"])
+    u = jax.nn.silu(conv_out)  # SSM input, [B,L,di]
+    xdbc = u @ p[prefix + "x_proj"]  # [B,L,dr+2ds]
+    delta_r = xdbc[..., :dr]
+    Bm = xdbc[..., dr : dr + ds]
+    Cm = xdbc[..., dr + ds :]
+    delta = jax.nn.softplus(delta_r @ p[prefix + "dt_proj_w"] + p[prefix + "dt_proj_b"])
+    A = -jnp.exp(p[prefix + "A_log"])
+    Dp = p[prefix + "D"]
+
+    extras: Dict[str, jax.Array] = {}
+    if collect == "stats":
+        y, S, HN = scan_stats_pallas(u, delta, A, Bm, Cm, Dp)
+        extras["S"] = S
+        extras["HN"] = HN
+    elif scan_impl == "pallas":
+        y = selective_scan(u, delta, A, Bm, Cm, Dp)
+    elif scan_impl == "pallas_nograd":
+        y = selective_scan_fwd_pallas(u, delta, A, Bm, Cm, Dp)
+    else:
+        y = ref.selective_scan_ref(u, delta, A, Bm, Cm, Dp)
+
+    gated = y * jax.nn.silu(res)
+    out = gated @ p[prefix + "out_proj"]
+
+    if collect == "hessian":
+        # Gram matrices of each linear module's *input* — the layer-wise
+        # OBS Hessian surrogate H = X^T X used by SparseGPT (FFN pruning).
+        extras["H_in"] = jnp.einsum("bli,blj->ij", xn, xn)
+        U = _conv_windows(x_in, K)  # [B,L,di,K]
+        extras["H_conv"] = jnp.einsum("bldi,bldj->dij", U, U)
+        extras["H_x"] = jnp.einsum("bli,blj->ij", u, u)
+        extras["H_dt"] = jnp.einsum("bli,blj->ij", delta_r, delta_r)
+        extras["H_out"] = jnp.einsum("bli,blj->ij", gated, gated)
+    return x + out, extras
+
+
+def forward_logits(cfg: ModelConfig, flat, tokens, *, scan_impl="pallas"):
+    p = unpack(cfg, flat)
+    x = p["embedding"][tokens]  # [B,L,dm]
+    for i in range(cfg.n_layer):
+        x, _ = block_forward(cfg, p, f"layers.{i}.", x, scan_impl=scan_impl)
+    x = rmsnorm(x, p["norm_f"])
+    return x @ p["embedding"].T  # tied head
+
+
+def _token_nll(logits, targets):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(cfg: ModelConfig, flat, tokens):
+    """Mean next-token NLL over tokens[B, L+1]."""
+    logits = forward_logits(cfg, flat, tokens[:, :-1])
+    nll = _token_nll(logits, tokens[:, 1:])
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# AOT entry points
+# --------------------------------------------------------------------------
+
+
+def train_step(cfg: ModelConfig, flat, m, v, step, lr, tokens):
+    """One fused AdamW step (β=0.9/0.95, eps=1e-8, no weight decay).
+
+    `step` is the 1-based step counter (f32 scalar), `lr` the learning rate
+    — both runtime inputs so the Rust coordinator owns the schedule."""
+    loss, g = jax.value_and_grad(lambda f: loss_fn(cfg, f, tokens))(flat)
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1**step)
+    vhat = v / (1 - b2**step)
+    flat = flat - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return flat, m, v, loss
+
+
+def seq_nll(cfg: ModelConfig, flat, tokens, mask):
+    """Masked per-sequence NLL: tokens[B, L+1], mask[B, L] over target
+    positions.  Returns (nll_sum[B], tok_cnt[B]).  Serves both perplexity
+    (mask = content positions) and zero-shot option scoring (mask = option
+    positions)."""
+    logits = forward_logits(cfg, flat, tokens[:, :-1], scan_impl="pallas_nograd")
+    nll = _token_nll(logits, tokens[:, 1:]) * mask
+    return jnp.sum(nll, axis=1), jnp.sum(mask, axis=1)
+
+
+def ssm_stats(cfg: ModelConfig, flat, tokens):
+    """Algorithm 1 Phase 1 statistics from the fused Pallas scan_stats
+    kernel.  Returns:
+      S  [n_layer, L, d_inner, d_state] — per-step batch-summed h²
+      HN [n_layer, d_state, d_state]    — hidden-state Gram (naive-
+                                          SparseGPT-on-A calibration)
+    """
+    p = unpack(cfg, flat)
+    x = p["embedding"][tokens]
+    Ss, HNs = [], []
+    for i in range(cfg.n_layer):
+        x, ex = block_forward(cfg, p, f"layers.{i}.", x, collect="stats")
+        Ss.append(ex["S"])
+        HNs.append(ex["HN"])
+    return jnp.stack(Ss), jnp.stack(HNs)
+
+
+def ffn_hessian(cfg: ModelConfig, flat, tokens):
+    """Per-module input Gram matrices for SparseGPT-style FFN pruning and
+    the Eq.-7 sensitivity analysis.  Outputs, each stacked over layers:
+      H_in  [nl, dm, dm]      H_conv [nl, di, K, K]   H_x [nl, di, di]
+      H_dt  [nl, dr, dr]      H_out  [nl, di, di]
+    """
+    p = unpack(cfg, flat)
+    x = p["embedding"][tokens]
+    outs = {k: [] for k in ("H_in", "H_conv", "H_x", "H_dt", "H_out")}
+    for i in range(cfg.n_layer):
+        x, ex = block_forward(
+            cfg, p, f"layers.{i}.", x, scan_impl="pallas_nograd", collect="hessian"
+        )
+        for k in outs:
+            outs[k].append(ex[k])
+    return tuple(jnp.stack(outs[k]) for k in ("H_in", "H_conv", "H_x", "H_dt", "H_out"))
+
+
+def ssm_only(A_log, delta, Bm, Cm, x, Dp):
+    """Bare SSM module (Table 3 structured-speedup timing)."""
+    A = -jnp.exp(A_log)
+    return selective_scan_fwd_pallas(x, delta, A, Bm, Cm, Dp)

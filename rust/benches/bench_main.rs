@@ -1,0 +1,190 @@
+//! `cargo bench` — criterion-less harness (no external crates offline).
+//!
+//! One bench group per paper table/figure (DESIGN.md §4): each group times
+//! the computational hot path that regenerating that artifact exercises.
+//! Runtime-backed groups need `make artifacts`; they are skipped (with a
+//! note) otherwise.  Full table *contents* are produced by
+//! `sparsessm experiment --id <table>`; the benches here answer "how fast
+//! is the machinery behind each table".
+//!
+//! Filter with `cargo bench -- <substring>`.
+
+use sparsessm::benchx::{bench, bench_for, black_box, BenchResult};
+use sparsessm::coordinator::Pipeline;
+use sparsessm::linalg::gram_f32;
+use sparsessm::pruning::{aggregate, magnitude, semistructured, sparsegpt};
+use sparsessm::rngx::Pcg;
+use sparsessm::runtime::lit_f32;
+use sparsessm::tensor::Tensor;
+
+fn main() {
+    // cargo bench appends `--bench`; the first non-flag arg is the filter
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut run = |group: &str, f: &mut dyn FnMut(&mut Vec<BenchResult>)| {
+        if filter.is_empty() || group.contains(&filter) {
+            eprintln!("== {group} ==");
+            f(&mut results);
+        }
+    };
+
+    // m370-sized synthetic statistics shared by the host-side groups.
+    let (l, d, n) = (128usize, 384usize, 16usize);
+    let mut rng = Pcg::seeded(42);
+    let a_log = Tensor::from_vec(
+        &[d, n],
+        (0..d * n).map(|_| rng.normal() as f32).collect(),
+    )
+    .unwrap();
+    let stats = Tensor::from_vec(
+        &[l, d, n],
+        (0..l * d * n).map(|_| (rng.uniform() * 2.0) as f32).collect(),
+    )
+    .unwrap();
+
+    // table1/6/9-12: Algorithm-1 mask computation (per-step quickselect +
+    // frequency voting) vs the L2 ablation vs MP.
+    run("table1_algorithm1_vote", &mut |res| {
+        res.push(bench("alg1 frequency-vote mask (m370 layer)", 2, 10, || {
+            black_box(aggregate::sparsessm_mask(
+                &a_log,
+                &stats,
+                0.5,
+                aggregate::Aggregation::FrequencyVote,
+            ));
+        }));
+    });
+    run("table6_l2_aggregation", &mut |res| {
+        res.push(bench("alg1 L2-aggregation mask (m370 layer)", 2, 10, || {
+            black_box(aggregate::sparsessm_mask(&a_log, &stats, 0.5, aggregate::Aggregation::L2));
+        }));
+    });
+    run("table1_magnitude_baseline", &mut |res| {
+        res.push(bench("MP mask (m370 layer)", 2, 50, || {
+            black_box(magnitude::magnitude_mask(a_log.data(), 0.5));
+        }));
+    });
+
+    // table2/8/fig2: SparseGPT OBS solver on an x_proj-sized problem.
+    run("table2_sparsegpt_solver", &mut |res| {
+        let cols = 384usize;
+        let rows = 60usize;
+        let mut r2 = Pcg::seeded(7);
+        let x: Vec<f32> = (0..cols * 4 * cols).map(|_| r2.normal() as f32).collect();
+        let h = gram_f32(&x, cols * 4, cols);
+        let w0: Vec<f32> = (0..rows * cols).map(|_| r2.normal() as f32).collect();
+        res.push(bench("sparsegpt OBS solve 60x384 @50%", 1, 5, || {
+            let mut w = w0.clone();
+            black_box(
+                sparsegpt::prune_matrix(
+                    &mut w,
+                    rows,
+                    cols,
+                    &h,
+                    0.5,
+                    &sparsegpt::SparseGptOptions::default(),
+                )
+                .unwrap(),
+            );
+        }));
+    });
+
+    // table4: N:M scoring.
+    run("table4_nm_mask", &mut |res| {
+        let scores: Vec<f64> = (0..d * n).map(|i| (i as f64).sin().abs()).collect();
+        res.push(bench("2:4 mask from scores (m370 layer)", 5, 100, || {
+            black_box(semistructured::nm_mask_from_scores(&scores, 2, 4));
+        }));
+    });
+
+    // table7/fig4: corpus generation + calibration sampling substrate.
+    run("table7_corpus_generation", &mut |res| {
+        res.push(bench("generate 100k-token wiki-sub corpus", 1, 5, || {
+            black_box(sparsessm::corpus::Corpus::generate(
+                sparsessm::corpus::Style::Wiki,
+                9,
+                100_000,
+            ));
+        }));
+    });
+
+    // Runtime-backed groups (need artifacts).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let pipe = Pipeline::new("artifacts", "runs", true).unwrap();
+
+        // table3/5: the structured-speedup measurement itself.
+        run("table3_ssm_structured_speedup", &mut |res| {
+            let mut r3 = Pcg::seeded(8);
+            let (b, l, di) = (8usize, 128usize, 384usize);
+            for nn in [16usize, 12, 8] {
+                let exe = pipe.rt.load(&format!("ssm_only_n{nn}.hlo.txt")).unwrap();
+                let mk = |r: &mut Pcg, len: usize| -> Vec<f32> {
+                    (0..len).map(|_| r.normal() as f32).collect()
+                };
+                let inputs = [
+                    lit_f32(&mk(&mut r3, di * nn), &[di, nn]).unwrap(),
+                    lit_f32(
+                        &(0..b * l * di)
+                            .map(|_| (0.01 + 0.1 * r3.uniform()) as f32)
+                            .collect::<Vec<_>>(),
+                        &[b, l, di],
+                    )
+                    .unwrap(),
+                    lit_f32(&mk(&mut r3, b * l * nn), &[b, l, nn]).unwrap(),
+                    lit_f32(&mk(&mut r3, b * l * nn), &[b, l, nn]).unwrap(),
+                    lit_f32(&mk(&mut r3, b * l * di), &[b, l, di]).unwrap(),
+                    lit_f32(&mk(&mut r3, di), &[di]).unwrap(),
+                ];
+                res.push(bench_for(&format!("ssm_only d_state={nn}"), 600.0, || {
+                    black_box(pipe.rt.exec(&exe, &inputs).unwrap());
+                }));
+            }
+        });
+
+        // table1-12 shared cost: one seq_nll eval batch (m130).
+        run("eval_seq_nll_exec", &mut |res| {
+            let layout = pipe.layout("m130").unwrap();
+            let p = sparsessm::train::init_params(&pipe.rt, &layout, 1).unwrap();
+            let (b, l) = (layout.meta.batch_eval, layout.meta.seq_len);
+            let exe = pipe.rt.load(&layout.exe("seq_nll")).unwrap();
+            let toks: Vec<i32> = (0..b * (l + 1)).map(|i| (i % 251) as i32).collect();
+            let inputs = [
+                lit_f32(&p.data, &[p.data.len()]).unwrap(),
+                sparsessm::runtime::lit_i32(&toks, &[b, l + 1]).unwrap(),
+                lit_f32(&vec![1.0; b * l], &[b, l]).unwrap(),
+            ];
+            res.push(bench_for("seq_nll m130 batch", 1000.0, || {
+                black_box(pipe.rt.exec(&exe, &inputs).unwrap());
+            }));
+        });
+
+        // table7: the calibration pass (dominant pruning cost).
+        run("table7_calibration_pass", &mut |res| {
+            let layout = pipe.layout("m130").unwrap();
+            let p = sparsessm::train::init_params(&pipe.rt, &layout, 2).unwrap();
+            res.push(bench_for("ssm_stats m130 8 segments", 1500.0, || {
+                black_box(pipe.collect_ssm_stats(&layout, &p, 8).unwrap());
+            }));
+        });
+
+        // end-to-end driver cost: one train step (m130).
+        run("train_step_exec", &mut |res| {
+            let layout = pipe.layout("m130").unwrap();
+            let corpus = pipe.train_corpus();
+            let opts = sparsessm::train::TrainOptions { steps: 3, ..Default::default() };
+            res.push(bench_for("train 3 steps m130", 2000.0, || {
+                black_box(sparsessm::train::train(&pipe.rt, &layout, &corpus, &opts).unwrap());
+            }));
+        });
+    } else {
+        eprintln!("[skip] runtime benches: artifacts not built");
+    }
+
+    println!("\n================ bench summary ================");
+    for r in &results {
+        println!("{}", r.row());
+    }
+}

@@ -1,0 +1,103 @@
+//! Criterion-less benchmarking harness (`cargo bench` with `harness=false`).
+//!
+//! Provides warmup + timed iterations with mean/median/p95 statistics, and
+//! a black-box to defeat dead-code elimination.  Used by
+//! `rust/benches/bench_main.rs` (one bench group per paper table/figure)
+//! and by the Table-3/Table-7 wall-clock measurements.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>6} iters  mean {:>10.4} ms  p50 {:>10.4} ms  p95 {:>10.4} ms  min {:>10.4} ms",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.p95_ms, self.min_ms
+        )
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Run `f` `warmup` times untimed, then `iters` timed repetitions.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    summarize(name, &mut samples)
+}
+
+/// Adaptive variant: run for at least `budget_ms` of wall clock (at least 3
+/// iterations), so slow end-to-end benches don't need hand-tuned counts.
+pub fn bench_for<F: FnMut()>(name: &str, budget_ms: f64, mut f: F) -> BenchResult {
+    f(); // warmup / first-touch
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < 3 || start.elapsed().as_secs_f64() * 1e3 < budget_ms {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    summarize(name, &mut samples)
+}
+
+fn summarize(name: &str, samples: &mut [f64]) -> BenchResult {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let pct = |p: f64| samples[(((n - 1) as f64) * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ms: mean,
+        p50_ms: pct(0.50),
+        p95_ms: pct(0.95),
+        min_ms: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop-ish", 2, 50, || {
+            black_box((0..1000).sum::<usize>());
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.min_ms <= r.p50_ms && r.p50_ms <= r.p95_ms);
+        assert!(r.mean_ms > 0.0);
+    }
+
+    #[test]
+    fn bench_for_respects_minimum() {
+        let r = bench_for("sleepy", 5.0, || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert!(r.iters >= 3);
+        assert!(r.row().contains("sleepy"));
+    }
+}

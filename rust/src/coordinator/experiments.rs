@@ -1,0 +1,542 @@
+//! Experiment drivers — one per table/figure of the paper (DESIGN.md §4).
+//!
+//! Every driver returns a [`Report`] whose rows mirror the paper's layout;
+//! absolute numbers differ (tiny in-repo models, synthetic corpora) but
+//! the method ordering and trend shapes are the reproduction target.
+
+use super::report::{metric_header, Report};
+use super::{FfnMethod, Pipeline, SsmMethod};
+use crate::benchx;
+use crate::eval::MetricsRow;
+use crate::model::FFN_MODULES;
+use crate::pruning::shedder;
+use crate::runtime::lit_f32;
+use crate::rngx::Pcg;
+use crate::util::{fmt_metric, Stopwatch};
+use anyhow::{bail, Result};
+
+/// All experiment ids, in paper order.
+pub const ALL_IDS: [&str; 15] = [
+    "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "table9",
+    "table10", "table11", "table12", "fig2", "fig3", "fig4",
+];
+
+pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
+    let sw = Stopwatch::new();
+    let mut rep = match id {
+        "table1" => table_ssm(pipe, "table1", 0.5)?,
+        "table9" => table_ssm(pipe, "table9", 0.4)?,
+        "table10" => table_ssm(pipe, "table10", 0.6)?,
+        "table11" => table_ssm(pipe, "table11", 0.7)?,
+        "table12" => table_ssm(pipe, "table12", 0.8)?,
+        "table2" => table2(pipe)?,
+        "table3" => table3(pipe)?,
+        "table4" => table4(pipe)?,
+        "table5" => table5(pipe)?,
+        "table6" => table6(pipe)?,
+        "table7" => table7(pipe)?,
+        "table8" => table8(pipe)?,
+        "fig2" => fig2(pipe)?,
+        "fig3" => fig3(pipe)?,
+        "fig4" => fig4(pipe)?,
+        other => bail!("unknown experiment id '{other}' (known: {:?})", ALL_IDS),
+    };
+    rep.note(&format!(
+        "generated in {:.1}s ({} mode)",
+        sw.seconds(),
+        if pipe.fast { "fast" } else { "full" }
+    ));
+    Ok(rep)
+}
+
+fn scale_configs(pipe: &Pipeline) -> Vec<&'static str> {
+    if pipe.fast {
+        vec!["m130", "m370"]
+    } else {
+        vec!["m130", "m370", "m790", "m1400"]
+    }
+}
+
+fn n_sample(pipe: &Pipeline) -> usize {
+    if pipe.fast {
+        16
+    } else {
+        64
+    }
+}
+
+fn header_with_model() -> Vec<String> {
+    metric_header(&["Model"])
+}
+
+fn eval_row(
+    pipe: &Pipeline,
+    cfg: &str,
+    label: &str,
+    params: &crate::model::FlatParams,
+) -> Result<MetricsRow> {
+    let layout = pipe.layout(cfg)?;
+    let ev = pipe.evaluator(layout);
+    let corpora = pipe.eval_corpora();
+    ev.metrics_row(label, params, &corpora)
+}
+
+// ---------------------------------------------------------------------
+// Tables 1 / 9 / 10 / 11 / 12 — SSM-only unstructured pruning
+// ---------------------------------------------------------------------
+
+fn table_ssm(pipe: &Pipeline, id: &str, sparsity: f64) -> Result<Report> {
+    let header = header_with_model();
+    let title = format!(
+        "one-shot unstructured pruning of SSM modules (A_log) at {:.0}% sparsity",
+        sparsity * 100.0
+    );
+    let mut rep = Report::new(id, &title, &header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    // Tables 9-12 (the sparsity sweep) run the two smaller scales to keep
+    // the full suite within a CPU budget; Table 1 covers all four.
+    let configs = if id == "table1" { scale_configs(pipe) } else { vec!["m130", "m370"] };
+    for cfg in configs {
+        let params = pipe.ensure_trained(cfg)?;
+        let layout = pipe.layout(cfg)?;
+        let stats = pipe.collect_ssm_stats(&layout, &params, n_sample(pipe))?;
+        let dense = eval_row(pipe, cfg, "Dense", &params)?;
+        rep.push_metrics(&[cfg], &dense);
+        for method in [
+            SsmMethod::Mp,
+            SsmMethod::Shedder,
+            SsmMethod::SparseGpt,
+            SsmMethod::SparseSsm,
+        ] {
+            let mut p = params.clone();
+            pipe.prune_ssm(&mut p, method, sparsity, &stats)?;
+            let row = eval_row(pipe, cfg, method.name(), &p)?;
+            crate::util::log_line(
+                "exp",
+                &format!("{id} {cfg} {} ssm-sparsity {:.3}", method.name(), p.ssm_sparsity()),
+            );
+            rep.push_metrics(&[cfg], &row);
+        }
+    }
+    rep.note("paper shape: SparseSSM ≻ SparseGPT ≻ {MP, Shedder}; SparseGPT-on-A unstable");
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// Table 2 — whole-model pruning
+// ---------------------------------------------------------------------
+
+fn table2(pipe: &Pipeline) -> Result<Report> {
+    let sparsity = 0.5;
+    let header = header_with_model();
+    let mut rep = Report::new(
+        "table2",
+        "one-shot unstructured pruning of the whole model at 50% sparsity",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for cfg in scale_configs(pipe) {
+        let params = pipe.ensure_trained(cfg)?;
+        let layout = pipe.layout(cfg)?;
+        let stats = pipe.collect_ssm_stats(&layout, &params, n_sample(pipe))?;
+        let hess = pipe.collect_ffn_hessians(&layout, &params, n_sample(pipe))?;
+        rep.push_metrics(&[cfg], &eval_row(pipe, cfg, "Dense", &params)?);
+
+        // MP everywhere.
+        let mut p = params.clone();
+        pipe.prune_ssm(&mut p, SsmMethod::Mp, sparsity, &stats)?;
+        pipe.prune_ffn(&mut p, FfnMethod::Mp, sparsity, &hess, 0.0, None)?;
+        rep.push_metrics(&[cfg], &eval_row(pipe, cfg, "MP", &p)?);
+
+        // Shedder: whole-block removal ranked by calibration impact.
+        let mut p = params.clone();
+        {
+            let corpora = pipe.eval_corpora();
+            let ev = pipe.evaluator(layout.clone());
+            let base = params.clone();
+            shedder::shed_blocks(&mut p, sparsity, |l| {
+                let mut probe = base.clone();
+                shedder::zero_block(&mut probe, l)?;
+                ev.perplexity(&probe, &corpora[0]).map(|x| x.ln())
+            })?;
+        }
+        rep.push_metrics(&[cfg], &eval_row(pipe, cfg, "Mamba-Shedder", &p)?);
+
+        // SparseGPT: naive on A + uniform OBS on FFN.
+        let mut p = params.clone();
+        pipe.prune_ssm(&mut p, SsmMethod::SparseGpt, sparsity, &stats)?;
+        pipe.prune_ffn(&mut p, FfnMethod::SparseGpt, sparsity, &hess, 0.0, None)?;
+        rep.push_metrics(&[cfg], &eval_row(pipe, cfg, "SparseGPT", &p)?);
+
+        // SparseSSM: Algorithm 1 on A + sensitivity-aware OBS on FFN.
+        let mut p = params.clone();
+        pipe.prune_ssm(&mut p, SsmMethod::SparseSsm, sparsity, &stats)?;
+        pipe.prune_ffn(&mut p, FfnMethod::SensitivityAware, sparsity, &hess, 0.04, None)?;
+        rep.push_metrics(&[cfg], &eval_row(pipe, cfg, "SparseSSM", &p)?);
+    }
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// Table 3 — structured-pruning speedup of the SSM module
+// ---------------------------------------------------------------------
+
+fn table3(pipe: &Pipeline) -> Result<Report> {
+    let mut rep = Report::new(
+        "table3",
+        "SSM module inference time under structured pruning (m370 dims)",
+        &["Sparsity", "Native scan (ms)", "Speedup", "PJRT interpret artifact (ms)"],
+    );
+    let layout = pipe.layout("m370")?;
+    let meta = &layout.meta;
+    let (b, l, di) = (meta.batch_eval, meta.seq_len, meta.d_inner);
+    let mut rng = Pcg::seeded(11);
+    let mut dense_ms = 0.0;
+    let budget = if pipe.fast { 300.0 } else { 1200.0 };
+    for (label, n, frac) in [("Dense", 16usize, 0.0f64), ("25%", 12, 0.25), ("50%", 8, 0.5)] {
+        let mk = |rng: &mut Pcg, len: usize, scale: f64| -> Vec<f32> {
+            (0..len).map(|_| (rng.normal() * scale) as f32).collect()
+        };
+        let a: Vec<f32> = (0..di * n).map(|_| -(0.1 + rng.uniform()) as f32).collect();
+        let delta: Vec<f32> =
+            (0..b * l * di).map(|_| (0.01 + 0.1 * rng.uniform()) as f32).collect();
+        let bmv = mk(&mut rng, b * l * n, 1.0);
+        let cmv = mk(&mut rng, b * l * n, 1.0);
+        let xv = mk(&mut rng, b * l * di, 1.0);
+        let dpv = mk(&mut rng, di, 1.0);
+
+        // Primary number: the compute-bound native deployment kernel.
+        let inp = crate::ssm::SsmInputs {
+            a: &a,
+            delta: &delta,
+            b: &bmv,
+            c: &cmv,
+            x: &xv,
+            dp: &dpv,
+            dims: (b, l, di, n),
+        };
+        let rn = benchx::bench_for(&format!("native scan n={n}"), budget, || {
+            benchx::black_box(crate::ssm::selective_scan(&inp));
+        });
+        // Secondary: the AOT interpret-mode artifact (dispatch-bound on
+        // CPU — reported for transparency, see the note).
+        let exe = pipe.rt.load(&format!("ssm_only_n{n}.hlo.txt"))?;
+        let inputs = [
+            lit_f32(&mk(&mut rng, di * n, 0.5), &[di, n])?,
+            lit_f32(&delta, &[b, l, di])?,
+            lit_f32(&bmv, &[b, l, n])?,
+            lit_f32(&cmv, &[b, l, n])?,
+            lit_f32(&xv, &[b, l, di])?,
+            lit_f32(&dpv, &[di])?,
+        ];
+        let ra = benchx::bench_for(&format!("artifact n={n}"), budget / 2.0, || {
+            benchx::black_box(pipe.rt.exec(&exe, &inputs).unwrap());
+        });
+        if frac == 0.0 {
+            dense_ms = rn.p50_ms;
+        }
+        let speedup = if frac == 0.0 {
+            "/".to_string()
+        } else {
+            format!("{:.2}x", dense_ms / rn.p50_ms)
+        };
+        rep.push_row(vec![
+            label.to_string(),
+            format!("{:.3}", rn.p50_ms),
+            speedup,
+            format!("{:.3}", ra.p50_ms),
+        ]);
+    }
+    rep.note("paper: 1.72x at 50% column sparsity (CUDA kernel)");
+    rep.note(
+        "native scan = compute-bound Rust deployment kernel (cross-checked against the AOT \
+         artifact); the interpret-mode PJRT artifact is per-step dispatch-bound on CPU and \
+         cannot expose d_state scaling — see DESIGN.md §7-8",
+    );
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// Table 4 — semi-structured N:M pruning of the SSM module (m370)
+// ---------------------------------------------------------------------
+
+fn table4(pipe: &Pipeline) -> Result<Report> {
+    let header = metric_header(&["Sparsity"]);
+    let mut rep = Report::new(
+        "table4",
+        "one-shot N:M pruning of the SSM module in m370",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let cfg = "m370";
+    let params = pipe.ensure_trained(cfg)?;
+    let layout = pipe.layout(cfg)?;
+    let stats = pipe.collect_ssm_stats(&layout, &params, n_sample(pipe))?;
+    for (pat, n, m) in [("2:4", 2usize, 4usize), ("4:8", 4, 8)] {
+        for method in [SsmMethod::Mp, SsmMethod::SparseSsm] {
+            let mut p = params.clone();
+            pipe.prune_ssm_nm(&mut p, method, n, m, &stats)?;
+            rep.push_metrics(&[pat], &eval_row(pipe, cfg, method.name(), &p)?);
+        }
+    }
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// Table 5 — structured (column) pruning of the SSM module (m370)
+// ---------------------------------------------------------------------
+
+fn table5(pipe: &Pipeline) -> Result<Report> {
+    let header = metric_header(&["Sparsity"]);
+    let mut rep = Report::new(
+        "table5",
+        "one-shot structured pruning of the SSM module in m370 (d_state 16→12→8)",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let params = pipe.ensure_trained("m370")?;
+    let layout = pipe.layout("m370")?;
+    let stats = pipe.collect_ssm_stats(&layout, &params, n_sample(pipe))?;
+    let corpora = pipe.eval_corpora();
+    for (label, dst) in [("25%", "m370_ds12"), ("50%", "m370_ds8")] {
+        for (mname, use_imp) in [("MP", false), ("SparseSSM", true)] {
+            let reduced = pipe.prune_structured(&params, dst, use_imp, &stats)?;
+            let ev = pipe.evaluator(pipe.layout(dst)?);
+            let row = ev.metrics_row(mname, &reduced, &corpora)?;
+            rep.push_metrics(&[label], &row);
+        }
+    }
+    rep.note("evaluation runs the genuinely smaller d_state artifact (real shrink, not a mask)");
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// Table 6 — ablation: time-step aggregation (m370)
+// ---------------------------------------------------------------------
+
+fn table6(pipe: &Pipeline) -> Result<Report> {
+    let header = metric_header(&["Sparsity"]);
+    let mut rep = Report::new(
+        "table6",
+        "time-step aggregation ablation: L2 vs frequency voting (m370)",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let cfg = "m370";
+    let params = pipe.ensure_trained(cfg)?;
+    let layout = pipe.layout(cfg)?;
+    let stats = pipe.collect_ssm_stats(&layout, &params, n_sample(pipe))?;
+    for sparsity in [0.5, 0.6, 0.7] {
+        let label = format!("{:.0}%", sparsity * 100.0);
+        for (mname, method) in [("L2", SsmMethod::SparseSsmL2), ("SparseSSM", SsmMethod::SparseSsm)]
+        {
+            let mut p = params.clone();
+            pipe.prune_ssm(&mut p, method, sparsity, &stats)?;
+            rep.push_metrics(&[&label], &eval_row(pipe, cfg, mname, &p)?);
+        }
+    }
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// Table 7 — pruning time overhead vs calibration size
+// ---------------------------------------------------------------------
+
+fn table7(pipe: &Pipeline) -> Result<Report> {
+    let mut rep = Report::new(
+        "table7",
+        "pruning time overhead (calibration + scoring) vs N_sample",
+        &["Model", "Layers", "Hidden size", "Nsample", "Calib (s)", "Score+mask (s)", "Total (s)"],
+    );
+    let samples: &[usize] = if pipe.fast { &[8, 16] } else { &[32, 64, 128] };
+    for cfg in scale_configs(pipe) {
+        let params = pipe.ensure_trained(cfg)?;
+        let layout = pipe.layout(cfg)?;
+        for &ns in samples {
+            let stats = pipe.collect_ssm_stats(&layout, &params, ns)?;
+            let mut p = params.clone();
+            let mask_s = pipe.prune_ssm(&mut p, SsmMethod::SparseSsm, 0.5, &stats)?;
+            rep.push_row(vec![
+                cfg.to_string(),
+                layout.meta.n_layer.to_string(),
+                layout.meta.d_model.to_string(),
+                ns.to_string(),
+                format!("{:.2}", stats.seconds),
+                format!("{:.3}", mask_s),
+                format!("{:.2}", stats.seconds + mask_s),
+            ]);
+        }
+    }
+    rep.note("paper App. B.2.1: score/mask time is negligible; calibration dominates");
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// Table 8 — per-module pruning sensitivity (m370)
+// ---------------------------------------------------------------------
+
+fn table8(pipe: &Pipeline) -> Result<Report> {
+    let header = metric_header(&["Module"]);
+    let mut rep = Report::new(
+        "table8",
+        "pruning one module kind at a time (50%, SparseGPT reconstruction, m370)",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let cfg = "m370";
+    let params = pipe.ensure_trained(cfg)?;
+    let layout = pipe.layout(cfg)?;
+    let hess = pipe.collect_ffn_hessians(&layout, &params, n_sample(pipe))?;
+    for module in FFN_MODULES {
+        let mut p = params.clone();
+        pipe.prune_ffn(&mut p, FfnMethod::SparseGpt, 0.5, &hess, 0.0, Some(module))?;
+        let paper_name = module.trim_end_matches("_w");
+        rep.push_metrics(&[paper_name], &eval_row(pipe, cfg, paper_name, &p)?);
+    }
+    rep.note("paper shape: in_proj/out_proj degrade most; conv1d/x_proj/dt_proj are robust");
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// Figure 2 — Hessian trace vs reconstruction error per module (m370)
+// ---------------------------------------------------------------------
+
+fn fig2(pipe: &Pipeline) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig2",
+        "Hessian trace vs OBS reconstruction error per FFN module at 50% (m370)",
+        &["Module", "Layer", "Hessian trace", "Recon error"],
+    );
+    let cfg = "m370";
+    let params = pipe.ensure_trained(cfg)?;
+    let layout = pipe.layout(cfg)?;
+    let hess = pipe.collect_ffn_hessians(&layout, &params, n_sample(pipe))?;
+    let layers: Vec<usize> = if pipe.fast {
+        vec![0, layout.meta.n_layer - 1]
+    } else {
+        (0..layout.meta.n_layer).collect()
+    };
+    for module in FFN_MODULES {
+        for &layer in &layers {
+            let trace = match module {
+                "in_proj" => hess.h_in[layer].trace(),
+                "x_proj" => hess.h_x[layer].trace(),
+                "dt_proj_w" => hess.h_dt[layer].trace(),
+                "out_proj" => hess.h_out[layer].trace(),
+                "conv1d_w" => hess.h_conv[layer].data().iter().map(|&x| x as f64).sum::<f64>(),
+                _ => unreachable!(),
+            };
+            // Reconstruction error of pruning just this layer's module.
+            let mut p = params.clone();
+            let before = p.view(&format!("layers.{layer}.{module}"))?.to_vec();
+            let err = prune_single_module(pipe, &mut p, &hess, layer, module)?;
+            let after = p.view(&format!("layers.{layer}.{module}"))?.to_vec();
+            debug_assert_ne!(before, after);
+            rep.push_row(vec![
+                module.trim_end_matches("_w").to_string(),
+                layer.to_string(),
+                fmt_metric(trace),
+                fmt_metric(err),
+            ]);
+        }
+    }
+    rep.note("paper Fig. 2: reconstruction error grows with Hessian trace, module-dependent rate");
+    Ok(rep)
+}
+
+/// Prune one module of one layer at 50% and return its OBS recon error.
+fn prune_single_module(
+    pipe: &Pipeline,
+    p: &mut crate::model::FlatParams,
+    hess: &super::FfnHessians,
+    layer: usize,
+    module: &str,
+) -> Result<f64> {
+    // Reuse prune_ffn restricted to the module; isolate the layer by
+    // running on a clone and copying only that layer's tensor back.
+    let mut q = p.clone();
+    let err = pipe.prune_ffn(&mut q, FfnMethod::SparseGpt, 0.5, hess, 0.0, Some(module))?;
+    let name = format!("layers.{layer}.{module}");
+    let src = q.view(&name)?.to_vec();
+    p.view_mut(&name)?.copy_from_slice(&src);
+    Ok(err / p.layout.meta.n_layer as f64)
+}
+
+// ---------------------------------------------------------------------
+// Figure 3 — whole-model sparsity sweep (m370)
+// ---------------------------------------------------------------------
+
+fn fig3(pipe: &Pipeline) -> Result<Report> {
+    let header = metric_header(&["Sparsity"]);
+    let mut rep = Report::new(
+        "fig3",
+        "whole-model performance across sparsity levels (m370)",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let cfg = "m370";
+    let params = pipe.ensure_trained(cfg)?;
+    let layout = pipe.layout(cfg)?;
+    let stats = pipe.collect_ssm_stats(&layout, &params, n_sample(pipe))?;
+    let hess = pipe.collect_ffn_hessians(&layout, &params, n_sample(pipe))?;
+    let sweep: &[f64] = if pipe.fast { &[0.4, 0.6, 0.8] } else { &[0.3, 0.4, 0.5, 0.6, 0.7, 0.8] };
+    for &s in sweep {
+        let label = format!("{:.0}%", s * 100.0);
+        for (mname, sm, fm) in [
+            ("MP", SsmMethod::Mp, FfnMethod::Mp),
+            ("SparseGPT", SsmMethod::SparseGpt, FfnMethod::SparseGpt),
+            ("SparseSSM", SsmMethod::SparseSsm, FfnMethod::SensitivityAware),
+        ] {
+            let mut p = params.clone();
+            pipe.prune_ssm(&mut p, sm, s, &stats)?;
+            pipe.prune_ffn(&mut p, fm, s, &hess, 0.04, None)?;
+            rep.push_metrics(&[&label], &eval_row(pipe, cfg, mname, &p)?);
+        }
+    }
+    rep.note("paper Fig. 3: SparseSSM's margin widens at higher sparsity");
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// Figure 4 — α sweep (left) and calibration-size sweep (right)
+// ---------------------------------------------------------------------
+
+fn fig4(pipe: &Pipeline) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig4",
+        "effect of sparsity interval α (FFN) and calibration size (SSM) — m370",
+        &["Panel", "Setting", "Wiki.↓", "ZS avg↑", "Prune time (s)"],
+    );
+    let cfg = "m370";
+    let params = pipe.ensure_trained(cfg)?;
+    let layout = pipe.layout(cfg)?;
+    let corpora = pipe.eval_corpora();
+    let ev = pipe.evaluator(layout.clone());
+
+    // Left panel: α sweep for sensitivity-aware FFN pruning @50%.
+    let hess = pipe.collect_ffn_hessians(&layout, &params, n_sample(pipe))?;
+    let alphas: &[f64] = if pipe.fast { &[0.0, 0.04] } else { &[0.0, 0.02, 0.04, 0.08] };
+    for &a in alphas {
+        let mut p = params.clone();
+        pipe.prune_ffn(&mut p, FfnMethod::SensitivityAware, 0.5, &hess, a, None)?;
+        let row = ev.metrics_row(&format!("alpha={a}"), &p, &corpora)?;
+        rep.push_row(vec![
+            "alpha".into(),
+            format!("{a}"),
+            fmt_metric(row.ppl[0]),
+            format!("{:.2}", row.zs_avg()),
+            "-".into(),
+        ]);
+    }
+
+    // Right panel: calibration size for SSM pruning @50%.
+    let sizes: &[usize] = if pipe.fast { &[8, 16, 32] } else { &[8, 16, 32, 64, 128] };
+    for &ns in sizes {
+        let stats = pipe.collect_ssm_stats(&layout, &params, ns)?;
+        let mut p = params.clone();
+        let mask_s = pipe.prune_ssm(&mut p, SsmMethod::SparseSsm, 0.5, &stats)?;
+        let row = ev.metrics_row(&format!("N={ns}"), &p, &corpora)?;
+        rep.push_row(vec![
+            "nsample".into(),
+            ns.to_string(),
+            fmt_metric(row.ppl[0]),
+            format!("{:.2}", row.zs_avg()),
+            format!("{:.2}", stats.seconds + mask_s),
+        ]);
+    }
+    rep.note("paper Fig. 4: <16 samples degrade quality; 64 is the sweet spot; α>0 helps FFN");
+    Ok(rep)
+}

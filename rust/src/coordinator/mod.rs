@@ -1,0 +1,589 @@
+//! Coordinator: the end-to-end SparseSSM pipeline.
+//!
+//! Orchestrates the stages of the paper's method over the AOT runtime:
+//!
+//! ```text
+//!   ensure checkpoint (train once, cache under runs/)
+//!     └─ calibrate: run ssm_stats / ffn_hessian over N_sample segments
+//!          └─ score + mask: Algorithm 1 (or a baseline)
+//!               └─ reconstruct: SparseGPT OBS updates for FFN modules
+//!                    └─ evaluate: perplexity ×3 + zero-shot ×5
+//! ```
+//!
+//! Experiment drivers that regenerate every paper table/figure live in
+//! [`experiments`]; human-readable output in [`report`].
+
+pub mod experiments;
+pub mod report;
+
+use crate::corpus::{Corpus, Style};
+use crate::eval::Evaluator;
+use crate::linalg::Mat;
+use crate::model::{remap_structured, FlatParams, Layout};
+use crate::pruning::{
+    aggregate::{self, Aggregation},
+    magnitude, saliency, semistructured, sensitivity, shedder,
+    sparsegpt::{self, SparseGptOptions},
+    structured,
+};
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
+use crate::tensor::Tensor;
+use crate::train::{self, TrainOptions};
+use crate::util::Stopwatch;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// SSM-module pruning methods (Table 1 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SsmMethod {
+    /// Magnitude pruning of A_log.
+    Mp,
+    /// Mamba-Shedder emulation (whole-A_log removal by importance).
+    Shedder,
+    /// Naive SparseGPT on A_log with hidden-state Gram calibration.
+    SparseGpt,
+    /// SparseSSM: Theorem-1 saliency + Algorithm-1 frequency voting.
+    SparseSsm,
+    /// Ablation: Theorem-1 saliency aggregated by L2 over time (Table 6).
+    SparseSsmL2,
+}
+
+impl SsmMethod {
+    pub fn name(self) -> &'static str {
+        match self {
+            SsmMethod::Mp => "MP",
+            SsmMethod::Shedder => "Mamba-Shedder",
+            SsmMethod::SparseGpt => "SparseGPT",
+            SsmMethod::SparseSsm => "SparseSSM",
+            SsmMethod::SparseSsmL2 => "SparseSSM-L2",
+        }
+    }
+}
+
+/// FFN pruning methods (Table 2 is SSM method + matching FFN method).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FfnMethod {
+    Mp,
+    /// SparseGPT with uniform per-module sparsity.
+    SparseGpt,
+    /// SparseGPT + Eq.-7 sensitivity schedule for in/out_proj (SparseSSM).
+    SensitivityAware,
+}
+
+/// Phase-1 calibration statistics for the SSM modules.
+pub struct CalibStats {
+    /// Per layer: S[L, d_inner, d_state] = Σ_{batches} Σ_b h².
+    pub s: Vec<Tensor>,
+    /// Per layer: hidden-state Gram [d_state, d_state].
+    pub hn: Vec<Mat>,
+    pub n_samples: usize,
+    pub seconds: f64,
+}
+
+/// Input Gram matrices for the FFN-side modules, per layer.
+pub struct FfnHessians {
+    pub h_in: Vec<Mat>,
+    pub h_conv: Vec<Tensor>, // [d_inner, K, K]
+    pub h_x: Vec<Mat>,
+    pub h_dt: Vec<Mat>,
+    pub h_out: Vec<Mat>,
+    pub seconds: f64,
+}
+
+/// Per-config training defaults (scaled to CPU PJRT budgets).
+pub fn default_train_steps(cfg: &str) -> usize {
+    match cfg {
+        "m130" => 500,
+        "m370" => 350,
+        "m790" => 220,
+        "m1400" => 140,
+        _ => 300,
+    }
+}
+
+pub struct Pipeline {
+    pub rt: Runtime,
+    pub runs_dir: PathBuf,
+    pub fast: bool,
+    layouts: RefCell<HashMap<String, Rc<Layout>>>,
+    train_corpus: RefCell<Option<Rc<Corpus>>>,
+    eval_corpora: RefCell<Option<Rc<[Corpus; 3]>>>,
+}
+
+impl Pipeline {
+    pub fn new(artifacts: &str, runs_dir: &str, fast: bool) -> Result<Pipeline> {
+        let rt = Runtime::new(artifacts)?;
+        std::fs::create_dir_all(runs_dir)?;
+        Ok(Pipeline {
+            rt,
+            runs_dir: PathBuf::from(runs_dir),
+            fast,
+            layouts: RefCell::new(HashMap::new()),
+            train_corpus: RefCell::new(None),
+            eval_corpora: RefCell::new(None),
+        })
+    }
+
+    pub fn layout(&self, cfg: &str) -> Result<Rc<Layout>> {
+        if let Some(l) = self.layouts.borrow().get(cfg) {
+            return Ok(l.clone());
+        }
+        let l = Rc::new(Layout::load_dir(self.rt.root().join(cfg))?);
+        self.layouts.borrow_mut().insert(cfg.to_string(), l.clone());
+        Ok(l)
+    }
+
+    /// The training/calibration corpus (the "WikiText-2 train shard").
+    pub fn train_corpus(&self) -> Rc<Corpus> {
+        let mut slot = self.train_corpus.borrow_mut();
+        if slot.is_none() {
+            let size = if self.fast { 300_000 } else { 1_200_000 };
+            *slot = Some(Rc::new(Corpus::generate(Style::Wiki, 1001, size)));
+        }
+        slot.as_ref().unwrap().clone()
+    }
+
+    pub fn eval_corpora(&self) -> Rc<[Corpus; 3]> {
+        let mut slot = self.eval_corpora.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(Rc::new(crate::eval::eval_corpora(120_000)));
+        }
+        slot.as_ref().unwrap().clone()
+    }
+
+    pub fn evaluator<'a>(&'a self, layout: Rc<Layout>) -> Evaluator<'a> {
+        let ev = Evaluator::new(&self.rt, layout);
+        if self.fast {
+            ev.fast()
+        } else {
+            ev
+        }
+    }
+
+    /// Load the cached checkpoint for `cfg`, or train it now and cache it.
+    pub fn ensure_trained(&self, cfg: &str) -> Result<FlatParams> {
+        let layout = self.layout(cfg)?;
+        let ckpt = self.runs_dir.join(format!("{cfg}.ckpt"));
+        if ckpt.exists() {
+            return FlatParams::load(layout, &ckpt)
+                .with_context(|| format!("loading {}", ckpt.display()));
+        }
+        let steps = if self.fast {
+            (default_train_steps(cfg) / 4).max(40)
+        } else {
+            default_train_steps(cfg)
+        };
+        crate::util::log_line("coord", &format!("training {cfg} for {steps} steps"));
+        let corpus = self.train_corpus();
+        let opts = TrainOptions { steps, ..Default::default() };
+        let (params, rep) = train::train(&self.rt, &layout, &corpus, &opts)?;
+        params.save(&ckpt)?;
+        let curve: Vec<String> =
+            rep.losses.iter().map(|(s, l)| format!("[{s},{l:.4}]")).collect();
+        std::fs::write(
+            self.runs_dir.join(format!("{cfg}.train.json")),
+            format!(
+                "{{\"steps\":{},\"seconds\":{:.1},\"first_loss\":{:.4},\"final_loss\":{:.4},\"curve\":[{}]}}\n",
+                rep.steps,
+                rep.seconds,
+                rep.first_loss,
+                rep.final_loss,
+                curve.join(",")
+            ),
+        )?;
+        Ok(params)
+    }
+
+    // ------------------------------------------------------------------
+    // Calibration
+    // ------------------------------------------------------------------
+
+    /// Algorithm 1 Phase 1: accumulate Σ h² (and the state Gram) over
+    /// `n_sample` calibration segments.
+    pub fn collect_ssm_stats(
+        &self,
+        layout: &Rc<Layout>,
+        params: &FlatParams,
+        n_sample: usize,
+    ) -> Result<CalibStats> {
+        let sw = Stopwatch::new();
+        let meta = &layout.meta;
+        let (bc, l, nl, di, ds) =
+            (meta.batch_calib, meta.seq_len, meta.n_layer, meta.d_inner, meta.d_state);
+        let corpus = self.train_corpus();
+        let segs = corpus.calibration_segments(n_sample.max(bc), l, 500);
+        let exe = self.rt.load(&layout.exe("ssm_stats"))?;
+        let p_lit = lit_f32(&params.data, &[params.data.len()])?;
+
+        let mut s_acc: Vec<Tensor> = (0..nl).map(|_| Tensor::zeros(&[l, di, ds])).collect();
+        let mut hn_acc: Vec<Mat> = (0..nl).map(|_| Mat::zeros(ds)).collect();
+        let mut used = 0usize;
+        for chunk in segs.chunks(bc) {
+            if used >= n_sample {
+                break;
+            }
+            let mut toks = Vec::with_capacity(bc * l);
+            for s in chunk {
+                toks.extend_from_slice(s);
+            }
+            for _ in chunk.len()..bc {
+                toks.extend_from_slice(chunk.last().unwrap());
+            }
+            let t_lit = lit_i32(&toks, &[bc, l])?;
+            let outs = self.rt.exec(&exe, &[&p_lit, &t_lit])?;
+            let s_all = to_vec_f32(&outs[0])?; // [nl, L, di, ds]
+            let hn_all = to_vec_f32(&outs[1])?; // [nl, ds, ds]
+            let per_layer = l * di * ds;
+            for layer in 0..nl {
+                let src = &s_all[layer * per_layer..(layer + 1) * per_layer];
+                let dst = s_acc[layer].data_mut();
+                for i in 0..per_layer {
+                    dst[i] += src[i];
+                }
+                let hsrc = &hn_all[layer * ds * ds..(layer + 1) * ds * ds];
+                for i in 0..ds * ds {
+                    hn_acc[layer].a[i] += hsrc[i] as f64;
+                }
+            }
+            used += chunk.len();
+        }
+        Ok(CalibStats { s: s_acc, hn: hn_acc, n_samples: used, seconds: sw.seconds() })
+    }
+
+    /// Input Grams for the five FFN-side module kinds.
+    pub fn collect_ffn_hessians(
+        &self,
+        layout: &Rc<Layout>,
+        params: &FlatParams,
+        n_sample: usize,
+    ) -> Result<FfnHessians> {
+        let sw = Stopwatch::new();
+        let meta = &layout.meta;
+        let (bc, l, nl) = (meta.batch_calib, meta.seq_len, meta.n_layer);
+        let (dm, di, dr, k) = (meta.d_model, meta.d_inner, meta.dt_rank, meta.d_conv);
+        let corpus = self.train_corpus();
+        let segs = corpus.calibration_segments(n_sample.max(bc), l, 501);
+        let exe = self.rt.load(&layout.exe("ffn_hessian"))?;
+        let p_lit = lit_f32(&params.data, &[params.data.len()])?;
+
+        let mut h_in = vec![Mat::zeros(dm); nl];
+        let mut h_conv: Vec<Tensor> = (0..nl).map(|_| Tensor::zeros(&[di, k, k])).collect();
+        let mut h_x = vec![Mat::zeros(di); nl];
+        let mut h_dt = vec![Mat::zeros(dr); nl];
+        let mut h_out = vec![Mat::zeros(di); nl];
+        let mut used = 0usize;
+        for chunk in segs.chunks(bc) {
+            if used >= n_sample {
+                break;
+            }
+            let mut toks = Vec::with_capacity(bc * l);
+            for s in chunk {
+                toks.extend_from_slice(s);
+            }
+            for _ in chunk.len()..bc {
+                toks.extend_from_slice(chunk.last().unwrap());
+            }
+            let t_lit = lit_i32(&toks, &[bc, l])?;
+            let outs = self.rt.exec(&exe, &[&p_lit, &t_lit])?;
+            let acc_mat = |dst: &mut [Mat], lit: &xla::Literal, n: usize| -> Result<()> {
+                let v = to_vec_f32(lit)?;
+                for layer in 0..nl {
+                    let src = &v[layer * n * n..(layer + 1) * n * n];
+                    for i in 0..n * n {
+                        dst[layer].a[i] += src[i] as f64;
+                    }
+                }
+                Ok(())
+            };
+            acc_mat(&mut h_in, &outs[0], dm)?;
+            {
+                let v = to_vec_f32(&outs[1])?;
+                let per = di * k * k;
+                for layer in 0..nl {
+                    let src = &v[layer * per..(layer + 1) * per];
+                    let dst = h_conv[layer].data_mut();
+                    for i in 0..per {
+                        dst[i] += src[i];
+                    }
+                }
+            }
+            acc_mat(&mut h_x, &outs[2], di)?;
+            acc_mat(&mut h_dt, &outs[3], dr)?;
+            acc_mat(&mut h_out, &outs[4], di)?;
+            used += chunk.len();
+        }
+        Ok(FfnHessians { h_in, h_conv, h_x, h_dt, h_out, seconds: sw.seconds() })
+    }
+
+    // ------------------------------------------------------------------
+    // SSM pruning (Table 1 family)
+    // ------------------------------------------------------------------
+
+    /// Prune all `A_log` matrices in place.  Returns mask-computation time
+    /// in seconds (Table 7 separates it from calibration time).
+    pub fn prune_ssm(
+        &self,
+        params: &mut FlatParams,
+        method: SsmMethod,
+        sparsity: f64,
+        stats: &CalibStats,
+    ) -> Result<f64> {
+        let sw = Stopwatch::new();
+        let nl = params.layout.meta.n_layer;
+        match method {
+            SsmMethod::Mp => {
+                for layer in 0..nl {
+                    let name = format!("layers.{layer}.A_log");
+                    let w = params.view_mut(&name)?;
+                    magnitude::magnitude_mask(w, sparsity).apply(w);
+                }
+            }
+            SsmMethod::SparseSsm | SsmMethod::SparseSsmL2 => {
+                let agg = if method == SsmMethod::SparseSsm {
+                    Aggregation::FrequencyVote
+                } else {
+                    Aggregation::L2
+                };
+                for layer in 0..nl {
+                    let name = format!("layers.{layer}.A_log");
+                    let a = params.tensor(&name)?;
+                    let mask = aggregate::sparsessm_mask(&a, &stats.s[layer], sparsity, agg);
+                    mask.apply(params.view_mut(&name)?);
+                }
+            }
+            SsmMethod::Shedder => {
+                let imp: Vec<f64> = (0..nl)
+                    .map(|layer| {
+                        let a = params.tensor(&format!("layers.{layer}.A_log")).unwrap();
+                        saliency::importance(&a, &stats.s[layer]).iter().sum()
+                    })
+                    .collect();
+                shedder::shed_ssm_layers(params, &imp, sparsity)?;
+            }
+            SsmMethod::SparseGpt => {
+                // Naive application (paper App. B.1): A_log is treated as a
+                // plain weight matrix with the hidden state as calibration
+                // input; OBS compensation then rewrites surviving A_log
+                // entries with no knowledge of exp(δ·A) or the recurrence.
+                let meta = params.layout.meta.clone();
+                for layer in 0..nl {
+                    let name = format!("layers.{layer}.A_log");
+                    let w = params.view_mut(&name)?;
+                    sparsegpt::prune_matrix(
+                        w,
+                        meta.d_inner,
+                        meta.d_state,
+                        &stats.hn[layer],
+                        sparsity,
+                        &SparseGptOptions::default(),
+                    )?;
+                }
+            }
+        }
+        Ok(sw.seconds())
+    }
+
+    /// N:M pruning of `A_log` (Table 4): MP or SparseSSM scores.
+    pub fn prune_ssm_nm(
+        &self,
+        params: &mut FlatParams,
+        method: SsmMethod,
+        n: usize,
+        m: usize,
+        stats: &CalibStats,
+    ) -> Result<()> {
+        let nl = params.layout.meta.n_layer;
+        for layer in 0..nl {
+            let name = format!("layers.{layer}.A_log");
+            match method {
+                SsmMethod::Mp => {
+                    let w = params.view_mut(&name)?;
+                    magnitude::magnitude_nm_mask(w, n, m).apply(w);
+                }
+                SsmMethod::SparseSsm => {
+                    let a = params.tensor(&name)?;
+                    let scores = saliency::importance(&a, &stats.s[layer]);
+                    let mask = semistructured::nm_mask_from_scores(&scores, n, m);
+                    mask.apply(params.view_mut(&name)?);
+                }
+                other => bail!("N:M not defined for {:?}", other),
+            }
+        }
+        Ok(())
+    }
+
+    /// Structured pruning (Tables 3/5): pick per-layer keep-columns, then
+    /// remap onto the reduced-d_state variant layout.
+    pub fn prune_structured(
+        &self,
+        params: &FlatParams,
+        dst_cfg: &str,
+        use_importance: bool,
+        stats: &CalibStats,
+    ) -> Result<FlatParams> {
+        let dst = self.layout(dst_cfg)?;
+        let nl = params.layout.meta.n_layer;
+        let keep: Vec<Vec<usize>> = (0..nl)
+            .map(|layer| {
+                let a = params.tensor(&format!("layers.{layer}.A_log")).unwrap();
+                let scores = if use_importance {
+                    structured::column_scores_importance(&a, &stats.s[layer])
+                } else {
+                    structured::column_scores_magnitude(&a)
+                };
+                structured::keep_columns(&scores, dst.meta.d_state)
+            })
+            .collect();
+        remap_structured(params, dst, &keep)
+    }
+
+    // ------------------------------------------------------------------
+    // FFN pruning (Table 2 family)
+    // ------------------------------------------------------------------
+
+    /// Prune the five FFN-side module kinds of every layer in place.
+    /// `only_module` restricts to one kind (Table 8); `alpha` is the Eq.-7
+    /// deviation for `SensitivityAware`.
+    pub fn prune_ffn(
+        &self,
+        params: &mut FlatParams,
+        method: FfnMethod,
+        sparsity: f64,
+        hess: &FfnHessians,
+        alpha: f64,
+        only_module: Option<&str>,
+    ) -> Result<f64> {
+        let meta = params.layout.meta.clone();
+        let nl = meta.n_layer;
+        let want = |m: &str| only_module.map_or(true, |o| o == m);
+        let mut recon_total = 0.0;
+
+        // Eq.-7 allocation for in/out_proj (pooled across layers).
+        let mut proj_sparsity: HashMap<String, f64> = HashMap::new();
+        if method == FfnMethod::SensitivityAware {
+            let mut mods = Vec::new();
+            for layer in 0..nl {
+                mods.push(sensitivity::ModuleSensitivity {
+                    name: format!("layers.{layer}.in_proj"),
+                    trace: hess.h_in[layer].trace(),
+                    weights: meta.d_model * 2 * meta.d_inner,
+                });
+                mods.push(sensitivity::ModuleSensitivity {
+                    name: format!("layers.{layer}.out_proj"),
+                    trace: hess.h_out[layer].trace(),
+                    weights: meta.d_inner * meta.d_model,
+                });
+            }
+            for (m, s) in mods.iter().zip(sensitivity::allocate(&mods, sparsity, alpha)) {
+                proj_sparsity.insert(m.name.clone(), s);
+            }
+        }
+
+        for layer in 0..nl {
+            let lp = |m: &str| format!("layers.{layer}.{m}");
+            // (name, rows=outputs, cols=inputs, H, stored_transposed)
+            // Weights are stored [in, out] (x @ W); the OBS solver wants
+            // [out rows, in cols], so most modules go through a transpose.
+            let jobs: Vec<(String, usize, usize, &Mat)> = vec![
+                (lp("in_proj"), 2 * meta.d_inner, meta.d_model, &hess.h_in[layer]),
+                (lp("x_proj"), meta.dt_rank + 2 * meta.d_state, meta.d_inner, &hess.h_x[layer]),
+                (lp("dt_proj_w"), meta.d_inner, meta.dt_rank, &hess.h_dt[layer]),
+                (lp("out_proj"), meta.d_model, meta.d_inner, &hess.h_out[layer]),
+            ];
+            for (name, rows, cols, h) in jobs {
+                let module = name.rsplit('.').next().unwrap();
+                if !want(module) {
+                    continue;
+                }
+                let p = *proj_sparsity.get(&name).unwrap_or(&sparsity);
+                let w = params.view_mut(&name)?;
+                match method {
+                    FfnMethod::Mp => magnitude::magnitude_mask(w, p).apply(w),
+                    FfnMethod::SparseGpt | FfnMethod::SensitivityAware => {
+                        let mut wt = transpose(w, cols, rows);
+                        let rep = sparsegpt::prune_matrix(
+                            &mut wt,
+                            rows,
+                            cols,
+                            h,
+                            p,
+                            &SparseGptOptions::default(),
+                        )?;
+                        recon_total += rep.recon_error;
+                        let back = transpose(&wt, rows, cols);
+                        w.copy_from_slice(&back);
+                    }
+                }
+            }
+            // Depthwise conv1d: one K-tap filter per channel with its own
+            // K×K window Gram (SparseGPT's Conv1d path, App. B.1).
+            if want("conv1d_w") || want("conv1d") {
+                let name = lp("conv1d_w");
+                let k = meta.d_conv;
+                let w = params.view_mut(&name)?;
+                match method {
+                    FfnMethod::Mp => magnitude::magnitude_mask(w, sparsity).apply(w),
+                    FfnMethod::SparseGpt | FfnMethod::SensitivityAware => {
+                        for d in 0..meta.d_inner {
+                            let hk = hess.h_conv[layer].index_axis0(d);
+                            let hmat =
+                                Mat::from_rows(k, hk.data().iter().map(|&x| x as f64).collect())?;
+                            let row = &mut w[d * k..(d + 1) * k];
+                            let rep = sparsegpt::prune_matrix(
+                                row,
+                                1,
+                                k,
+                                &hmat,
+                                sparsity,
+                                &SparseGptOptions { block_size: k, ..Default::default() },
+                            )?;
+                            recon_total += rep.recon_error;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(recon_total)
+    }
+}
+
+/// Transpose a row-major `[r, c]` matrix into `[c, r]`.
+pub fn transpose(w: &[f32], r: usize, c: usize) -> Vec<f32> {
+    assert_eq!(w.len(), r * c);
+    let mut out = vec![0.0f32; w.len()];
+    for i in 0..r {
+        for j in 0..c {
+            out[j * r + i] = w[i * c + j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let w: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let t = transpose(&w, 3, 4);
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[1], 4.0); // (0,1) <- (1,0)
+        assert_eq!(transpose(&t, 4, 3), w);
+    }
+
+    #[test]
+    fn method_names_for_reports() {
+        assert_eq!(SsmMethod::SparseSsm.name(), "SparseSSM");
+        assert_eq!(SsmMethod::Shedder.name(), "Mamba-Shedder");
+    }
+
+    #[test]
+    fn train_steps_monotone_with_scale() {
+        assert!(default_train_steps("m130") > default_train_steps("m370"));
+        assert!(default_train_steps("m370") > default_train_steps("m1400"));
+    }
+}

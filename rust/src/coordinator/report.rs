@@ -1,0 +1,130 @@
+//! Report emission: paper-style markdown tables written under `reports/`.
+
+use crate::eval::MetricsRow;
+use crate::util::fmt_metric;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, header: &[&str]) -> Report {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Standard paper row: label + 3 ppl + 5 accuracies + average.
+    pub fn push_metrics(&mut self, prefix: &[&str], m: &MetricsRow) {
+        let mut cells: Vec<String> = prefix.iter().map(|s| s.to_string()).collect();
+        cells.push(m.label.clone());
+        for p in m.ppl {
+            cells.push(fmt_metric(p));
+        }
+        for z in m.zs {
+            cells.push(format!("{z:.2}"));
+        }
+        cells.push(format!("{:.2}", m.zs_avg()));
+        self.push_row(cells);
+    }
+
+    pub fn note(&mut self, s: &str) {
+        self.notes.push(s.to_string());
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut out = format!("# {} — {}\n\n", self.id, self.title);
+        out.push('|');
+        out.push_str(&self.header.join("|"));
+        out.push_str("|\n|");
+        out.push_str(&vec!["---"; self.header.len()].join("|"));
+        out.push_str("|\n");
+        for r in &self.rows {
+            out.push('|');
+            out.push_str(&r.join("|"));
+            out.push_str("|\n");
+        }
+        if !self.notes.is_empty() {
+            out.push('\n');
+            for n in &self.notes {
+                out.push_str(&format!("- {n}\n"));
+            }
+        }
+        out
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.md", self.id));
+        std::fs::write(&path, self.markdown())?;
+        Ok(path)
+    }
+
+    pub fn print(&self) {
+        println!("\n{}", self.markdown());
+    }
+}
+
+/// Standard header for metric tables (mirrors the paper's columns; the
+/// zero-shot column names carry their paper analogue).
+pub fn metric_header(prefix: &[&str]) -> Vec<String> {
+    let mut h: Vec<String> = prefix.iter().map(|s| s.to_string()).collect();
+    h.push("Method".into());
+    for c in ["Wiki.↓", "PTB↓", "C4↓"] {
+        h.push(c.into());
+    }
+    for s in crate::tasks::Suite::all() {
+        h.push(format!("{}({})↑", s.name(), s.paper_analogue()));
+    }
+    h.push("Avg.↑".into());
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut r = Report::new("t0", "demo", &["A", "B"]);
+        r.push_row(vec!["x".into(), "1".into()]);
+        r.note("a note");
+        let md = r.markdown();
+        assert!(md.contains("|A|B|"));
+        assert!(md.contains("|x|1|"));
+        assert!(md.contains("- a note"));
+    }
+
+    #[test]
+    fn metrics_row_width_matches_header() {
+        let h = metric_header(&["Model"]);
+        let mut r = Report::new("t1", "demo", &h.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        let m = MetricsRow { label: "Dense".into(), ppl: [1.0, 2.0, 30000.0], zs: [50.0; 5] };
+        r.push_metrics(&["m370"], &m);
+        assert_eq!(r.rows[0].len(), h.len());
+        assert!(r.rows[0].contains(&"3.0e4".to_string()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut r = Report::new("t2", "demo", &["A", "B"]);
+        r.push_row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,346 @@
+//! Synthetic pseudo-language corpora — the in-repo substitute for
+//! WikiText-2 / PTB / C4 (no dataset downloads offline; see DESIGN.md §2).
+//!
+//! A deterministic generator produces a topic-structured pseudo-English:
+//! a fixed syllable-built vocabulary, Zipf-distributed content words
+//! grouped into topics, function words, and sentence/document templates.
+//! Three style variants create the "in-domain vs shifted vs noisy" spread
+//! the paper's three eval corpora have:
+//!
+//! * `Wiki` — the base distribution; the training and calibration corpus.
+//! * `Ptb`  — distribution shift: different topic mixture, shorter
+//!   sentences, lowercased, different function-word rate.
+//! * `C4`   — the base distribution plus web-like noise (typos, casing,
+//!   digit runs).
+//!
+//! Tokenization is byte-level (vocab 256), matching the AOT model configs.
+
+use crate::rngx::Pcg;
+
+pub const VOCAB: usize = 256;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Style {
+    Wiki,
+    Ptb,
+    C4,
+}
+
+impl Style {
+    pub fn name(self) -> &'static str {
+        match self {
+            Style::Wiki => "wiki-sub",
+            Style::Ptb => "ptb-sub",
+            Style::C4 => "c4-sub",
+        }
+    }
+
+    pub fn all() -> [Style; 3] {
+        [Style::Wiki, Style::Ptb, Style::C4]
+    }
+}
+
+const ONSETS: &[&str] = &[
+    "b", "c", "d", "f", "g", "h", "j", "k", "l", "m", "n", "p", "r", "s", "t", "v", "w", "z",
+    "br", "ch", "cl", "dr", "fl", "gr", "pl", "pr", "sh", "sl", "st", "th", "tr",
+];
+const VOWELS: &[&str] = &["a", "e", "i", "o", "u", "ai", "ea", "ie", "oo", "ou"];
+const CODAS: &[&str] = &["", "", "n", "r", "s", "t", "l", "m", "d", "k", "st", "nd"];
+const FUNCTION_WORDS: &[&str] = &[
+    "the", "a", "of", "and", "to", "in", "is", "was", "that", "it", "for", "with", "as", "on",
+    "be", "at", "by", "this", "had", "not",
+];
+
+pub const N_TOPICS: usize = 8;
+const WORDS_PER_TOPIC: usize = 80;
+const N_SHARED: usize = 260;
+const N_WORDS: usize = N_TOPICS * WORDS_PER_TOPIC + N_SHARED;
+
+/// The fixed pseudo-language: one global instance, derived from a constant
+/// seed so Python-free reproducibility holds across runs and machines.
+pub struct Language {
+    pub words: Vec<String>,
+    /// `topics[t]` = indices of words exclusive to topic `t`.
+    pub topics: Vec<Vec<usize>>,
+    pub shared: Vec<usize>,
+}
+
+impl Language {
+    pub fn standard() -> &'static Language {
+        use std::sync::OnceLock;
+        static LANG: OnceLock<Language> = OnceLock::new();
+        LANG.get_or_init(|| Language::generate(0x5eed_1a6e))
+    }
+
+    fn generate(seed: u64) -> Language {
+        let mut rng = Pcg::seeded(seed);
+        let mut seen = std::collections::BTreeSet::new();
+        let mut words = Vec::with_capacity(N_WORDS);
+        while words.len() < N_WORDS {
+            let syllables = 1 + rng.below(3);
+            let mut w = String::new();
+            for _ in 0..syllables {
+                w.push_str(ONSETS[rng.below(ONSETS.len())]);
+                w.push_str(VOWELS[rng.below(VOWELS.len())]);
+                w.push_str(CODAS[rng.below(CODAS.len())]);
+            }
+            if w.len() >= 3 && w.len() <= 12 && seen.insert(w.clone()) {
+                words.push(w);
+            }
+        }
+        let mut idx: Vec<usize> = (0..N_WORDS).collect();
+        rng.shuffle(&mut idx);
+        let topics: Vec<Vec<usize>> = (0..N_TOPICS)
+            .map(|t| idx[t * WORDS_PER_TOPIC..(t + 1) * WORDS_PER_TOPIC].to_vec())
+            .collect();
+        let shared = idx[N_TOPICS * WORDS_PER_TOPIC..].to_vec();
+        Language { words, topics, shared }
+    }
+}
+
+/// Zipf-ish weights over a pool of size n.
+fn zipf_weights(n: usize, exponent: f64) -> Vec<f64> {
+    (0..n).map(|i| 1.0 / ((i + 3) as f64).powf(exponent)).collect()
+}
+
+/// Document generator for one style.
+pub struct Generator<'l> {
+    lang: &'l Language,
+    style: Style,
+    rng: Pcg,
+    topic_weights: Vec<f64>,
+    zipf_topic: Vec<f64>,
+    zipf_shared: Vec<f64>,
+}
+
+impl<'l> Generator<'l> {
+    pub fn new(style: Style, seed: u64) -> Generator<'static> {
+        let lang = Language::standard();
+        let topic_weights = match style {
+            // Ptb concentrates on a reweighted subset of topics; Wiki/C4
+            // spread evenly (C4 differs through noise, not topics).
+            Style::Ptb => vec![4.0, 3.0, 2.0, 1.0, 0.25, 0.25, 0.25, 0.25],
+            _ => vec![1.0; N_TOPICS],
+        };
+        let zipf_exp = if style == Style::Ptb { 1.3 } else { 1.05 };
+        Generator {
+            lang,
+            style,
+            rng: Pcg::new(seed, 0x1234_5678),
+            topic_weights,
+            zipf_topic: zipf_weights(WORDS_PER_TOPIC, zipf_exp),
+            zipf_shared: zipf_weights(N_SHARED, zipf_exp),
+        }
+    }
+
+    fn pick_word(&mut self, topic: usize) -> String {
+        let func_p = if self.style == Style::Ptb { 0.25 } else { 0.35 };
+        if self.rng.uniform() < func_p {
+            return FUNCTION_WORDS[self.rng.below(FUNCTION_WORDS.len())].to_string();
+        }
+        let from_topic = self.rng.uniform() < 0.75;
+        let wi = if from_topic {
+            self.lang.topics[topic][self.rng.categorical(&self.zipf_topic)]
+        } else {
+            self.lang.shared[self.rng.categorical(&self.zipf_shared)]
+        };
+        self.lang.words[wi].clone()
+    }
+
+    fn noise_word(&mut self, w: &mut String) {
+        // C4-style corruption.
+        let roll = self.rng.uniform();
+        if roll < 0.03 && w.len() >= 4 {
+            // typo: swap two adjacent ASCII chars
+            let i = 1 + self.rng.below(w.len() - 2);
+            let bytes = unsafe { w.as_bytes_mut() };
+            bytes.swap(i, i + 1);
+        } else if roll < 0.08 {
+            *w = w.to_uppercase();
+        } else if roll < 0.10 {
+            *w = format!("{}{}", w, 1 + self.rng.below(99));
+        }
+    }
+
+    pub fn sentence(&mut self, topic: usize) -> String {
+        let (lo, hi) = if self.style == Style::Ptb { (3, 8) } else { (4, 12) };
+        let len = lo + self.rng.below(hi - lo + 1);
+        let mut parts: Vec<String> = Vec::with_capacity(len);
+        for _ in 0..len {
+            let mut w = self.pick_word(topic);
+            if self.style == Style::C4 {
+                self.noise_word(&mut w);
+            }
+            parts.push(w);
+        }
+        if self.style != Style::Ptb {
+            // Capitalise first letter.
+            let mut c = parts[0].chars();
+            if let Some(f) = c.next() {
+                parts[0] = f.to_uppercase().collect::<String>() + c.as_str();
+            }
+        }
+        let mut s = parts.join(" ");
+        // occasional comma
+        if len > 6 && self.rng.uniform() < 0.4 {
+            let pos = s.len() / 2;
+            if let Some(sp) = s[pos..].find(' ') {
+                s.insert(pos + sp, ',');
+            }
+        }
+        let end = if self.style == Style::Ptb {
+            '.'
+        } else if self.rng.uniform() < 0.05 {
+            '?'
+        } else {
+            '.'
+        };
+        s.push(end);
+        s
+    }
+
+    pub fn document(&mut self) -> String {
+        let topic = self.rng.categorical(&self.topic_weights);
+        self.document_on_topic(topic)
+    }
+
+    pub fn document_on_topic(&mut self, topic: usize) -> String {
+        let n = 3 + self.rng.below(6);
+        let mut out = String::new();
+        for i in 0..n {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(&self.sentence(topic));
+        }
+        out.push('\n');
+        out
+    }
+
+    pub fn rng_mut(&mut self) -> &mut Pcg {
+        &mut self.rng
+    }
+}
+
+/// Byte-level tokenizer (vocab = 256).
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+pub fn decode(tokens: &[i32]) -> String {
+    tokens.iter().map(|&t| (t as u8) as char).collect()
+}
+
+/// A generated corpus split: a flat token stream.
+pub struct Corpus {
+    pub style: Style,
+    pub tokens: Vec<i32>,
+}
+
+impl Corpus {
+    /// Generate at least `min_tokens` tokens.  `split_seed` separates
+    /// train/validation/test draws.
+    pub fn generate(style: Style, split_seed: u64, min_tokens: usize) -> Corpus {
+        let mut g = Generator::new(style, split_seed);
+        let mut tokens = Vec::with_capacity(min_tokens + 1024);
+        while tokens.len() < min_tokens {
+            tokens.extend(encode(&g.document()));
+        }
+        Corpus { style, tokens }
+    }
+
+    /// Non-overlapping evaluation windows of `len + 1` tokens (inputs and
+    /// shifted targets), mirroring strided perplexity evaluation.
+    pub fn eval_windows(&self, len: usize, max_windows: usize) -> Vec<Vec<i32>> {
+        self.tokens
+            .chunks_exact(len + 1)
+            .take(max_windows)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+
+    /// `n` random contiguous calibration segments of `len` tokens — the
+    /// analogue of the paper's "128 contiguous segments of 2048 tokens from
+    /// the first shard".
+    pub fn calibration_segments(&self, n: usize, len: usize, seed: u64) -> Vec<Vec<i32>> {
+        let mut rng = Pcg::seeded(seed);
+        let hi = self.tokens.len().saturating_sub(len + 1);
+        (0..n)
+            .map(|_| {
+                let off = rng.below(hi.max(1));
+                self.tokens[off..off + len].to_vec()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn language_is_deterministic_and_disjoint() {
+        let l1 = Language::generate(0x5eed_1a6e);
+        let l2 = Language::generate(0x5eed_1a6e);
+        assert_eq!(l1.words, l2.words);
+        assert_eq!(l1.words.len(), N_WORDS);
+        let mut seen = std::collections::BTreeSet::new();
+        for t in &l1.topics {
+            assert_eq!(t.len(), WORDS_PER_TOPIC);
+            for &w in t {
+                assert!(seen.insert(w), "topic words must be exclusive");
+            }
+        }
+        for &w in &l1.shared {
+            assert!(seen.insert(w));
+        }
+    }
+
+    #[test]
+    fn generator_is_seed_deterministic() {
+        let d1 = Generator::new(Style::Wiki, 7).document();
+        let d2 = Generator::new(Style::Wiki, 7).document();
+        let d3 = Generator::new(Style::Wiki, 8).document();
+        assert_eq!(d1, d2);
+        assert_ne!(d1, d3);
+    }
+
+    #[test]
+    fn styles_differ() {
+        let w = Corpus::generate(Style::Wiki, 1, 20_000);
+        let p = Corpus::generate(Style::Ptb, 1, 20_000);
+        let c = Corpus::generate(Style::C4, 1, 20_000);
+        assert!(w.tokens.len() >= 20_000);
+        // Ptb is lowercase-only; Wiki capitalises sentence starts.
+        let has_upper = |t: &[i32]| t.iter().any(|&b| (65..=90).contains(&b));
+        assert!(has_upper(&w.tokens));
+        assert!(!has_upper(&p.tokens) || p.tokens.iter().filter(|&&b| (65..=90).contains(&b)).count() < 5);
+        // C4 contains digits from the noise channel.
+        assert!(c.tokens.iter().any(|&b| (48..=57).contains(&b)));
+    }
+
+    #[test]
+    fn tokenizer_roundtrip() {
+        let s = "The flooze of grthal, was 42?\n";
+        assert_eq!(decode(&encode(s)), s);
+        assert!(encode(s).iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn eval_windows_shape() {
+        let c = Corpus::generate(Style::Wiki, 2, 10_000);
+        let w = c.eval_windows(128, 20);
+        assert_eq!(w.len(), 20);
+        assert!(w.iter().all(|x| x.len() == 129));
+    }
+
+    #[test]
+    fn calibration_segments_shape_and_determinism() {
+        let c = Corpus::generate(Style::Wiki, 3, 50_000);
+        let a = c.calibration_segments(16, 128, 9);
+        let b = c.calibration_segments(16, 128, 9);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 16);
+        assert!(a.iter().all(|s| s.len() == 128));
+    }
+}

@@ -1,0 +1,237 @@
+//! Evaluation harness: perplexity over the three corpora and zero-shot
+//! accuracy over the five multiple-choice suites, all driven through the
+//! AOT `seq_nll` executable (masked per-sequence NLL).
+//!
+//! This reproduces the paper's protocol: perplexity = exp(mean NLL per
+//! token) on held-out windows; zero-shot = length-normalised likelihood
+//! ranking of the answer options, no task-specific tuning.
+
+use crate::corpus::{encode, Corpus, Style};
+use crate::model::{FlatParams, Layout};
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
+use crate::tasks::Suite;
+use anyhow::Result;
+use std::rc::Rc;
+
+/// One scored sequence: tokens[L+1] with target mask[L].
+#[derive(Debug, Clone)]
+pub struct SeqJob {
+    pub tokens: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+/// Pack a context+option pair into a fixed-length job: the pair is
+/// right-aligned (context truncated from the left if needed), left padding
+/// is whitespace, and the mask covers exactly the option's target
+/// positions.
+pub fn pack_option(context: &[i32], option: &[i32], seq_len: usize) -> SeqJob {
+    let total = seq_len + 1;
+    let keep_ctx = context.len().min(total.saturating_sub(option.len()));
+    let opt_len = option.len().min(total.saturating_sub(1));
+    let mut tokens = Vec::with_capacity(total);
+    let pad = total - keep_ctx - opt_len;
+    tokens.resize(pad, b' ' as i32);
+    tokens.extend_from_slice(&context[context.len() - keep_ctx..]);
+    tokens.extend_from_slice(&option[option.len() - opt_len..]);
+    debug_assert_eq!(tokens.len(), total);
+    // mask[i] covers target position i+1; option occupies [total-opt_len, total)
+    let mut mask = vec![0.0f32; seq_len];
+    for i in 0..seq_len {
+        if i + 1 >= total - opt_len {
+            mask[i] = 1.0;
+        }
+    }
+    SeqJob { tokens, mask }
+}
+
+/// Evaluator bound to one model layout (and its `seq_nll` executable).
+pub struct Evaluator<'a> {
+    rt: &'a Runtime,
+    layout: Rc<Layout>,
+    /// number of eval windows per perplexity corpus
+    pub ppl_windows: usize,
+    /// items per zero-shot suite
+    pub zs_items: usize,
+    pub zs_seed: u64,
+}
+
+/// The paper's per-model metric row (3 perplexities + 5 accuracies).
+#[derive(Debug, Clone)]
+pub struct MetricsRow {
+    pub label: String,
+    pub ppl: [f64; 3],
+    pub zs: [f64; 5],
+}
+
+impl MetricsRow {
+    pub fn zs_avg(&self) -> f64 {
+        self.zs.iter().sum::<f64>() / self.zs.len() as f64
+    }
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(rt: &'a Runtime, layout: Rc<Layout>) -> Evaluator<'a> {
+        Evaluator { rt, layout, ppl_windows: 16, zs_items: 24, zs_seed: 999 }
+    }
+
+    pub fn fast(mut self) -> Self {
+        self.ppl_windows = 8;
+        self.zs_items = 12;
+        self
+    }
+
+    /// Run a batch of jobs; returns (nll_sum, token_count) per job.
+    fn run_jobs(&self, params: &FlatParams, jobs: &[SeqJob]) -> Result<Vec<(f64, f64)>> {
+        let meta = &self.layout.meta;
+        let (b, l) = (meta.batch_eval, meta.seq_len);
+        let exe = self.rt.load(&self.layout.exe("seq_nll"))?;
+        let p_lit = lit_f32(&params.data, &[params.data.len()])?;
+        let mut out = Vec::with_capacity(jobs.len());
+        for chunk in jobs.chunks(b) {
+            let mut toks = Vec::with_capacity(b * (l + 1));
+            let mut mask = Vec::with_capacity(b * l);
+            for j in chunk {
+                toks.extend_from_slice(&j.tokens);
+                mask.extend_from_slice(&j.mask);
+            }
+            // pad the final partial batch with copies of the last job
+            for _ in chunk.len()..b {
+                toks.extend_from_slice(&chunk.last().unwrap().tokens);
+                mask.extend_from_slice(&chunk.last().unwrap().mask);
+            }
+            let t_lit = lit_i32(&toks, &[b, l + 1])?;
+            let m_lit = lit_f32(&mask, &[b, l])?;
+            // pass by reference: no deep copy of the parameter literal
+            let outs = self.rt.exec(&exe, &[&p_lit, &t_lit, &m_lit])?;
+            let nll = to_vec_f32(&outs[0])?;
+            let cnt = to_vec_f32(&outs[1])?;
+            for i in 0..chunk.len() {
+                out.push((nll[i] as f64, cnt[i] as f64));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Token-level perplexity on held-out windows of `corpus`.
+    pub fn perplexity(&self, params: &FlatParams, corpus: &Corpus) -> Result<f64> {
+        let l = self.layout.meta.seq_len;
+        let jobs: Vec<SeqJob> = corpus
+            .eval_windows(l, self.ppl_windows)
+            .into_iter()
+            .map(|tokens| SeqJob { tokens, mask: vec![1.0; l] })
+            .collect();
+        anyhow::ensure!(!jobs.is_empty(), "corpus too small for eval windows");
+        let res = self.run_jobs(params, &jobs)?;
+        let (nll, cnt) = res.iter().fold((0.0, 0.0), |a, r| (a.0 + r.0, a.1 + r.1));
+        Ok((nll / cnt).exp())
+    }
+
+    /// Zero-shot accuracy on one suite (length-normalised option ranking).
+    pub fn zero_shot(&self, params: &FlatParams, suite: Suite) -> Result<f64> {
+        let items = suite.items(self.zs_items, self.zs_seed);
+        let l = self.layout.meta.seq_len;
+        let mut jobs = Vec::new();
+        let mut spans = Vec::new(); // (start, n_options, correct)
+        for it in &items {
+            let ctx = encode(&it.context);
+            spans.push((jobs.len(), it.options.len(), it.correct));
+            for opt in &it.options {
+                jobs.push(pack_option(&ctx, &encode(opt), l));
+            }
+        }
+        let res = self.run_jobs(params, &jobs)?;
+        let mut correct = 0usize;
+        for &(start, n, ans) in &spans {
+            let mut best = 0usize;
+            let mut best_nll = f64::INFINITY;
+            for o in 0..n {
+                let (nll, cnt) = res[start + o];
+                let norm = nll / cnt.max(1.0);
+                if norm < best_nll {
+                    best_nll = norm;
+                    best = o;
+                }
+            }
+            if best == ans {
+                correct += 1;
+            }
+        }
+        Ok(100.0 * correct as f64 / items.len() as f64)
+    }
+
+    /// Full paper-style metric row: wiki/ptb/c4 perplexity + 5 suites.
+    pub fn metrics_row(
+        &self,
+        label: &str,
+        params: &FlatParams,
+        corpora: &[Corpus; 3],
+    ) -> Result<MetricsRow> {
+        let mut ppl = [0.0; 3];
+        for (i, c) in corpora.iter().enumerate() {
+            ppl[i] = self.perplexity(params, c)?;
+        }
+        let mut zs = [0.0; 5];
+        for (i, s) in Suite::all().into_iter().enumerate() {
+            zs[i] = self.zero_shot(params, s)?;
+        }
+        Ok(MetricsRow { label: label.to_string(), ppl, zs })
+    }
+}
+
+/// The three evaluation corpora (validation splits).
+pub fn eval_corpora(tokens_per_corpus: usize) -> [Corpus; 3] {
+    [
+        Corpus::generate(Style::Wiki, 2001, tokens_per_corpus),
+        Corpus::generate(Style::Ptb, 2002, tokens_per_corpus),
+        Corpus::generate(Style::C4, 2003, tokens_per_corpus),
+    ]
+}
+
+/// Number of `seq_nll` sequences a zero-shot pass will score — used by the
+/// Table-7 cost accounting.
+pub fn zero_shot_job_count(items_per_suite: usize) -> usize {
+    Suite::all().iter().map(|s| s.n_options() * items_per_suite).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_right_aligned_with_mask() {
+        let ctx = vec![1, 2, 3];
+        let opt = vec![9, 9];
+        let j = pack_option(&ctx, &opt, 8); // total 9
+        assert_eq!(j.tokens.len(), 9);
+        assert_eq!(j.mask.len(), 8);
+        assert_eq!(&j.tokens[4..], &[1, 2, 3, 9, 9]);
+        assert_eq!(j.tokens[0], b' ' as i32);
+        // option at positions 7,8 -> mask indices 6,7
+        assert_eq!(j.mask, vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn pack_truncates_long_context_from_left() {
+        let ctx: Vec<i32> = (0..100).collect();
+        let opt = vec![7, 7, 7];
+        let j = pack_option(&ctx, &opt, 8);
+        assert_eq!(j.tokens.len(), 9);
+        assert_eq!(&j.tokens[..6], &[94, 95, 96, 97, 98, 99]);
+        assert_eq!(&j.tokens[6..], &[7, 7, 7]);
+        assert_eq!(j.mask.iter().sum::<f32>(), 3.0);
+    }
+
+    #[test]
+    fn mask_count_matches_option_len() {
+        for ol in 1..6 {
+            let j = pack_option(&[5; 4], &vec![1; ol], 16);
+            assert_eq!(j.mask.iter().sum::<f32>() as usize, ol);
+        }
+    }
+
+    #[test]
+    fn job_count_accounting() {
+        // 4+2+4+4+2 options over 5 suites
+        assert_eq!(zero_shot_job_count(10), 160);
+    }
+}

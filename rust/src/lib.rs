@@ -1,0 +1,40 @@
+//! # SparseSSM — one-shot OBS pruning for selective state-space LLMs
+//!
+//! Rust reproduction of *"SparseSSM: Efficient Selective Structured State
+//! Space Models Can Be Pruned in One-Shot"* (Tuo & Wang, 2025), built as a
+//! three-layer stack:
+//!
+//! * **L3 (this crate)** — the coordinator: pruning pipeline, the paper's
+//!   Algorithm 1 (time-selective OBS mask aggregation), all baselines
+//!   (magnitude, SparseGPT/ExactOBS, Mamba-Shedder emulation), sensitivity-
+//!   aware FFN allocation (Eq. 7), semi-structured and structured variants,
+//!   training loop, evaluation harness and experiment drivers for every
+//!   table/figure in the paper.
+//! * **L2** — the Mamba LM written in JAX (`python/compile/model.py`),
+//!   AOT-lowered once to HLO text.
+//! * **L1** — Pallas selective-scan kernels (`python/compile/kernels/`).
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts through the PJRT C API (`xla` crate) and executes them
+//! from Rust.
+//!
+//! The offline vendor set contains only `xla` + `anyhow`, so every other
+//! substrate (JSON, CLI, RNG, tensors, dense linear algebra, thread pool,
+//! bench harness, synthetic corpora and evaluation tasks) is implemented
+//! in-repo — see `DESIGN.md` §3.
+
+pub mod benchx;
+pub mod coordinator;
+pub mod corpus;
+pub mod eval;
+pub mod linalg;
+pub mod model;
+pub mod pruning;
+pub mod rngx;
+pub mod runtime;
+pub mod ssm;
+pub mod tasks;
+pub mod tensor;
+pub mod threadx;
+pub mod train;
+pub mod util;

@@ -1,0 +1,305 @@
+//! Dense linear algebra substrate for the OBS solvers (no external crates).
+//!
+//! SparseGPT-style pruning needs, per module: `H = X^T X + λI`, its inverse,
+//! and the upper-triangular Cholesky factor of the inverse.  Everything is
+//! done in f64 for conditioning and converted at the edges.
+
+use anyhow::{bail, Result};
+
+/// Square row-major matrix.
+#[derive(Debug, Clone)]
+pub struct Mat {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n: usize) -> Self {
+        Mat { n, a: vec![0.0; n * n] }
+    }
+
+    pub fn from_rows(n: usize, a: Vec<f64>) -> Result<Self> {
+        if a.len() != n * n {
+            bail!("expected {} elems, got {}", n * n, a.len());
+        }
+        Ok(Mat { n, a })
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Mat::zeros(n);
+        for i in 0..n {
+            m.a[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+    }
+
+    pub fn add_diag(&mut self, v: f64) {
+        for i in 0..self.n {
+            self.a[i * self.n + i] += v;
+        }
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.n).map(|i| self.get(i, i)).sum()
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let aik = self.get(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                let (orow, brow) = (i * n, k * n);
+                for j in 0..n {
+                    out.a[orow + j] += aik * other.a[brow + j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                out.a[j * n + i] = self.a[i * n + j];
+            }
+        }
+        out
+    }
+
+    /// In-place lower-triangular Cholesky (A = L L^T).  Fails on a
+    /// non-SPD input; callers add damping and retry.
+    pub fn cholesky_lower(&self) -> Result<Mat> {
+        let n = self.n;
+        let mut l = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self.get(i, j);
+                for k in 0..j {
+                    s -= l.get(i, k) * l.get(j, k);
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        bail!("matrix not SPD at pivot {i} (s={s})");
+                    }
+                    l.set(i, j, s.sqrt());
+                } else {
+                    l.set(i, j, s / l.get(j, j));
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// Solve L y = b for lower-triangular L.
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.get(i, k) * y[k];
+            }
+            y[i] = s / self.get(i, i);
+        }
+        y
+    }
+
+    /// Solve L^T x = y for lower-triangular L (i.e. upper solve).
+    pub fn solve_lower_transpose(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.get(k, i) * x[k];
+            }
+            x[i] = s / self.get(i, i);
+        }
+        x
+    }
+
+    /// SPD inverse via Cholesky, with escalating diagonal damping.  The
+    /// damping schedule mirrors SparseGPT's `percdamp` fallback: start at
+    /// `damp * mean(diag)` and multiply by 10 until the factorization
+    /// succeeds.
+    pub fn spd_inverse_damped(&self, damp: f64) -> Result<(Mat, f64)> {
+        let n = self.n;
+        let mean_diag = (self.trace() / n as f64).max(1e-12);
+        let mut lambda = damp * mean_diag;
+        for _ in 0..12 {
+            let mut h = self.clone();
+            h.add_diag(lambda);
+            if let Ok(l) = h.cholesky_lower() {
+                let mut inv = Mat::zeros(n);
+                let mut e = vec![0.0; n];
+                for j in 0..n {
+                    e.fill(0.0);
+                    e[j] = 1.0;
+                    let y = l.solve_lower(&e);
+                    let x = l.solve_lower_transpose(&y);
+                    for i in 0..n {
+                        inv.a[i * n + j] = x[i];
+                    }
+                }
+                return Ok((inv, lambda));
+            }
+            lambda *= 10.0;
+        }
+        bail!("spd_inverse: matrix not factorizable even at λ={lambda}")
+    }
+
+    /// Upper-triangular Cholesky factor U with A = U^T U (SparseGPT wants
+    /// the factor of H^{-1} in this orientation).
+    pub fn cholesky_upper(&self) -> Result<Mat> {
+        // A = L L^T  =>  with U = L^T, A = U^T U.
+        Ok(self.cholesky_lower()?.transpose())
+    }
+
+    /// Frobenius norm of (self - other), for tests.
+    pub fn dist(&self, other: &Mat) -> f64 {
+        self.a
+            .iter()
+            .zip(&other.a)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Gram matrix H = X^T X from row-major samples X[rows, cols], accumulated
+/// in f64.
+pub fn gram_f32(x: &[f32], rows: usize, cols: usize) -> Mat {
+    let mut h = Mat::zeros(cols);
+    for r in 0..rows {
+        let xr = &x[r * cols..(r + 1) * cols];
+        for i in 0..cols {
+            let xi = xr[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            let row = i * cols;
+            for j in 0..cols {
+                h.a[row + j] += xi * xr[j] as f64;
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut r = Pcg::seeded(seed);
+        let mut b = Mat::zeros(n);
+        for v in &mut b.a {
+            *v = r.normal();
+        }
+        let mut h = b.transpose().matmul(&b);
+        h.add_diag(0.5 * n as f64);
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let h = random_spd(8, 1);
+        let l = h.cholesky_lower().unwrap();
+        let rec = l.matmul(&l.transpose());
+        assert!(h.dist(&rec) < 1e-9, "dist={}", h.dist(&rec));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut m = Mat::identity(3);
+        m.set(0, 0, -1.0);
+        assert!(m.cholesky_lower().is_err());
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let h = random_spd(6, 2);
+        let l = h.cholesky_lower().unwrap();
+        let b: Vec<f64> = (0..6).map(|i| i as f64 - 2.5).collect();
+        let y = l.solve_lower(&b);
+        let x = l.solve_lower_transpose(&y);
+        // L L^T x should equal b
+        let lt = l.transpose();
+        let mut ltx = vec![0.0; 6];
+        for i in 0..6 {
+            for j in 0..6 {
+                ltx[i] += lt.get(i, j) * x[j];
+            }
+        }
+        let mut b2 = vec![0.0; 6];
+        for i in 0..6 {
+            for j in 0..6 {
+                b2[i] += l.get(i, j) * ltx[j];
+            }
+        }
+        for (u, v) in b.iter().zip(&b2) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let h = random_spd(10, 3);
+        let (inv, _lam) = h.spd_inverse_damped(0.0).unwrap();
+        let id = h.matmul(&inv);
+        assert!(id.dist(&Mat::identity(10)) < 1e-6, "dist={}", id.dist(&Mat::identity(10)));
+    }
+
+    #[test]
+    fn damping_rescues_singular() {
+        // Rank-deficient Gram matrix.
+        let x = vec![1.0f32, 2.0, 2.0, 4.0, -1.0, -2.0];
+        let h = gram_f32(&x, 3, 2);
+        assert!(h.cholesky_lower().is_err() || h.get(0, 0) > 0.0);
+        let (inv, lam) = h.spd_inverse_damped(0.01).unwrap();
+        assert!(lam > 0.0);
+        assert_eq!(inv.n, 2);
+        assert!(inv.a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn gram_matches_manual() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0]; // 2x2: rows (1,2), (3,4)
+        let h = gram_f32(&x, 2, 2);
+        assert_eq!(h.get(0, 0), 10.0);
+        assert_eq!(h.get(0, 1), 14.0);
+        assert_eq!(h.get(1, 1), 20.0);
+    }
+
+    #[test]
+    fn upper_cholesky_orientation() {
+        let h = random_spd(5, 4);
+        let u = h.cholesky_upper().unwrap();
+        let rec = u.transpose().matmul(&u);
+        assert!(h.dist(&rec) < 1e-9);
+        // strictly lower part of U is zero
+        for i in 0..5 {
+            for j in 0..i {
+                assert_eq!(u.get(i, j), 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! `sparsessm` — CLI for the SparseSSM reproduction.
+//!
+//! Subcommands:
+//!   smoke                         runtime round-trip check (init + 1 step)
+//!   train      --config m130 [--steps N]
+//!   prune      --config m370 [--method sparsessm|mp|shedder|sparsegpt]
+//!              [--sparsity 0.5] [--scope ssm|all] [--nsample 64]
+//!   eval       --config m370      dense evaluation row
+//!   experiment --id table1|...|fig4 | --all   (regenerates paper tables)
+//!   list                          known experiments
+//!
+//! Global flags: --artifacts DIR (default artifacts), --runs DIR (default
+//! runs), --fast (reduced scales/samples for CI), --reports DIR.
+
+use anyhow::{bail, Result};
+use sparsessm::coordinator::{experiments, FfnMethod, Pipeline, SsmMethod};
+use sparsessm::train::TrainOptions;
+use sparsessm::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = real_main(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["fast", "all"])?;
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+    let runs = args.get_or("runs", "runs").to_string();
+    let reports = args.get_or("reports", "reports").to_string();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+
+    match sub.as_str() {
+        "help" => {
+            println!("see `sparsessm` source header or README for usage");
+            Ok(())
+        }
+        "list" => {
+            for id in experiments::ALL_IDS {
+                println!("{id}");
+            }
+            Ok(())
+        }
+        "smoke" => smoke(&artifacts),
+        "train" => {
+            let pipe = Pipeline::new(&artifacts, &runs, args.has("fast"))?;
+            let cfg = args.get_or("config", "m130");
+            // force retrain when --steps given
+            if let Some(steps) = args.get("steps") {
+                let layout = pipe.layout(cfg)?;
+                let corpus = pipe.train_corpus();
+                let opts = TrainOptions { steps: steps.parse()?, ..Default::default() };
+                let (params, rep) = sparsessm::train::train(&pipe.rt, &layout, &corpus, &opts)?;
+                params.save(pipe.runs_dir.join(format!("{cfg}.ckpt")))?;
+                println!(
+                    "trained {cfg}: loss {:.4} -> {:.4} in {:.1}s",
+                    rep.first_loss, rep.final_loss, rep.seconds
+                );
+            } else {
+                let _ = pipe.ensure_trained(cfg)?;
+                println!("checkpoint ready for {cfg}");
+            }
+            Ok(())
+        }
+        "eval" => {
+            let pipe = Pipeline::new(&artifacts, &runs, args.has("fast"))?;
+            let cfg = args.get_or("config", "m130");
+            let params = pipe.ensure_trained(cfg)?;
+            let ev = pipe.evaluator(pipe.layout(cfg)?);
+            let corpora = pipe.eval_corpora();
+            let row = ev.metrics_row("Dense", &params, &corpora)?;
+            print_row(cfg, &row);
+            Ok(())
+        }
+        "prune" => {
+            let pipe = Pipeline::new(&artifacts, &runs, args.has("fast"))?;
+            let cfg = args.get_or("config", "m370");
+            let sparsity = args.get_f64("sparsity", 0.5)?;
+            let nsample = args.get_usize("nsample", 64)?;
+            let method = match args.get_or("method", "sparsessm") {
+                "mp" => SsmMethod::Mp,
+                "shedder" => SsmMethod::Shedder,
+                "sparsegpt" => SsmMethod::SparseGpt,
+                "sparsessm" => SsmMethod::SparseSsm,
+                "sparsessm-l2" => SsmMethod::SparseSsmL2,
+                other => bail!("unknown method '{other}'"),
+            };
+            let params = pipe.ensure_trained(cfg)?;
+            let layout = pipe.layout(cfg)?;
+            let stats = pipe.collect_ssm_stats(&layout, &params, nsample)?;
+            let mut p = params.clone();
+            pipe.prune_ssm(&mut p, method, sparsity, &stats)?;
+            if args.get_or("scope", "ssm") == "all" {
+                let hess = pipe.collect_ffn_hessians(&layout, &params, nsample)?;
+                let fm = match method {
+                    SsmMethod::Mp => FfnMethod::Mp,
+                    SsmMethod::SparseSsm | SsmMethod::SparseSsmL2 => FfnMethod::SensitivityAware,
+                    _ => FfnMethod::SparseGpt,
+                };
+                pipe.prune_ffn(&mut p, fm, sparsity, &hess, 0.04, None)?;
+            }
+            let out = pipe.runs_dir.join(format!(
+                "{cfg}.{}.s{:02}.ckpt",
+                args.get_or("method", "sparsessm"),
+                (sparsity * 100.0) as u32
+            ));
+            p.save(&out)?;
+            println!("ssm sparsity {:.3}; saved {}", p.ssm_sparsity(), out.display());
+            let ev = pipe.evaluator(layout);
+            let corpora = pipe.eval_corpora();
+            print_row(cfg, &ev.metrics_row("pruned", &p, &corpora)?);
+            Ok(())
+        }
+        "experiment" => {
+            let pipe = Pipeline::new(&artifacts, &runs, args.has("fast"))?;
+            let ids: Vec<String> = if args.has("all") {
+                experiments::ALL_IDS.iter().map(|s| s.to_string()).collect()
+            } else {
+                vec![args
+                    .get("id")
+                    .ok_or_else(|| anyhow::anyhow!("--id or --all required"))?
+                    .to_string()]
+            };
+            for id in ids {
+                let rep = experiments::run(&pipe, &id)?;
+                rep.print();
+                let path = rep.save(std::path::Path::new(&reports))?;
+                println!("saved {}", path.display());
+            }
+            Ok(())
+        }
+        other => {
+            bail!("unknown subcommand '{other}' (try: smoke, train, eval, prune, experiment, list)")
+        }
+    }
+}
+
+fn print_row(cfg: &str, row: &sparsessm::eval::MetricsRow) {
+    println!(
+        "{cfg} {}: wiki {:.2} ptb {:.2} c4 {:.2} | zs {:?} avg {:.2}",
+        row.label,
+        row.ppl[0],
+        row.ppl[1],
+        row.ppl[2],
+        row.zs.iter().map(|z| format!("{z:.1}")).collect::<Vec<_>>(),
+        row.zs_avg()
+    );
+}
+
+/// Round-trip smoke: PJRT up, artifacts parse, init + one train step + one
+/// eval batch run end-to-end on the smallest config.
+fn smoke(artifacts: &str) -> Result<()> {
+    use sparsessm::corpus::{Corpus, Style};
+    use sparsessm::runtime::Runtime;
+    let rt = Runtime::new(artifacts)?;
+    println!("platform: {}", rt.platform());
+    let layout = std::rc::Rc::new(sparsessm::model::Layout::load_dir(
+        std::path::Path::new(artifacts).join("m130"),
+    )?);
+    println!("layout m130: P={} tensors={}", layout.total_params, layout.tensors.len());
+    let params = sparsessm::train::init_params(&rt, &layout, 42)?;
+    println!("init ok: |params|={} first={:.4}", params.data.len(), params.data[0]);
+    let corpus = Corpus::generate(Style::Wiki, 1, 100_000);
+    let opts = TrainOptions { steps: 2, log_every: 1, ..Default::default() };
+    let (_p, rep) = sparsessm::train::train(&rt, &layout, &corpus, &opts)?;
+    println!("2 train steps: loss {:.4} -> {:.4}", rep.first_loss, rep.final_loss);
+    let ev = sparsessm::eval::Evaluator::new(&rt, layout.clone()).fast();
+    let ppl = ev.perplexity(&params, &corpus)?;
+    println!("random-init ppl: {ppl:.1} (byte vocab=256 ⇒ ≈e^5.5≈245 expected)");
+    println!("smoke OK");
+    Ok(())
+}

@@ -1,0 +1,461 @@
+//! Model metadata and the flat-parameter convention.
+//!
+//! `layout.json` (emitted by `python/compile/aot.py`) is the single source
+//! of truth for tensor offsets inside the flat `f32[P]` parameter vector.
+//! All pruning algorithms operate through [`FlatParams`] views; structural
+//! surgery (d_state reduction for structured pruning) remaps between two
+//! layouts.
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Mirror of `ModelConfig` on the Python side.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub d_inner: usize,
+    pub d_state: usize,
+    pub dt_rank: usize,
+    pub d_conv: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub batch_calib: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl TensorEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `layout.json`.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub meta: ModelMeta,
+    pub total_params: usize,
+    pub tensors: Vec<TensorEntry>,
+    by_name: BTreeMap<String, usize>,
+}
+
+/// The five prunable FFN-side module kinds of a Mamba block (paper §3.4 /
+/// Table 8), in the paper's naming.
+pub const FFN_MODULES: [&str; 5] = ["conv1d_w", "in_proj", "x_proj", "dt_proj_w", "out_proj"];
+
+impl Layout {
+    pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<Layout> {
+        let path = dir.as_ref().join("layout.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Layout> {
+        let j = Json::parse(text)?;
+        let c = j.get("config")?;
+        let u = |k: &str| -> Result<usize> { c.get(k)?.as_usize() };
+        let meta = ModelMeta {
+            name: c.get("name")?.as_str()?.to_string(),
+            n_layer: u("n_layer")?,
+            d_model: u("d_model")?,
+            d_inner: u("d_inner")?,
+            d_state: u("d_state")?,
+            dt_rank: u("dt_rank")?,
+            d_conv: u("d_conv")?,
+            vocab: u("vocab")?,
+            seq_len: u("seq_len")?,
+            batch_train: u("batch_train")?,
+            batch_eval: u("batch_eval")?,
+            batch_calib: u("batch_calib")?,
+        };
+        let total_params = j.get("total_params")?.as_usize()?;
+        let mut tensors = Vec::new();
+        let mut by_name = BTreeMap::new();
+        for t in j.get("tensors")?.as_arr()? {
+            let e = TensorEntry {
+                name: t.get("name")?.as_str()?.to_string(),
+                offset: t.get("offset")?.as_usize()?,
+                shape: t
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<Result<_>>()?,
+            };
+            by_name.insert(e.name.clone(), tensors.len());
+            tensors.push(e);
+        }
+        // Consistency: offsets must tile [0, total) without gaps.
+        let mut sorted: Vec<&TensorEntry> = tensors.iter().collect();
+        sorted.sort_by_key(|e| e.offset);
+        let mut expect = 0usize;
+        for e in sorted {
+            if e.offset != expect {
+                bail!("layout gap before '{}' (offset {} != {})", e.name, e.offset, expect);
+            }
+            expect += e.numel();
+        }
+        if expect != total_params {
+            bail!("layout total {} != sum of tensors {}", total_params, expect);
+        }
+        Ok(Layout { meta, total_params, tensors, by_name })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&TensorEntry> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .ok_or_else(|| anyhow!("no tensor '{name}' in layout {}", self.meta.name))
+    }
+
+    pub fn layer_tensor(&self, layer: usize, module: &str) -> Result<&TensorEntry> {
+        self.entry(&format!("layers.{layer}.{module}"))
+    }
+
+    /// Executable relative path for this config.
+    pub fn exe(&self, which: &str) -> String {
+        format!("{}/{}.hlo.txt", self.meta.name, which)
+    }
+
+    /// Total number of elements in all `A_log` matrices.
+    pub fn ssm_param_count(&self) -> usize {
+        self.meta.n_layer * self.meta.d_inner * self.meta.d_state
+    }
+}
+
+/// The flat parameter vector plus its layout.
+#[derive(Clone)]
+pub struct FlatParams {
+    pub layout: Rc<Layout>,
+    pub data: Vec<f32>,
+}
+
+impl FlatParams {
+    pub fn new(layout: Rc<Layout>, data: Vec<f32>) -> Result<FlatParams> {
+        anyhow::ensure!(
+            data.len() == layout.total_params,
+            "params len {} != layout total {}",
+            data.len(),
+            layout.total_params
+        );
+        Ok(FlatParams { layout, data })
+    }
+
+    pub fn view(&self, name: &str) -> Result<&[f32]> {
+        let e = self.layout.entry(name)?;
+        Ok(&self.data[e.offset..e.offset + e.numel()])
+    }
+
+    pub fn view_mut(&mut self, name: &str) -> Result<&mut [f32]> {
+        let e = self.layout.entry(name)?.clone();
+        Ok(&mut self.data[e.offset..e.offset + e.numel()])
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<Tensor> {
+        let e = self.layout.entry(name)?;
+        Tensor::from_vec(&e.shape, self.view(name)?.to_vec())
+    }
+
+    pub fn set_tensor(&mut self, name: &str, t: &Tensor) -> Result<()> {
+        let e = self.layout.entry(name)?;
+        anyhow::ensure!(e.shape == t.shape(), "shape mismatch for {name}");
+        self.view_mut(name)?.copy_from_slice(t.data());
+        Ok(())
+    }
+
+    /// Overall sparsity of a named tensor.
+    pub fn sparsity_of(&self, name: &str) -> Result<f64> {
+        let v = self.view(name)?;
+        Ok(v.iter().filter(|&&x| x == 0.0).count() as f64 / v.len() as f64)
+    }
+
+    /// Sparsity across all `A_log` matrices (the paper's "SSM sparsity").
+    pub fn ssm_sparsity(&self) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for l in 0..self.layout.meta.n_layer {
+            let v = self.view(&format!("layers.{l}.A_log")).unwrap();
+            zeros += v.iter().filter(|&&x| x == 0.0).count();
+            total += v.len();
+        }
+        zeros as f64 / total as f64
+    }
+
+    /// Save as little-endian f32 with a one-line JSON header.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let mut bytes = Vec::with_capacity(self.data.len() * 4 + 128);
+        let header = format!(
+            "{{\"config\":\"{}\",\"total\":{}}}\n",
+            self.layout.meta.name, self.layout.total_params
+        );
+        bytes.extend_from_slice(header.as_bytes());
+        for v in &self.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(layout: Rc<Layout>, path: P) -> Result<FlatParams> {
+        let bytes = std::fs::read(&path)?;
+        let nl = bytes
+            .iter()
+            .position(|&b| b == b'\n')
+            .ok_or_else(|| anyhow!("checkpoint missing header"))?;
+        let header = Json::parse(std::str::from_utf8(&bytes[..nl])?)?;
+        let cfg = header.get("config")?.as_str()?.to_string();
+        anyhow::ensure!(
+            cfg == layout.meta.name,
+            "checkpoint is for config '{}', expected '{}'",
+            cfg,
+            layout.meta.name
+        );
+        let body = &bytes[nl + 1..];
+        anyhow::ensure!(body.len() == layout.total_params * 4, "checkpoint size mismatch");
+        let data: Vec<f32> = body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        FlatParams::new(layout, data)
+    }
+}
+
+/// Structural surgery: map parameters from a full layout onto a reduced
+/// `d_state` layout, keeping only the given state columns per layer.
+///
+/// Removing state dimension `n` of layer `l` drops column `n` of that
+/// layer's `A_log` **and** the corresponding B/C output columns of its
+/// `x_proj` weight (`x_proj` emits [dt_rank | B(d_state) | C(d_state)]),
+/// exactly the resize the paper performs for structured pruning (§4.3).
+pub fn remap_structured(
+    src: &FlatParams,
+    dst_layout: Rc<Layout>,
+    keep_cols: &[Vec<usize>],
+) -> Result<FlatParams> {
+    let sm = &src.layout.meta;
+    let dm = dst_layout.meta.clone();
+    anyhow::ensure!(keep_cols.len() == sm.n_layer, "keep_cols per layer");
+    anyhow::ensure!(
+        dm.n_layer == sm.n_layer && dm.d_inner == sm.d_inner && dm.dt_rank == sm.dt_rank,
+        "layouts structurally incompatible"
+    );
+    for k in keep_cols {
+        anyhow::ensure!(k.len() == dm.d_state, "keep {} cols, dst wants {}", k.len(), dm.d_state);
+    }
+    let mut out = FlatParams::new(dst_layout.clone(), vec![0.0; dst_layout.total_params])?;
+    for e in &dst_layout.tensors {
+        let name = &e.name;
+        if let Some(rest) = name.strip_prefix("layers.") {
+            let dot = rest.find('.').unwrap();
+            let layer: usize = rest[..dot].parse()?;
+            let module = &rest[dot + 1..];
+            let keep = &keep_cols[layer];
+            match module {
+                "A_log" => {
+                    let srcv = src.view(name)?;
+                    let dstv = out.view_mut(name)?;
+                    let (di, ns, nd) = (sm.d_inner, sm.d_state, dm.d_state);
+                    for d in 0..di {
+                        for (j, &n) in keep.iter().enumerate() {
+                            dstv[d * nd + j] = srcv[d * ns + n];
+                        }
+                    }
+                    continue;
+                }
+                "x_proj" => {
+                    let srcv = src.view(name)?;
+                    let dstv = out.view_mut(name)?;
+                    let (di, dr) = (sm.d_inner, sm.dt_rank);
+                    let (ws, wd) = (dr + 2 * sm.d_state, dr + 2 * dm.d_state);
+                    for d in 0..di {
+                        // delta_r columns unchanged
+                        for c in 0..dr {
+                            dstv[d * wd + c] = srcv[d * ws + c];
+                        }
+                        for (j, &n) in keep.iter().enumerate() {
+                            dstv[d * wd + dr + j] = srcv[d * ws + dr + n]; // B
+                            dstv[d * wd + dr + dm.d_state + j] =
+                                srcv[d * ws + dr + sm.d_state + n]; // C
+                        }
+                    }
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        // Everything else is copied verbatim (shapes match).
+        let s = src.view(name)?;
+        out.view_mut(name)?.copy_from_slice(s);
+    }
+    Ok(out)
+}
+
+/// Toy-model builders used by unit tests, property tests and benches
+/// (always compiled so integration tests can reach them; hidden from docs).
+#[doc(hidden)]
+pub mod toy {
+    use super::*;
+
+    /// Hand-built two-layer toy layout mirroring aot.py's param_spec
+    /// (n_layer=2, d_model=4, d_inner=8, dt_rank=3, d_conv=4, vocab=16).
+    pub fn toy_layout(d_state: usize) -> Layout {
+        // Hand-built two-layer toy layout mirroring aot.py's param_spec.
+        let (nl, dm, di, dr, dc, vocab) = (2usize, 4usize, 8usize, 3usize, 4usize, 16usize);
+        let mut tensors = Vec::new();
+        let mut off = 0usize;
+        let push = |name: String, shape: Vec<usize>, off: &mut usize, t: &mut Vec<TensorEntry>| {
+            let n: usize = shape.iter().product();
+            t.push(TensorEntry { name, offset: *off, shape });
+            *off += n;
+        };
+        push("embedding".into(), vec![vocab, dm], &mut off, &mut tensors);
+        for l in 0..nl {
+            let p = format!("layers.{l}.");
+            push(p.clone() + "norm", vec![dm], &mut off, &mut tensors);
+            push(p.clone() + "in_proj", vec![dm, 2 * di], &mut off, &mut tensors);
+            push(p.clone() + "conv1d_w", vec![di, dc], &mut off, &mut tensors);
+            push(p.clone() + "conv1d_b", vec![di], &mut off, &mut tensors);
+            push(p.clone() + "x_proj", vec![di, dr + 2 * d_state], &mut off, &mut tensors);
+            push(p.clone() + "dt_proj_w", vec![dr, di], &mut off, &mut tensors);
+            push(p.clone() + "dt_proj_b", vec![di], &mut off, &mut tensors);
+            push(p.clone() + "A_log", vec![di, d_state], &mut off, &mut tensors);
+            push(p.clone() + "D", vec![di], &mut off, &mut tensors);
+            push(p + "out_proj", vec![di, dm], &mut off, &mut tensors);
+        }
+        push("norm_f".into(), vec![dm], &mut off, &mut tensors);
+        let by_name = tensors
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.name.clone(), i))
+            .collect();
+        Layout {
+            meta: ModelMeta {
+                name: format!("toy_ds{d_state}"),
+                n_layer: nl,
+                d_model: dm,
+                d_inner: di,
+                d_state,
+                dt_rank: dr,
+                d_conv: dc,
+                vocab,
+                seq_len: 16,
+                batch_train: 2,
+                batch_eval: 2,
+                batch_calib: 2,
+            },
+            total_params: off,
+            tensors,
+            by_name,
+        }
+    }
+
+    /// Toy FlatParams filled with a constant.
+    pub fn toy_flat_params(d_state: usize, fill: f32) -> FlatParams {
+        let layout = Rc::new(toy_layout(d_state));
+        let n = layout.total_params;
+        FlatParams::new(layout, vec![fill; n]).unwrap()
+    }
+
+    /// Toy FlatParams with seeded random values.
+    pub fn toy_flat_params_random(d_state: usize, seed: u64) -> FlatParams {
+        let layout = Rc::new(toy_layout(d_state));
+        let n = layout.total_params;
+        let mut rng = crate::rngx::Pcg::seeded(seed);
+        FlatParams::new(layout, (0..n).map(|_| rng.normal() as f32).collect()).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::toy::toy_layout;
+    use super::*;
+
+    #[test]
+    fn parse_rejects_gaps() {
+        let bad = r#"{"config":{"name":"x","n_layer":1,"d_model":2,"d_inner":4,"d_state":2,
+            "dt_rank":1,"d_conv":2,"vocab":4,"seq_len":8,"batch_train":1,"batch_eval":1,
+            "batch_calib":1},"total_params":10,
+            "tensors":[{"name":"a","offset":0,"shape":[4]},{"name":"b","offset":6,"shape":[4]}]}"#;
+        assert!(Layout::parse(bad).unwrap_err().to_string().contains("gap"));
+    }
+
+    #[test]
+    fn views_and_sparsity() {
+        let layout = Rc::new(toy_layout(4));
+        let mut p = FlatParams::new(layout.clone(), vec![1.0; layout.total_params]).unwrap();
+        {
+            let v = p.view_mut("layers.0.A_log").unwrap();
+            let half = v.len() / 2;
+            for x in &mut v[..half] {
+                *x = 0.0;
+            }
+        }
+        assert!((p.sparsity_of("layers.0.A_log").unwrap() - 0.5).abs() < 1e-9);
+        assert!((p.ssm_sparsity() - 0.25).abs() < 1e-9);
+        let t = p.tensor("layers.0.A_log").unwrap();
+        assert_eq!(t.shape(), &[8, 4]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let layout = Rc::new(toy_layout(4));
+        let mut data = vec![0.0f32; layout.total_params];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = (i as f32).sin();
+        }
+        let p = FlatParams::new(layout.clone(), data).unwrap();
+        let tmp = std::env::temp_dir().join("sparsessm_ckpt_test.bin");
+        p.save(&tmp).unwrap();
+        let q = FlatParams::load(layout, &tmp).unwrap();
+        assert_eq!(p.data, q.data);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn surgery_keeps_selected_columns() {
+        let src_l = Rc::new(toy_layout(4));
+        let dst_l = Rc::new(toy_layout(2));
+        let mut data = vec![0.0f32; src_l.total_params];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let src = FlatParams::new(src_l.clone(), data).unwrap();
+        let keep = vec![vec![1usize, 3], vec![0usize, 2]];
+        let dst = remap_structured(&src, dst_l.clone(), &keep).unwrap();
+        // A_log column check, layer 0: dst[:, j] == src[:, keep[j]]
+        let a_src = src.tensor("layers.0.A_log").unwrap();
+        let a_dst = dst.tensor("layers.0.A_log").unwrap();
+        for d in 0..8 {
+            assert_eq!(a_dst.at(&[d, 0]), a_src.at(&[d, 1]));
+            assert_eq!(a_dst.at(&[d, 1]), a_src.at(&[d, 3]));
+        }
+        // x_proj: delta cols copied; B/C cols selected. dr=3, ds_src=4, ds_dst=2.
+        let x_src = src.tensor("layers.1.x_proj").unwrap();
+        let x_dst = dst.tensor("layers.1.x_proj").unwrap();
+        for d in 0..8 {
+            for c in 0..3 {
+                assert_eq!(x_dst.at(&[d, c]), x_src.at(&[d, c]));
+            }
+            assert_eq!(x_dst.at(&[d, 3]), x_src.at(&[d, 3])); // B col keep 0
+            assert_eq!(x_dst.at(&[d, 4]), x_src.at(&[d, 5])); // B col keep 2
+            assert_eq!(x_dst.at(&[d, 5]), x_src.at(&[d, 7])); // C col keep 0
+            assert_eq!(x_dst.at(&[d, 6]), x_src.at(&[d, 9])); // C col keep 2
+        }
+        // untouched module copied verbatim
+        assert_eq!(src.view("layers.0.out_proj").unwrap(), dst.view("layers.0.out_proj").unwrap());
+    }
+}

@@ -1,0 +1,166 @@
+//! Algorithm 1: time-selective one-shot OBS pruning of `A_log`.
+//!
+//! The transition matrix is *time-shared*: every time step yields its own
+//! OBS mask, and pruning at step t changes what step t+1 would choose.
+//! The paper resolves this with deferred commitment — each step nominates
+//! its bottom-K candidates, and the final mask prunes the K indices most
+//! frequently nominated (Phases 2–3 of Algorithm 1).  Phase 1 (the h²
+//! statistic) is accumulated by the coordinator from the fused Pallas
+//! kernel.
+
+use super::saliency;
+use super::{bottom_k_indices, k_of, Mask};
+use crate::tensor::Tensor;
+use crate::threadx;
+
+/// Which time-step aggregation to use (Table 6 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Aggregation {
+    /// Frequency voting over per-step bottom-K candidates (SparseSSM).
+    FrequencyVote,
+    /// Single bottom-K over the L2-norm-over-time score (ablation).
+    L2,
+}
+
+/// Compute the SparseSSM prune mask for one layer's `A_log`.
+///
+/// * `a_log` — [D, N] transition parameters.
+/// * `stats` — [L, D, N] batch-summed h² from calibration (Phase 1).
+/// * `sparsity` — target fraction `p`; `K = ceil(p·D·N)`.
+pub fn sparsessm_mask(a_log: &Tensor, stats: &Tensor, sparsity: f64, agg: Aggregation) -> Mask {
+    let dn = a_log.len();
+    let k = k_of(sparsity, dn);
+    if k == 0 {
+        return Mask::none(dn);
+    }
+    match agg {
+        Aggregation::L2 => {
+            let scores = saliency::importance_l2(a_log, stats);
+            Mask::from_indices(dn, &bottom_k_indices(&scores, k))
+        }
+        Aggregation::FrequencyVote => {
+            let votes = vote_counts(a_log, stats, k);
+            // Phase 3: prune the K most frequently nominated indices.
+            // Tie-break by smaller aggregated importance so the result is
+            // deterministic and favours removing genuinely weak weights.
+            let imp = saliency::importance(a_log, stats);
+            let max_imp = imp.iter().cloned().fold(1.0f64, f64::max);
+            let keyed: Vec<f64> = votes
+                .iter()
+                .zip(&imp)
+                .map(|(&v, &i)| v as f64 - i / (max_imp * 2.0 + 1.0))
+                .collect();
+            Mask::from_indices(dn, &super::top_k_indices(&keyed, k))
+        }
+    }
+}
+
+/// Phase 2: per-time-step candidate selection; returns how many steps
+/// nominated each index (C in Algorithm 1).
+pub fn vote_counts(a_log: &Tensor, stats: &Tensor, k: usize) -> Vec<u32> {
+    let l = stats.shape()[0];
+    let dn = a_log.len();
+    let a2: Vec<f64> = a_log.data().iter().map(|&a| (a as f64) * (a as f64)).collect();
+    // Time steps are independent -> parallel over *chunks* of steps so each
+    // worker reuses one scratch score buffer and accumulates a partial
+    // count vector (no per-step allocation; §Perf).
+    let chunk = l.div_ceil(threadx::default_threads().max(1)).max(1);
+    let n_chunks = l.div_ceil(chunk);
+    let partials: Vec<Vec<u32>> = threadx::parallel_map(n_chunks, |c| {
+        let mut counts = vec![0u32; dn];
+        let mut scores = vec![0.0f64; dn];
+        for t in c * chunk..((c + 1) * chunk).min(l) {
+            let src = &stats.data()[t * dn..(t + 1) * dn];
+            for i in 0..dn {
+                scores[i] = a2[i] * src[i] as f64;
+            }
+            for i in bottom_k_indices(&scores, k) {
+                counts[i] += 1;
+            }
+        }
+        counts
+    });
+    let mut counts = vec![0u32; dn];
+    for p in partials {
+        for (c, v) in counts.iter_mut().zip(p) {
+            *c += v;
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Stats where index 0 is weak at every step, index 3 weak at one step.
+    fn toy() -> (Tensor, Tensor) {
+        let a_log = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let stats = Tensor::from_vec(
+            &[4, 2, 2],
+            vec![
+                0.0, 5.0, 4.0, 3.0, // t0: weakest = idx0
+                0.1, 5.0, 4.0, 3.0, // t1: weakest = idx0
+                0.0, 5.0, 4.0, 9.0, // t2: weakest = idx0
+                9.0, 5.0, 4.0, 0.0, // t3: weakest = idx3
+            ],
+        )
+        .unwrap();
+        (a_log, stats)
+    }
+
+    #[test]
+    fn vote_counts_match_hand_count() {
+        let (a, s) = toy();
+        let c = vote_counts(&a, &s, 1);
+        assert_eq!(c, vec![3, 0, 0, 1]);
+    }
+
+    #[test]
+    fn frequency_vote_prunes_most_nominated() {
+        let (a, s) = toy();
+        let m = sparsessm_mask(&a, &s, 0.25, Aggregation::FrequencyVote);
+        assert_eq!(m.n_pruned(), 1);
+        assert!(m.prune[0], "index 0 was nominated most often");
+    }
+
+    #[test]
+    fn l2_vs_vote_can_disagree() {
+        // idx3 has tiny values at most steps but one huge spike; the vote
+        // nominates it often, while L2 is dominated by the spike.
+        let a = Tensor::from_vec(&[1, 2], vec![1.0, 1.0]).unwrap();
+        let s = Tensor::from_vec(
+            &[4, 1, 2],
+            vec![
+                1.0, 0.1, //
+                1.0, 0.1, //
+                1.0, 0.1, //
+                1.0, 100.0,
+            ],
+        )
+        .unwrap();
+        let vote = sparsessm_mask(&a, &s, 0.5, Aggregation::FrequencyVote);
+        let l2 = sparsessm_mask(&a, &s, 0.5, Aggregation::L2);
+        assert!(vote.prune[1], "vote prunes the frequently-weak index");
+        assert!(l2.prune[0], "L2 is dominated by the spike and prunes the other");
+    }
+
+    #[test]
+    fn sparsity_exact_at_all_levels() {
+        let (a, s) = toy();
+        for p in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let m = sparsessm_mask(&a, &s, p, Aggregation::FrequencyVote);
+            assert_eq!(m.n_pruned(), k_of(p, 4), "p={p}");
+        }
+    }
+
+    #[test]
+    fn vote_counts_bounded_by_steps() {
+        let (a, s) = toy();
+        for k in 1..4 {
+            let c = vote_counts(&a, &s, k);
+            assert!(c.iter().all(|&v| v <= 4));
+            assert_eq!(c.iter().sum::<u32>() as usize, 4 * k);
+        }
+    }
+}

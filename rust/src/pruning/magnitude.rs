@@ -1,0 +1,57 @@
+//! Magnitude pruning (MP) baseline [Han et al., 2015]: per module, sort by
+//! |w| and zero the smallest `p` fraction (paper Appendix B.1).
+
+use super::{bottom_k_indices, k_of, Mask};
+
+/// Mask for a single tensor.
+pub fn magnitude_mask(w: &[f32], sparsity: f64) -> Mask {
+    let scores: Vec<f64> = w.iter().map(|&x| x.abs() as f64).collect();
+    Mask::from_indices(w.len(), &bottom_k_indices(&scores, k_of(sparsity, w.len())))
+}
+
+/// N:M magnitude mask: in every contiguous group of `m` weights, prune the
+/// `n` smallest-|w| (Table 4 baseline rows).
+pub fn magnitude_nm_mask(w: &[f32], n: usize, m: usize) -> Mask {
+    assert!(n <= m && m > 0);
+    assert_eq!(w.len() % m, 0, "tensor length must be divisible by M");
+    let mut prune = vec![false; w.len()];
+    for g in 0..w.len() / m {
+        let base = g * m;
+        let scores: Vec<f64> = (0..m).map(|i| w[base + i].abs() as f64).collect();
+        for i in bottom_k_indices(&scores, n) {
+            prune[base + i] = true;
+        }
+    }
+    Mask { prune }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prunes_smallest_abs() {
+        let w = vec![0.1f32, -5.0, 0.01, 2.0];
+        let m = magnitude_mask(&w, 0.5);
+        assert!(m.prune[0] && m.prune[2]);
+        assert!(!m.prune[1] && !m.prune[3]);
+    }
+
+    #[test]
+    fn nm_respects_groups() {
+        // 2 groups of 4; 2:4 prunes exactly 2 per group.
+        let w = vec![1.0f32, 0.2, 3.0, 0.1, -0.5, -4.0, 0.3, 2.0];
+        let m = magnitude_nm_mask(&w, 2, 4);
+        assert_eq!(m.prune[..4].iter().filter(|&&p| p).count(), 2);
+        assert_eq!(m.prune[4..].iter().filter(|&&p| p).count(), 2);
+        assert!(m.prune[1] && m.prune[3]); // group 1 smallest
+        assert!(m.prune[4] && m.prune[6]); // group 2 smallest
+    }
+
+    #[test]
+    fn overall_nm_sparsity() {
+        let w: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        assert!((magnitude_nm_mask(&w, 2, 4).sparsity() - 0.5).abs() < 1e-9);
+        assert!((magnitude_nm_mask(&w, 4, 8).sparsity() - 0.5).abs() < 1e-9);
+    }
+}

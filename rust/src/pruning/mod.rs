@@ -1,0 +1,175 @@
+//! Pruning library: SparseSSM (Theorem 1 + Algorithm 1) and every baseline
+//! the paper compares against, in one place.
+//!
+//! * [`saliency`]      — Theorem-1 second-order importance for `A_log`.
+//! * [`aggregate`]     — Algorithm 1: per-time-step candidate voting (plus
+//!                       the L2-aggregation ablation of Table 6).
+//! * [`magnitude`]     — MP baseline.
+//! * [`sparsegpt`]     — OBS/ExactOBS solver with weight reconstruction
+//!                       (FFN pruning + the "naive SparseGPT on A" baseline).
+//! * [`shedder`]       — Mamba-Shedder-style coarse removal emulation.
+//! * [`sensitivity`]   — Hessian-trace sensitivity schedule (Eq. 7).
+//! * [`semistructured`]— N:M masks for `A_log` (Table 4).
+//! * [`structured`]    — column pruning + x_proj resize (Tables 3/5).
+
+pub mod aggregate;
+pub mod magnitude;
+pub mod saliency;
+pub mod semistructured;
+pub mod sensitivity;
+pub mod shedder;
+pub mod sparsegpt;
+pub mod structured;
+
+/// A pruning decision over a flat tensor: `true` = remove the weight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mask {
+    pub prune: Vec<bool>,
+}
+
+impl Mask {
+    pub fn none(len: usize) -> Mask {
+        Mask { prune: vec![false; len] }
+    }
+
+    pub fn from_indices(len: usize, idx: &[usize]) -> Mask {
+        let mut prune = vec![false; len];
+        for &i in idx {
+            prune[i] = true;
+        }
+        Mask { prune }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prune.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prune.is_empty()
+    }
+
+    pub fn n_pruned(&self) -> usize {
+        self.prune.iter().filter(|&&p| p).count()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        if self.prune.is_empty() {
+            0.0
+        } else {
+            self.n_pruned() as f64 / self.prune.len() as f64
+        }
+    }
+
+    /// Zero out the pruned entries of `w`.
+    pub fn apply(&self, w: &mut [f32]) {
+        assert_eq!(w.len(), self.prune.len());
+        for (x, &p) in w.iter_mut().zip(&self.prune) {
+            if p {
+                *x = 0.0;
+            }
+        }
+    }
+
+    pub fn union(&self, other: &Mask) -> Mask {
+        assert_eq!(self.len(), other.len());
+        Mask {
+            prune: self
+                .prune
+                .iter()
+                .zip(&other.prune)
+                .map(|(&a, &b)| a || b)
+                .collect(),
+        }
+    }
+}
+
+/// Number of weights to prune for target sparsity `p` (the paper's
+/// `K = ceil(p·D·N)`, Algorithm 1 line 7).
+pub fn k_of(p: f64, len: usize) -> usize {
+    ((p * len as f64).ceil() as usize).min(len)
+}
+
+/// Indices of the `k` smallest scores (quickselect — the Algorithm-1 /
+/// mask-selection hot path, O(n) instead of a full sort).
+pub fn bottom_k_indices(scores: &[f64], k: usize) -> Vec<usize> {
+    let n = scores.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    if k >= n {
+        return (0..n).collect();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Indices of the `k` largest scores.
+pub fn top_k_indices(scores: &[f64], k: usize) -> Vec<usize> {
+    let n = scores.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    if k >= n {
+        return (0..n).collect();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_of_matches_paper_ceiling() {
+        assert_eq!(k_of(0.5, 10), 5);
+        assert_eq!(k_of(0.5, 11), 6); // ceil
+        assert_eq!(k_of(0.0, 10), 0);
+        assert_eq!(k_of(1.0, 10), 10);
+        assert_eq!(k_of(2.0, 10), 10); // clamped
+    }
+
+    #[test]
+    fn bottom_top_k() {
+        let s = vec![5.0, 1.0, 4.0, 0.5, 9.0];
+        let mut b = bottom_k_indices(&s, 2);
+        b.sort_unstable();
+        assert_eq!(b, vec![1, 3]);
+        let mut t = top_k_indices(&s, 2);
+        t.sort_unstable();
+        assert_eq!(t, vec![0, 4]);
+        assert!(bottom_k_indices(&s, 0).is_empty());
+        assert_eq!(bottom_k_indices(&s, 9).len(), 5);
+    }
+
+    #[test]
+    fn bottom_k_deterministic_under_ties() {
+        let s = vec![1.0; 6];
+        let a = bottom_k_indices(&s, 3);
+        let b = bottom_k_indices(&s, 3);
+        let mut a2 = a.clone();
+        a2.sort_unstable();
+        let mut b2 = b.clone();
+        b2.sort_unstable();
+        assert_eq!(a2, b2);
+    }
+
+    #[test]
+    fn mask_apply_and_union() {
+        let mut w = vec![1.0f32, 2.0, 3.0, 4.0];
+        let m = Mask::from_indices(4, &[1, 3]);
+        m.apply(&mut w);
+        assert_eq!(w, vec![1.0, 0.0, 3.0, 0.0]);
+        assert_eq!(m.sparsity(), 0.5);
+        let u = m.union(&Mask::from_indices(4, &[0]));
+        assert_eq!(u.n_pruned(), 3);
+    }
+}

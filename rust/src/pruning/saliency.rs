@@ -1,0 +1,139 @@
+//! Theorem-1 saliency for the SSM transition matrix.
+//!
+//! The paper's Hessian estimate (Eq. 6 / App. A) reduces the OBS importance
+//! of each `A_log[d,n]` to
+//!
+//! ```text
+//! I[d,n]  ∝  A_log[d,n]²  ·  Σ_{b,t} h²_{b,t,d,n}
+//! ```
+//!
+//! after absorbing the slowly-varying `δ² A² e^{2δA}` factor into a global
+//! constant.  The hidden-state statistic `Σ_b h²` per time step is produced
+//! by the fused Pallas `scan_stats` kernel (S[t,d,n], batch-summed), and
+//! accumulated over calibration batches by the coordinator, so this module
+//! is pure host math.
+
+use crate::tensor::Tensor;
+
+/// Per-time-step OBS scores  M_t[d,n] = A_log[d,n]² · S[t,d,n]
+/// (Algorithm 1, line 9).  `a_log` is [D,N]; `stats` is [L,D,N].
+pub fn per_step_scores(a_log: &Tensor, stats: &Tensor) -> Tensor<f64> {
+    let (d, n) = (a_log.shape()[0], a_log.shape()[1]);
+    assert_eq!(&stats.shape()[1..], &[d, n], "stats/A_log shape mismatch");
+    let l = stats.shape()[0];
+    let mut out = Tensor::<f64>::zeros(&[l, d, n]);
+    let a2: Vec<f64> = a_log.data().iter().map(|&a| (a as f64) * (a as f64)).collect();
+    let dn = d * n;
+    for t in 0..l {
+        let src = &stats.data()[t * dn..(t + 1) * dn];
+        let dst = &mut out.data_mut()[t * dn..(t + 1) * dn];
+        for i in 0..dn {
+            dst[i] = a2[i] * src[i] as f64;
+        }
+    }
+    out
+}
+
+/// Aggregated Theorem-1 importance  I[d,n] = A_log² · Σ_t S[t,d,n].
+pub fn importance(a_log: &Tensor, stats: &Tensor) -> Vec<f64> {
+    let (d, n) = (a_log.shape()[0], a_log.shape()[1]);
+    let l = stats.shape()[0];
+    let dn = d * n;
+    let mut ssum = vec![0.0f64; dn];
+    for t in 0..l {
+        let src = &stats.data()[t * dn..(t + 1) * dn];
+        for i in 0..dn {
+            ssum[i] += src[i] as f64;
+        }
+    }
+    a_log
+        .data()
+        .iter()
+        .zip(&ssum)
+        .map(|(&a, &s)| (a as f64) * (a as f64) * s)
+        .collect()
+}
+
+/// L2-over-time aggregation of the per-step scores (the Table-6 ablation):
+/// score[d,n] = A_log² · sqrt(Σ_t S[t,d,n]²).
+pub fn importance_l2(a_log: &Tensor, stats: &Tensor) -> Vec<f64> {
+    let (d, n) = (a_log.shape()[0], a_log.shape()[1]);
+    let l = stats.shape()[0];
+    let dn = d * n;
+    let mut ssq = vec![0.0f64; dn];
+    for t in 0..l {
+        let src = &stats.data()[t * dn..(t + 1) * dn];
+        for i in 0..dn {
+            let v = src[i] as f64;
+            ssq[i] += v * v;
+        }
+    }
+    a_log
+        .data()
+        .iter()
+        .zip(&ssq)
+        .map(|(&a, &s)| (a as f64) * (a as f64) * s.sqrt())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> (Tensor, Tensor) {
+        // D=2, N=2, L=3
+        let a_log = Tensor::from_vec(&[2, 2], vec![1.0, -2.0, 0.5, 3.0]).unwrap();
+        let stats = Tensor::from_vec(
+            &[3, 2, 2],
+            vec![
+                1.0, 0.0, 2.0, 1.0, // t=0
+                1.0, 1.0, 0.0, 1.0, // t=1
+                2.0, 1.0, 2.0, 1.0, // t=2
+            ],
+        )
+        .unwrap();
+        (a_log, stats)
+    }
+
+    #[test]
+    fn per_step_matches_formula() {
+        let (a, s) = toy();
+        let m = per_step_scores(&a, &s);
+        assert_eq!(m.shape(), &[3, 2, 2]);
+        // t=0, (0,0): 1² * 1 = 1 ; t=0, (0,1): (-2)² * 0 = 0
+        assert_eq!(m.at(&[0, 0, 0]), 1.0);
+        assert_eq!(m.at(&[0, 0, 1]), 0.0);
+        // t=2, (1,1): 3² * 1 = 9
+        assert_eq!(m.at(&[2, 1, 1]), 9.0);
+    }
+
+    #[test]
+    fn aggregate_is_sum_over_time() {
+        let (a, s) = toy();
+        let i = importance(&a, &s);
+        // (0,0): 1² * (1+1+2) = 4 ; (0,1): 4 * (0+1+1) = 8
+        assert_eq!(i[0], 4.0);
+        assert_eq!(i[1], 8.0);
+        // (1,0): 0.25 * (2+0+2) = 1 ; (1,1): 9 * 3 = 27
+        assert_eq!(i[2], 1.0);
+        assert_eq!(i[3], 27.0);
+    }
+
+    #[test]
+    fn l2_differs_from_sum() {
+        let (a, s) = toy();
+        let l2 = importance_l2(&a, &s);
+        // (0,0): 1 * sqrt(1+1+4) = sqrt 6
+        assert!((l2[0] - 6.0f64.sqrt()).abs() < 1e-12);
+        let l1 = importance(&a, &s);
+        assert!(l2.iter().zip(&l1).any(|(a, b)| (a - b).abs() > 1e-9));
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Tensor::from_vec(&[2, 2], vec![0.0; 4]).unwrap();
+        let s = Tensor::from_vec(&[3, 2, 3], vec![0.0; 18]).unwrap();
+        per_step_scores(&a, &s);
+    }
+}

@@ -1,0 +1,67 @@
+//! Semi-structured (N:M) extension of SparseSSM (paper §4.3, Table 4).
+//!
+//! The `A_log` matrix is [d_inner, d_state] and groups run along the
+//! d_state axis (contiguous in row-major layout): within every group of M
+//! entries, the N lowest-importance weights are pruned.  Importance is the
+//! Theorem-1 aggregate (`A_log² · Σ_t S_t`); the hardware-friendly pattern
+//! replaces the global top-K of the unstructured variant.
+
+use super::Mask;
+
+/// N:M mask from per-weight importance scores (higher = keep).
+pub fn nm_mask_from_scores(scores: &[f64], n: usize, m: usize) -> Mask {
+    assert!(n <= m && m > 0);
+    assert_eq!(scores.len() % m, 0, "length must divide M");
+    let mut prune = vec![false; scores.len()];
+    for g in 0..scores.len() / m {
+        let base = g * m;
+        let grp = &scores[base..base + m];
+        for i in super::bottom_k_indices(grp, n) {
+            prune[base + i] = true;
+        }
+    }
+    Mask { prune }
+}
+
+/// Check that a mask satisfies the N:M constraint (property tests / CI).
+pub fn satisfies_nm(mask: &Mask, n: usize, m: usize) -> bool {
+    if mask.len() % m != 0 {
+        return false;
+    }
+    mask.prune
+        .chunks(m)
+        .all(|g| g.iter().filter(|&&p| p).count() == n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg;
+
+    #[test]
+    fn exact_nm_pattern() {
+        let mut rng = Pcg::seeded(1);
+        let scores: Vec<f64> = (0..128).map(|_| rng.uniform()).collect();
+        for (n, m) in [(2usize, 4usize), (4, 8)] {
+            let mask = nm_mask_from_scores(&scores, n, m);
+            assert!(satisfies_nm(&mask, n, m));
+            assert!((mask.sparsity() - n as f64 / m as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn prunes_lowest_scores_per_group() {
+        let scores = vec![0.9, 0.1, 0.8, 0.2, 0.3, 0.7, 0.4, 0.6];
+        let mask = nm_mask_from_scores(&scores, 2, 4);
+        assert!(mask.prune[1] && mask.prune[3]);
+        assert!(mask.prune[4] && mask.prune[6]);
+    }
+
+    #[test]
+    fn satisfies_nm_rejects_wrong_patterns() {
+        let mask = Mask::from_indices(8, &[0, 1, 2, 3]); // 4 in first group
+        assert!(!satisfies_nm(&mask, 2, 4));
+        let ok = Mask::from_indices(8, &[0, 1, 4, 5]);
+        assert!(satisfies_nm(&ok, 2, 4));
+    }
+}

@@ -1,0 +1,116 @@
+//! Mamba-Shedder baseline emulation [Muñoz et al., 2025].
+//!
+//! Shedder removes whole SSM modules / whole Mamba blocks, chosen by a
+//! calibration-driven search.  With mask-only surgery available we emulate
+//! its two granularities (DESIGN.md §2):
+//!
+//! * **SSM-only budget** — zero *entire* `A_log` matrices of the layers
+//!   whose Theorem-1 total importance is lowest (the coarse analogue of
+//!   "remove the SSM module"), until the SSM sparsity budget is met.
+//! * **Whole-model budget** — zero *all* weights of whole blocks (the
+//!   residual path then passes the block through — true block removal),
+//!   ranked by a caller-provided impact probe (calibration NLL with the
+//!   block disabled), until the global budget is met.
+
+use crate::model::FlatParams;
+use anyhow::Result;
+
+/// Zero entire `A_log` matrices of the `n_remove` least-important layers.
+/// `layer_importance[i]` is Σ I over layer i's A_log (Theorem 1 aggregate).
+pub fn shed_ssm_layers(
+    params: &mut FlatParams,
+    layer_importance: &[f64],
+    sparsity: f64,
+) -> Result<Vec<usize>> {
+    let nl = params.layout.meta.n_layer;
+    assert_eq!(layer_importance.len(), nl);
+    // Each A_log is the same size, so the number of layers to drop is the
+    // budget fraction rounded up.
+    let n_remove = ((sparsity * nl as f64).ceil() as usize).min(nl);
+    let order = super::bottom_k_indices(layer_importance, n_remove);
+    for &l in &order {
+        for v in params.view_mut(&format!("layers.{l}.A_log"))?.iter_mut() {
+            *v = 0.0;
+        }
+    }
+    Ok(order)
+}
+
+/// All per-layer tensor names of one block.
+pub fn block_tensors(layer: usize) -> Vec<String> {
+    [
+        "norm", "in_proj", "conv1d_w", "conv1d_b", "x_proj", "dt_proj_w", "dt_proj_b", "A_log",
+        "D", "out_proj",
+    ]
+    .iter()
+    .map(|m| format!("layers.{layer}.{m}"))
+    .collect()
+}
+
+/// Zero every tensor of the given block (residual-only pass-through).
+pub fn zero_block(params: &mut FlatParams, layer: usize) -> Result<()> {
+    for name in block_tensors(layer) {
+        for v in params.view_mut(&name)?.iter_mut() {
+            *v = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Whole-model Shedder: greedily zero the blocks with least calibration
+/// impact until `sparsity` of the *prunable* weights is zeroed.
+/// `impact(l)` should return the calibration NLL with block `l` zeroed
+/// (lower = safer to remove).
+pub fn shed_blocks<F: FnMut(usize) -> Result<f64>>(
+    params: &mut FlatParams,
+    sparsity: f64,
+    mut impact: F,
+) -> Result<Vec<usize>> {
+    let nl = params.layout.meta.n_layer;
+    let mut scores = Vec::with_capacity(nl);
+    for l in 0..nl {
+        scores.push(impact(l)?);
+    }
+    // Block weights dominate the prunable weight count uniformly, so the
+    // number of blocks is again the rounded budget fraction.
+    let n_remove = ((sparsity * nl as f64).round() as usize).min(nl);
+    let order = super::bottom_k_indices(&scores, n_remove);
+    for &l in &order {
+        zero_block(params, l)?;
+    }
+    Ok(order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::toy::toy_flat_params;
+
+    #[test]
+    fn shed_ssm_zeroes_least_important_layers() {
+        let mut p = toy_flat_params(4, 1.0);
+        let removed = shed_ssm_layers(&mut p, &[5.0, 1.0], 0.5).unwrap();
+        assert_eq!(removed, vec![1]);
+        assert_eq!(p.sparsity_of("layers.1.A_log").unwrap(), 1.0);
+        assert_eq!(p.sparsity_of("layers.0.A_log").unwrap(), 0.0);
+        assert!((p.ssm_sparsity() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_block_is_total() {
+        let mut p = toy_flat_params(4, 1.0);
+        zero_block(&mut p, 0).unwrap();
+        for name in block_tensors(0) {
+            assert_eq!(p.sparsity_of(&name).unwrap(), 1.0, "{name}");
+        }
+        assert_eq!(p.sparsity_of("layers.1.in_proj").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn shed_blocks_uses_impact_ranking() {
+        let mut p = toy_flat_params(4, 1.0);
+        let removed = shed_blocks(&mut p, 0.5, |l| Ok(if l == 0 { 9.0 } else { 1.0 })).unwrap();
+        assert_eq!(removed, vec![1]);
+        assert_eq!(p.sparsity_of("layers.1.out_proj").unwrap(), 1.0);
+    }
+}

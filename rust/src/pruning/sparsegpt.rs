@@ -1,0 +1,302 @@
+//! SparseGPT / ExactOBS solver [Frantar & Alistarh, 2023].
+//!
+//! Layer-wise OBS with weight reconstruction: given a module weight W
+//! (rows = output neurons, cols = input dim) and the input Gram matrix
+//! `H = X^T X`, prune to the target sparsity column-block by column-block,
+//! compensating the surviving weights through the Cholesky factor of the
+//! damped inverse Hessian.  Rows share H, so the row loop parallelises.
+//!
+//! This powers (a) FFN pruning inside SparseSSM's whole-model mode, (b) the
+//! SparseGPT baseline, and (c) the paper's "naive SparseGPT on A" baseline
+//! (Appendix B.1: A_log treated as a weight matrix with the hidden state h
+//! as calibration input — the compensation step is blind to the recurrence
+//! and the discretisation, which is exactly why it misbehaves in Table 1).
+
+use crate::linalg::Mat;
+use crate::threadx;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct SparseGptOptions {
+    /// Mask-selection block width (columns considered jointly).
+    pub block_size: usize,
+    /// Relative diagonal damping (SparseGPT's `percdamp`).
+    pub damp: f64,
+    /// If set, enforce (n, m) semi-structured sparsity instead of
+    /// unstructured per-block selection.
+    pub nm: Option<(usize, usize)>,
+}
+
+impl Default for SparseGptOptions {
+    fn default() -> Self {
+        SparseGptOptions { block_size: 32, damp: 0.01, nm: None }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SparseGptReport {
+    /// Σ (w/[U]_jj)² over pruned weights — the OBS reconstruction error.
+    pub recon_error: f64,
+    /// Damping actually used after escalation.
+    pub lambda: f64,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Prune `w` (row-major `rows × cols`) in place to `sparsity`, with OBS
+/// compensation.  `h` is the `cols × cols` input Gram matrix.
+pub fn prune_matrix(
+    w: &mut [f32],
+    rows: usize,
+    cols: usize,
+    h: &Mat,
+    sparsity: f64,
+    opts: &SparseGptOptions,
+) -> Result<SparseGptReport> {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(h.n, cols);
+    // Dead inputs (H_jj == 0) are pruned for free, as in SparseGPT.
+    let (hinv, lambda) = h.spd_inverse_damped(opts.damp.max(1e-8))?;
+    let u = hinv.cholesky_upper()?; // Hinv = U^T U ; U upper-triangular
+    let udiag: Vec<f64> = (0..cols).map(|j| u.get(j, j)).collect();
+
+    let bs = opts.block_size.max(1);
+    let errs: Vec<f64> = {
+        let u_ref = &u;
+        let udiag_ref = &udiag;
+        let w_cell = WSlice(w.as_mut_ptr());
+        threadx::parallel_map(rows, move |r| {
+            let cell = &w_cell; // capture the Sync wrapper, not the raw ptr
+            // SAFETY: rows are disjoint, each index r is processed once.
+            let row = unsafe { std::slice::from_raw_parts_mut(cell.0.add(r * cols), cols) };
+            prune_row(row, u_ref, udiag_ref, sparsity, bs, opts.nm)
+        })
+    };
+    Ok(SparseGptReport { recon_error: errs.iter().sum(), lambda, rows, cols })
+}
+
+struct WSlice(*mut f32);
+unsafe impl Send for WSlice {}
+unsafe impl Sync for WSlice {}
+
+/// Process one output row: blocked mask selection + sequential column
+/// elimination with compensation.
+fn prune_row(
+    row: &mut [f32],
+    u: &Mat,
+    udiag: &[f64],
+    sparsity: f64,
+    block_size: usize,
+    nm: Option<(usize, usize)>,
+) -> f64 {
+    let cols = row.len();
+    let mut wd: Vec<f64> = row.iter().map(|&x| x as f64).collect();
+    let mut total_err = 0.0;
+    let mut start = 0;
+    let mut pruned_so_far = 0usize; // cumulative-quota carry: keeps the
+                                    // realized row sparsity at round(p·cols)
+                                    // instead of ceil-per-block drift
+    while start < cols {
+        let end = (start + block_size).min(cols);
+        // --- mask selection within the block (adaptive: uses the weights
+        // as already compensated by earlier blocks) ---
+        let scores: Vec<f64> = (start..end)
+            .map(|j| {
+                let d = udiag[j];
+                (wd[j] * wd[j]) / (d * d).max(1e-30)
+            })
+            .collect();
+        let prune_local: Vec<usize> = match nm {
+            None => {
+                let target = (sparsity * end as f64).round() as usize;
+                let k = target.saturating_sub(pruned_so_far).min(end - start);
+                super::bottom_k_indices(&scores, k)
+            }
+            Some((n, m)) => {
+                // group-wise n-of-m inside the block
+                let mut sel = Vec::new();
+                let mut g = 0;
+                while g < end - start {
+                    let ge = (g + m).min(end - start);
+                    let gs = &scores[g..ge];
+                    for i in super::bottom_k_indices(gs, n.min(ge - g)) {
+                        sel.push(g + i);
+                    }
+                    g = ge;
+                }
+                sel
+            }
+        };
+        let mut prune_flag = vec![false; end - start];
+        for i in prune_local {
+            prune_flag[i] = true;
+            pruned_so_far += 1;
+        }
+        // --- sequential elimination with compensation ---
+        for j in start..end {
+            if !prune_flag[j - start] {
+                continue;
+            }
+            let q = wd[j] / udiag[j];
+            total_err += q * q;
+            wd[j] = 0.0;
+            // compensate all later columns (within and beyond the block)
+            for k in j + 1..cols {
+                let ujk = u.get(j, k);
+                if ujk != 0.0 {
+                    wd[k] -= q * ujk;
+                }
+            }
+        }
+        start = end;
+    }
+    for (x, &v) in row.iter_mut().zip(&wd) {
+        *x = v as f32;
+    }
+    total_err
+}
+
+/// Plain masking with the SparseGPT *score* but no compensation — used in
+/// tests to show reconstruction reduces layer error, and as a cheap
+/// Wanda-style ablation.
+pub fn prune_matrix_no_compensation(
+    w: &mut [f32],
+    rows: usize,
+    cols: usize,
+    h: &Mat,
+    sparsity: f64,
+    opts: &SparseGptOptions,
+) -> Result<()> {
+    let (hinv, _lam) = h.spd_inverse_damped(opts.damp.max(1e-8))?;
+    let u = hinv.cholesky_upper()?;
+    for r in 0..rows {
+        let row = &mut w[r * cols..(r + 1) * cols];
+        let scores: Vec<f64> = (0..cols)
+            .map(|j| {
+                let d = u.get(j, j);
+                (row[j] as f64).powi(2) / (d * d).max(1e-30)
+            })
+            .collect();
+        let k = super::k_of(sparsity, cols);
+        for j in super::bottom_k_indices(&scores, k) {
+            row[j] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Layer reconstruction error ‖XW^T - XŴ^T‖² given the Gram H:
+/// Σ_r (w_r - ŵ_r)^T H (w_r - ŵ_r).  Used by Fig. 2 and tests.
+pub fn layer_error(w0: &[f32], w1: &[f32], rows: usize, cols: usize, h: &Mat) -> f64 {
+    let mut total = 0.0;
+    for r in 0..rows {
+        let a = &w0[r * cols..(r + 1) * cols];
+        let b = &w1[r * cols..(r + 1) * cols];
+        let d: Vec<f64> = a.iter().zip(b).map(|(&x, &y)| (x - y) as f64).collect();
+        for i in 0..cols {
+            if d[i] == 0.0 {
+                continue;
+            }
+            let hrow = i * cols;
+            let mut s = 0.0;
+            for j in 0..cols {
+                s += h.a[hrow + j] * d[j];
+            }
+            total += d[i] * s;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gram_f32;
+    use crate::rngx::Pcg;
+
+    fn random_problem(rows: usize, cols: usize, samples: usize, seed: u64) -> (Vec<f32>, Mat) {
+        let mut rng = Pcg::seeded(seed);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..samples * cols).map(|_| rng.normal() as f32).collect();
+        (w, gram_f32(&x, samples, cols))
+    }
+
+    #[test]
+    fn hits_target_sparsity() {
+        let (mut w, h) = random_problem(8, 32, 64, 1);
+        prune_matrix(&mut w, 8, 32, &h, 0.5, &SparseGptOptions::default()).unwrap();
+        let z = w.iter().filter(|&&x| x == 0.0).count();
+        assert_eq!(z, 8 * 16);
+    }
+
+    #[test]
+    fn nm_pattern_enforced() {
+        let (mut w, h) = random_problem(4, 32, 64, 2);
+        let opts = SparseGptOptions { nm: Some((2, 4)), ..Default::default() };
+        prune_matrix(&mut w, 4, 32, &h, 0.5, &opts).unwrap();
+        for r in 0..4 {
+            for g in 0..8 {
+                let grp = &w[r * 32 + g * 4..r * 32 + g * 4 + 4];
+                assert_eq!(grp.iter().filter(|&&x| x == 0.0).count(), 2, "group {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn compensation_beats_plain_masking() {
+        // Same zero pattern, with vs without the OBS update: compensation
+        // must reduce the layer reconstruction error ‖X(W-Ŵ)ᵀ‖².
+        let (w0, h) = random_problem(16, 48, 256, 3);
+        let mut w_obs = w0.clone();
+        prune_matrix(&mut w_obs, 16, 48, &h, 0.6, &SparseGptOptions::default()).unwrap();
+        let mut w_mask = w0.clone();
+        for (m, &o) in w_mask.iter_mut().zip(&w_obs) {
+            if o == 0.0 {
+                *m = 0.0;
+            }
+        }
+        let e_obs = layer_error(&w0, &w_obs, 16, 48, &h);
+        let e_mask = layer_error(&w0, &w_mask, 16, 48, &h);
+        assert!(
+            e_obs < e_mask,
+            "OBS reconstruction ({e_obs:.3}) should beat masking ({e_mask:.3})"
+        );
+    }
+
+    #[test]
+    fn report_error_is_finite_and_positive() {
+        let (mut w, h) = random_problem(4, 16, 64, 4);
+        let r = prune_matrix(&mut w, 4, 16, &h, 0.5, &SparseGptOptions::default()).unwrap();
+        assert!(r.recon_error.is_finite());
+        assert!(r.recon_error > 0.0);
+        assert!(r.lambda > 0.0);
+    }
+
+    #[test]
+    fn zero_sparsity_is_identity() {
+        let (w0, h) = random_problem(4, 16, 64, 5);
+        let mut w = w0.clone();
+        prune_matrix(&mut w, 4, 16, &h, 0.0, &SparseGptOptions::default()).unwrap();
+        assert_eq!(w, w0);
+    }
+
+    #[test]
+    fn survives_rank_deficient_hessian() {
+        // Duplicate input feature -> singular H; damping must rescue.
+        let mut rng = Pcg::seeded(6);
+        let samples = 32;
+        let cols = 8;
+        let mut x = vec![0.0f32; samples * cols];
+        for r in 0..samples {
+            for c in 0..cols - 1 {
+                x[r * cols + c] = rng.normal() as f32;
+            }
+            x[r * cols + cols - 1] = x[r * cols]; // duplicate
+        }
+        let h = gram_f32(&x, samples, cols);
+        let mut w: Vec<f32> = (0..4 * cols).map(|_| rng.normal() as f32).collect();
+        let rep = prune_matrix(&mut w, 4, cols, &h, 0.5, &SparseGptOptions::default()).unwrap();
+        assert!(w.iter().all(|v| v.is_finite()));
+        assert!(rep.lambda > 0.0);
+    }
+}

@@ -1,0 +1,77 @@
+//! Structured extension of SparseSSM: drop whole state columns of `A_log`
+//! (paper §4.3, Tables 3/5).
+//!
+//! The paper observes that unstructured SparseSSM masks cluster in
+//! particular *columns* (state channels) of `A_log`; aggregating per-column
+//! importance by L1 norm and dropping the weakest columns therefore loses
+//! little accuracy while shrinking `d_state` — a real speedup, realised
+//! here by `model::remap_structured` onto a reduced-d_state artifact.
+
+use super::saliency;
+use crate::tensor::Tensor;
+
+/// Per-column L1 aggregate of Theorem-1 importance (SparseSSM-structured).
+pub fn column_scores_importance(a_log: &Tensor, stats: &Tensor) -> Vec<f64> {
+    let (d, n) = (a_log.shape()[0], a_log.shape()[1]);
+    let imp = saliency::importance(a_log, stats);
+    let mut col = vec![0.0f64; n];
+    for di in 0..d {
+        for ni in 0..n {
+            col[ni] += imp[di * n + ni].abs();
+        }
+    }
+    col
+}
+
+/// Per-column L1 norm of |A_log| (the MP-structured baseline).
+pub fn column_scores_magnitude(a_log: &Tensor) -> Vec<f64> {
+    let (d, n) = (a_log.shape()[0], a_log.shape()[1]);
+    let mut col = vec![0.0f64; n];
+    for di in 0..d {
+        for ni in 0..n {
+            col[ni] += a_log.at(&[di, ni]).abs() as f64;
+        }
+    }
+    col
+}
+
+/// Keep the `n_keep` highest-scoring columns, in ascending index order
+/// (the order `model::remap_structured` expects).
+pub fn keep_columns(scores: &[f64], n_keep: usize) -> Vec<usize> {
+    let mut keep = super::top_k_indices(scores, n_keep);
+    keep.sort_unstable();
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn magnitude_columns() {
+        let a = Tensor::from_vec(&[2, 3], vec![1.0, 0.1, -2.0, 1.0, 0.2, 2.0]).unwrap();
+        let s = column_scores_magnitude(&a);
+        assert!((s[0] - 2.0).abs() < 1e-6);
+        assert!((s[1] - 0.3).abs() < 1e-6);
+        assert!((s[2] - 4.0).abs() < 1e-6);
+        assert_eq!(keep_columns(&s, 2), vec![0, 2]);
+    }
+
+    #[test]
+    fn importance_columns_use_stats() {
+        let a = Tensor::from_vec(&[1, 3], vec![1.0, 1.0, 1.0]).unwrap();
+        // Only column 1 ever has activation mass.
+        let stats = Tensor::from_vec(&[2, 1, 3], vec![0.0, 5.0, 0.1, 0.0, 5.0, 0.1]).unwrap();
+        let s = column_scores_importance(&a, &stats);
+        assert!(s[1] > s[2] && s[2] > s[0]);
+        assert_eq!(keep_columns(&s, 1), vec![1]);
+    }
+
+    #[test]
+    fn keep_columns_sorted_and_sized() {
+        let s = vec![0.3, 0.9, 0.5, 0.1];
+        let k = keep_columns(&s, 3);
+        assert_eq!(k, vec![0, 1, 2]);
+        assert_eq!(keep_columns(&s, 0), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,156 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! This is the only place the `xla` crate is touched.  The pattern follows
+//! /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` → wrap in an
+//! `XlaComputation` → `PjRtClient::compile` → `execute`.  All L2 graphs are
+//! lowered with `return_tuple=True`, so every execution returns one tuple
+//! buffer which we decompose into leaf literals.
+//!
+//! Executables are compiled lazily and cached per path; the runtime is
+//! deliberately single-threaded (PJRT CPU executions already use the
+//! intra-op thread pool for parallelism).
+
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    root: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// `root` is the artifacts directory produced by `make artifacts`.
+    pub fn new<P: AsRef<Path>>(root: P) -> Result<Runtime> {
+        let root = root.as_ref().to_path_buf();
+        if !root.join("manifest.json").exists() {
+            return Err(anyhow!(
+                "artifacts manifest not found under {} — run `make artifacts` first",
+                root.display()
+            ));
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, root, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable at `rel` (e.g.
+    /// `"m130/train_step.hlo.txt"`).
+    pub fn load(&self, rel: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(rel) {
+            return Ok(e.clone());
+        }
+        let path = self.root.join(rel);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache.borrow_mut().insert(rel.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute and decompose the tuple result into leaf literals.
+    ///
+    /// Accepts owned literals or references (`&[Literal]` / `&[&Literal]`):
+    /// passing references avoids deep-copying large host literals (the
+    /// flat parameter vector is reused across every eval/calibration call).
+    pub fn exec<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<L>(inputs)?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("empty execution result"))?
+            .to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Convenience: load by path and run once.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        rel: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(rel)?;
+        self.exec(&exe, inputs)
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal <-> host conversions
+// ---------------------------------------------------------------------------
+
+/// f32 literal with the given dims.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_f32 shape {:?} vs len {}", dims, data.len());
+    let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i)?)
+}
+
+/// i32 literal with the given dims.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_i32 shape {:?} vs len {}", dims, data.len());
+    let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i)?)
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_checks() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let i = lit_i32(&[7, 8], &[2]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn runtime_requires_manifest() {
+        match Runtime::new("/nonexistent-dir") {
+            Ok(_) => panic!("expected missing-manifest error"),
+            Err(e) => assert!(e.to_string().contains("manifest")),
+        }
+    }
+}

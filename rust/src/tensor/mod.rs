@@ -1,0 +1,187 @@
+//! Host-side dense tensors (row-major) used by the coordinator for
+//! parameter manipulation, statistics, masks and report math.
+//!
+//! Device buffers live inside the PJRT runtime; this type is the *host*
+//! representation that pruning algorithms operate on.  f32 matches the
+//! artifact dtype; index math is shared with `model::ParamLayout` views.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor<T = f32> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Row-major flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&x, &s)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < s, "index {x} out of bounds for dim {i} (size {s})");
+            off = off * s + x;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?} mismatch", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Contiguous sub-tensor along axis 0 (e.g. one layer of a stacked
+    /// statistic, one row block of a matrix).
+    pub fn index_axis0(&self, i: usize) -> Tensor<T> {
+        assert!(!self.shape.is_empty() && i < self.shape[0]);
+        let sub: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * sub..(i + 1) * sub].to_vec(),
+        }
+    }
+}
+
+impl Tensor<f32> {
+    /// 2-D row view.
+    pub fn row(&self, r: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor<f32>) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&v| v as f64).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Fraction of exactly-zero entries (sparsity accounting).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&v| v == 0.0).count() as f64 / self.data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|v| v as f32).collect()).unwrap();
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn set_reshape_axis0() {
+        let mut t = Tensor::<f32>::zeros(&[2, 2, 2]);
+        t.set(&[1, 0, 1], 7.0);
+        let r = t.clone().reshape(&[4, 2]).unwrap();
+        assert_eq!(r.at(&[2, 1]), 7.0);
+        let sub = t.index_axis0(1);
+        assert_eq!(sub.shape(), &[2, 2]);
+        assert_eq!(sub.at(&[0, 1]), 7.0);
+    }
+
+    #[test]
+    fn arithmetic_helpers() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, -2.0, 0.0]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![1.0, 1.0, 1.0]).unwrap();
+        a.add_assign(&b);
+        assert_eq!(a.data(), &[2.0, -1.0, 1.0]);
+        a.scale(2.0);
+        assert_eq!(a.sum(), 4.0);
+        assert_eq!(a.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn zero_fraction() {
+        let t = Tensor::from_vec(&[4], vec![0.0, 1.0, 0.0, 2.0]).unwrap();
+        assert_eq!(t.zero_fraction(), 0.5);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        assert!(Tensor::<f32>::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        let t = Tensor::<f32>::zeros(&[4]);
+        assert!(t.reshape(&[3]).is_err());
+    }
+}

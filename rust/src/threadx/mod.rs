@@ -1,0 +1,117 @@
+//! Scoped-thread parallelism substrate (no rayon/tokio offline).
+//!
+//! The pruning hot paths (per-row OBS solves, per-layer scoring) are
+//! embarrassingly parallel over independent chunks; `parallel_map` fans
+//! them out over `std::thread::scope` workers with a simple atomic work
+//! queue.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use for host-side math.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Apply `f` to every index in `0..n`, in parallel, collecting results in
+/// index order.  `f` must be `Sync`; results are written into distinct
+/// slots so no locking is needed.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = default_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    out.resize_with(n, T::default);
+    let next = AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let out_ptr = &out_ptr;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    // SAFETY: each index i is claimed exactly once via the
+                    // atomic counter; slots are disjoint and pre-initialised.
+                    unsafe { *out_ptr.0.add(i) = v };
+                }
+            });
+        }
+    });
+    out
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Parallel for-each over mutable chunks of a slice.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let threads = default_threads();
+    if threads <= 1 || data.len() <= chunk {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+    let next = AtomicUsize::new(0);
+    let cells: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
+        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                if let Some((idx, c)) = cells[i].lock().unwrap().take() {
+                    f(idx, c);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(1000, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn map_handles_edge_sizes() {
+        assert_eq!(parallel_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn chunks_mut_touches_everything() {
+        let mut v = vec![0u64; 10_000];
+        parallel_chunks_mut(&mut v, 117, |idx, c| {
+            for (k, x) in c.iter_mut().enumerate() {
+                *x = (idx * 117 + k) as u64;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as u64);
+        }
+    }
+}

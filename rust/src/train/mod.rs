@@ -1,0 +1,154 @@
+//! Pre-training driver: produces the "public checkpoints" that the paper
+//! prunes (we have no HuggingFace access, so the scaled Mamba configs are
+//! trained in-repo on the synthetic corpus — DESIGN.md §2).
+//!
+//! The loop is pure L3: it samples token batches from the corpus, feeds the
+//! AOT `train_step` executable (fused fwd + BPTT bwd + AdamW), and owns the
+//! learning-rate schedule (warmup + cosine).  Parameters/optimizer state
+//! stay as PJRT literals between steps.
+
+use crate::corpus::Corpus;
+use crate::model::{FlatParams, Layout};
+use crate::rngx::Pcg;
+use crate::runtime::{lit_i32, lit_scalar_f32, lit_scalar_i32, scalar_f32, to_vec_f32, Runtime};
+use crate::util::Stopwatch;
+use anyhow::{Context, Result};
+use std::rc::Rc;
+
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub seed: u64,
+    pub lr_max: f32,
+    pub warmup: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { steps: 400, seed: 1, lr_max: 2e-3, warmup: 20, log_every: 25 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// (step, loss) samples.
+    pub losses: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub first_loss: f32,
+    pub steps: usize,
+    pub seconds: f64,
+}
+
+/// Warmup + cosine decay to 10% of peak.
+pub fn lr_at(step: usize, opts: &TrainOptions) -> f32 {
+    let s = step as f32;
+    if step <= opts.warmup {
+        return opts.lr_max * s / opts.warmup.max(1) as f32;
+    }
+    let t = (s - opts.warmup as f32) / (opts.steps - opts.warmup).max(1) as f32;
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t.min(1.0)).cos());
+    opts.lr_max * (0.1 + 0.9 * cos)
+}
+
+/// Sample a [B, L+1] batch of contiguous windows from the token stream.
+pub fn sample_batch(corpus: &Corpus, b: usize, l: usize, rng: &mut Pcg) -> Vec<i32> {
+    let hi = corpus.tokens.len() - (l + 2);
+    let mut out = Vec::with_capacity(b * (l + 1));
+    for _ in 0..b {
+        let off = rng.below(hi);
+        out.extend_from_slice(&corpus.tokens[off..off + l + 1]);
+    }
+    out
+}
+
+/// Initialise parameters via the AOT `init` executable.
+pub fn init_params(rt: &Runtime, layout: &Rc<Layout>, seed: i32) -> Result<FlatParams> {
+    let outs = rt
+        .run(&layout.exe("init"), &[lit_scalar_i32(seed)])
+        .context("running init executable")?;
+    FlatParams::new(layout.clone(), to_vec_f32(&outs[0])?)
+}
+
+/// Train for `opts.steps` steps and return the final parameters.
+pub fn train(
+    rt: &Runtime,
+    layout: &Rc<Layout>,
+    corpus: &Corpus,
+    opts: &TrainOptions,
+) -> Result<(FlatParams, TrainReport)> {
+    let meta = &layout.meta;
+    let (b, l) = (meta.batch_train, meta.seq_len);
+    let exe = rt.load(&layout.exe("train_step"))?;
+    let sw = Stopwatch::new();
+
+    let init = rt.run(&layout.exe("init"), &[lit_scalar_i32(opts.seed as i32)])?;
+    let p_host = to_vec_f32(&init[0])?;
+    let total = p_host.len();
+    let mut params = crate::runtime::lit_f32(&p_host, &[total])?;
+    let mut m = crate::runtime::lit_f32(&vec![0.0; total], &[total])?;
+    let mut v = crate::runtime::lit_f32(&vec![0.0; total], &[total])?;
+
+    let mut rng = Pcg::new(opts.seed, 77);
+    let mut losses = Vec::new();
+    let mut first_loss = f32::NAN;
+    let mut last_loss = f32::NAN;
+    for step in 1..=opts.steps {
+        let batch = sample_batch(corpus, b, l, &mut rng);
+        let tokens = lit_i32(&batch, &[b, l + 1])?;
+        let lr = lr_at(step, opts);
+        let outs = rt.exec(
+            &exe,
+            &[params, m, v, lit_scalar_f32(step as f32), lit_scalar_f32(lr), tokens],
+        )?;
+        let mut it = outs.into_iter();
+        params = it.next().unwrap();
+        m = it.next().unwrap();
+        v = it.next().unwrap();
+        let loss = scalar_f32(&it.next().unwrap())?;
+        if step == 1 {
+            first_loss = loss;
+        }
+        last_loss = loss;
+        if step % opts.log_every == 0 || step == 1 || step == opts.steps {
+            losses.push((step, loss));
+            crate::util::log_line(
+                "train",
+                &format!("{} step {step}/{} loss {loss:.4} lr {lr:.2e}", meta.name, opts.steps),
+            );
+        }
+    }
+    let flat = FlatParams::new(layout.clone(), to_vec_f32(&params)?)?;
+    let report = TrainReport {
+        losses,
+        final_loss: last_loss,
+        first_loss,
+        steps: opts.steps,
+        seconds: sw.seconds(),
+    };
+    Ok((flat, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Style;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let o = TrainOptions { steps: 100, warmup: 10, lr_max: 1e-3, ..Default::default() };
+        assert!(lr_at(1, &o) < lr_at(10, &o));
+        assert!((lr_at(10, &o) - 1e-3).abs() < 1e-9);
+        assert!(lr_at(100, &o) < lr_at(50, &o));
+        assert!(lr_at(100, &o) >= 0.1 * 1e-3 - 1e-9);
+    }
+
+    #[test]
+    fn batch_sampling_shapes() {
+        let c = Corpus::generate(Style::Wiki, 5, 10_000);
+        let mut rng = Pcg::seeded(3);
+        let b = sample_batch(&c, 4, 128, &mut rng);
+        assert_eq!(b.len(), 4 * 129);
+        assert!(b.iter().all(|&t| (0..256).contains(&t)));
+    }
+}

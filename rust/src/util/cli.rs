@@ -1,0 +1,102 @@
+//! Tiny CLI argument parser (no clap in the offline vendor set).
+//!
+//! Grammar: `prog <subcommand> [--flag value] [--switch] [positional...]`.
+//! Flags may be given as `--key value` or `--key=value`.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name).  `known_switches` lists
+    /// flags that take no value.
+    pub fn parse(argv: &[String], known_switches: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.flags.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if known_switches.contains(&rest) {
+                    out.switches.push(rest.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        bail!("flag --{rest} expects a value");
+                    }
+                    out.flags.insert(rest.to_string(), it.next().unwrap().clone());
+                } else {
+                    bail!("flag --{rest} expects a value");
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse::<usize>()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse::<f64>()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(
+            &sv(&["prune", "--config", "m370", "--sparsity=0.5", "--verbose", "pos1"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("prune"));
+        assert_eq!(a.get("config"), Some("m370"));
+        assert_eq!(a.get_f64("sparsity", 0.0).unwrap(), 0.5);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = Args::parse(&sv(&["eval"]), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_or("corpus", "wiki-sub"), "wiki-sub");
+        assert!(Args::parse(&sv(&["x", "--flag"]), &[]).is_err());
+    }
+}

@@ -1,0 +1,79 @@
+//! Small utilities: JSON, CLI parsing, timing, human formatting.
+
+pub mod cli;
+pub mod json;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch used throughout the pipeline and Table-7 timing.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// `2696.4 -> "2696", 2.4e7 -> "2.4e7"` — paper-style table number
+/// formatting (large perplexities collapse to scientific notation).
+pub fn fmt_metric(v: f64) -> String {
+    if !v.is_finite() {
+        return "inf".into();
+    }
+    if v.abs() >= 1e4 {
+        let exp = v.abs().log10().floor() as i32;
+        let mant = v / 10f64.powi(exp);
+        format!("{mant:.1}e{exp}")
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+/// Simple leveled logger (no env_logger offline); honors `SPARSESSM_QUIET`.
+pub fn log_line(tag: &str, msg: &str) {
+    if std::env::var_os("SPARSESSM_QUIET").is_none() {
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! logi {
+    ($($arg:tt)*) => { $crate::util::log_line("info", &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_metric_styles() {
+        assert_eq!(fmt_metric(19.27), "19.27");
+        assert_eq!(fmt_metric(740.3), "740.3");
+        assert_eq!(fmt_metric(24000000.0), "2.4e7");
+        assert_eq!(fmt_metric(f64::INFINITY), "inf");
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.seconds() > 0.0);
+        assert!(sw.millis() >= sw.seconds());
+    }
+}

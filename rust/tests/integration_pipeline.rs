@@ -1,0 +1,164 @@
+//! End-to-end pipeline integration: calibrate → prune → evaluate on the
+//! real m130 artifacts (random-init weights — fast, deterministic).
+//! Skips when artifacts are absent.
+
+use sparsessm::coordinator::{Pipeline, SsmMethod};
+use sparsessm::model::FlatParams;
+
+fn pipe() -> Option<Pipeline> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("[skip] artifacts not built");
+        return None;
+    }
+    let runs = std::env::temp_dir().join("sparsessm_it_runs");
+    Some(Pipeline::new("artifacts", runs.to_str().unwrap(), true).unwrap())
+}
+
+fn init_params(pipe: &Pipeline) -> FlatParams {
+    let layout = pipe.layout("m130").unwrap();
+    sparsessm::train::init_params(&pipe.rt, &layout, 11).unwrap()
+}
+
+#[test]
+fn stats_collection_accumulates_batches() {
+    let Some(pipe) = pipe() else { return };
+    let layout = pipe.layout("m130").unwrap();
+    let params = init_params(&pipe);
+    let s8 = pipe.collect_ssm_stats(&layout, &params, 8).unwrap();
+    let s16 = pipe.collect_ssm_stats(&layout, &params, 16).unwrap();
+    assert_eq!(s8.n_samples, 8);
+    assert_eq!(s16.n_samples, 16);
+    // more samples => strictly more accumulated mass
+    let m8: f64 = s8.s[0].sum();
+    let m16: f64 = s16.s[0].sum();
+    assert!(m16 > m8, "S mass should grow with samples ({m8} vs {m16})");
+    assert_eq!(s8.s.len(), layout.meta.n_layer);
+    assert_eq!(s8.s[0].shape(), &[layout.meta.seq_len, layout.meta.d_inner, layout.meta.d_state]);
+}
+
+#[test]
+fn every_ssm_method_hits_target_sparsity() {
+    let Some(pipe) = pipe() else { return };
+    let layout = pipe.layout("m130").unwrap();
+    let params = init_params(&pipe);
+    let stats = pipe.collect_ssm_stats(&layout, &params, 8).unwrap();
+    for method in [
+        SsmMethod::Mp,
+        SsmMethod::Shedder,
+        SsmMethod::SparseGpt,
+        SsmMethod::SparseSsm,
+        SsmMethod::SparseSsmL2,
+    ] {
+        let mut p = params.clone();
+        pipe.prune_ssm(&mut p, method, 0.5, &stats).unwrap();
+        let s = p.ssm_sparsity();
+        // The S4D-real init has A_log[:,0] = log(1) = 0 exactly, so methods
+        // whose masks don't subsume those entries (Shedder zeroes whole
+        // layers) read up to 1/16/2 ≈ 0.031 above target on *untrained*
+        // weights.  Allow that slack.
+        assert!(
+            (s - 0.5).abs() < 0.04,
+            "{method:?}: ssm sparsity {s} (expected ~0.5)"
+        );
+        // non-A_log tensors untouched by SSM-scope pruning
+        assert_eq!(p.view("layers.0.in_proj").unwrap(), params.view("layers.0.in_proj").unwrap());
+    }
+}
+
+#[test]
+fn sparsessm_zero_sparsity_is_identity() {
+    let Some(pipe) = pipe() else { return };
+    let layout = pipe.layout("m130").unwrap();
+    let params = init_params(&pipe);
+    let stats = pipe.collect_ssm_stats(&layout, &params, 8).unwrap();
+    let mut p = params.clone();
+    pipe.prune_ssm(&mut p, SsmMethod::SparseSsm, 0.0, &stats).unwrap();
+    assert_eq!(p.data, params.data);
+}
+
+#[test]
+fn ffn_pruning_hits_target_and_respects_scope() {
+    let Some(pipe) = pipe() else { return };
+    let layout = pipe.layout("m130").unwrap();
+    let params = init_params(&pipe);
+    let hess = pipe.collect_ffn_hessians(&layout, &params, 8).unwrap();
+    let mut p = params.clone();
+    pipe.prune_ffn(&mut p, sparsessm::coordinator::FfnMethod::SparseGpt, 0.5, &hess, 0.0, None)
+        .unwrap();
+    for module in ["in_proj", "x_proj", "dt_proj_w", "out_proj", "conv1d_w"] {
+        let s = p.sparsity_of(&format!("layers.0.{module}")).unwrap();
+        assert!((s - 0.5).abs() < 0.05, "{module}: sparsity {s}");
+    }
+    // A_log untouched in FFN scope
+    assert_eq!(p.view("layers.0.A_log").unwrap(), params.view("layers.0.A_log").unwrap());
+    // Eq.7 sensitivity mode spreads in/out_proj sparsity within [p-α, p+α]
+    let mut q = params.clone();
+    pipe.prune_ffn(
+        &mut q,
+        sparsessm::coordinator::FfnMethod::SensitivityAware,
+        0.5,
+        &hess,
+        0.04,
+        None,
+    )
+    .unwrap();
+    let mut spread = Vec::new();
+    for l in 0..layout.meta.n_layer {
+        spread.push(q.sparsity_of(&format!("layers.{l}.in_proj")).unwrap());
+        spread.push(q.sparsity_of(&format!("layers.{l}.out_proj")).unwrap());
+    }
+    let avg: f64 = spread.iter().sum::<f64>() / spread.len() as f64;
+    assert!((avg - 0.5).abs() < 0.02, "budget held: {avg}");
+    assert!(spread.iter().all(|&s| s > 0.44 && s < 0.56), "{spread:?}");
+}
+
+#[test]
+fn nm_pruning_pattern_holds_on_real_layout() {
+    let Some(pipe) = pipe() else { return };
+    let layout = pipe.layout("m130").unwrap();
+    let params = init_params(&pipe);
+    let stats = pipe.collect_ssm_stats(&layout, &params, 8).unwrap();
+    let mut p = params.clone();
+    pipe.prune_ssm_nm(&mut p, SsmMethod::SparseSsm, 2, 4, &stats).unwrap();
+    for l in 0..layout.meta.n_layer {
+        let a = p.view(&format!("layers.{l}.A_log")).unwrap();
+        for g in a.chunks(4) {
+            assert_eq!(g.iter().filter(|&&x| x == 0.0).count(), 2);
+        }
+    }
+}
+
+#[test]
+fn structured_surgery_produces_runnable_variant() {
+    let Some(pipe) = pipe() else { return };
+    let layout = pipe.layout("m370").unwrap();
+    let params = sparsessm::train::init_params(&pipe.rt, &layout, 5).unwrap();
+    let stats = pipe.collect_ssm_stats(&layout, &params, 8).unwrap();
+    let reduced = pipe.prune_structured(&params, "m370_ds8", true, &stats).unwrap();
+    assert_eq!(reduced.layout.meta.d_state, 8);
+    // the reduced model must actually run through its own seq_nll artifact
+    let ev = pipe.evaluator(pipe.layout("m370_ds8").unwrap());
+    let corpus = sparsessm::corpus::Corpus::generate(sparsessm::corpus::Style::Wiki, 9, 30_000);
+    let ppl = ev.perplexity(&reduced, &corpus).unwrap();
+    assert!(ppl.is_finite() && ppl > 1.0, "ppl={ppl}");
+}
+
+#[test]
+fn pruned_model_evaluates_and_orders_sanely() {
+    let Some(pipe) = pipe() else { return };
+    let layout = pipe.layout("m130").unwrap();
+    // quick train so pruning has signal (cached across test runs)
+    let params = pipe.ensure_trained("m130").unwrap();
+    let stats = pipe.collect_ssm_stats(&layout, &params, 8).unwrap();
+    let ev = pipe.evaluator(layout.clone());
+    let corpus = &pipe.eval_corpora()[0];
+    let dense = ev.perplexity(&params, corpus).unwrap();
+    let mut pruned = params.clone();
+    pipe.prune_ssm(&mut pruned, SsmMethod::SparseSsm, 0.5, &stats).unwrap();
+    let sparse = ev.perplexity(&pruned, corpus).unwrap();
+    assert!(dense.is_finite() && sparse.is_finite());
+    assert!(
+        sparse < dense * 10.0,
+        "SparseSSM @50% should not blow up ppl (dense={dense:.1}, sparse={sparse:.1})"
+    );
+}
