@@ -22,6 +22,11 @@
 //! substrate (JSON, CLI, RNG, tensors, dense linear algebra, thread pool,
 //! bench harness, synthetic corpora and evaluation tasks) is implemented
 //! in-repo — see `DESIGN.md` §3.
+//!
+//! Deployment side: the [`sparse`] subsystem (DESIGN.md §9) packs pruned
+//! parameters into CSR / bitmask-block / 2:4 layouts and serves them
+//! through sparsity-aware kernels chained with the native [`ssm`] scan,
+//! so mask sparsity turns into realized tokens/sec.
 
 pub mod benchx;
 pub mod coordinator;
@@ -32,6 +37,7 @@ pub mod model;
 pub mod pruning;
 pub mod rngx;
 pub mod runtime;
+pub mod sparse;
 pub mod ssm;
 pub mod tasks;
 pub mod tensor;

@@ -6,7 +6,11 @@
 //!   prune      --config m370 [--method sparsessm|mp|shedder|sparsegpt]
 //!              [--sparsity 0.5] [--scope ssm|all] [--nsample 64]
 //!   eval       --config m370      dense evaluation row
-//!   experiment --id table1|...|fig4 | --all   (regenerates paper tables)
+//!   experiment --id table1|...|fig4|sparse_speed | --all
+//!                                 (regenerates paper tables + serving exps)
+//!   sparse-bench [--batch 4] [--len 128] [--budget-ms 800]
+//!                                 dense vs packed decode throughput
+//!                                 (host-only: needs no artifacts)
 //!   list                          known experiments
 //!
 //! Global flags: --artifacts DIR (default artifacts), --runs DIR (default
@@ -113,6 +117,23 @@ fn real_main(argv: &[String]) -> Result<()> {
             print_row(cfg, &ev.metrics_row("pruned", &p, &corpora)?);
             Ok(())
         }
+        "sparse-bench" => {
+            // Host-only sparse-engine measurement: random weights at m370
+            // dims, so it runs before `make artifacts` ever has.
+            let bt = args.get_usize("batch", 4)?;
+            let len = args.get_usize("len", 128)?;
+            let budget = args.get_f64("budget-ms", if args.has("fast") { 250.0 } else { 800.0 })?;
+            let params = sparsessm::sparse::decode::m370_bench_params();
+            println!("== decode throughput: dense vs packed (m370 dims, B={bt} L={len}) ==");
+            for row in sparsessm::sparse::decode::dense_vs_sparse_sweep(&params, bt, len, budget)?
+            {
+                println!(
+                    "  {:<20} {:<24} {:>9.0} tok/s  {:>5.2}x  {:>7.2} MB",
+                    row.label, row.formats, row.tokens_per_sec, row.speedup, row.weight_mb
+                );
+            }
+            Ok(())
+        }
         "experiment" => {
             let pipe = Pipeline::new(&artifacts, &runs, args.has("fast"))?;
             let ids: Vec<String> = if args.has("all") {
@@ -132,7 +153,10 @@ fn real_main(argv: &[String]) -> Result<()> {
             Ok(())
         }
         other => {
-            bail!("unknown subcommand '{other}' (try: smoke, train, eval, prune, experiment, list)")
+            bail!(
+                "unknown subcommand '{other}' (try: smoke, train, eval, prune, experiment, \
+                 sparse-bench, list)"
+            )
         }
     }
 }

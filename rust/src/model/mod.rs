@@ -310,11 +310,20 @@ pub fn remap_structured(
 pub mod toy {
     use super::*;
 
-    /// Hand-built two-layer toy layout mirroring aot.py's param_spec
-    /// (n_layer=2, d_model=4, d_inner=8, dt_rank=3, d_conv=4, vocab=16).
-    pub fn toy_layout(d_state: usize) -> Layout {
-        // Hand-built two-layer toy layout mirroring aot.py's param_spec.
-        let (nl, dm, di, dr, dc, vocab) = (2usize, 4usize, 8usize, 3usize, 4usize, 16usize);
+    /// Hand-built layout for arbitrary dims, mirroring aot.py's
+    /// param_spec tensor order.  Lets host-only consumers (sparse serving
+    /// benches, examples, property tests) build realistically-sized
+    /// models without PJRT artifacts on disk.
+    pub fn custom_layout(meta: ModelMeta) -> Layout {
+        let (nl, dm, di, ds, dr, dc, vocab) = (
+            meta.n_layer,
+            meta.d_model,
+            meta.d_inner,
+            meta.d_state,
+            meta.dt_rank,
+            meta.d_conv,
+            meta.vocab,
+        );
         let mut tensors = Vec::new();
         let mut off = 0usize;
         let push = |name: String, shape: Vec<usize>, off: &mut usize, t: &mut Vec<TensorEntry>| {
@@ -329,10 +338,10 @@ pub mod toy {
             push(p.clone() + "in_proj", vec![dm, 2 * di], &mut off, &mut tensors);
             push(p.clone() + "conv1d_w", vec![di, dc], &mut off, &mut tensors);
             push(p.clone() + "conv1d_b", vec![di], &mut off, &mut tensors);
-            push(p.clone() + "x_proj", vec![di, dr + 2 * d_state], &mut off, &mut tensors);
+            push(p.clone() + "x_proj", vec![di, dr + 2 * ds], &mut off, &mut tensors);
             push(p.clone() + "dt_proj_w", vec![dr, di], &mut off, &mut tensors);
             push(p.clone() + "dt_proj_b", vec![di], &mut off, &mut tensors);
-            push(p.clone() + "A_log", vec![di, d_state], &mut off, &mut tensors);
+            push(p.clone() + "A_log", vec![di, ds], &mut off, &mut tensors);
             push(p.clone() + "D", vec![di], &mut off, &mut tensors);
             push(p + "out_proj", vec![di, dm], &mut off, &mut tensors);
         }
@@ -342,25 +351,45 @@ pub mod toy {
             .enumerate()
             .map(|(i, e)| (e.name.clone(), i))
             .collect();
-        Layout {
-            meta: ModelMeta {
-                name: format!("toy_ds{d_state}"),
-                n_layer: nl,
-                d_model: dm,
-                d_inner: di,
-                d_state,
-                dt_rank: dr,
-                d_conv: dc,
-                vocab,
-                seq_len: 16,
-                batch_train: 2,
-                batch_eval: 2,
-                batch_calib: 2,
-            },
-            total_params: off,
-            tensors,
-            by_name,
+        Layout { meta, total_params: off, tensors, by_name }
+    }
+
+    /// m370-dims metadata for host-only serving measurements (matches
+    /// `model.py::CONFIGS["m370"]` without needing `make artifacts`).
+    pub fn m370_dims_meta() -> ModelMeta {
+        ModelMeta {
+            name: "m370-dims".into(),
+            n_layer: 6,
+            d_model: 192,
+            d_inner: 384,
+            d_state: 16,
+            dt_rank: 12,
+            d_conv: 4,
+            vocab: 256,
+            seq_len: 128,
+            batch_train: 8,
+            batch_eval: 8,
+            batch_calib: 8,
         }
+    }
+
+    /// Hand-built two-layer toy layout mirroring aot.py's param_spec
+    /// (n_layer=2, d_model=4, d_inner=8, dt_rank=3, d_conv=4, vocab=16).
+    pub fn toy_layout(d_state: usize) -> Layout {
+        custom_layout(ModelMeta {
+            name: format!("toy_ds{d_state}"),
+            n_layer: 2,
+            d_model: 4,
+            d_inner: 8,
+            d_state,
+            dt_rank: 3,
+            d_conv: 4,
+            vocab: 16,
+            seq_len: 16,
+            batch_train: 2,
+            batch_eval: 2,
+            batch_calib: 2,
+        })
     }
 
     /// Toy FlatParams filled with a constant.
@@ -376,6 +405,16 @@ pub mod toy {
         let n = layout.total_params;
         let mut rng = crate::rngx::Pcg::seeded(seed);
         FlatParams::new(layout, (0..n).map(|_| rng.normal() as f32).collect()).unwrap()
+    }
+
+    /// Random FlatParams over an arbitrary-dims layout.  `scale` keeps
+    /// activations in a tame range at realistic widths (serving benches
+    /// care about wall-clock, not trained statistics).
+    pub fn custom_flat_params_random(meta: ModelMeta, seed: u64, scale: f32) -> FlatParams {
+        let layout = Rc::new(custom_layout(meta));
+        let n = layout.total_params;
+        let mut rng = crate::rngx::Pcg::seeded(seed);
+        FlatParams::new(layout, (0..n).map(|_| rng.normal() as f32 * scale).collect()).unwrap()
     }
 }
 
@@ -423,6 +462,21 @@ mod tests {
         let q = FlatParams::load(layout, &tmp).unwrap();
         assert_eq!(p.data, q.data);
         std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn custom_layout_tiles_without_gaps() {
+        let layout = super::toy::custom_layout(super::toy::m370_dims_meta());
+        let mut sorted: Vec<&TensorEntry> = layout.tensors.iter().collect();
+        sorted.sort_by_key(|e| e.offset);
+        let mut expect = 0usize;
+        for e in sorted {
+            assert_eq!(e.offset, expect, "gap before {}", e.name);
+            expect += e.numel();
+        }
+        assert_eq!(expect, layout.total_params);
+        assert_eq!(layout.entry("layers.5.A_log").unwrap().shape, vec![384, 16]);
+        assert_eq!(layout.ssm_param_count(), 6 * 384 * 16);
     }
 
     #[test]

@@ -48,16 +48,28 @@ impl Mask {
         self.prune.is_empty()
     }
 
-    pub fn n_pruned(&self) -> usize {
+    /// Number of pruned (`true`) entries — the canonical count every
+    /// other accessor derives from.
+    pub fn pruned_count(&self) -> usize {
         self.prune.iter().filter(|&&p| p).count()
+    }
+
+    pub fn n_pruned(&self) -> usize {
+        self.pruned_count()
     }
 
     pub fn sparsity(&self) -> f64 {
         if self.prune.is_empty() {
             0.0
         } else {
-            self.n_pruned() as f64 / self.prune.len() as f64
+            self.pruned_count() as f64 / self.prune.len() as f64
         }
+    }
+
+    /// Kept fraction (`1 − sparsity`) — what the sparse execution
+    /// engine's format dispatcher profits from.
+    pub fn density(&self) -> f64 {
+        1.0 - self.sparsity()
     }
 
     /// Zero out the pruned entries of `w`.
@@ -169,7 +181,18 @@ mod tests {
         m.apply(&mut w);
         assert_eq!(w, vec![1.0, 0.0, 3.0, 0.0]);
         assert_eq!(m.sparsity(), 0.5);
+        assert_eq!(m.density(), 0.5);
+        assert_eq!(m.pruned_count(), 2);
         let u = m.union(&Mask::from_indices(4, &[0]));
         assert_eq!(u.n_pruned(), 3);
+    }
+
+    #[test]
+    fn density_and_sparsity_sum_to_one() {
+        let m = Mask::from_indices(10, &[0, 1, 2]);
+        assert!((m.density() + m.sparsity() - 1.0).abs() < 1e-12);
+        let empty = Mask::none(0);
+        assert_eq!(empty.sparsity(), 0.0);
+        assert_eq!(empty.density(), 1.0);
     }
 }

@@ -1,0 +1,163 @@
+//! Bitmask-block format: one `u64` occupancy mask per 64-weight block
+//! plus densely packed nonzeros.
+//!
+//! Sits between CSR and dense: per nonzero it stores 1 bit of position
+//! (vs 32 in CSR), so it stays profitable in the mid-sparsity band
+//! (~40–60%) where CSR's index traffic already loses to dense streaming.
+//! Blocks never cross row boundaries — each row owns
+//! `ceil(cols / 64)` blocks, so row kernels stay independent and the
+//! matmul can stripe over rows.
+
+/// Kernel-orientation `[rows, cols]` matrix in bitmask-block form.
+#[derive(Debug, Clone)]
+pub struct BitmaskMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    blocks_per_row: usize,
+    /// Occupancy bit `k` of `masks[r * blocks_per_row + b]` covers column
+    /// `b * 64 + k`.
+    pub masks: Vec<u64>,
+    /// Prefix offsets into `vals`, one per block plus a terminator
+    /// (`block_off[i+1] - block_off[i] == masks[i].count_ones()`).
+    pub block_off: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl BitmaskMatrix {
+    pub fn from_dense(w: &[f32], rows: usize, cols: usize) -> BitmaskMatrix {
+        assert_eq!(w.len(), rows * cols);
+        let blocks_per_row = cols.div_ceil(64).max(1);
+        let mut masks = Vec::with_capacity(rows * blocks_per_row);
+        let mut block_off = Vec::with_capacity(rows * blocks_per_row + 1);
+        let mut vals = Vec::new();
+        block_off.push(0u32);
+        for r in 0..rows {
+            let row = &w[r * cols..(r + 1) * cols];
+            for b in 0..blocks_per_row {
+                let lo = b * 64;
+                let hi = (lo + 64).min(cols);
+                let mut m = 0u64;
+                for (k, &v) in row[lo..hi].iter().enumerate() {
+                    if v != 0.0 {
+                        m |= 1u64 << k;
+                        vals.push(v);
+                    }
+                }
+                masks.push(m);
+                block_off.push(vals.len() as u32);
+            }
+        }
+        BitmaskMatrix { rows, cols, blocks_per_row, masks, block_off, vals }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.masks.len() * 8 + self.block_off.len() * 4 + self.vals.len() * 4
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for b in 0..self.blocks_per_row {
+                let blk = r * self.blocks_per_row + b;
+                let mut m = self.masks[blk];
+                let mut off = self.block_off[blk] as usize;
+                while m != 0 {
+                    let k = m.trailing_zeros() as usize;
+                    w[r * self.cols + b * 64 + k] = self.vals[off];
+                    off += 1;
+                    m &= m - 1;
+                }
+            }
+        }
+        w
+    }
+
+    #[inline]
+    pub fn row_dot(&self, r: usize, x: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for b in 0..self.blocks_per_row {
+            let blk = r * self.blocks_per_row + b;
+            let mut m = self.masks[blk];
+            let mut off = self.block_off[blk] as usize;
+            let base = b * 64;
+            while m != 0 {
+                let k = m.trailing_zeros() as usize;
+                acc += self.vals[off] * x[base + k];
+                off += 1;
+                m &= m - 1;
+            }
+        }
+        acc
+    }
+
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows).map(|r| self.row_dot(r, x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg;
+    use crate::sparse::dense_matvec;
+
+    fn sparse_random(rng: &mut Pcg, rows: usize, cols: usize, keep: f64) -> Vec<f32> {
+        (0..rows * cols)
+            .map(|_| if rng.uniform() < keep { rng.normal() as f32 } else { 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_exact_including_ragged_blocks() {
+        let mut rng = Pcg::seeded(1);
+        // cols 65 forces a 1-bit tail block; cols 3 a sub-word block.
+        for (r, c) in [(2usize, 3usize), (4, 64), (5, 65), (7, 130)] {
+            let w = sparse_random(&mut rng, r, c, 0.5);
+            let m = BitmaskMatrix::from_dense(&w, r, c);
+            assert_eq!(m.to_dense(), w, "dims ({r},{c})");
+            assert_eq!(m.nnz(), w.iter().filter(|&&v| v != 0.0).count());
+        }
+    }
+
+    #[test]
+    fn popcount_matches_offsets() {
+        let mut rng = Pcg::seeded(2);
+        let w = sparse_random(&mut rng, 6, 100, 0.4);
+        let m = BitmaskMatrix::from_dense(&w, 6, 100);
+        for (i, mask) in m.masks.iter().enumerate() {
+            assert_eq!(
+                (m.block_off[i + 1] - m.block_off[i]) as u32,
+                mask.count_ones(),
+                "block {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Pcg::seeded(3);
+        let (r, c) = (17usize, 150usize);
+        let w = sparse_random(&mut rng, r, c, 0.5);
+        let x: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        let m = BitmaskMatrix::from_dense(&w, r, c);
+        let want = dense_matvec(&w, r, c, &x);
+        for (u, v) in m.matvec(&x).iter().zip(&want) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn all_zero_and_all_dense_edges() {
+        let z = BitmaskMatrix::from_dense(&vec![0.0f32; 8], 2, 4);
+        assert_eq!(z.nnz(), 0);
+        assert_eq!(z.matvec(&[1.0; 4]), vec![0.0, 0.0]);
+        let d = BitmaskMatrix::from_dense(&vec![1.0f32; 8], 2, 4);
+        assert_eq!(d.nnz(), 8);
+        assert_eq!(d.matvec(&[1.0; 4]), vec![4.0, 4.0]);
+    }
+}

@@ -1,0 +1,335 @@
+//! Model compilation: pack a pruned [`FlatParams`] into a [`SparseModel`]
+//! once, then serve it through `sparse::decode` many times.
+//!
+//! Packs every FFN-side projection (`in_proj`, `x_proj`, `dt_proj_w`,
+//! `out_proj`), the depthwise `conv1d_w`, and `A_log`.  Matmul weights are
+//! transposed from the `x @ W` storage convention of `layout.json` into
+//! kernel orientation `[out, in]` before packing; `conv1d_w` is always
+//! CSR because per-row `(tap, weight)` iteration *is* the depthwise conv's
+//! access pattern.  `A_log` is packed for storage, but the decode path
+//! also keeps `A = -exp(A_log)` dense: the selective scan's state update
+//! touches every (channel, state) pair regardless of the mask — only
+//! structured d_state surgery shrinks the scan, exactly as in the paper.
+//!
+//! Masks can be passed explicitly ([`SparseModel::compile_with_masks`]) or
+//! inferred from exact zeros ([`SparseModel::compile`]) — the latter is
+//! the common case since every `pruning` method applies its mask in place.
+
+use super::{CsrMatrix, DenseMatrix, Format, Packed};
+use crate::coordinator::transpose;
+use crate::model::{FlatParams, ModelMeta, FFN_MODULES};
+use crate::pruning::{magnitude, Mask};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// How to pack each prunable tensor.
+#[derive(Debug, Clone, Default)]
+pub struct PackPolicy {
+    /// `None` = density-based dispatch ([`Packed::pack`]); `Some(fmt)`
+    /// forces one format (with the documented N:M fallback).
+    pub force: Option<Format>,
+}
+
+impl PackPolicy {
+    /// Density-dispatched packing (the deployment default).
+    pub fn auto() -> PackPolicy {
+        PackPolicy { force: None }
+    }
+
+    /// Everything dense — the baseline the speedups are measured against,
+    /// and the reference model for packed-vs-dense equivalence tests.
+    pub fn dense() -> PackPolicy {
+        PackPolicy::of(Format::Dense)
+    }
+
+    pub fn of(fmt: Format) -> PackPolicy {
+        PackPolicy { force: Some(fmt) }
+    }
+
+    fn pack(&self, w: &[f32], rows: usize, cols: usize) -> Packed {
+        match self.force {
+            Some(fmt) => Packed::pack_as(w, rows, cols, fmt),
+            None => Packed::pack(w, rows, cols),
+        }
+    }
+}
+
+/// One Mamba block with packed weights (kernel orientation noted per field).
+pub struct SparseLayer {
+    pub norm: Vec<f32>,
+    /// `[2·d_inner, d_model]`
+    pub in_proj: Packed,
+    /// `[d_inner, d_conv]` — depthwise taps, always CSR.
+    pub conv_w: CsrMatrix,
+    pub conv_b: Vec<f32>,
+    /// `[dt_rank + 2·d_state, d_inner]`
+    pub x_proj: Packed,
+    /// `[d_inner, dt_rank]`
+    pub dt_proj: Packed,
+    pub dt_b: Vec<f32>,
+    /// `[d_inner, d_state]` packed storage of `A_log`.
+    pub a_log: Packed,
+    /// Dense `A = -exp(A_log)` the selective scan consumes.
+    pub a: Vec<f32>,
+    pub d: Vec<f32>,
+    /// `[d_model, d_inner]`
+    pub out_proj: Packed,
+}
+
+/// A compiled, packed model ready for the native decode path.
+pub struct SparseModel {
+    pub meta: ModelMeta,
+    /// Tied embedding/LM head, stored once: row-major `[vocab, d_model]`
+    /// serves both the token gather ([`SparseModel::embed_row`]) and the
+    /// head matmul (it is already kernel orientation).
+    pub head: Packed,
+    pub layers: Vec<SparseLayer>,
+    pub norm_f: Vec<f32>,
+}
+
+impl SparseModel {
+    /// Compile treating exact zeros as pruned (how `pruning::Mask::apply`
+    /// records decisions in place).
+    pub fn compile(params: &FlatParams, policy: &PackPolicy) -> Result<SparseModel> {
+        let meta = params.layout.meta.clone();
+        let (dm, di, ds, dr, dc) =
+            (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank, meta.d_conv);
+        let head = Packed::Dense(DenseMatrix::from_dense(params.view("embedding")?, meta.vocab, dm));
+        let mut layers = Vec::with_capacity(meta.n_layer);
+        for l in 0..meta.n_layer {
+            let v = |m: &str| params.view(&format!("layers.{l}.{m}"));
+            let a_log_w = v("A_log")?;
+            layers.push(SparseLayer {
+                norm: v("norm")?.to_vec(),
+                in_proj: policy.pack(&transpose(v("in_proj")?, dm, 2 * di), 2 * di, dm),
+                conv_w: CsrMatrix::from_dense(v("conv1d_w")?, di, dc),
+                conv_b: v("conv1d_b")?.to_vec(),
+                x_proj: policy.pack(&transpose(v("x_proj")?, di, dr + 2 * ds), dr + 2 * ds, di),
+                dt_proj: policy.pack(&transpose(v("dt_proj_w")?, dr, di), di, dr),
+                dt_b: v("dt_proj_b")?.to_vec(),
+                a_log: policy.pack(a_log_w, di, ds),
+                a: a_log_w.iter().map(|&x| -x.exp()).collect(),
+                d: v("D")?.to_vec(),
+                out_proj: policy.pack(&transpose(v("out_proj")?, di, dm), dm, di),
+            });
+        }
+        Ok(SparseModel { meta, head, layers, norm_f: params.view("norm_f")?.to_vec() })
+    }
+
+    /// Row `v` of the tied embedding/head matrix (token gather).
+    #[inline]
+    pub fn embed_row(&self, v: usize) -> &[f32] {
+        let dm = self.meta.d_model;
+        match &self.head {
+            Packed::Dense(m) => &m.vals[v * dm..(v + 1) * dm],
+            // compile always builds a dense head (it is unpruned + tied).
+            _ => unreachable!("tied head is always dense"),
+        }
+    }
+
+    /// Apply `masks` (keyed by layout tensor name) on a copy of `params`,
+    /// then compile.  Tensors without a mask keep their zeros-as-pruned
+    /// interpretation.
+    pub fn compile_with_masks(
+        params: &FlatParams,
+        masks: &BTreeMap<String, Mask>,
+        policy: &PackPolicy,
+    ) -> Result<SparseModel> {
+        let mut p = params.clone();
+        for (name, mask) in masks {
+            mask.apply(p.view_mut(name)?);
+        }
+        SparseModel::compile(&p, policy)
+    }
+
+    /// Serving footprint of all stored weights (packed + dense vectors).
+    pub fn memory_bytes(&self) -> usize {
+        let mut total = self.norm_f.len() * 4 + self.head.memory_bytes();
+        for l in &self.layers {
+            total += (l.norm.len() + l.conv_b.len() + l.dt_b.len() + l.a.len() + l.d.len()) * 4;
+            total += l.conv_w.memory_bytes();
+            for p in [&l.in_proj, &l.x_proj, &l.dt_proj, &l.a_log, &l.out_proj] {
+                total += p.memory_bytes();
+            }
+        }
+        total
+    }
+
+    /// What the same parameters cost fully dense.
+    pub fn dense_memory_bytes(&self) -> usize {
+        let meta = &self.meta;
+        let per_layer = meta.d_model // norm
+            + meta.d_model * 2 * meta.d_inner
+            + meta.d_inner * meta.d_conv
+            + meta.d_inner // conv_b
+            + meta.d_inner * (meta.dt_rank + 2 * meta.d_state)
+            + meta.dt_rank * meta.d_inner
+            + meta.d_inner // dt_b
+            + 2 * meta.d_inner * meta.d_state // a_log + a
+            + meta.d_inner // D
+            + meta.d_inner * meta.d_model;
+        (meta.vocab * meta.d_model + meta.n_layer * per_layer + meta.d_model) * 4
+    }
+
+    /// Count of packed projections per format, e.g. `"csr×12 dense×3"`.
+    pub fn format_summary(&self) -> String {
+        let mut counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for l in &self.layers {
+            for p in [&l.in_proj, &l.x_proj, &l.dt_proj, &l.a_log, &l.out_proj] {
+                *counts.entry(p.format().name()).or_insert(0) += 1;
+            }
+        }
+        counts
+            .iter()
+            .map(|(k, v)| format!("{k}×{v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Overall density across the packed projections (kept fraction).
+    pub fn weight_density(&self) -> f64 {
+        let mut nnz = 0usize;
+        let mut total = 0usize;
+        for l in &self.layers {
+            for p in [&l.in_proj, &l.x_proj, &l.dt_proj, &l.a_log, &l.out_proj] {
+                nnz += p.nnz();
+                total += p.rows() * p.cols();
+            }
+            nnz += l.conv_w.nnz();
+            total += l.conv_w.rows * l.conv_w.cols;
+        }
+        if total == 0 {
+            0.0
+        } else {
+            nnz as f64 / total as f64
+        }
+    }
+}
+
+/// Magnitude-2:4 masks **along each tensor's reduction axis** for every
+/// prunable tensor of every layer, applied in place.
+///
+/// `magnitude_nm_mask` groups contiguous storage, so matmul weights are
+/// masked in kernel orientation (transpose → mask → transpose back); this
+/// is what makes the masks land as 2:4 column groups after `compile`
+/// re-transposes, i.e. along the reduction axis where [`super::NmMatrix`]
+/// (and sparse tensor cores) need them.  `conv1d_w` and `A_log` already
+/// store their reduction axis contiguously.  Tensors whose reduction dim
+/// is not divisible by `m` are left untouched.
+pub fn apply_nm_along_input(params: &mut FlatParams, n: usize, m: usize) -> Result<()> {
+    let meta = params.layout.meta.clone();
+    let (dm, di, ds, dr, dc) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank, meta.d_conv);
+    // (module, storage rows, storage cols); reduction = storage rows for
+    // the transposed matmuls, storage cols for conv1d_w / A_log.
+    let matmuls = [
+        ("in_proj", dm, 2 * di),
+        ("x_proj", di, dr + 2 * ds),
+        ("dt_proj_w", dr, di),
+        ("out_proj", di, dm),
+    ];
+    for l in 0..meta.n_layer {
+        for (module, rows, cols) in matmuls {
+            if rows % m != 0 {
+                continue;
+            }
+            let name = format!("layers.{l}.{module}");
+            let w = params.view_mut(&name)?;
+            let mut wt = transpose(w, rows, cols);
+            magnitude::magnitude_nm_mask(&wt, n, m).apply(&mut wt);
+            w.copy_from_slice(&transpose(&wt, cols, rows));
+        }
+        for (module, cols) in [("conv1d_w", dc), ("A_log", ds)] {
+            if cols % m != 0 {
+                continue;
+            }
+            let name = format!("layers.{l}.{module}");
+            let w = params.view_mut(&name)?;
+            magnitude::magnitude_nm_mask(w, n, m).apply(w);
+        }
+    }
+    Ok(())
+}
+
+/// Magnitude-prune all prunable tensors (the five FFN modules + `A_log`)
+/// of every layer in place — the host-only pruned-model builder used by
+/// benches, examples and the `sparse_speed` experiment.
+pub fn magnitude_prune_all(params: &mut FlatParams, sparsity: f64) -> Result<()> {
+    for l in 0..params.layout.meta.n_layer {
+        for module in FFN_MODULES.iter().chain(std::iter::once(&"A_log")) {
+            let name = format!("layers.{l}.{module}");
+            let w = params.view_mut(&name)?;
+            magnitude::magnitude_mask(w, sparsity).apply(w);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::toy::toy_flat_params_random;
+    use crate::pruning::semistructured;
+
+    #[test]
+    fn compile_packs_all_projections() {
+        let mut p = toy_flat_params_random(4, 1);
+        magnitude_prune_all(&mut p, 0.9).unwrap();
+        let m = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        assert_eq!(m.layers.len(), 2);
+        for l in &m.layers {
+            assert_eq!(l.in_proj.format(), Format::Csr);
+            assert_eq!(l.out_proj.format(), Format::Csr);
+        }
+        assert!(m.weight_density() < 0.15);
+        assert!(m.memory_bytes() < m.dense_memory_bytes());
+        assert!(m.format_summary().contains("csr"));
+    }
+
+    #[test]
+    fn compile_with_masks_equals_manual_apply() {
+        let p = toy_flat_params_random(4, 2);
+        let name = "layers.0.in_proj".to_string();
+        let len = p.view(&name).unwrap().len();
+        let mask = Mask::from_indices(len, &(0..len / 2).collect::<Vec<_>>());
+        let mut masks = BTreeMap::new();
+        masks.insert(name.clone(), mask.clone());
+        let a = SparseModel::compile_with_masks(&p, &masks, &PackPolicy::dense()).unwrap();
+        let mut q = p.clone();
+        mask.apply(q.view_mut(&name).unwrap());
+        let b = SparseModel::compile(&q, &PackPolicy::dense()).unwrap();
+        assert_eq!(a.layers[0].in_proj.to_dense(), b.layers[0].in_proj.to_dense());
+    }
+
+    #[test]
+    fn nm_along_input_yields_nm_packable_tensors() {
+        let mut p = toy_flat_params_random(4, 3);
+        apply_nm_along_input(&mut p, 2, 4).unwrap();
+        let m = SparseModel::compile(&p, &PackPolicy::of(Format::Nm)).unwrap();
+        // dm=4, di=8, ds=4 are all 4-divisible in the toy; dt_rank=3 is not,
+        // so dt_proj falls back while the rest pack as 2:4.
+        for l in &m.layers {
+            assert_eq!(l.in_proj.format(), Format::Nm);
+            assert_eq!(l.x_proj.format(), Format::Nm);
+            assert_eq!(l.out_proj.format(), Format::Nm);
+            assert_eq!(l.a_log.format(), Format::Nm);
+            assert_ne!(l.dt_proj.format(), Format::Nm);
+        }
+        // A_log is masked along d_state, exactly the semistructured pattern.
+        let a = p.view("layers.0.A_log").unwrap();
+        let mask = Mask { prune: a.iter().map(|&v| v == 0.0).collect() };
+        assert!(semistructured::satisfies_nm(&mask, 2, 4));
+    }
+
+    #[test]
+    fn a_dense_matches_exp_of_packed_a_log() {
+        let mut p = toy_flat_params_random(4, 4);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        let m = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        for l in &m.layers {
+            let unpacked = l.a_log.to_dense();
+            for (av, lv) in l.a.iter().zip(&unpacked) {
+                assert!((av + lv.exp()).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Compressed sparse rows: the classic format, profitable at high
+//! sparsity (≥~80%) where skipping zeros beats streaming them.
+//!
+//! Indices are `u32` — every prunable tensor in the repo's configs is far
+//! below 2³² elements, and halving index bandwidth is half the point of
+//! packing.  Zeros are implicit: `from_dense` treats exact `0.0` as
+//! pruned, matching how `pruning::Mask::apply` records decisions.
+
+/// Row-major CSR matrix in kernel orientation `[rows=out, cols=in]`.
+#[derive(Debug, Clone)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// `row_ptr[r]..row_ptr[r+1]` spans row `r` in `col_idx`/`vals`.
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl CsrMatrix {
+    pub fn from_dense(w: &[f32], rows: usize, cols: usize) -> CsrMatrix {
+        assert_eq!(w.len(), rows * cols);
+        assert!(cols < u32::MAX as usize && w.len() < u32::MAX as usize);
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            for (c, &v) in w[r * cols..(r + 1) * cols].iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(c as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(vals.len() as u32);
+        }
+        CsrMatrix { rows, cols, row_ptr, col_idx, vals }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        let total = self.rows * self.cols;
+        if total == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / total as f64
+        }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.vals.len() * 4
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            for k in lo..hi {
+                w[r * self.cols + self.col_idx[k] as usize] = self.vals[k];
+            }
+        }
+        w
+    }
+
+    #[inline]
+    pub fn row_dot(&self, r: usize, x: &[f32]) -> f32 {
+        let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+        let mut acc = 0.0f32;
+        for k in lo..hi {
+            acc += self.vals[k] * x[self.col_idx[k] as usize];
+        }
+        acc
+    }
+
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows).map(|r| self.row_dot(r, x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg;
+    use crate::sparse::dense_matvec;
+
+    fn sparse_random(rng: &mut Pcg, rows: usize, cols: usize, keep: f64) -> Vec<f32> {
+        (0..rows * cols)
+            .map(|_| if rng.uniform() < keep { rng.normal() as f32 } else { 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Pcg::seeded(1);
+        for (r, c) in [(1usize, 1usize), (3, 17), (20, 64)] {
+            let w = sparse_random(&mut rng, r, c, 0.1);
+            let m = CsrMatrix::from_dense(&w, r, c);
+            assert_eq!(m.to_dense(), w);
+            assert_eq!(m.nnz(), w.iter().filter(|&&v| v != 0.0).count());
+        }
+    }
+
+    #[test]
+    fn empty_and_full_rows() {
+        // row 0 empty, row 1 full.
+        let w = vec![0.0f32, 0.0, 0.0, 1.0, 2.0, 3.0];
+        let m = CsrMatrix::from_dense(&w, 2, 3);
+        assert_eq!(m.row_ptr, vec![0, 0, 3]);
+        let y = m.matvec(&[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![0.0, 6.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Pcg::seeded(2);
+        let (r, c) = (31usize, 57usize);
+        let w = sparse_random(&mut rng, r, c, 0.07);
+        let x: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        let m = CsrMatrix::from_dense(&w, r, c);
+        let want = dense_matvec(&w, r, c, &x);
+        for (u, v) in m.matvec(&x).iter().zip(&want) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn memory_shrinks_at_high_sparsity() {
+        let mut rng = Pcg::seeded(3);
+        let (r, c) = (64usize, 256usize);
+        let w = sparse_random(&mut rng, r, c, 0.05);
+        let m = CsrMatrix::from_dense(&w, r, c);
+        assert!(m.memory_bytes() < r * c * 4 / 2);
+    }
+}

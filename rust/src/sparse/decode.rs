@@ -1,0 +1,290 @@
+//! Native pruned-decode path: packed projections chained with the
+//! compute-bound [`crate::ssm::selective_scan`] kernel, end to end.
+//!
+//! This is the deployment analogue of `model.py::forward_logits`, written
+//! against [`SparseModel`] so every projection runs its packed kernel:
+//!
+//! ```text
+//! embed → [ rmsnorm → in_proj* → conv1d* → silu → x_proj* → dt_proj*
+//!           → softplus → selective_scan → gate → out_proj* → +res ]×L
+//!       → rmsnorm → tied head
+//! ```
+//!
+//! (* = sparsity-aware matmul/conv.)  The recurrence itself stays dense
+//! over `d_state` — masked `A_log` zeros decay states (`A = -e⁰ = -1`)
+//! rather than skip them, matching the paper's masked semantics, so the
+//! wall-clock win comes from the projections, which dominate FLOPs.
+
+use super::compile::{apply_nm_along_input, magnitude_prune_all, PackPolicy, SparseModel};
+use super::CsrMatrix;
+use crate::benchx::{self, BenchResult};
+use crate::model::toy::{custom_flat_params_random, m370_dims_meta};
+use crate::model::FlatParams;
+use crate::rngx::Pcg;
+use crate::ssm::{selective_scan, SsmInputs};
+use anyhow::Result;
+
+/// The shared host-only bench model: random weights at real m370 widths,
+/// one seed/scale so the CLI `sparse-bench`, the `sparse_speed`
+/// experiment, `cargo bench` and `examples/sparse_speedup.rs` all
+/// measure the same parameters.
+pub fn m370_bench_params() -> FlatParams {
+    custom_flat_params_random(m370_dims_meta(), 42, 0.05)
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[inline]
+fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+fn rmsnorm(x: &[f32], w: &[f32], dm: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len() % dm, 0);
+    debug_assert_eq!(w.len(), dm);
+    let mut out = vec![0.0f32; x.len()];
+    for (row, orow) in x.chunks_exact(dm).zip(out.chunks_exact_mut(dm)) {
+        let mut ss = 0.0f32;
+        for &v in row {
+            ss += v * v;
+        }
+        let scale = 1.0 / (ss / dm as f32 + 1e-5).sqrt();
+        for ((o, &v), &wv) in orow.iter_mut().zip(row).zip(w) {
+            *o = v * scale * wv;
+        }
+    }
+    out
+}
+
+/// Depthwise causal conv over packed taps, fused with SiLU.  CSR row
+/// iteration visits only surviving taps; pruned taps cost nothing.
+fn conv1d_causal_silu(
+    w: &CsrMatrix,
+    bias: &[f32],
+    x: &[f32],
+    bt: usize,
+    l: usize,
+    di: usize,
+) -> Vec<f32> {
+    let k = w.cols;
+    debug_assert_eq!(w.rows, di);
+    debug_assert_eq!(x.len(), bt * l * di);
+    let mut out = vec![0.0f32; bt * l * di];
+    for b in 0..bt {
+        for t in 0..l {
+            let o = (b * l + t) * di;
+            for d in 0..di {
+                let (lo, hi) = (w.row_ptr[d] as usize, w.row_ptr[d + 1] as usize);
+                let mut acc = bias[d];
+                for p in lo..hi {
+                    // Tap kk reads sequence position t + kk - (K-1); the
+                    // first K-1 positions are implicit zero padding.
+                    let tt = t + w.col_idx[p] as usize;
+                    if tt >= k - 1 {
+                        acc += w.vals[p] * x[(b * l + tt - (k - 1)) * di + d];
+                    }
+                }
+                out[o + d] = silu(acc);
+            }
+        }
+    }
+    out
+}
+
+/// Full forward over `tokens[bt, l]`, returning logits `[bt, l, vocab]`.
+/// Mirrors `model.py::forward_logits` (same recurrence, same tied head);
+/// equivalence between packed and forced-dense compilation is pinned by
+/// `tests/prop_sparse.rs`.
+pub fn forward_logits(model: &SparseModel, tokens: &[i32], bt: usize, l: usize) -> Vec<f32> {
+    let meta = &model.meta;
+    let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
+    let t = bt * l;
+    assert_eq!(tokens.len(), t);
+
+    let mut x = vec![0.0f32; t * dm];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let v = tok as usize;
+        assert!(v < meta.vocab, "token {tok} out of vocab {}", meta.vocab);
+        x[i * dm..(i + 1) * dm].copy_from_slice(model.embed_row(v));
+    }
+
+    for layer in &model.layers {
+        let xn = rmsnorm(&x, &layer.norm, dm);
+        let xr = layer.in_proj.matmul(&xn, t); // [t, 2di] = [x_in | res]
+        let mut x_in = vec![0.0f32; t * di];
+        let mut res = vec![0.0f32; t * di];
+        for ti in 0..t {
+            let row = &xr[ti * 2 * di..(ti + 1) * 2 * di];
+            x_in[ti * di..(ti + 1) * di].copy_from_slice(&row[..di]);
+            res[ti * di..(ti + 1) * di].copy_from_slice(&row[di..]);
+        }
+
+        let u = conv1d_causal_silu(&layer.conv_w, &layer.conv_b, &x_in, bt, l, di);
+
+        let xdbc = layer.x_proj.matmul(&u, t); // [t, dr + 2ds] = [δ_r | B | C]
+        let width = dr + 2 * ds;
+        let mut delta_r = vec![0.0f32; t * dr];
+        let mut bmat = vec![0.0f32; t * ds];
+        let mut cmat = vec![0.0f32; t * ds];
+        for ti in 0..t {
+            let row = &xdbc[ti * width..(ti + 1) * width];
+            delta_r[ti * dr..(ti + 1) * dr].copy_from_slice(&row[..dr]);
+            bmat[ti * ds..(ti + 1) * ds].copy_from_slice(&row[dr..dr + ds]);
+            cmat[ti * ds..(ti + 1) * ds].copy_from_slice(&row[dr + ds..]);
+        }
+
+        let mut delta = layer.dt_proj.matmul(&delta_r, t); // [t, di]
+        for row in delta.chunks_exact_mut(di) {
+            for (dv, &bv) in row.iter_mut().zip(&layer.dt_b) {
+                *dv = softplus(*dv + bv);
+            }
+        }
+
+        let y = selective_scan(&SsmInputs {
+            a: &layer.a,
+            delta: &delta,
+            b: &bmat,
+            c: &cmat,
+            x: &u,
+            dp: &layer.d,
+            dims: (bt, l, di, ds),
+        });
+
+        let mut gated = y;
+        for (g, &rv) in gated.iter_mut().zip(&res) {
+            *g *= silu(rv);
+        }
+        let out = layer.out_proj.matmul(&gated, t); // [t, dm]
+        for (xv, &ov) in x.iter_mut().zip(&out) {
+            *xv += ov;
+        }
+    }
+
+    let xn = rmsnorm(&x, &model.norm_f, dm);
+    model.head.matmul(&xn, t) // [t, vocab]
+}
+
+/// Time the decode path on random tokens; returns the bench row and the
+/// headline tokens/sec (p50-based).
+pub fn decode_throughput(
+    model: &SparseModel,
+    bt: usize,
+    l: usize,
+    budget_ms: f64,
+    seed: u64,
+) -> (BenchResult, f64) {
+    let mut rng = Pcg::seeded(seed);
+    let tokens: Vec<i32> = (0..bt * l).map(|_| rng.below(model.meta.vocab) as i32).collect();
+    let name = format!("decode {} B={bt} L={l} [{}]", model.meta.name, model.format_summary());
+    let r = benchx::bench_for(&name, budget_ms, || {
+        benchx::black_box(forward_logits(model, &tokens, bt, l));
+    });
+    let tps = (bt * l) as f64 / (r.p50_ms / 1e3);
+    (r, tps)
+}
+
+/// One row of the dense-vs-sparse serving comparison.
+pub struct SweepRow {
+    pub label: String,
+    pub formats: String,
+    pub tokens_per_sec: f64,
+    /// Relative to the first (dense, unpruned) row.
+    pub speedup: f64,
+    pub weight_mb: f64,
+    pub bench: BenchResult,
+}
+
+/// The standard dense-vs-sparse decode sweep over `params`: dense
+/// baseline, masked-dense (showing masks alone buy nothing), bitmask at
+/// 50%, 2:4-packed at 50%, CSR at 90%.  Shared by the CLI `sparse-bench`
+/// subcommand, the `sparse_speed` experiment, `cargo bench` and
+/// `examples/sparse_speedup.rs`.
+pub fn dense_vs_sparse_sweep(
+    params: &FlatParams,
+    bt: usize,
+    l: usize,
+    budget_ms: f64,
+) -> Result<Vec<SweepRow>> {
+    let prune_all = |sparsity: f64| -> Result<FlatParams> {
+        let mut p = params.clone();
+        magnitude_prune_all(&mut p, sparsity)?;
+        Ok(p)
+    };
+    let mut nm = params.clone();
+    apply_nm_along_input(&mut nm, 2, 4)?;
+    let half = prune_all(0.5)?;
+    let variants: Vec<(&str, FlatParams, PackPolicy)> = vec![
+        ("dense 0%", params.clone(), PackPolicy::dense()),
+        ("masked-dense 50%", half.clone(), PackPolicy::dense()),
+        ("packed 50% (auto)", half, PackPolicy::auto()),
+        ("packed 2:4 (auto)", nm, PackPolicy::auto()),
+        ("packed 90% (auto)", prune_all(0.9)?, PackPolicy::auto()),
+    ];
+    let mut rows: Vec<SweepRow> = Vec::with_capacity(variants.len());
+    let mut dense_tps = 0.0;
+    for (label, p, policy) in variants {
+        let model = SparseModel::compile(&p, &policy)?;
+        let (bench, tps) = decode_throughput(&model, bt, l, budget_ms, 7);
+        if rows.is_empty() {
+            dense_tps = tps;
+        }
+        rows.push(SweepRow {
+            label: label.to_string(),
+            formats: model.format_summary(),
+            tokens_per_sec: tps,
+            speedup: tps / dense_tps,
+            weight_mb: model.memory_bytes() as f64 / 1e6,
+            bench,
+        });
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::toy::toy_flat_params_random;
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let p = toy_flat_params_random(4, 1);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let (bt, l) = (2usize, 6usize);
+        let tokens: Vec<i32> = (0..bt * l).map(|i| (i % 16) as i32).collect();
+        let logits = forward_logits(&model, &tokens, bt, l);
+        assert_eq!(logits.len(), bt * l * 16);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batch_rows_are_independent() {
+        // Same sequence in both batch rows must give identical logits.
+        let p = toy_flat_params_random(4, 2);
+        let model = SparseModel::compile(&p, &PackPolicy::dense()).unwrap();
+        let l = 5usize;
+        let seq: Vec<i32> = vec![3, 1, 4, 1, 5];
+        let mut tokens = seq.clone();
+        tokens.extend_from_slice(&seq);
+        let logits = forward_logits(&model, &tokens, 2, l);
+        let (a, b) = logits.split_at(l * 16);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sweep_produces_all_variants() {
+        let p = toy_flat_params_random(4, 3);
+        let rows = dense_vs_sparse_sweep(&p, 1, 8, 1.0).unwrap();
+        assert_eq!(rows.len(), 5);
+        assert!((rows[0].speedup - 1.0).abs() < 1e-12);
+        assert!(rows.iter().all(|r| r.tokens_per_sec > 0.0));
+        // 90% CSR variant must store less than the dense baseline.
+        assert!(rows[4].weight_mb < rows[0].weight_mb);
+    }
+}

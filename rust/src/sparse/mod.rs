@@ -1,0 +1,398 @@
+//! Sparse execution engine: packed weight formats and sparsity-aware
+//! kernels, so pruned models actually run faster (DESIGN.md §9).
+//!
+//! Mask-based pruning (unstructured, N:M) zeroes weights but the dense
+//! kernels still multiply by every zero — only structured d_state surgery
+//! changed wall-clock before this module existed.  The engine closes that
+//! gap for deployment:
+//!
+//! * [`csr`]      — compressed sparse rows, wins at high sparsity (≥~80%).
+//! * [`bitmask`]  — one `u64` occupancy mask per 64-weight block with
+//!                  packed nonzeros; wins in the mid-sparsity band.
+//! * [`nm`]       — N:M-packed layout (values + 2-bit-ish group indices)
+//!                  specialized for the 2:4 masks
+//!                  `pruning::semistructured` emits.
+//! * [`compile`]  — [`SparseModel`]: pack a pruned [`crate::model::FlatParams`]
+//!                  (all five FFN projections + `A_log`) once, serve many.
+//! * [`decode`]   — the native pruned-decode path: packed projections
+//!                  chained with [`crate::ssm::selective_scan`] end-to-end.
+//!
+//! All packed matrices live in **kernel orientation** `[out_rows, in_cols]`
+//! (`y[r] = Σ_c M[r,c]·x[c]`), i.e. the transpose of the `x @ W` storage
+//! convention of `layout.json`; [`compile`] performs the transposes.  The
+//! N:M pattern therefore runs along the *reduction* axis, matching what
+//! sparse tensor cores require.
+//!
+//! [`Packed::pack`] is a density-based dispatcher: tensors too dense to
+//! profit from a sparse format fall back to [`DenseMatrix`], so calling it
+//! on anything is always safe.
+
+pub mod bitmask;
+pub mod compile;
+pub mod csr;
+pub mod decode;
+pub mod nm;
+
+pub use bitmask::BitmaskMatrix;
+pub use compile::{PackPolicy, SparseLayer, SparseModel};
+pub use csr::CsrMatrix;
+pub use nm::NmMatrix;
+
+use crate::threadx;
+
+/// Above this density CSR's index indirection costs more than it saves.
+pub const CSR_MAX_DENSITY: f64 = 0.2;
+
+/// Above this density the bitmask walk is slower than streaming densely.
+pub const BITMASK_MAX_DENSITY: f64 = 0.6;
+
+/// Minimum `tokens × nnz` before `matmul` fans out over row stripes
+/// (below it, thread spawn overhead dominates).
+pub const PARALLEL_MIN_WORK: usize = 1 << 15;
+
+/// Rows per parallel stripe (matches the `ssm` kernel's striping).
+const ROW_STRIPE: usize = 64;
+
+/// Packed weight formats, in dispatch-preference order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    Dense,
+    Csr,
+    Bitmask,
+    Nm,
+}
+
+impl Format {
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::Dense => "dense",
+            Format::Csr => "csr",
+            Format::Bitmask => "bitmask",
+            Format::Nm => "2:4",
+        }
+    }
+}
+
+/// Plain row-major matrix wrapped in the same kernel interface, used as
+/// the dispatcher's fallback and as the speed baseline in benches.
+#[derive(Debug, Clone)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub vals: Vec<f32>,
+}
+
+impl DenseMatrix {
+    pub fn from_dense(w: &[f32], rows: usize, cols: usize) -> DenseMatrix {
+        assert_eq!(w.len(), rows * cols);
+        DenseMatrix { rows, cols, vals: w.to_vec() }
+    }
+
+    #[inline]
+    pub fn row_dot(&self, r: usize, x: &[f32]) -> f32 {
+        let row = &self.vals[r * self.cols..(r + 1) * self.cols];
+        let mut acc = 0.0f32;
+        for (w, v) in row.iter().zip(x) {
+            acc += w * v;
+        }
+        acc
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.vals.len() * 4
+    }
+}
+
+/// Reference dense matvec over a row-major `[rows, cols]` matrix — the
+/// baseline every sparse kernel is benchmarked and property-tested against.
+pub fn dense_matvec(w: &[f32], rows: usize, cols: usize, x: &[f32]) -> Vec<f32> {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(x.len(), cols);
+    let mut y = vec![0.0f32; rows];
+    for (r, yr) in y.iter_mut().enumerate() {
+        let row = &w[r * cols..(r + 1) * cols];
+        let mut acc = 0.0f32;
+        for (wv, xv) in row.iter().zip(x) {
+            acc += wv * xv;
+        }
+        *yr = acc;
+    }
+    y
+}
+
+/// One packed matrix in kernel orientation; the unit every kernel runs on.
+#[derive(Debug, Clone)]
+pub enum Packed {
+    Dense(DenseMatrix),
+    Csr(CsrMatrix),
+    Bitmask(BitmaskMatrix),
+    Nm(NmMatrix),
+}
+
+impl Packed {
+    /// Density-dispatched packing: CSR when sparse enough, the 2:4 layout
+    /// when the tensor satisfies it, bitmask-block in the mid band, dense
+    /// otherwise.
+    pub fn pack(w: &[f32], rows: usize, cols: usize) -> Packed {
+        assert_eq!(w.len(), rows * cols);
+        let nnz = w.iter().filter(|&&v| v != 0.0).count();
+        let density = if w.is_empty() { 0.0 } else { nnz as f64 / w.len() as f64 };
+        if density <= CSR_MAX_DENSITY {
+            return Packed::Csr(CsrMatrix::from_dense(w, rows, cols));
+        }
+        if let Some(m) = NmMatrix::try_from_dense(w, rows, cols, 2, 4) {
+            return Packed::Nm(m);
+        }
+        if density <= BITMASK_MAX_DENSITY {
+            return Packed::Bitmask(BitmaskMatrix::from_dense(w, rows, cols));
+        }
+        Packed::Dense(DenseMatrix::from_dense(w, rows, cols))
+    }
+
+    /// Pack as a specific format.  A requested `Nm` that the tensor does
+    /// not satisfy (wrong pattern or `cols % 4 != 0`) falls back to the
+    /// density dispatcher, so a single policy can cover a whole model.
+    pub fn pack_as(w: &[f32], rows: usize, cols: usize, fmt: Format) -> Packed {
+        assert_eq!(w.len(), rows * cols);
+        match fmt {
+            Format::Dense => Packed::Dense(DenseMatrix::from_dense(w, rows, cols)),
+            Format::Csr => Packed::Csr(CsrMatrix::from_dense(w, rows, cols)),
+            Format::Bitmask => Packed::Bitmask(BitmaskMatrix::from_dense(w, rows, cols)),
+            Format::Nm => match NmMatrix::try_from_dense(w, rows, cols, 2, 4) {
+                Some(m) => Packed::Nm(m),
+                None => Packed::pack(w, rows, cols),
+            },
+        }
+    }
+
+    pub fn format(&self) -> Format {
+        match self {
+            Packed::Dense(_) => Format::Dense,
+            Packed::Csr(_) => Format::Csr,
+            Packed::Bitmask(_) => Format::Bitmask,
+            Packed::Nm(_) => Format::Nm,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            Packed::Dense(m) => m.rows,
+            Packed::Csr(m) => m.rows,
+            Packed::Bitmask(m) => m.rows,
+            Packed::Nm(m) => m.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Packed::Dense(m) => m.cols,
+            Packed::Csr(m) => m.cols,
+            Packed::Bitmask(m) => m.cols,
+            Packed::Nm(m) => m.cols,
+        }
+    }
+
+    /// True nonzero count (N:M padding slots excluded), so `density()`
+    /// agrees with `Mask::density` for every format.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Packed::Dense(m) => m.vals.iter().filter(|&&v| v != 0.0).count(),
+            Packed::Csr(m) => m.nnz(),
+            Packed::Bitmask(m) => m.nnz(),
+            Packed::Nm(m) => m.nnz(),
+        }
+    }
+
+    /// Stored multiply-add slots per full pass — what one matvec costs
+    /// (includes N:M padding and dense zeros).
+    pub fn stored(&self) -> usize {
+        match self {
+            Packed::Dense(m) => m.vals.len(),
+            Packed::Csr(m) => m.nnz(),
+            Packed::Bitmask(m) => m.nnz(),
+            Packed::Nm(m) => m.stored(),
+        }
+    }
+
+    pub fn density(&self) -> f64 {
+        let total = self.rows() * self.cols();
+        if total == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / total as f64
+        }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            Packed::Dense(m) => m.memory_bytes(),
+            Packed::Csr(m) => m.memory_bytes(),
+            Packed::Bitmask(m) => m.memory_bytes(),
+            Packed::Nm(m) => m.memory_bytes(),
+        }
+    }
+
+    /// Reconstruct the row-major dense matrix (pack→unpack roundtrip).
+    pub fn to_dense(&self) -> Vec<f32> {
+        match self {
+            Packed::Dense(m) => m.vals.clone(),
+            Packed::Csr(m) => m.to_dense(),
+            Packed::Bitmask(m) => m.to_dense(),
+            Packed::Nm(m) => m.to_dense(),
+        }
+    }
+
+    #[inline]
+    pub fn row_dot(&self, r: usize, x: &[f32]) -> f32 {
+        match self {
+            Packed::Dense(m) => m.row_dot(r, x),
+            Packed::Csr(m) => m.row_dot(r, x),
+            Packed::Bitmask(m) => m.row_dot(r, x),
+            Packed::Nm(m) => m.row_dot(r, x),
+        }
+    }
+
+    /// `y[r] = Σ_c M[r,c]·x[c]` — single token, serial (threading never
+    /// pays off at matvec sizes; see `matmul` for the batched path).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols());
+        let mut y = vec![0.0f32; self.rows()];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.cols());
+        debug_assert_eq!(y.len(), self.rows());
+        for (r, yr) in y.iter_mut().enumerate() {
+            *yr = self.row_dot(r, x);
+        }
+    }
+
+    /// Batched kernel: `x[t, cols] → y[t, rows]` for `t` tokens,
+    /// parallelized over row stripes via [`threadx::parallel_map`] once the
+    /// work crosses [`PARALLEL_MIN_WORK`].  Row stripes keep each packed
+    /// row's metadata hot in cache across all `t` tokens.
+    pub fn matmul(&self, x: &[f32], t: usize) -> Vec<f32> {
+        let (rows, cols) = (self.rows(), self.cols());
+        assert_eq!(x.len(), t * cols);
+        let mut y = vec![0.0f32; t * rows];
+        if t * self.stored().max(1) < PARALLEL_MIN_WORK {
+            for ti in 0..t {
+                let xt = &x[ti * cols..(ti + 1) * cols];
+                for r in 0..rows {
+                    y[ti * rows + r] = self.row_dot(r, xt);
+                }
+            }
+            return y;
+        }
+        let stripe = ROW_STRIPE.min(rows).max(1);
+        let n_stripes = rows.div_ceil(stripe);
+
+        // Each stripe job writes a disjoint set of y columns.
+        struct YPtr(*mut f32);
+        unsafe impl Send for YPtr {}
+        unsafe impl Sync for YPtr {}
+        let yp = YPtr(y.as_mut_ptr());
+
+        threadx::parallel_map(n_stripes, |s| {
+            let yp = &yp;
+            let r0 = s * stripe;
+            let r1 = (r0 + stripe).min(rows);
+            for r in r0..r1 {
+                for ti in 0..t {
+                    let v = self.row_dot(r, &x[ti * cols..(ti + 1) * cols]);
+                    // SAFETY: stripe jobs own disjoint r ranges; each
+                    // (ti, r) slot is written exactly once.
+                    unsafe { *yp.0.add(ti * rows + r) = v };
+                }
+            }
+        });
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::{magnitude, Mask};
+    use crate::rngx::Pcg;
+
+    fn masked_random(rng: &mut Pcg, rows: usize, cols: usize, sparsity: f64) -> Vec<f32> {
+        let mut w: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() * 0.5) as f32).collect();
+        magnitude::magnitude_mask(&w, sparsity).apply(&mut w);
+        w
+    }
+
+    #[test]
+    fn dispatcher_picks_by_density() {
+        let mut rng = Pcg::seeded(1);
+        let (r, c) = (16usize, 64usize);
+        let cases = [(0.95, Format::Csr), (0.5, Format::Bitmask), (0.05, Format::Dense)];
+        for (sparsity, want) in cases {
+            let w = masked_random(&mut rng, r, c, sparsity);
+            let p = Packed::pack(&w, r, c);
+            assert_eq!(p.format(), want, "sparsity {sparsity}");
+            assert_eq!(p.to_dense(), w);
+        }
+    }
+
+    #[test]
+    fn dispatcher_detects_2_4() {
+        let mut rng = Pcg::seeded(2);
+        let (r, c) = (8usize, 32usize);
+        let mut w: Vec<f32> = (0..r * c).map(|_| (rng.normal() + 3.0) as f32).collect();
+        magnitude::magnitude_nm_mask(&w, 2, 4).apply(&mut w);
+        let p = Packed::pack(&w, r, c);
+        assert_eq!(p.format(), Format::Nm);
+        assert_eq!(p.to_dense(), w);
+    }
+
+    #[test]
+    fn forced_nm_falls_back_when_unsatisfied() {
+        let w = vec![1.0f32; 12]; // fully dense 4x3: cols % 4 != 0
+        let p = Packed::pack_as(&w, 4, 3, Format::Nm);
+        assert_eq!(p.format(), Format::Dense);
+        assert_eq!(p.to_dense(), w);
+    }
+
+    #[test]
+    fn matvec_matches_dense_reference_all_formats() {
+        let mut rng = Pcg::seeded(3);
+        let (r, c) = (40usize, 96usize);
+        let w = masked_random(&mut rng, r, c, 0.5);
+        let x: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        let want = dense_matvec(&w, r, c, &x);
+        for fmt in [Format::Dense, Format::Csr, Format::Bitmask] {
+            let p = Packed::pack_as(&w, r, c, fmt);
+            let got = p.matvec(&x);
+            for (u, v) in got.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-5, "{fmt:?}: {u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_matches_repeated_matvec() {
+        let mut rng = Pcg::seeded(4);
+        let (r, c, t) = (70usize, 48usize, 33usize);
+        let w = masked_random(&mut rng, r, c, 0.8);
+        let p = Packed::pack(&w, r, c);
+        let x: Vec<f32> = (0..t * c).map(|_| rng.normal() as f32).collect();
+        let y = p.matmul(&x, t);
+        for ti in 0..t {
+            let yt = p.matvec(&x[ti * c..(ti + 1) * c]);
+            assert_eq!(&y[ti * r..(ti + 1) * r], &yt[..]);
+        }
+    }
+
+    #[test]
+    fn density_uses_mask_helpers_consistently() {
+        let mut w = vec![1.0f32; 64];
+        let mask = Mask::from_indices(64, &(0..48).collect::<Vec<_>>());
+        mask.apply(&mut w);
+        let p = Packed::pack(&w, 8, 8);
+        assert!((p.density() - mask.density()).abs() < 1e-12);
+        assert_eq!(p.nnz(), mask.len() - mask.pruned_count());
+    }
+}

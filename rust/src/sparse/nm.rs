@@ -1,0 +1,206 @@
+//! N:M-packed layout, specialized for the 2:4 masks that
+//! `pruning::semistructured` and `pruning::magnitude::magnitude_nm_mask`
+//! emit (paper §4.3, Table 4).
+//!
+//! Within every group of `m` consecutive columns at most `m - n` weights
+//! survive; the format stores exactly those survivors as
+//! `(value, in-group index)` pairs at a **fixed stride** of `m - n` per
+//! group — the CPU analogue of the value+metadata layout sparse tensor
+//! cores consume.  Fixed stride keeps the inner loop branch-free: groups
+//! with fewer survivors are padded with `(0.0, 0)` pairs that contribute
+//! nothing.  The groups must run along the reduction axis (the packed
+//! matrix's columns), which is why `compile` transposes weights into
+//! kernel orientation before 2:4 masking.
+
+/// Kernel-orientation `[rows, cols]` matrix with an N:M column pattern.
+#[derive(Debug, Clone)]
+pub struct NmMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Pattern parameters: ≥`n` of every `m` consecutive columns pruned.
+    pub n: usize,
+    pub m: usize,
+    /// Survivors per group (`m - n`), the fixed stride of `vals`/`idx`.
+    keep: usize,
+    /// `rows * (cols/m) * keep` packed values (padding slots are `0.0`).
+    pub vals: Vec<f32>,
+    /// In-group column index of each packed value (`< m`, fits `u8`).
+    pub idx: Vec<u8>,
+}
+
+impl NmMatrix {
+    /// Pack if `w` satisfies the pattern: `cols % m == 0` and every
+    /// `m`-wide group of every row holds at most `m - n` nonzeros.
+    /// Returns `None` otherwise (callers fall back to another format).
+    pub fn try_from_dense(
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        n: usize,
+        m: usize,
+    ) -> Option<NmMatrix> {
+        assert_eq!(w.len(), rows * cols);
+        assert!(n < m && m > 0 && m <= 256);
+        if cols % m != 0 || cols == 0 {
+            return None;
+        }
+        let keep = m - n;
+        let groups = cols / m;
+        let mut vals = Vec::with_capacity(rows * groups * keep);
+        let mut idx = Vec::with_capacity(rows * groups * keep);
+        for r in 0..rows {
+            let row = &w[r * cols..(r + 1) * cols];
+            for g in 0..groups {
+                let grp = &row[g * m..(g + 1) * m];
+                let before = vals.len();
+                for (k, &v) in grp.iter().enumerate() {
+                    if v != 0.0 {
+                        if vals.len() - before == keep {
+                            return None; // too many survivors: pattern violated
+                        }
+                        vals.push(v);
+                        idx.push(k as u8);
+                    }
+                }
+                while vals.len() - before < keep {
+                    vals.push(0.0);
+                    idx.push(0);
+                }
+            }
+        }
+        Some(NmMatrix { rows, cols, n, m, keep, vals, idx })
+    }
+
+    /// Stored slots (incl. padding) — the multiply-adds one row costs.
+    pub fn stored(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// True nonzero count (padding excluded).
+    pub fn nnz(&self) -> usize {
+        self.vals.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.vals.len() * 4 + self.idx.len()
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.rows * self.cols];
+        let groups = self.cols / self.m;
+        for r in 0..self.rows {
+            for g in 0..groups {
+                let p = (r * groups + g) * self.keep;
+                for s in 0..self.keep {
+                    let v = self.vals[p + s];
+                    if v != 0.0 {
+                        w[r * self.cols + g * self.m + self.idx[p + s] as usize] = v;
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    #[inline]
+    pub fn row_dot(&self, r: usize, x: &[f32]) -> f32 {
+        let groups = self.cols / self.m;
+        let mut p = r * groups * self.keep;
+        let mut acc = 0.0f32;
+        if self.keep == 2 {
+            // 2:4 fast path: two fused slots per group, no inner loop.
+            for g in 0..groups {
+                let base = g * self.m;
+                acc += self.vals[p] * x[base + self.idx[p] as usize]
+                    + self.vals[p + 1] * x[base + self.idx[p + 1] as usize];
+                p += 2;
+            }
+        } else {
+            for g in 0..groups {
+                let base = g * self.m;
+                for s in 0..self.keep {
+                    acc += self.vals[p + s] * x[base + self.idx[p + s] as usize];
+                }
+                p += self.keep;
+            }
+        }
+        acc
+    }
+
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows).map(|r| self.row_dot(r, x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::magnitude;
+    use crate::rngx::Pcg;
+    use crate::sparse::dense_matvec;
+
+    fn nm_random(rng: &mut Pcg, rows: usize, cols: usize, n: usize, m: usize) -> Vec<f32> {
+        // +2.0 shift keeps survivors nonzero so nnz is exactly rows*cols*(m-n)/m.
+        let mut w: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() + 2.0) as f32).collect();
+        magnitude::magnitude_nm_mask(&w, n, m).apply(&mut w);
+        w
+    }
+
+    #[test]
+    fn roundtrip_exact_2_4_and_4_8() {
+        let mut rng = Pcg::seeded(1);
+        for (n, m) in [(2usize, 4usize), (4, 8)] {
+            let (r, c) = (9, 8 * m);
+            let w = nm_random(&mut rng, r, c, n, m);
+            let p = NmMatrix::try_from_dense(&w, r, c, n, m).unwrap();
+            assert_eq!(p.to_dense(), w);
+            assert_eq!(p.nnz(), r * c * (m - n) / m);
+            assert_eq!(p.stored(), r * c * (m - n) / m);
+        }
+    }
+
+    #[test]
+    fn rejects_pattern_violations() {
+        // cols not divisible by m
+        assert!(NmMatrix::try_from_dense(&vec![0.0; 12], 2, 6, 2, 4).is_none());
+        // a group with 3 survivors breaks 2:4
+        let w = vec![1.0f32, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0];
+        assert!(NmMatrix::try_from_dense(&w, 1, 8, 2, 4).is_none());
+    }
+
+    #[test]
+    fn accepts_extra_zeros_with_padding() {
+        // group 1 has a single survivor (padding fills the second slot).
+        let w = vec![0.0f32, 5.0, 0.0, 0.0, 1.0, 0.0, 2.0, 0.0];
+        let p = NmMatrix::try_from_dense(&w, 1, 8, 2, 4).unwrap();
+        assert_eq!(p.stored(), 4);
+        assert_eq!(p.nnz(), 3);
+        assert_eq!(p.to_dense(), w);
+        assert_eq!(p.matvec(&[1.0; 8]), vec![8.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Pcg::seeded(2);
+        let (r, c) = (25usize, 64usize);
+        let w = nm_random(&mut rng, r, c, 2, 4);
+        let x: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        let p = NmMatrix::try_from_dense(&w, r, c, 2, 4).unwrap();
+        let want = dense_matvec(&w, r, c, &x);
+        for (u, v) in p.matvec(&x).iter().zip(&want) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn memory_is_under_dense_at_2_4() {
+        let mut rng = Pcg::seeded(3);
+        let (r, c) = (32usize, 128usize);
+        let w = nm_random(&mut rng, r, c, 2, 4);
+        let p = NmMatrix::try_from_dense(&w, r, c, 2, 4).unwrap();
+        // 2:4 stores half the values + 1 byte/value of metadata.
+        assert_eq!(p.memory_bytes(), r * c / 2 * 4 + r * c / 2);
+        assert!(p.memory_bytes() < r * c * 4);
+    }
+}

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (ROADMAP.md) plus formatting.
+#
+#   scripts/verify.sh          # build + tests + fmt check
+#   scripts/verify.sh --fix    # same, but apply formatting instead of checking
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+
+if [[ "${1:-}" == "--fix" ]]; then
+    cargo fmt
+else
+    cargo fmt --check
+fi
+
+echo "verify OK"
