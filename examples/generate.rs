@@ -1,0 +1,80 @@
+//! Continuous-batching generation on the stateful inference engine
+//! (DESIGN.md §10).
+//!
+//! Eight requests with different prompt lengths flow through a
+//! four-slot running batch over one packed 50%-pruned model at real
+//! m370 widths: each request is prefilled once, then decoded one token
+//! per engine step with O(1) work per token, and its slot is refilled
+//! by the next queued request the moment it finishes.  Weights are
+//! random (host-only, no artifacts), so the byte-level output is noise —
+//! the point is the serving mechanics and the throughput line.
+//!
+//! ```bash
+//! cargo run --release --example generate
+//! ```
+
+use anyhow::Result;
+use sparsessm::engine::{Sampling, Scheduler};
+use sparsessm::rngx::Pcg;
+use sparsessm::sparse::compile::{magnitude_prune_all, PackPolicy};
+use sparsessm::sparse::decode::m370_bench_params;
+use sparsessm::sparse::SparseModel;
+use sparsessm::util::Stopwatch;
+
+fn main() -> Result<()> {
+    let mut params = m370_bench_params();
+    magnitude_prune_all(&mut params, 0.5)?;
+    let model = SparseModel::compile(&params, &PackPolicy::auto())?;
+    println!(
+        "model: m370 dims, 50% pruned, packed [{}] ({:.2} MB)",
+        model.format_summary(),
+        model.memory_bytes() as f64 / 1e6
+    );
+
+    let mut sched = Scheduler::new(&model, 4, Sampling::Temperature(0.8), 42);
+    let mut rng = Pcg::seeded(1);
+    let vocab = model.meta.vocab;
+    for i in 0..8usize {
+        let prompt: Vec<i32> = (0..8 + 4 * i).map(|_| rng.below(vocab) as i32).collect();
+        let id = sched.submit(prompt, 32);
+        println!("queued request {id} (prompt {} tokens, 32 to generate)", 8 + 4 * i);
+    }
+
+    let sw = Stopwatch::new();
+    let mut gens = sched.run_until_idle();
+    let secs = sw.seconds();
+    gens.sort_by_key(|g| g.id);
+
+    println!();
+    for g in &gens {
+        let preview: String = g
+            .tokens
+            .iter()
+            .take(32)
+            .map(|&t| {
+                let b = t as u8;
+                if b.is_ascii_graphic() || b == b' ' {
+                    b as char
+                } else {
+                    '·'
+                }
+            })
+            .collect();
+        let (id, pl, gl) = (g.id, g.prompt_len, g.tokens.len());
+        println!("req {id} ({pl} prompt + {gl} generated): {preview}");
+    }
+
+    let st = sched.stats();
+    println!();
+    println!(
+        "decoded {} tokens in {secs:.2}s ({:.0} tok/s) with {} batched engine steps \
+         (peak batch {})",
+        st.decoded_tokens,
+        st.decoded_tokens as f64 / secs.max(1e-9),
+        st.engine_steps,
+        st.peak_batch
+    );
+    println!("takeaway: sessions share one packed model; state per session is a few KB,");
+    println!("so decode cost per token is independent of how long each sequence has run.");
+    Ok(())
+}

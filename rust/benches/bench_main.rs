@@ -11,11 +11,12 @@
 
 use sparsessm::benchx::{bench, bench_for, black_box, BenchResult};
 use sparsessm::coordinator::Pipeline;
+use sparsessm::engine::{self, Sampling, Scheduler};
 use sparsessm::linalg::gram_f32;
 use sparsessm::pruning::{aggregate, magnitude, semistructured, sparsegpt};
 use sparsessm::rngx::Pcg;
 use sparsessm::runtime::lit_f32;
-use sparsessm::sparse::{decode, Format, Packed};
+use sparsessm::sparse::{decode, Format, Packed, SparseModel};
 use sparsessm::tensor::Tensor;
 
 fn main() {
@@ -145,6 +146,44 @@ fn main() {
             );
             res.push(row.bench);
         }
+    });
+
+    // engine: steady-state step decode — O(1)/token batched sessions
+    // over one shared packed model (host-only).
+    run("engine_step_decode", &mut |res| {
+        let params = decode::m370_bench_params();
+        for (label, p, policy) in decode::sweep_variants(&params).unwrap() {
+            let model = SparseModel::compile(&p, &policy).unwrap();
+            let (r, tps) = engine::bench::step_decode_throughput(
+                &model,
+                &format!("step decode B=4 L=64 [{label}]"),
+                4,
+                64,
+                200.0,
+                11,
+            );
+            eprintln!("  {label:<20} {tps:>9.0} tok/s");
+            res.push(r);
+        }
+    });
+
+    // engine: continuous batching end-to-end — queued requests flowing
+    // through a fixed-capacity running batch (admit/prefill/step/retire).
+    run("engine_continuous_batching", &mut |res| {
+        let mut params = decode::m370_bench_params();
+        sparsessm::sparse::compile::magnitude_prune_all(&mut params, 0.5).unwrap();
+        let model = SparseModel::compile(&params, &sparsessm::sparse::PackPolicy::auto()).unwrap();
+        let mut r5 = Pcg::seeded(13);
+        let prompts: Vec<Vec<i32>> = (0..8)
+            .map(|i| (0..8 + 4 * i).map(|_| r5.below(model.meta.vocab) as i32).collect())
+            .collect();
+        res.push(bench_for("scheduler 8 reqs x 16 new, batch 4", 600.0, || {
+            let mut sched = Scheduler::new(&model, 4, Sampling::Greedy, 17);
+            for p in &prompts {
+                sched.submit(p.clone(), 16);
+            }
+            black_box(sched.run_until_idle());
+        }));
     });
 
     // table7/fig4: corpus generation + calibration sampling substrate.

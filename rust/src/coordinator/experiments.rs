@@ -16,10 +16,10 @@ use crate::util::{fmt_metric, Stopwatch};
 use anyhow::{bail, Result};
 
 /// All experiment ids: the paper's tables/figures in paper order, plus
-/// repo-native serving experiments (`sparse_speed`).
-pub const ALL_IDS: [&str; 16] = [
+/// repo-native serving experiments (`sparse_speed`, `serve_engine`).
+pub const ALL_IDS: [&str; 17] = [
     "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "table9",
-    "table10", "table11", "table12", "fig2", "fig3", "fig4", "sparse_speed",
+    "table10", "table11", "table12", "fig2", "fig3", "fig4", "sparse_speed", "serve_engine",
 ];
 
 pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
@@ -41,6 +41,7 @@ pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
         "fig3" => fig3(pipe)?,
         "fig4" => fig4(pipe)?,
         "sparse_speed" => sparse_speed(pipe)?,
+        "serve_engine" => serve_engine(pipe)?,
         other => bail!("unknown experiment id '{other}' (known: {:?})", ALL_IDS),
     };
     rep.note(&format!(
@@ -485,6 +486,42 @@ fn sparse_speed(pipe: &Pipeline) -> Result<Report> {
     }
     rep.note("masked-dense shows masks alone buy ~nothing; packed formats realize the speedup");
     rep.note("the scan stays dense over d_state — structured surgery (table3) covers that axis");
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// serve_engine — stateful step decode vs full recompute vs batch size
+// ---------------------------------------------------------------------
+
+fn serve_engine(pipe: &Pipeline) -> Result<Report> {
+    let mut rep = Report::new(
+        "serve_engine",
+        "stateful engine: step decode vs full-recompute generation tokens/sec vs batch size \
+         (m370 dims)",
+        &["Batch", "Variant", "Formats", "step tok/s", "full tok/s", "step/full"],
+    );
+    // Host-only like sparse_speed: wall-clock depends on shapes and
+    // formats, not trained values.
+    let params = crate::sparse::decode::m370_bench_params();
+    let (l, budget) = if pipe.fast { (64usize, 150.0) } else { (128usize, 500.0) };
+    let batches: &[usize] = if pipe.fast { &[1, 4] } else { &[1, 4, 8] };
+    for &bt in batches {
+        for row in crate::engine::bench::step_vs_full_sweep(&params, bt, l, budget)? {
+            rep.push_row(vec![
+                bt.to_string(),
+                row.label,
+                row.formats,
+                format!("{:.0}", row.step_tps),
+                format!("{:.1}", row.full_tps),
+                format!("{:.1}x", row.advantage),
+            ]);
+        }
+    }
+    rep.note(&format!(
+        "step decode reuses per-session SSM state (O(1)/token); full recompute pays a whole \
+         L={l} forward per generated token (O(L)/token)"
+    ));
+    rep.note("batched step shares one packed model across sessions, striped via threadx");
     Ok(rep)
 }
 

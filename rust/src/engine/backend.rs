@@ -1,0 +1,515 @@
+//! The [`Backend`] trait: prefill/step inference over a unified
+//! dense+sparse model interface.
+//!
+//! Two implementations ship in-tree:
+//!
+//! * [`crate::sparse::SparseModel`] — the serving path.  `prefill` runs
+//!   the batched packed kernels (matmul + [`crate::ssm`] scan) over the
+//!   whole prompt at once and hands the final recurrent state off;
+//!   `step` advances one token with packed matvecs and an in-place
+//!   scan update; `step_batch` stripes independent sessions across
+//!   [`crate::threadx`] workers.
+//! * [`crate::model::FlatParams`] — the dense reference backend, written
+//!   directly against the `x @ W` storage orientation with no packing at
+//!   all.  It exists so the engine contract can be checked against an
+//!   implementation that shares no kernel code with the sparse path.
+//!
+//! Both walk the identical op sequence as the whole-sequence oracle
+//! `sparse::decode::forward_logits` (embed → [rmsnorm → in_proj → causal
+//! conv+SiLU → x_proj → dt_proj → softplus → scan → gate → out_proj →
+//! +res]×L → rmsnorm → tied head), so prefill+N×step logits match a full
+//! recompute to float precision — pinned by `tests/prop_engine.rs`.
+
+use super::EngineState;
+use crate::model::{FlatParams, ModelMeta};
+use crate::sparse::decode::{conv1d_causal_silu, rmsnorm, silu, softplus};
+use crate::sparse::SparseModel;
+use crate::ssm::{selective_scan_with_state, SsmInputs};
+use crate::threadx;
+
+/// Stateful inference over one model: prefill a prompt once, then decode
+/// each further token in O(1) work (independent of the sequence length).
+pub trait Backend {
+    fn meta(&self) -> &ModelMeta;
+
+    /// Consume one token at position `state.seq_len`, returning the
+    /// next-token logits `[vocab]` and advancing `state` in place.
+    fn step(&self, state: &mut EngineState, token: i32) -> Vec<f32>;
+
+    /// Consume a whole prompt, returning per-position logits
+    /// `[len, vocab]` plus the recurrent state positioned after the last
+    /// token.  The default runs `step` sequentially; backends may
+    /// override with a batched implementation.
+    fn prefill(&self, tokens: &[i32]) -> (Vec<f32>, EngineState) {
+        assert!(!tokens.is_empty(), "prefill needs at least one token");
+        let mut state = EngineState::new(self.meta());
+        let mut logits = Vec::with_capacity(tokens.len() * self.meta().vocab);
+        for &t in tokens {
+            logits.extend(self.step(&mut state, t));
+        }
+        (logits, state)
+    }
+
+    /// [`Backend::prefill`] returning only the final position's logits
+    /// `[vocab]` — all the generation loop needs.  Backends can override
+    /// to skip the head projection for earlier positions.
+    fn prefill_last(&self, tokens: &[i32]) -> (Vec<f32>, EngineState) {
+        let vocab = self.meta().vocab;
+        let (logits, state) = self.prefill(tokens);
+        (logits[(tokens.len() - 1) * vocab..].to_vec(), state)
+    }
+
+    /// Advance many independent sessions one token each, returning
+    /// logits `[sessions, vocab]`.  The default is a serial loop;
+    /// backends may override with a parallel implementation.  Each
+    /// session's arithmetic is identical to a solo [`Backend::step`],
+    /// so batching never changes results.
+    fn step_batch(&self, states: &mut [EngineState], tokens: &[i32]) -> Vec<f32> {
+        assert_eq!(states.len(), tokens.len());
+        let mut out = Vec::with_capacity(states.len() * self.meta().vocab);
+        for (st, &t) in states.iter_mut().zip(tokens) {
+            out.extend(self.step(st, t));
+        }
+        out
+    }
+}
+
+impl Backend for SparseModel {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn step(&self, state: &mut EngineState, token: i32) -> Vec<f32> {
+        sparse_step(self, state, token)
+    }
+
+    /// Batched prefill: whole-prompt packed matmuls and one striped scan
+    /// per layer (same kernels as the full-recompute path), capturing the
+    /// conv tail and the scan's final hidden state for the handoff.
+    fn prefill(&self, tokens: &[i32]) -> (Vec<f32>, EngineState) {
+        sparse_prefill(self, tokens, false)
+    }
+
+    /// Batched prefill that runs the tied head only for the prompt's
+    /// final position — admission cost stays O(prompt) in the layers but
+    /// O(1) in the head/vocab.
+    fn prefill_last(&self, tokens: &[i32]) -> (Vec<f32>, EngineState) {
+        sparse_prefill(self, tokens, true)
+    }
+
+    /// One fused step for many sessions, striped across [`threadx`]
+    /// workers.  Sessions are independent, so each job runs the full
+    /// per-session step and writes disjoint logits/state slots.
+    fn step_batch(&self, states: &mut [EngineState], tokens: &[i32]) -> Vec<f32> {
+        assert_eq!(states.len(), tokens.len());
+        let n = states.len();
+        let vocab = self.meta.vocab;
+        let mut out = vec![0.0f32; n * vocab];
+
+        struct Ptr<T>(*mut T);
+        unsafe impl<T> Send for Ptr<T> {}
+        unsafe impl<T> Sync for Ptr<T> {}
+        let sp = Ptr(states.as_mut_ptr());
+        let op = Ptr(out.as_mut_ptr());
+
+        threadx::parallel_map(n, |i| {
+            let sp = &sp;
+            let op = &op;
+            // SAFETY: each session index is claimed exactly once, so the
+            // &mut state and the [i*vocab, (i+1)*vocab) logits slot are
+            // exclusive to this job.
+            let st = unsafe { &mut *sp.0.add(i) };
+            let logits = sparse_step(self, st, tokens[i]);
+            unsafe {
+                std::ptr::copy_nonoverlapping(logits.as_ptr(), op.0.add(i * vocab), vocab);
+            }
+        });
+        out
+    }
+}
+
+/// Single-token step on the packed model: packed matvecs + ring-buffer
+/// conv + in-place scan update.  Op-for-op the same arithmetic as
+/// `decode::forward_logits` restricted to one position.
+fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<f32> {
+    let meta = &model.meta;
+    let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
+    let v = token as usize;
+    assert!(v < meta.vocab, "token {token} out of vocab {}", meta.vocab);
+    debug_assert_eq!(state.layers.len(), model.layers.len());
+    let t_pos = state.seq_len;
+
+    let mut x = model.embed_row(v).to_vec();
+    for (layer, lst) in model.layers.iter().zip(&mut state.layers) {
+        let xn = rmsnorm(&x, &layer.norm, dm);
+        let xr = layer.in_proj.matvec(&xn); // [2di] = [x_in | res]
+        let (x_in, res) = xr.split_at(di);
+
+        // Causal conv over packed taps, reading the ring buffer for past
+        // positions; tap kk addresses sequence position t_pos + kk − (K−1).
+        let k = layer.conv_w.cols;
+        let mut u = vec![0.0f32; di];
+        for (d, uv) in u.iter_mut().enumerate() {
+            let (lo, hi) = (layer.conv_w.row_ptr[d] as usize, layer.conv_w.row_ptr[d + 1] as usize);
+            let mut acc = layer.conv_b[d];
+            for p in lo..hi {
+                let kk = layer.conv_w.col_idx[p] as usize;
+                if t_pos + kk >= k - 1 {
+                    let pos = t_pos + kk - (k - 1);
+                    let xv =
+                        if pos == t_pos { x_in[d] } else { lst.conv[(pos % (k - 1)) * di + d] };
+                    acc += layer.conv_w.vals[p] * xv;
+                }
+            }
+            *uv = silu(acc);
+        }
+        if k > 1 {
+            lst.conv[(t_pos % (k - 1)) * di..][..di].copy_from_slice(x_in);
+        }
+
+        let xdbc = layer.x_proj.matvec(&u); // [dr + 2ds] = [δ_r | B | C]
+        let (delta_r, bc) = xdbc.split_at(dr);
+        let (bv, cv) = bc.split_at(ds);
+
+        let mut delta = layer.dt_proj.matvec(delta_r); // [di]
+        for (dv, &bb) in delta.iter_mut().zip(&layer.dt_b) {
+            *dv = softplus(*dv + bb);
+        }
+
+        // One scan step: h ← exp(δA)·h + δu·B, y = h·C + D·u, in place.
+        let mut y = vec![0.0f32; di];
+        for (d, yv) in y.iter_mut().enumerate() {
+            let dt = delta[d];
+            let xt = u[d];
+            let dx = dt * xt;
+            let arow = &layer.a[d * ds..(d + 1) * ds];
+            let hrow = &mut lst.h[d * ds..(d + 1) * ds];
+            let mut acc = 0.0f32;
+            for kk in 0..ds {
+                let hv = (dt * arow[kk]).exp() * hrow[kk] + dx * bv[kk];
+                hrow[kk] = hv;
+                acc += hv * cv[kk];
+            }
+            *yv = acc + layer.d[d] * xt;
+        }
+
+        for (yv, &rv) in y.iter_mut().zip(res) {
+            *yv *= silu(rv);
+        }
+        let out = layer.out_proj.matvec(&y);
+        for (xv, &ov) in x.iter_mut().zip(&out) {
+            *xv += ov;
+        }
+    }
+
+    let xn = rmsnorm(&x, &model.norm_f, dm);
+    state.seq_len = t_pos + 1;
+    model.head.matvec(&xn)
+}
+
+/// Whole-prompt prefill on the packed model: the `forward_logits` op
+/// sequence with bt=1, plus state capture (conv tail into the ring,
+/// scan final state via [`selective_scan_with_state`]).  With
+/// `last_only`, the final rmsnorm + tied head run on the last position
+/// alone.
+fn sparse_prefill(model: &SparseModel, tokens: &[i32], last_only: bool) -> (Vec<f32>, EngineState) {
+    assert!(!tokens.is_empty(), "prefill needs at least one token");
+    let meta = &model.meta;
+    let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
+    let l = tokens.len();
+    let mut state = EngineState::new(meta);
+
+    let mut x = vec![0.0f32; l * dm];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let v = tok as usize;
+        assert!(v < meta.vocab, "token {tok} out of vocab {}", meta.vocab);
+        x[i * dm..(i + 1) * dm].copy_from_slice(model.embed_row(v));
+    }
+
+    for (layer, lst) in model.layers.iter().zip(&mut state.layers) {
+        let xn = rmsnorm(&x, &layer.norm, dm);
+        let xr = layer.in_proj.matmul(&xn, l); // [l, 2di] = [x_in | res]
+        let mut x_in = vec![0.0f32; l * di];
+        let mut res = vec![0.0f32; l * di];
+        for ti in 0..l {
+            let row = &xr[ti * 2 * di..(ti + 1) * 2 * di];
+            x_in[ti * di..(ti + 1) * di].copy_from_slice(&row[..di]);
+            res[ti * di..(ti + 1) * di].copy_from_slice(&row[di..]);
+        }
+
+        // Stash the conv window tail: positions l−(K−1)..l−1 land in
+        // their ring slots so the first step sees them.
+        let k = layer.conv_w.cols;
+        if k > 1 {
+            for tt in l.saturating_sub(k - 1)..l {
+                lst.conv[(tt % (k - 1)) * di..][..di]
+                    .copy_from_slice(&x_in[tt * di..(tt + 1) * di]);
+            }
+        }
+
+        let u = conv1d_causal_silu(&layer.conv_w, &layer.conv_b, &x_in, 1, l, di);
+
+        let xdbc = layer.x_proj.matmul(&u, l); // [l, dr + 2ds]
+        let width = dr + 2 * ds;
+        let mut delta_r = vec![0.0f32; l * dr];
+        let mut bmat = vec![0.0f32; l * ds];
+        let mut cmat = vec![0.0f32; l * ds];
+        for ti in 0..l {
+            let row = &xdbc[ti * width..(ti + 1) * width];
+            delta_r[ti * dr..(ti + 1) * dr].copy_from_slice(&row[..dr]);
+            bmat[ti * ds..(ti + 1) * ds].copy_from_slice(&row[dr..dr + ds]);
+            cmat[ti * ds..(ti + 1) * ds].copy_from_slice(&row[dr + ds..]);
+        }
+
+        let mut delta = layer.dt_proj.matmul(&delta_r, l); // [l, di]
+        for row in delta.chunks_exact_mut(di) {
+            for (dv, &bb) in row.iter_mut().zip(&layer.dt_b) {
+                *dv = softplus(*dv + bb);
+            }
+        }
+
+        let (y, h_final) = selective_scan_with_state(
+            &SsmInputs {
+                a: &layer.a,
+                delta: &delta,
+                b: &bmat,
+                c: &cmat,
+                x: &u,
+                dp: &layer.d,
+                dims: (1, l, di, ds),
+            },
+            None,
+        );
+        lst.h = h_final; // [1·di·ds]
+
+        let mut gated = y;
+        for (g, &rv) in gated.iter_mut().zip(&res) {
+            *g *= silu(rv);
+        }
+        let out = layer.out_proj.matmul(&gated, l);
+        for (xv, &ov) in x.iter_mut().zip(&out) {
+            *xv += ov;
+        }
+    }
+
+    state.seq_len = l;
+    if last_only {
+        let xn = rmsnorm(&x[(l - 1) * dm..], &model.norm_f, dm);
+        (model.head.matvec(&xn), state)
+    } else {
+        let xn = rmsnorm(&x, &model.norm_f, dm);
+        (model.head.matmul(&xn, l), state)
+    }
+}
+
+impl Backend for FlatParams {
+    fn meta(&self) -> &ModelMeta {
+        &self.layout.meta
+    }
+
+    fn step(&self, state: &mut EngineState, token: i32) -> Vec<f32> {
+        dense_step(self, state, token)
+    }
+}
+
+/// Dense reference step straight off the flat parameter vector, in the
+/// `x @ W` storage orientation of `layout.json` (no transposes, no
+/// packing) — the independent implementation the property tests pit
+/// against the packed path.
+fn dense_step(params: &FlatParams, state: &mut EngineState, token: i32) -> Vec<f32> {
+    let meta = &params.layout.meta;
+    let (dm, di, ds, dr, dc) =
+        (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank, meta.d_conv);
+    let v = token as usize;
+    assert!(v < meta.vocab, "token {token} out of vocab {}", meta.vocab);
+    debug_assert_eq!(state.layers.len(), meta.n_layer);
+    let t_pos = state.seq_len;
+    let embed = params.view("embedding").expect("layout embedding");
+
+    let mut x = embed[v * dm..(v + 1) * dm].to_vec();
+    for (li, lst) in state.layers.iter_mut().enumerate() {
+        let view = |m: &str| params.view(&format!("layers.{li}.{m}")).expect("layout tensor");
+        let xn = rmsnorm(&x, view("norm"), dm);
+
+        // in_proj: [dm, 2di], y = x @ W.
+        let w_in = view("in_proj");
+        let mut xr = vec![0.0f32; 2 * di];
+        for (i, &xv) in xn.iter().enumerate() {
+            for (o, &wv) in xr.iter_mut().zip(&w_in[i * 2 * di..(i + 1) * 2 * di]) {
+                *o += xv * wv;
+            }
+        }
+        let (x_in, res) = xr.split_at(di);
+
+        // Depthwise causal conv over dense taps + ring buffer.
+        let w_conv = view("conv1d_w");
+        let b_conv = view("conv1d_b");
+        let mut u = vec![0.0f32; di];
+        for (d, uv) in u.iter_mut().enumerate() {
+            let mut acc = b_conv[d];
+            for (kk, &wv) in w_conv[d * dc..(d + 1) * dc].iter().enumerate() {
+                if t_pos + kk >= dc - 1 {
+                    let pos = t_pos + kk - (dc - 1);
+                    let xv =
+                        if pos == t_pos { x_in[d] } else { lst.conv[(pos % (dc - 1)) * di + d] };
+                    acc += wv * xv;
+                }
+            }
+            *uv = silu(acc);
+        }
+        if dc > 1 {
+            lst.conv[(t_pos % (dc - 1)) * di..][..di].copy_from_slice(x_in);
+        }
+
+        // x_proj: [di, dr + 2ds].
+        let w_x = view("x_proj");
+        let width = dr + 2 * ds;
+        let mut xdbc = vec![0.0f32; width];
+        for (i, &uvv) in u.iter().enumerate() {
+            for (o, &wv) in xdbc.iter_mut().zip(&w_x[i * width..(i + 1) * width]) {
+                *o += uvv * wv;
+            }
+        }
+        let (delta_r, bc) = xdbc.split_at(dr);
+        let (bv, cv) = bc.split_at(ds);
+
+        // dt_proj: [dr, di], then softplus(· + bias).
+        let w_dt = view("dt_proj_w");
+        let b_dt = view("dt_proj_b");
+        let mut delta = vec![0.0f32; di];
+        for (i, &rv) in delta_r.iter().enumerate() {
+            for (o, &wv) in delta.iter_mut().zip(&w_dt[i * di..(i + 1) * di]) {
+                *o += rv * wv;
+            }
+        }
+        for (dv, &bb) in delta.iter_mut().zip(b_dt) {
+            *dv = softplus(*dv + bb);
+        }
+
+        // Scan step with A = −exp(A_log) materialized on the fly.
+        let a_log = view("A_log");
+        let d_vec = view("D");
+        let mut y = vec![0.0f32; di];
+        for (d, yv) in y.iter_mut().enumerate() {
+            let dt = delta[d];
+            let xt = u[d];
+            let dx = dt * xt;
+            let arow = &a_log[d * ds..(d + 1) * ds];
+            let hrow = &mut lst.h[d * ds..(d + 1) * ds];
+            let mut acc = 0.0f32;
+            for kk in 0..ds {
+                let a = -arow[kk].exp();
+                let hv = (dt * a).exp() * hrow[kk] + dx * bv[kk];
+                hrow[kk] = hv;
+                acc += hv * cv[kk];
+            }
+            *yv = acc + d_vec[d] * xt;
+        }
+
+        for (yv, &rv) in y.iter_mut().zip(res) {
+            *yv *= silu(rv);
+        }
+        // out_proj: [di, dm], accumulated straight into the residual.
+        let w_out = view("out_proj");
+        for (i, &g) in y.iter().enumerate() {
+            for (xv, &wv) in x.iter_mut().zip(&w_out[i * dm..(i + 1) * dm]) {
+                *xv += g * wv;
+            }
+        }
+    }
+
+    let xn = rmsnorm(&x, params.view("norm_f").expect("layout norm_f"), dm);
+    // Tied head: embedding rows are already kernel orientation.
+    let mut logits = vec![0.0f32; meta.vocab];
+    for (vv, lo) in logits.iter_mut().enumerate() {
+        let row = &embed[vv * dm..(vv + 1) * dm];
+        let mut acc = 0.0f32;
+        for (&wv, &xv) in row.iter().zip(&xn) {
+            acc += wv * xv;
+        }
+        *lo = acc;
+    }
+    state.seq_len = t_pos + 1;
+    logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::toy::toy_flat_params_random;
+    use crate::sparse::compile::{magnitude_prune_all, PackPolicy};
+    use crate::sparse::decode::forward_logits;
+
+    #[test]
+    fn prefill_shapes_and_position() {
+        let p = toy_flat_params_random(4, 1);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let tokens = [1i32, 2, 3, 4, 5];
+        let (logits, state) = model.prefill(&tokens);
+        assert_eq!(logits.len(), tokens.len() * 16);
+        assert_eq!(state.seq_len, tokens.len());
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn step_advances_position_and_matches_oracle() {
+        let mut p = toy_flat_params_random(4, 2);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let tokens = [3i32, 1, 4, 1, 5, 9, 2, 6];
+        let want = forward_logits(&model, &tokens, 1, tokens.len());
+        let (mut got, mut state) = model.prefill(&tokens[..3]);
+        for &t in &tokens[3..] {
+            got.extend(model.step(&mut state, t));
+        }
+        assert_eq!(state.seq_len, tokens.len());
+        assert_eq!(got.len(), want.len());
+        for (i, (u, v)) in got.iter().zip(&want).enumerate() {
+            assert!((u - v).abs() < 1e-4, "logit {i}: {u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn prefill_last_matches_final_prefill_row() {
+        let mut p = toy_flat_params_random(4, 6);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let tokens = [2i32, 7, 1, 8, 2, 8];
+        let (full, fs) = model.prefill(&tokens);
+        let (last, ls) = model.prefill_last(&tokens);
+        assert_eq!(last.len(), 16);
+        assert_eq!(&last[..], &full[(tokens.len() - 1) * 16..]);
+        assert_eq!(fs, ls);
+    }
+
+    #[test]
+    fn dense_backend_matches_packed_dense() {
+        let p = toy_flat_params_random(4, 3);
+        let model = SparseModel::compile(&p, &PackPolicy::dense()).unwrap();
+        let tokens = [7i32, 0, 15, 2, 9];
+        let (want, ws) = model.prefill(&tokens);
+        let (got, gs) = Backend::prefill(&p, &tokens);
+        assert_eq!(ws.seq_len, gs.seq_len);
+        for (i, (u, v)) in got.iter().zip(&want).enumerate() {
+            assert!((u - v).abs() < 1e-4, "logit {i}: {u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn step_batch_matches_serial_steps() {
+        let mut p = toy_flat_params_random(4, 4);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let prompts: [&[i32]; 3] = [&[1, 2, 3], &[4, 5], &[6, 7, 8, 9]];
+        let mut states: Vec<EngineState> =
+            prompts.iter().map(|pr| model.prefill(pr).1).collect();
+        let mut solo = states.clone();
+        let tokens = [10i32, 11, 12];
+        let batched = model.step_batch(&mut states, &tokens);
+        for (i, st) in solo.iter_mut().enumerate() {
+            let want = model.step(st, tokens[i]);
+            assert_eq!(&batched[i * 16..(i + 1) * 16], &want[..], "session {i}");
+        }
+        assert_eq!(states, solo);
+    }
+}

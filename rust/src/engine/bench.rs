@@ -1,0 +1,131 @@
+//! Serving measurements for the stateful engine: steady-state step
+//! decode (O(1) per token) against the full-recompute baseline (O(L) per
+//! generated token via `sparse::decode::forward_logits`).
+//!
+//! Shared by the CLI `sparse-bench --mode step`, the `serve_engine`
+//! experiment and the `engine_*` cargo-bench groups, so every surface
+//! reports the same numbers.
+
+use super::{Backend, EngineState};
+use crate::benchx::{self, BenchResult};
+use crate::model::FlatParams;
+use crate::rngx::Pcg;
+use crate::sparse::decode;
+use crate::sparse::SparseModel;
+use anyhow::Result;
+
+/// Steady-state batched step decode: prefill `bt` sessions with random
+/// length-`l` prompts (untimed), then time batched single-token steps.
+/// Returns the bench row and tokens/sec (p50-based; `bt` tokens per
+/// step).
+pub fn step_decode_throughput<B: Backend>(
+    backend: &B,
+    name: &str,
+    bt: usize,
+    l: usize,
+    budget_ms: f64,
+    seed: u64,
+) -> (BenchResult, f64) {
+    assert!(bt > 0 && l > 0);
+    let vocab = backend.meta().vocab;
+    let mut rng = Pcg::seeded(seed);
+    let mut states: Vec<EngineState> = (0..bt)
+        .map(|_| {
+            let prompt: Vec<i32> = (0..l).map(|_| rng.below(vocab) as i32).collect();
+            backend.prefill(&prompt).1
+        })
+        .collect();
+    let r = benchx::bench_for(name, budget_ms, || {
+        let tokens: Vec<i32> = (0..bt).map(|_| rng.below(vocab) as i32).collect();
+        benchx::black_box(backend.step_batch(&mut states, &tokens));
+    });
+    let tps = bt as f64 / (r.p50_ms / 1e3);
+    (r, tps)
+}
+
+/// One row of the step-vs-full serving comparison.
+pub struct ServeRow {
+    pub label: String,
+    pub formats: String,
+    /// Steady-state step-decode tokens/sec at context length `l`.
+    pub step_tps: f64,
+    /// Full-recompute generation tokens/sec: each new token pays a whole
+    /// `forward_logits` over the `l`-token context.
+    pub full_tps: f64,
+    /// `step_tps / full_tps` — the win from keeping state.
+    pub advantage: f64,
+    pub step_bench: BenchResult,
+}
+
+/// Step decode vs full-recompute generation across the standard
+/// [`decode::sweep_variants`] set at batch `bt` and context length `l`.
+pub fn step_vs_full_sweep(
+    params: &FlatParams,
+    bt: usize,
+    l: usize,
+    budget_ms: f64,
+) -> Result<Vec<ServeRow>> {
+    let mut rows = Vec::new();
+    for (label, p, policy) in decode::sweep_variants(params)? {
+        let model = SparseModel::compile(&p, &policy)?;
+        let formats = model.format_summary();
+        let name = format!("step {} B={bt} L={l} [{formats}]", model.meta.name);
+        let (step_bench, step_tps) =
+            step_decode_throughput(&model, &name, bt, l, budget_ms / 2.0, 7);
+
+        let mut rng = Pcg::seeded(7);
+        let tokens: Vec<i32> =
+            (0..bt * l).map(|_| rng.below(model.meta.vocab) as i32).collect();
+        let full = benchx::bench_for(
+            &format!("full {} B={bt} L={l} [{formats}]", model.meta.name),
+            budget_ms / 2.0,
+            || {
+                benchx::black_box(decode::forward_logits(&model, &tokens, bt, l));
+            },
+        );
+        let full_tps = bt as f64 / (full.p50_ms / 1e3);
+        rows.push(ServeRow {
+            label,
+            formats,
+            step_tps,
+            full_tps,
+            advantage: step_tps / full_tps,
+            step_bench,
+        });
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::toy::toy_flat_params_random;
+    use crate::sparse::compile::PackPolicy;
+
+    #[test]
+    fn step_throughput_reports_positive_rate() {
+        let p = toy_flat_params_random(4, 1);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let (r, tps) = step_decode_throughput(&model, "toy step", 2, 4, 1.0, 5);
+        assert!(tps > 0.0);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn sweep_covers_all_variants_and_step_wins() {
+        let p = toy_flat_params_random(4, 2);
+        // Even on the toy model, O(1) steps beat O(L) recompute at L=32.
+        let rows = step_vs_full_sweep(&p, 1, 32, 2.0).unwrap();
+        assert_eq!(rows.len(), 5);
+        for row in &rows {
+            assert!(row.step_tps > 0.0 && row.full_tps > 0.0);
+            assert!(
+                row.advantage > 1.0,
+                "{}: step {} vs full {} tok/s",
+                row.label,
+                row.step_tps,
+                row.full_tps
+            );
+        }
+    }
+}

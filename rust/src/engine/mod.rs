@@ -1,0 +1,44 @@
+//! Stateful inference engine: prefill/step sessions over a unified
+//! dense+sparse backend, with continuous batching (DESIGN.md §10).
+//!
+//! Mamba's selling point is O(1)-per-token recurrent decode, but a
+//! whole-sequence `forward_logits` pays O(t) to emit token `t` and
+//! O(L²) to serve a stream.  This module is the serving layer that
+//! realizes the recurrence:
+//!
+//! * [`state`]     — [`EngineState`]: per-layer SSM hidden state
+//!                   `[d_inner × d_state]` plus a conv ring buffer of
+//!                   the last `K−1` inputs; constant-size per session.
+//! * [`backend`]   — the [`Backend`] trait (`prefill` → `step` →
+//!                   `step_batch`), implemented for the packed
+//!                   [`crate::sparse::SparseModel`] (serving path,
+//!                   batched prefill + threaded batch step) and for
+//!                   dense [`crate::model::FlatParams`] (independent
+//!                   reference implementation).
+//! * [`session`]   — [`Session`]: one request's state + logits +
+//!                   seeded sampler; [`Session::run_solo`] is the
+//!                   unbatched reference.
+//! * [`sampler`]   — greedy / temperature [`Sampler`].
+//! * [`scheduler`] — [`Scheduler`]: continuous batching; queued
+//!                   requests join the running batch as others finish.
+//! * [`bench`]     — step-decode vs full-recompute throughput rows
+//!                   shared by the CLI, the `serve_engine` experiment
+//!                   and `cargo bench`.
+//!
+//! `sparse::decode::forward_logits` survives as the reference oracle:
+//! `tests/prop_engine.rs` pins prefill+N×step logits against it for
+//! every packed format, and pins batched interleaving against solo runs
+//! exactly.
+
+pub mod backend;
+pub mod bench;
+pub mod sampler;
+pub mod scheduler;
+pub mod session;
+pub mod state;
+
+pub use backend::Backend;
+pub use sampler::{Sampler, Sampling};
+pub use scheduler::{session_seed, Generation, Request, Scheduler, SchedulerStats};
+pub use session::Session;
+pub use state::{EngineState, LayerState};

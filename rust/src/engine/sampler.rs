@@ -1,0 +1,104 @@
+//! Token sampling for the generation loop: greedy argmax and
+//! temperature-scaled softmax sampling over next-token logits.
+//!
+//! Samplers are seeded per request (see
+//! [`crate::engine::scheduler::session_seed`]), so a request's sampled
+//! continuation is identical whether it runs solo or interleaved in a
+//! continuous batch — pinned by `tests/prop_engine.rs`.
+
+use crate::rngx::Pcg;
+
+/// Sampling policy for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    /// Deterministic argmax (first index wins ties).
+    Greedy,
+    /// Softmax sampling at the given temperature; `t <= 0` degenerates
+    /// to greedy.
+    Temperature(f64),
+}
+
+/// A seeded sampler owned by one session.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    mode: Sampling,
+    rng: Pcg,
+}
+
+impl Sampler {
+    pub fn new(mode: Sampling, seed: u64) -> Sampler {
+        Sampler { mode, rng: Pcg::seeded(seed) }
+    }
+
+    /// Pick the next token id from `logits[vocab]`.
+    pub fn sample(&mut self, logits: &[f32]) -> i32 {
+        assert!(!logits.is_empty());
+        match self.mode {
+            Sampling::Greedy => argmax(logits),
+            Sampling::Temperature(t) if t <= 0.0 => argmax(logits),
+            Sampling::Temperature(t) => {
+                // Max-subtracted softmax in f64 for a stable categorical.
+                let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+                let weights: Vec<f64> =
+                    logits.iter().map(|&l| ((l as f64 - max) / t).exp()).collect();
+                self.rng.categorical(&weights) as i32
+            }
+        }
+    }
+}
+
+fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = logits[0];
+    for (i, &v) in logits.iter().enumerate().skip(1) {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax_first_tie() {
+        let mut s = Sampler::new(Sampling::Greedy, 0);
+        assert_eq!(s.sample(&[0.1, 3.0, -1.0, 3.0]), 1);
+        assert_eq!(s.sample(&[5.0]), 0);
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let mut s = Sampler::new(Sampling::Temperature(0.0), 9);
+        assert_eq!(s.sample(&[0.0, 2.0, 1.0]), 1);
+    }
+
+    #[test]
+    fn temperature_is_seed_deterministic() {
+        let logits = [1.0f32, 0.5, 2.0, -1.0, 0.0];
+        let mut a = Sampler::new(Sampling::Temperature(0.8), 42);
+        let mut b = Sampler::new(Sampling::Temperature(0.8), 42);
+        for _ in 0..50 {
+            assert_eq!(a.sample(&logits), b.sample(&logits));
+        }
+    }
+
+    #[test]
+    fn temperature_samples_stay_in_vocab_and_follow_mass() {
+        let logits = [0.0f32, 6.0, 0.0, 0.0];
+        let mut s = Sampler::new(Sampling::Temperature(1.0), 3);
+        let mut hits = 0usize;
+        for _ in 0..500 {
+            let t = s.sample(&logits);
+            assert!((0..4).contains(&t));
+            if t == 1 {
+                hits += 1;
+            }
+        }
+        // index 1 holds ~99% of the softmax mass.
+        assert!(hits > 450, "hits={hits}");
+    }
+}

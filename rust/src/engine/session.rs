@@ -1,0 +1,130 @@
+//! One in-flight generation request: prompt → prefill → sample/step loop.
+//!
+//! A [`Session`] owns its recurrent [`EngineState`], the latest
+//! next-token logits, its seeded [`Sampler`] and the generated tail.
+//! Many sessions share one immutable backend; the
+//! [`crate::engine::Scheduler`] advances them together through
+//! [`Backend::step_batch`].
+
+use super::{Backend, EngineState, Sampler, Sampling};
+
+/// One request being decoded.
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub id: usize,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    /// Tokens sampled so far (never exceeds `max_new_tokens`).
+    pub generated: Vec<i32>,
+    /// Recurrent state positioned after the last consumed token.
+    pub state: EngineState,
+    /// Logits for the next position, refreshed by every prefill/step.
+    pub last_logits: Vec<f32>,
+    sampler: Sampler,
+}
+
+impl Session {
+    /// Prefill `prompt` on `backend` and return a session ready to
+    /// sample its first token.
+    pub fn start<B: Backend>(
+        backend: &B,
+        id: usize,
+        prompt: &[i32],
+        max_new_tokens: usize,
+        sampling: Sampling,
+        seed: u64,
+    ) -> Session {
+        assert!(!prompt.is_empty(), "session needs a non-empty prompt");
+        assert!(max_new_tokens > 0, "session must generate at least one token");
+        let (last_logits, state) = backend.prefill_last(prompt);
+        Session {
+            id,
+            prompt_len: prompt.len(),
+            max_new_tokens,
+            generated: Vec::with_capacity(max_new_tokens),
+            state,
+            last_logits,
+            sampler: Sampler::new(sampling, seed),
+        }
+    }
+
+    /// Sample the next token from the current logits and record it.
+    pub fn sample_next(&mut self) -> i32 {
+        debug_assert!(!self.done(), "sampling a finished session");
+        let t = self.sampler.sample(&self.last_logits);
+        self.generated.push(t);
+        t
+    }
+
+    /// Install the logits produced by stepping this session's last
+    /// sampled token.
+    pub fn apply_logits(&mut self, logits: Vec<f32>) {
+        debug_assert_eq!(logits.len(), self.last_logits.len());
+        self.last_logits = logits;
+    }
+
+    /// True once the generation budget is exhausted.
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.max_new_tokens
+    }
+
+    /// Run one request start-to-finish on a single session (no
+    /// batching) — the reference the scheduler's continuous batching is
+    /// property-tested against, and a convenient one-shot API.
+    pub fn run_solo<B: Backend>(
+        backend: &B,
+        id: usize,
+        prompt: &[i32],
+        max_new_tokens: usize,
+        sampling: Sampling,
+        seed: u64,
+    ) -> Vec<i32> {
+        let mut s = Session::start(backend, id, prompt, max_new_tokens, sampling, seed);
+        loop {
+            let t = s.sample_next();
+            if s.done() {
+                return s.generated;
+            }
+            let logits = backend.step(&mut s.state, t);
+            s.apply_logits(logits);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::toy::toy_flat_params_random;
+    use crate::sparse::compile::PackPolicy;
+    use crate::sparse::SparseModel;
+
+    #[test]
+    fn start_positions_after_prompt() {
+        let p = toy_flat_params_random(4, 1);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let s = Session::start(&model, 0, &[1, 2, 3], 4, Sampling::Greedy, 0);
+        assert_eq!(s.state.seq_len, 3);
+        assert_eq!(s.last_logits.len(), 16);
+        assert!(!s.done());
+    }
+
+    #[test]
+    fn run_solo_respects_budget_and_is_deterministic() {
+        let p = toy_flat_params_random(4, 2);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let a = Session::run_solo(&model, 0, &[5, 9], 6, Sampling::Greedy, 0);
+        let b = Session::run_solo(&model, 0, &[5, 9], 6, Sampling::Greedy, 0);
+        assert_eq!(a.len(), 6);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| (0..16).contains(&t)));
+    }
+
+    #[test]
+    fn temperature_solo_is_seed_deterministic() {
+        let p = toy_flat_params_random(4, 3);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let a = Session::run_solo(&model, 7, &[1], 5, Sampling::Temperature(1.0), 11);
+        let b = Session::run_solo(&model, 7, &[1], 5, Sampling::Temperature(1.0), 11);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,97 @@
+//! Per-request recurrent state — the piece that makes decode O(1).
+//!
+//! A Mamba layer needs exactly two things to continue a sequence from
+//! position `t` without revisiting positions `0..t`:
+//!
+//! * the SSM hidden state `h[d_inner, d_state]` after consuming `t`
+//!   tokens (the recurrence `h_t = exp(δA)·h_{t-1} + δx·B` is Markovian);
+//! * the last `K−1` depthwise-conv inputs (the causal conv window minus
+//!   the current position).
+//!
+//! [`EngineState`] holds both per layer.  Its size is independent of the
+//! sequence length — a few KB per session at m370 dims — which is what
+//! lets a [`crate::engine::Scheduler`] keep many live sessions resident
+//! while sharing one packed model.
+
+use crate::model::ModelMeta;
+
+/// Recurrent state of one Mamba layer.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LayerState {
+    /// SSM hidden state, `[d_inner, d_state]` row-major.
+    pub h: Vec<f32>,
+    /// Ring buffer of the last `d_conv − 1` conv inputs, laid out
+    /// `[d_conv − 1, d_inner]`; the slot for sequence position `p` is
+    /// `p % (d_conv − 1)` (empty when `d_conv == 1`).
+    pub conv: Vec<f32>,
+}
+
+/// Full per-session recurrent state: one [`LayerState`] per layer plus
+/// the number of tokens consumed so far.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EngineState {
+    /// Tokens consumed so far (the next step processes position `seq_len`).
+    pub seq_len: usize,
+    pub layers: Vec<LayerState>,
+}
+
+impl EngineState {
+    /// Fresh zero state for a model with the given dimensions.
+    pub fn new(meta: &ModelMeta) -> EngineState {
+        let (di, ds, dc) = (meta.d_inner, meta.d_state, meta.d_conv);
+        let layers = (0..meta.n_layer)
+            .map(|_| LayerState {
+                h: vec![0.0; di * ds],
+                conv: vec![0.0; dc.saturating_sub(1) * di],
+            })
+            .collect();
+        EngineState { seq_len: 0, layers }
+    }
+
+    /// Resident bytes of this session's state (constant in sequence
+    /// length — the whole point of step decode).
+    pub fn memory_bytes(&self) -> usize {
+        self.layers.iter().map(|l| (l.h.len() + l.conv.len()) * 4).sum::<usize>()
+            + std::mem::size_of::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::toy::m370_dims_meta;
+
+    #[test]
+    fn new_state_shapes_match_meta() {
+        let meta = m370_dims_meta();
+        let st = EngineState::new(&meta);
+        assert_eq!(st.seq_len, 0);
+        assert_eq!(st.layers.len(), meta.n_layer);
+        for l in &st.layers {
+            assert_eq!(l.h.len(), meta.d_inner * meta.d_state);
+            assert_eq!(l.conv.len(), (meta.d_conv - 1) * meta.d_inner);
+            assert!(l.h.iter().all(|&v| v == 0.0));
+        }
+        assert!(st.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn clone_is_independent() {
+        let meta = m370_dims_meta();
+        let mut a = EngineState::new(&meta);
+        let b = a.clone();
+        a.layers[0].h[0] = 1.0;
+        a.seq_len = 5;
+        assert_eq!(b.layers[0].h[0], 0.0);
+        assert_eq!(b.seq_len, 0);
+    }
+
+    #[test]
+    fn memory_is_constant_in_sequence_length() {
+        let meta = m370_dims_meta();
+        let mut st = EngineState::new(&meta);
+        let before = st.memory_bytes();
+        st.seq_len = 100_000;
+        assert_eq!(st.memory_bytes(), before);
+    }
+}

@@ -26,11 +26,15 @@
 //! Deployment side: the [`sparse`] subsystem (DESIGN.md §9) packs pruned
 //! parameters into CSR / bitmask-block / 2:4 layouts and serves them
 //! through sparsity-aware kernels chained with the native [`ssm`] scan,
-//! so mask sparsity turns into realized tokens/sec.
+//! so mask sparsity turns into realized tokens/sec.  The [`engine`]
+//! module (DESIGN.md §10) is the stateful serving API on top: prefill a
+//! prompt once, then decode each token in O(1) via per-session recurrent
+//! state, with continuous batching across requests.
 
 pub mod benchx;
 pub mod coordinator;
 pub mod corpus;
+pub mod engine;
 pub mod eval;
 pub mod linalg;
 pub mod model;

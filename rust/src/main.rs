@@ -1,25 +1,60 @@
 //! `sparsessm` — CLI for the SparseSSM reproduction.
 //!
-//! Subcommands:
-//!   smoke                         runtime round-trip check (init + 1 step)
-//!   train      --config m130 [--steps N]
-//!   prune      --config m370 [--method sparsessm|mp|shedder|sparsegpt]
-//!              [--sparsity 0.5] [--scope ssm|all] [--nsample 64]
-//!   eval       --config m370      dense evaluation row
-//!   experiment --id table1|...|fig4|sparse_speed | --all
-//!                                 (regenerates paper tables + serving exps)
-//!   sparse-bench [--batch 4] [--len 128] [--budget-ms 800]
-//!                                 dense vs packed decode throughput
-//!                                 (host-only: needs no artifacts)
-//!   list                          known experiments
-//!
-//! Global flags: --artifacts DIR (default artifacts), --runs DIR (default
-//! runs), --fast (reduced scales/samples for CI), --reports DIR.
+//! Run `sparsessm help` (or any unknown subcommand) for the full usage
+//! text; see [`USAGE`].
 
 use anyhow::{bail, Result};
 use sparsessm::coordinator::{experiments, FfnMethod, Pipeline, SsmMethod};
 use sparsessm::train::TrainOptions;
 use sparsessm::util::cli::Args;
+
+/// The real usage text `help` prints and unknown subcommands echo.
+const USAGE: &str = "\
+sparsessm — one-shot pruning + sparse serving for selective SSMs
+
+USAGE:
+  sparsessm <subcommand> [flags]
+
+SUBCOMMANDS:
+  smoke                      runtime round-trip check (PJRT up, init, 1 train
+                             step, 1 eval batch; needs artifacts)
+  train                      ensure (or force) a trained checkpoint
+      --config m130          model config (m130|m370|m790|m1400)
+      --steps N              force retraining for N steps
+  eval                       dense evaluation row for a checkpoint
+      --config m130
+  prune                      one-shot prune a checkpoint, then evaluate it
+      --config m370
+      --method sparsessm     sparsessm|sparsessm-l2|mp|shedder|sparsegpt
+      --sparsity 0.5         target sparsity in [0, 1]
+      --scope ssm            ssm (A_log only) | all (+ FFN modules)
+      --nsample 64           calibration segments
+  experiment                 regenerate paper tables / serving experiments
+      --id <id> | --all      see `sparsessm list` for ids
+  list                       known experiment ids
+  sparse-bench               decode throughput, dense vs packed formats
+                             (host-only: random weights at m370 dims)
+      --mode full            full  = whole-sequence forward tokens/sec
+                             step  = stateful step decode vs full-recompute
+                                     generation (engine prefill/step path)
+      --batch 4  --len 128   batch size and context length
+      --budget-ms 800        wall-clock budget per measurement
+  generate                   continuous-batching generation on the stateful
+                             engine (host-only: random weights, byte vocab)
+      --requests 8           queued requests
+      --batch 4              running-batch capacity (continuous batching)
+      --prompt-len 32        random prompt length per request
+      --new 64               tokens to generate per request
+      --temp 0.0             0 = greedy; >0 = temperature sampling
+      --sparsity 0.5         magnitude-prune level before packing
+      --seed 7               RNG seed (prompts + sampling)
+  help                       this text
+
+GLOBAL FLAGS:
+  --artifacts DIR            AOT artifact dir (default: artifacts)
+  --runs DIR                 checkpoint/run dir (default: runs)
+  --reports DIR              experiment report dir (default: reports)
+  --fast                     reduced scales/samples for CI";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -38,7 +73,7 @@ fn real_main(argv: &[String]) -> Result<()> {
 
     match sub.as_str() {
         "help" => {
-            println!("see `sparsessm` source header or README for usage");
+            println!("{USAGE}");
             Ok(())
         }
         "list" => {
@@ -120,20 +155,51 @@ fn real_main(argv: &[String]) -> Result<()> {
         "sparse-bench" => {
             // Host-only sparse-engine measurement: random weights at m370
             // dims, so it runs before `make artifacts` ever has.
-            let bt = args.get_usize("batch", 4)?;
-            let len = args.get_usize("len", 128)?;
+            let bt = args.get_usize("batch", 4)?.max(1);
+            let len = args.get_usize("len", 128)?.max(1);
             let budget = args.get_f64("budget-ms", if args.has("fast") { 250.0 } else { 800.0 })?;
             let params = sparsessm::sparse::decode::m370_bench_params();
-            println!("== decode throughput: dense vs packed (m370 dims, B={bt} L={len}) ==");
-            for row in sparsessm::sparse::decode::dense_vs_sparse_sweep(&params, bt, len, budget)?
-            {
-                println!(
-                    "  {:<20} {:<24} {:>9.0} tok/s  {:>5.2}x  {:>7.2} MB",
-                    row.label, row.formats, row.tokens_per_sec, row.speedup, row.weight_mb
-                );
+            match args.get_or("mode", "full") {
+                "full" => {
+                    println!(
+                        "== decode throughput: dense vs packed (m370 dims, B={bt} L={len}) =="
+                    );
+                    for row in
+                        sparsessm::sparse::decode::dense_vs_sparse_sweep(&params, bt, len, budget)?
+                    {
+                        println!(
+                            "  {:<20} {:<24} {:>9.0} tok/s  {:>5.2}x  {:>7.2} MB",
+                            row.label, row.formats, row.tokens_per_sec, row.speedup, row.weight_mb
+                        );
+                    }
+                }
+                "step" => {
+                    println!(
+                        "== generation throughput: step decode vs full recompute \
+                         (m370 dims, B={bt} L={len}) =="
+                    );
+                    println!(
+                        "  {:<20} {:<24} {:>11} {:>11} {:>10}",
+                        "variant", "formats", "step tok/s", "full tok/s", "step/full"
+                    );
+                    for row in
+                        sparsessm::engine::bench::step_vs_full_sweep(&params, bt, len, budget)?
+                    {
+                        println!(
+                            "  {:<20} {:<24} {:>11.0} {:>11.1} {:>9.1}x",
+                            row.label, row.formats, row.step_tps, row.full_tps, row.advantage
+                        );
+                    }
+                    println!(
+                        "  (step = O(1)/token via engine prefill/step state; \
+                         full = O(L)/token whole-sequence recompute)"
+                    );
+                }
+                other => bail!("unknown --mode '{other}' (try: full, step)"),
             }
             Ok(())
         }
+        "generate" => generate(&args),
         "experiment" => {
             let pipe = Pipeline::new(&artifacts, &runs, args.has("fast"))?;
             let ids: Vec<String> = if args.has("all") {
@@ -153,12 +219,81 @@ fn real_main(argv: &[String]) -> Result<()> {
             Ok(())
         }
         other => {
-            bail!(
-                "unknown subcommand '{other}' (try: smoke, train, eval, prune, experiment, \
-                 sparse-bench, list)"
-            )
+            bail!("unknown subcommand '{other}'\n\n{USAGE}")
         }
     }
+}
+
+/// Continuous-batching generation demo on the stateful engine — random
+/// weights at m370 dims (host-only), byte-level vocab.
+fn generate(args: &Args) -> Result<()> {
+    use sparsessm::engine::{Sampling, Scheduler};
+    use sparsessm::rngx::Pcg;
+    use sparsessm::sparse::compile::{magnitude_prune_all, PackPolicy};
+    use sparsessm::sparse::SparseModel;
+
+    let requests = args.get_usize("requests", 8)?;
+    let batch = args.get_usize("batch", 4)?.max(1);
+    let prompt_len = args.get_usize("prompt-len", 32)?.max(1);
+    let new = args.get_usize("new", 64)?.max(1);
+    let temp = args.get_f64("temp", 0.0)?;
+    let sparsity = args.get_f64("sparsity", 0.5)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+
+    let mut params = sparsessm::sparse::decode::m370_bench_params();
+    if sparsity > 0.0 {
+        magnitude_prune_all(&mut params, sparsity)?;
+    }
+    let model = SparseModel::compile(&params, &PackPolicy::auto())?;
+    let sampling = if temp > 0.0 { Sampling::Temperature(temp) } else { Sampling::Greedy };
+    println!(
+        "engine: m370 dims [{}] | {requests} requests x {new} tokens, batch {batch}, {}",
+        model.format_summary(),
+        match sampling {
+            Sampling::Greedy => "greedy".to_string(),
+            Sampling::Temperature(t) => format!("temperature {t}"),
+        }
+    );
+
+    let mut sched = Scheduler::new(&model, batch, sampling, seed);
+    let mut rng = Pcg::seeded(seed);
+    let vocab = model.meta.vocab;
+    for _ in 0..requests {
+        let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(vocab) as i32).collect();
+        sched.submit(prompt, new);
+    }
+
+    let sw = sparsessm::util::Stopwatch::new();
+    let mut gens = sched.run_until_idle();
+    let secs = sw.seconds();
+    gens.sort_by_key(|g| g.id);
+    for g in &gens {
+        let preview: String = g
+            .tokens
+            .iter()
+            .take(48)
+            .map(|&t| {
+                let b = t as u8;
+                if b.is_ascii_graphic() || b == b' ' {
+                    b as char
+                } else {
+                    '·'
+                }
+            })
+            .collect();
+        println!("  req {:>2} ({} tokens): {preview}", g.id, g.tokens.len());
+    }
+    let st = sched.stats();
+    println!(
+        "decoded {} tokens in {secs:.2}s ({:.0} tok/s) | {} engine steps, peak batch {}, \
+         prefill {} tokens",
+        st.decoded_tokens,
+        st.decoded_tokens as f64 / secs.max(1e-9),
+        st.engine_steps,
+        st.peak_batch,
+        st.prefill_tokens
+    );
+    Ok(())
 }
 
 fn print_row(cfg: &str, row: &sparsessm::eval::MetricsRow) {

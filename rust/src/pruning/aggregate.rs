@@ -120,7 +120,7 @@ mod tests {
     fn frequency_vote_prunes_most_nominated() {
         let (a, s) = toy();
         let m = sparsessm_mask(&a, &s, 0.25, Aggregation::FrequencyVote);
-        assert_eq!(m.n_pruned(), 1);
+        assert_eq!(m.pruned_count(), 1);
         assert!(m.prune[0], "index 0 was nominated most often");
     }
 
@@ -150,7 +150,7 @@ mod tests {
         let (a, s) = toy();
         for p in [0.0, 0.25, 0.5, 0.75, 1.0] {
             let m = sparsessm_mask(&a, &s, p, Aggregation::FrequencyVote);
-            assert_eq!(m.n_pruned(), k_of(p, 4), "p={p}");
+            assert_eq!(m.pruned_count(), k_of(p, 4), "p={p}");
         }
     }
 

@@ -54,10 +54,6 @@ impl Mask {
         self.prune.iter().filter(|&&p| p).count()
     }
 
-    pub fn n_pruned(&self) -> usize {
-        self.pruned_count()
-    }
-
     pub fn sparsity(&self) -> f64 {
         if self.prune.is_empty() {
             0.0
@@ -184,7 +180,7 @@ mod tests {
         assert_eq!(m.density(), 0.5);
         assert_eq!(m.pruned_count(), 2);
         let u = m.union(&Mask::from_indices(4, &[0]));
-        assert_eq!(u.n_pruned(), 3);
+        assert_eq!(u.pruned_count(), 3);
     }
 
     #[test]

@@ -33,12 +33,12 @@ pub fn m370_bench_params() -> FlatParams {
 }
 
 #[inline]
-fn silu(x: f32) -> f32 {
+pub(crate) fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
 #[inline]
-fn softplus(x: f32) -> f32 {
+pub(crate) fn softplus(x: f32) -> f32 {
     if x > 20.0 {
         x
     } else {
@@ -46,7 +46,7 @@ fn softplus(x: f32) -> f32 {
     }
 }
 
-fn rmsnorm(x: &[f32], w: &[f32], dm: usize) -> Vec<f32> {
+pub(crate) fn rmsnorm(x: &[f32], w: &[f32], dm: usize) -> Vec<f32> {
     debug_assert_eq!(x.len() % dm, 0);
     debug_assert_eq!(w.len(), dm);
     let mut out = vec![0.0f32; x.len()];
@@ -65,7 +65,7 @@ fn rmsnorm(x: &[f32], w: &[f32], dm: usize) -> Vec<f32> {
 
 /// Depthwise causal conv over packed taps, fused with SiLU.  CSR row
 /// iteration visits only surviving taps; pruned taps cost nothing.
-fn conv1d_causal_silu(
+pub(crate) fn conv1d_causal_silu(
     w: &CsrMatrix,
     bias: &[f32],
     x: &[f32],
@@ -99,9 +99,14 @@ fn conv1d_causal_silu(
 }
 
 /// Full forward over `tokens[bt, l]`, returning logits `[bt, l, vocab]`.
-/// Mirrors `model.py::forward_logits` (same recurrence, same tied head);
-/// equivalence between packed and forced-dense compilation is pinned by
-/// `tests/prop_sparse.rs`.
+/// Mirrors `model.py::forward_logits` (same recurrence, same tied head).
+///
+/// This whole-sequence recompute is the **reference oracle**: serving
+/// goes through the stateful `engine` (prefill/step sessions, O(1) per
+/// decoded token), and `tests/prop_engine.rs` pins the engine's
+/// prefill+step logits to this function.  It also remains the
+/// full-recompute baseline the step-decode benches are measured against,
+/// and `tests/prop_sparse.rs` pins packed-vs-dense compilation through it.
 pub fn forward_logits(model: &SparseModel, tokens: &[i32], bt: usize, l: usize) -> Vec<f32> {
     let meta = &model.meta;
     let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
@@ -201,17 +206,15 @@ pub struct SweepRow {
     pub bench: BenchResult,
 }
 
-/// The standard dense-vs-sparse decode sweep over `params`: dense
-/// baseline, masked-dense (showing masks alone buy nothing), bitmask at
-/// 50%, 2:4-packed at 50%, CSR at 90%.  Shared by the CLI `sparse-bench`
-/// subcommand, the `sparse_speed` experiment, `cargo bench` and
-/// `examples/sparse_speedup.rs`.
-pub fn dense_vs_sparse_sweep(
-    params: &FlatParams,
-    bt: usize,
-    l: usize,
-    budget_ms: f64,
-) -> Result<Vec<SweepRow>> {
+/// One entry of the standard bench sweep: display label, pruned
+/// parameters, and the pack policy to compile them under.
+pub type SweepVariant = (String, FlatParams, PackPolicy);
+
+/// The standard serving-bench variants over `params`: dense baseline,
+/// masked-dense (showing masks alone buy nothing), packed at 50%,
+/// 2:4-packed, CSR-dominated at 90%.  Shared by the full-recompute sweep
+/// below and the engine's step-decode sweep (`engine::bench`).
+pub fn sweep_variants(params: &FlatParams) -> Result<Vec<SweepVariant>> {
     let prune_all = |sparsity: f64| -> Result<FlatParams> {
         let mut p = params.clone();
         magnitude_prune_all(&mut p, sparsity)?;
@@ -220,13 +223,26 @@ pub fn dense_vs_sparse_sweep(
     let mut nm = params.clone();
     apply_nm_along_input(&mut nm, 2, 4)?;
     let half = prune_all(0.5)?;
-    let variants: Vec<(&str, FlatParams, PackPolicy)> = vec![
-        ("dense 0%", params.clone(), PackPolicy::dense()),
-        ("masked-dense 50%", half.clone(), PackPolicy::dense()),
-        ("packed 50% (auto)", half, PackPolicy::auto()),
-        ("packed 2:4 (auto)", nm, PackPolicy::auto()),
-        ("packed 90% (auto)", prune_all(0.9)?, PackPolicy::auto()),
-    ];
+    Ok(vec![
+        ("dense 0%".to_string(), params.clone(), PackPolicy::dense()),
+        ("masked-dense 50%".to_string(), half.clone(), PackPolicy::dense()),
+        ("packed 50% (auto)".to_string(), half, PackPolicy::auto()),
+        ("packed 2:4 (auto)".to_string(), nm, PackPolicy::auto()),
+        ("packed 90% (auto)".to_string(), prune_all(0.9)?, PackPolicy::auto()),
+    ])
+}
+
+/// The standard dense-vs-sparse decode sweep over `params` (the
+/// [`sweep_variants`] set).  Shared by the CLI `sparse-bench` subcommand,
+/// the `sparse_speed` experiment, `cargo bench` and
+/// `examples/sparse_speedup.rs`.
+pub fn dense_vs_sparse_sweep(
+    params: &FlatParams,
+    bt: usize,
+    l: usize,
+    budget_ms: f64,
+) -> Result<Vec<SweepRow>> {
+    let variants = sweep_variants(params)?;
     let mut rows: Vec<SweepRow> = Vec::with_capacity(variants.len());
     let mut dense_tps = 0.0;
     for (label, p, policy) in variants {
@@ -236,7 +252,7 @@ pub fn dense_vs_sparse_sweep(
             dense_tps = tps;
         }
         rows.push(SweepRow {
-            label: label.to_string(),
+            label,
             formats: model.format_summary(),
             tokens_per_sec: tps,
             speedup: tps / dense_tps,

@@ -34,29 +34,49 @@ pub struct SsmInputs<'a> {
 /// stripes; the running state h[stripe, N] stays in cache across the
 /// sequential L loop (the CPU analogue of the Pallas VMEM-resident state).
 pub fn selective_scan(inp: &SsmInputs<'_>) -> Vec<f32> {
+    selective_scan_with_state(inp, None).0
+}
+
+/// [`selective_scan`] with explicit recurrent state: seeds the recurrence
+/// from `h0` (zeros when `None`) and also returns the final hidden state
+/// — the prefill→step handoff the stateful inference engine builds on.
+/// `h0` and the returned state are laid out `[B, D, N]`.
+pub fn selective_scan_with_state(
+    inp: &SsmInputs<'_>,
+    h0: Option<&[f32]>,
+) -> (Vec<f32>, Vec<f32>) {
     let (bt, l, d, n) = inp.dims;
     debug_assert_eq!(inp.a.len(), d * n);
     debug_assert_eq!(inp.delta.len(), bt * l * d);
     debug_assert_eq!(inp.b.len(), bt * l * n);
     debug_assert_eq!(inp.x.len(), bt * l * d);
+    if let Some(h) = h0 {
+        debug_assert_eq!(h.len(), bt * d * n);
+    }
     let stripe = 64.min(d);
     let n_stripes = d.div_ceil(stripe);
     let mut y = vec![0.0f32; bt * l * d];
+    let mut h_final = vec![0.0f32; bt * d * n];
 
-    // Each (batch, stripe) job writes a disjoint slab of y.
+    // Each (batch, stripe) job writes disjoint slabs of y and h_final.
     struct YPtr(*mut f32);
     unsafe impl Send for YPtr {}
     unsafe impl Sync for YPtr {}
     let yp = YPtr(y.as_mut_ptr());
+    let hp = YPtr(h_final.as_mut_ptr());
 
     threadx::parallel_map(bt * n_stripes, |job| {
         let yp = &yp;
+        let hp = &hp;
         let b = job / n_stripes;
         let s = job % n_stripes;
         let d0 = s * stripe;
         let d1 = (d0 + stripe).min(d);
         let w = d1 - d0;
         let mut h = vec![0.0f32; w * n];
+        if let Some(h0) = h0 {
+            h.copy_from_slice(&h0[(b * d + d0) * n..(b * d + d1) * n]);
+        }
         for t in 0..l {
             let base_d = (b * l + t) * d;
             let base_n = (b * l + t) * n;
@@ -80,8 +100,12 @@ pub fn selective_scan(inp: &SsmInputs<'_>) -> Vec<f32> {
                 unsafe { *yp.0.add(base_d + dg) = yv };
             }
         }
+        // SAFETY: the (b, d0..d1) slab of h_final belongs to this job only.
+        unsafe {
+            std::ptr::copy_nonoverlapping(h.as_ptr(), hp.0.add((b * d + d0) * n), w * n);
+        }
     });
-    y
+    (y, h_final)
 }
 
 #[cfg(test)]
@@ -140,6 +164,73 @@ mod tests {
             for (u, v) in fast.iter().zip(&slow) {
                 assert!((u - v).abs() < 1e-4, "{u} vs {v} dims={dims:?}");
             }
+        }
+    }
+
+    #[test]
+    fn chunked_scan_with_state_matches_whole_sequence() {
+        // Splitting the sequence and handing the final state across the
+        // split must reproduce the single-pass scan exactly — the
+        // prefill→step contract of the inference engine.
+        let mut rng = Pcg::seeded(5);
+        let (bt, l, d, n) = (2usize, 10usize, 70usize, 8usize);
+        let (a, delta, b, c, x, dp) = rand_inputs(&mut rng, (bt, l, d, n));
+        let inp =
+            SsmInputs { a: &a, delta: &delta, b: &b, c: &c, x: &x, dp: &dp, dims: (bt, l, d, n) };
+        let (want_y, want_h) = selective_scan_with_state(&inp, None);
+        for split in [1usize, 4, 9] {
+            let take = |full: &[f32], per_t: usize, t0: usize, t1: usize| -> Vec<f32> {
+                let mut out = Vec::with_capacity(bt * (t1 - t0) * per_t);
+                for bb in 0..bt {
+                    out.extend_from_slice(&full[(bb * l + t0) * per_t..(bb * l + t1) * per_t]);
+                }
+                out
+            };
+            let (d0, b0, c0, x0) = (
+                take(&delta, d, 0, split),
+                take(&b, n, 0, split),
+                take(&c, n, 0, split),
+                take(&x, d, 0, split),
+            );
+            let chunk0 = SsmInputs {
+                a: &a,
+                delta: &d0,
+                b: &b0,
+                c: &c0,
+                x: &x0,
+                dp: &dp,
+                dims: (bt, split, d, n),
+            };
+            let (y0, h_mid) = selective_scan_with_state(&chunk0, None);
+            let (d1, b1, c1, x1) = (
+                take(&delta, d, split, l),
+                take(&b, n, split, l),
+                take(&c, n, split, l),
+                take(&x, d, split, l),
+            );
+            let (y1, h_end) = selective_scan_with_state(
+                &SsmInputs {
+                    a: &a,
+                    delta: &d1,
+                    b: &b1,
+                    c: &c1,
+                    x: &x1,
+                    dp: &dp,
+                    dims: (bt, l - split, d, n),
+                },
+                Some(&h_mid),
+            );
+            let got_y: Vec<f32> = (0..bt)
+                .flat_map(|bb| {
+                    y0[bb * split * d..(bb + 1) * split * d]
+                        .iter()
+                        .chain(&y1[bb * (l - split) * d..(bb + 1) * (l - split) * d])
+                        .copied()
+                        .collect::<Vec<f32>>()
+                })
+                .collect();
+            assert_eq!(got_y, want_y, "split={split}");
+            assert_eq!(h_end, want_h, "split={split}");
         }
     }
 

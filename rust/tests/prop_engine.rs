@@ -1,0 +1,252 @@
+//! Property-based tests over the stateful inference engine (same
+//! in-repo `proptest` substitute as prop_sparse.rs).
+//!
+//! The engine's acceptance contract:
+//!
+//! * prefill + N×step logits match the whole-sequence oracle
+//!   `sparse::decode::forward_logits` within 1e-4 for every packed
+//!   format (dense / bitmask / CSR / 2:4) and sparsity (0 / 50 / 90%),
+//!   at every prompt/step split point;
+//! * the dense `FlatParams` reference backend (independent
+//!   implementation, no shared kernels) matches the same oracle;
+//! * interleaved sessions in one batched step match their solo runs
+//!   **exactly** (batching never changes per-session arithmetic);
+//! * the continuous-batching scheduler reproduces solo generation
+//!   per request, for greedy and seeded temperature sampling.
+
+use sparsessm::engine::{session_seed, Backend, Sampling, Scheduler, Session};
+use sparsessm::model::toy::toy_flat_params_random;
+use sparsessm::model::FlatParams;
+use sparsessm::rngx::Pcg;
+use sparsessm::sparse::compile::{apply_nm_along_input, magnitude_prune_all, PackPolicy};
+use sparsessm::sparse::{decode, Format, SparseModel};
+
+/// Mini property harness: run `f` for `cases` seeds; on failure report
+/// the seed so the case can be replayed.
+fn check<F: Fn(&mut Pcg) -> Result<(), String>>(name: &str, cases: u64, f: F) {
+    for seed in 0..cases {
+        let mut rng = Pcg::seeded(0xE61E ^ seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Engine pass over one model: prefill the first `split` tokens, then
+/// step through the rest, returning logits for every position.
+fn prefill_then_steps<B: Backend>(backend: &B, tokens: &[i32], split: usize) -> Vec<f32> {
+    let (mut logits, mut state) = backend.prefill(&tokens[..split]);
+    for &t in &tokens[split..] {
+        logits.extend(backend.step(&mut state, t));
+    }
+    logits
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(u, v)| (u - v).abs()).fold(0.0, f32::max)
+}
+
+/// prefill+steps == forward_logits across formats × sparsities × splits.
+#[test]
+fn prop_prefill_steps_match_oracle_all_formats() {
+    check("engine-oracle-equivalence", 5, |rng| {
+        let seed = rng.next_u64();
+        let l = 6 + rng.below(6);
+        let tokens: Vec<i32> = (0..l).map(|_| rng.below(16) as i32).collect();
+        let split = 1 + rng.below(l - 1);
+        for sparsity in [0.0, 0.5, 0.9] {
+            let mut params = toy_flat_params_random(4, seed);
+            if sparsity > 0.0 {
+                magnitude_prune_all(&mut params, sparsity).map_err(|e| e.to_string())?;
+            }
+            for fmt in [Format::Dense, Format::Bitmask, Format::Csr] {
+                let model = SparseModel::compile(&params, &PackPolicy::of(fmt))
+                    .map_err(|e| e.to_string())?;
+                let want = decode::forward_logits(&model, &tokens, 1, l);
+                let got = prefill_then_steps(&model, &tokens, split);
+                let diff = max_abs_diff(&got, &want);
+                if diff > 1e-4 {
+                    return Err(format!(
+                        "{fmt:?} @{sparsity} split {split}: max diff {diff}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Same contract for the 2:4 layout specifically.
+#[test]
+fn prop_prefill_steps_match_oracle_2_4() {
+    check("engine-oracle-equivalence-2:4", 5, |rng| {
+        let seed = rng.next_u64();
+        let l = 6 + rng.below(4);
+        let tokens: Vec<i32> = (0..l).map(|_| rng.below(16) as i32).collect();
+        let split = 1 + rng.below(l - 1);
+        let mut params = toy_flat_params_random(4, seed);
+        apply_nm_along_input(&mut params, 2, 4).map_err(|e| e.to_string())?;
+        let model = SparseModel::compile(&params, &PackPolicy::of(Format::Nm))
+            .map_err(|e| e.to_string())?;
+        if !model.format_summary().contains("2:4") {
+            return Err(format!("no 2:4 tensors packed: {}", model.format_summary()));
+        }
+        let want = decode::forward_logits(&model, &tokens, 1, l);
+        let got = prefill_then_steps(&model, &tokens, split);
+        let diff = max_abs_diff(&got, &want);
+        if diff > 1e-4 {
+            return Err(format!("split {split}: max diff {diff}"));
+        }
+        Ok(())
+    });
+}
+
+/// The dense FlatParams backend (independent implementation in storage
+/// orientation) matches the oracle too.
+#[test]
+fn prop_dense_reference_backend_matches_oracle() {
+    check("dense-backend-equivalence", 5, |rng| {
+        let seed = rng.next_u64();
+        let l = 5 + rng.below(5);
+        let tokens: Vec<i32> = (0..l).map(|_| rng.below(16) as i32).collect();
+        let split = 1 + rng.below(l - 1);
+        for sparsity in [0.0, 0.5] {
+            let mut params = toy_flat_params_random(4, seed);
+            if sparsity > 0.0 {
+                magnitude_prune_all(&mut params, sparsity).map_err(|e| e.to_string())?;
+            }
+            let oracle = SparseModel::compile(&params, &PackPolicy::dense())
+                .map_err(|e| e.to_string())?;
+            let want = decode::forward_logits(&oracle, &tokens, 1, l);
+            let got = prefill_then_steps(&params, &tokens, split);
+            let diff = max_abs_diff(&got, &want);
+            if diff > 1e-4 {
+                return Err(format!("@{sparsity} split {split}: max diff {diff}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Interleaved sessions in one batch match their solo runs exactly —
+/// batched stepping is bit-identical to stepping each session alone.
+#[test]
+fn prop_interleaved_batch_matches_solo_exactly() {
+    check("batch-interleaving-exact", 5, |rng| {
+        let seed = rng.next_u64();
+        let mut params = toy_flat_params_random(4, seed);
+        magnitude_prune_all(&mut params, 0.5).map_err(|e| e.to_string())?;
+        let model =
+            SparseModel::compile(&params, &PackPolicy::auto()).map_err(|e| e.to_string())?;
+        let vocab = 16usize;
+        let n_sessions = 2 + rng.below(3);
+        let n_steps = 3 + rng.below(5);
+
+        // Distinct prompts and per-session token streams.
+        let prompts: Vec<Vec<i32>> = (0..n_sessions)
+            .map(|_| (0..1 + rng.below(6)).map(|_| rng.below(vocab) as i32).collect())
+            .collect();
+        let streams: Vec<Vec<i32>> = (0..n_sessions)
+            .map(|_| (0..n_steps).map(|_| rng.below(vocab) as i32).collect())
+            .collect();
+
+        // Solo: each session stepped alone.
+        let mut solo_states = Vec::new();
+        let mut solo_logits: Vec<Vec<f32>> = Vec::new();
+        for (prompt, stream) in prompts.iter().zip(&streams) {
+            let (_, mut st) = model.prefill(prompt);
+            let mut log = Vec::new();
+            for &t in stream {
+                log.extend(model.step(&mut st, t));
+            }
+            solo_states.push(st);
+            solo_logits.push(log);
+        }
+
+        // Batched: all sessions advanced together, one token per tick.
+        let mut states: Vec<_> = prompts.iter().map(|p| model.prefill(p).1).collect();
+        let mut batch_logits: Vec<Vec<f32>> = vec![Vec::new(); n_sessions];
+        for step in 0..n_steps {
+            let tokens: Vec<i32> = streams.iter().map(|s| s[step]).collect();
+            let out = model.step_batch(&mut states, &tokens);
+            for (i, log) in batch_logits.iter_mut().enumerate() {
+                log.extend_from_slice(&out[i * vocab..(i + 1) * vocab]);
+            }
+        }
+
+        for i in 0..n_sessions {
+            if batch_logits[i] != solo_logits[i] {
+                return Err(format!("session {i}: batched logits differ from solo"));
+            }
+            if states[i] != solo_states[i] {
+                return Err(format!("session {i}: batched state differs from solo"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The continuous-batching scheduler reproduces solo generation per
+/// request — admissions and retirements never leak across sessions.
+#[test]
+fn prop_scheduler_matches_solo_generation() {
+    check("scheduler-vs-solo", 4, |rng| {
+        let seed = rng.next_u64();
+        let mut params = toy_flat_params_random(4, seed);
+        magnitude_prune_all(&mut params, 0.25).map_err(|e| e.to_string())?;
+        let model =
+            SparseModel::compile(&params, &PackPolicy::auto()).map_err(|e| e.to_string())?;
+        let base_seed = rng.next_u64();
+        let n_requests = 3 + rng.below(4);
+        let requests: Vec<(Vec<i32>, usize)> = (0..n_requests)
+            .map(|_| {
+                let prompt: Vec<i32> =
+                    (0..1 + rng.below(5)).map(|_| rng.below(16) as i32).collect();
+                (prompt, 1 + rng.below(6))
+            })
+            .collect();
+        for sampling in [Sampling::Greedy, Sampling::Temperature(0.9)] {
+            let mut sched = Scheduler::new(&model, 2, sampling, base_seed);
+            for (prompt, max_new) in &requests {
+                sched.submit(prompt.clone(), *max_new);
+            }
+            let mut gens = sched.run_until_idle();
+            gens.sort_by_key(|g| g.id);
+            if gens.len() != requests.len() {
+                return Err(format!("{} of {} requests finished", gens.len(), requests.len()));
+            }
+            for (id, (prompt, max_new)) in requests.iter().enumerate() {
+                let want = Session::run_solo(
+                    &model,
+                    id,
+                    prompt,
+                    *max_new,
+                    sampling,
+                    session_seed(base_seed, id),
+                );
+                if gens[id].tokens != want {
+                    return Err(format!(
+                        "{sampling:?} request {id}: scheduler {:?} vs solo {want:?}",
+                        gens[id].tokens
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Session state stays constant-size while the sequence grows — the
+/// O(1)-per-token memory contract.
+#[test]
+fn state_is_constant_size_across_steps() {
+    let params: FlatParams = toy_flat_params_random(4, 99);
+    let model = SparseModel::compile(&params, &PackPolicy::auto()).unwrap();
+    let (_, mut state) = model.prefill(&[1, 2, 3]);
+    let bytes = state.memory_bytes();
+    for t in 0..50usize {
+        model.step(&mut state, (t % 16) as i32);
+        assert_eq!(state.memory_bytes(), bytes);
+    }
+    assert_eq!(state.seq_len, 53);
+}

@@ -47,13 +47,13 @@ fn prop_mask_sparsity_exact_for_all_methods() {
         let k = k_of(p, d * n);
         for agg in [Aggregation::FrequencyVote, Aggregation::L2] {
             let m = sparsessm_mask(&a, &stats, p, agg);
-            if m.n_pruned() != k {
-                return Err(format!("{agg:?}: pruned {} want {}", m.n_pruned(), k));
+            if m.pruned_count() != k {
+                return Err(format!("{agg:?}: pruned {} want {}", m.pruned_count(), k));
             }
         }
         let mm = magnitude::magnitude_mask(a.data(), p);
-        if mm.n_pruned() != k {
-            return Err(format!("MP pruned {} want {}", mm.n_pruned(), k));
+        if mm.pruned_count() != k {
+            return Err(format!("MP pruned {} want {}", mm.pruned_count(), k));
         }
         Ok(())
     });
@@ -158,7 +158,7 @@ fn prop_union_and_apply_consistency() {
         let mut w = vec![1.0f32; len];
         u.apply(&mut w);
         let zeros = w.iter().filter(|&&x| x == 0.0).count();
-        if zeros != u.n_pruned() {
+        if zeros != u.pruned_count() {
             return Err("apply/zero-count mismatch".into());
         }
         let set: std::collections::BTreeSet<usize> = ia.into_iter().chain(ib).collect();

@@ -1,13 +1,14 @@
 #!/usr/bin/env bash
-# Tier-1 verification gate (ROADMAP.md) plus formatting.
+# Tier-1 verification gate (ROADMAP.md) plus lint + formatting.
 #
-#   scripts/verify.sh          # build + tests + fmt check
+#   scripts/verify.sh          # build + tests + clippy + fmt check
 #   scripts/verify.sh --fix    # same, but apply formatting instead of checking
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
+cargo clippy --all-targets -- -D warnings
 
 if [[ "${1:-}" == "--fix" ]]; then
     cargo fmt
