@@ -14,23 +14,30 @@
 
 use anyhow::Result;
 use sparsessm::sparse::decode::{dense_vs_sparse_sweep, m370_bench_params};
+use sparsessm::sparse::Dtype;
 
 fn main() -> Result<()> {
     let params = m370_bench_params();
     let (bt, l) = (4usize, 128usize);
     println!("== decode throughput: dense vs packed formats (m370 dims, B={bt} L={l}) ==");
     println!(
-        "{:<20} {:<24} {:>10} {:>8} {:>12}",
+        "{:<24} {:<24} {:>10} {:>8} {:>12}",
         "variant", "formats", "tok/s", "speedup", "weights (MB)"
     );
-    for row in dense_vs_sparse_sweep(&params, bt, l, 800.0)? {
-        println!(
-            "{:<20} {:<24} {:>10.0} {:>7.2}x {:>12.2}",
-            row.label, row.formats, row.tokens_per_sec, row.speedup, row.weight_mb
-        );
+    // The f32 sweep is the classic dense-vs-packed comparison; the i8
+    // sweep stacks quantized value planes on the same structure planes
+    // (run `sparsessm experiment --id quant_speed` for the full grid).
+    for dtype in [Dtype::F32, Dtype::I8] {
+        for row in dense_vs_sparse_sweep(&params, bt, l, 800.0, dtype)? {
+            println!(
+                "{:<24} {:<24} {:>10.0} {:>7.2}x {:>12.2}",
+                row.label, row.formats, row.tokens_per_sec, row.speedup, row.weight_mb
+            );
+        }
     }
     println!();
     println!("takeaways: masked-dense ≈ dense (masks alone buy nothing);");
-    println!("2:4 packs half the multiply-adds at 50% sparsity; CSR wins at 90%.");
+    println!("2:4 packs half the multiply-adds at 50% sparsity; CSR wins at 90%;");
+    println!("i8 value planes halve the packed footprint on the same masks.");
     Ok(())
 }

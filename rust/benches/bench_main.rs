@@ -16,7 +16,7 @@ use sparsessm::linalg::gram_f32;
 use sparsessm::pruning::{aggregate, magnitude, semistructured, sparsegpt};
 use sparsessm::rngx::Pcg;
 use sparsessm::runtime::lit_f32;
-use sparsessm::sparse::{decode, Format, Packed, SparseModel};
+use sparsessm::sparse::{decode, Dtype, Format, Packed, SparseModel};
 use sparsessm::tensor::Tensor;
 
 fn main() {
@@ -139,10 +139,28 @@ fn main() {
     // m370 dims (host-only — needs no artifacts).
     run("sparse_decode_throughput", &mut |res| {
         let params = decode::m370_bench_params();
-        for row in decode::dense_vs_sparse_sweep(&params, 2, 64, 300.0).unwrap() {
+        for row in decode::dense_vs_sparse_sweep(&params, 2, 64, 300.0, Dtype::F32).unwrap() {
             eprintln!(
                 "  {:<20} {:>9.0} tok/s ({:.2}x, {:.2} MB)",
                 row.label, row.tokens_per_sec, row.speedup, row.weight_mb
+            );
+            res.push(row.bench);
+        }
+    });
+
+    // quantized value planes: decode tokens/sec + memory_bytes for every
+    // packed format × dtype at the same 50% / 2:4 masks (host-only).
+    run("quant_speed", &mut |res| {
+        let params = decode::m370_bench_params();
+        for row in decode::quant_sweep(&params, 2, 48, 150.0).unwrap() {
+            eprintln!(
+                "  {:<8} {:<4} {:>9.0} tok/s ({:.2}x)  {:>9} B ({:.2}x f32)",
+                row.format.name(),
+                row.dtype.name(),
+                row.tokens_per_sec,
+                row.rel_speed,
+                row.memory_bytes,
+                row.rel_memory
             );
             res.push(row.bench);
         }
@@ -152,7 +170,7 @@ fn main() {
     // over one shared packed model (host-only).
     run("engine_step_decode", &mut |res| {
         let params = decode::m370_bench_params();
-        for (label, p, policy) in decode::sweep_variants(&params).unwrap() {
+        for (label, p, policy) in decode::sweep_variants(&params, Dtype::F32).unwrap() {
             let model = SparseModel::compile(&p, &policy).unwrap();
             let (r, tps) = engine::bench::step_decode_throughput(
                 &model,

@@ -16,10 +16,12 @@ use crate::util::{fmt_metric, Stopwatch};
 use anyhow::{bail, Result};
 
 /// All experiment ids: the paper's tables/figures in paper order, plus
-/// repo-native serving experiments (`sparse_speed`, `serve_engine`).
-pub const ALL_IDS: [&str; 17] = [
+/// repo-native serving experiments (`sparse_speed`, `serve_engine`,
+/// `quant_speed`).
+pub const ALL_IDS: [&str; 18] = [
     "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "table9",
     "table10", "table11", "table12", "fig2", "fig3", "fig4", "sparse_speed", "serve_engine",
+    "quant_speed",
 ];
 
 pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
@@ -42,6 +44,7 @@ pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
         "fig4" => fig4(pipe)?,
         "sparse_speed" => sparse_speed(pipe)?,
         "serve_engine" => serve_engine(pipe)?,
+        "quant_speed" => quant_speed(pipe)?,
         other => bail!("unknown experiment id '{other}' (known: {:?})", ALL_IDS),
     };
     rep.note(&format!(
@@ -474,7 +477,8 @@ fn sparse_speed(pipe: &Pipeline) -> Result<Report> {
     // checkpoint are needed.
     let params = crate::sparse::decode::m370_bench_params();
     let (bt, l, budget) = if pipe.fast { (2, 64, 250.0) } else { (8, 128, 1000.0) };
-    for row in crate::sparse::decode::dense_vs_sparse_sweep(&params, bt, l, budget)? {
+    let dtype = crate::sparse::Dtype::F32;
+    for row in crate::sparse::decode::dense_vs_sparse_sweep(&params, bt, l, budget, dtype)? {
         rep.push_row(vec![
             row.label,
             row.formats,
@@ -505,8 +509,9 @@ fn serve_engine(pipe: &Pipeline) -> Result<Report> {
     let params = crate::sparse::decode::m370_bench_params();
     let (l, budget) = if pipe.fast { (64usize, 150.0) } else { (128usize, 500.0) };
     let batches: &[usize] = if pipe.fast { &[1, 4] } else { &[1, 4, 8] };
+    let dtype = crate::sparse::Dtype::F32;
     for &bt in batches {
-        for row in crate::engine::bench::step_vs_full_sweep(&params, bt, l, budget)? {
+        for row in crate::engine::bench::step_vs_full_sweep(&params, bt, l, budget, dtype)? {
             rep.push_row(vec![
                 bt.to_string(),
                 row.label,
@@ -522,6 +527,43 @@ fn serve_engine(pipe: &Pipeline) -> Result<Report> {
          L={l} forward per generated token (O(L)/token)"
     ));
     rep.note("batched step shares one packed model across sessions, striped via threadx");
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// quant_speed — format × dtype serving footprint and throughput
+// ---------------------------------------------------------------------
+
+fn quant_speed(pipe: &Pipeline) -> Result<Report> {
+    let mut rep = Report::new(
+        "quant_speed",
+        "quantized value planes: decode tokens/sec and memory per format × dtype \
+         (50% mask / 2:4 mask, m370 dims)",
+        &["Format", "Dtype", "tok/s", "vs f32", "memory_bytes", "Weights (MB)", "vs f32 mem"],
+    );
+    // Host-only like sparse_speed: wall-clock depends on shapes, formats
+    // and dtypes, not trained values.
+    let params = crate::sparse::decode::m370_bench_params();
+    let (bt, l, budget) = if pipe.fast { (2, 48, 150.0) } else { (4, 96, 500.0) };
+    for row in crate::sparse::decode::quant_sweep(&params, bt, l, budget)? {
+        rep.push_row(vec![
+            row.format.name().to_string(),
+            row.dtype.name().to_string(),
+            format!("{:.0}", row.tokens_per_sec),
+            format!("{:.2}x", row.rel_speed),
+            row.memory_bytes.to_string(),
+            format!("{:.2}", row.memory_bytes as f64 / 1e6),
+            format!("{:.2}x", row.rel_memory),
+        ]);
+    }
+    rep.note(
+        "one structure plane per format composes with every value dtype (DESIGN.md §11); \
+         i8 halves the bitmask/dense footprint at the same 50% mask",
+    );
+    rep.note(
+        "csr's u32 column indices dominate its footprint, so quantizing its values buys \
+         proportionally less than for bitmask/2:4",
+    );
     Ok(rep)
 }
 

@@ -148,6 +148,7 @@ fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<
         // Causal conv over packed taps, reading the ring buffer for past
         // positions; tap kk addresses sequence position t_pos + kk − (K−1).
         let k = layer.conv_w.cols;
+        let taps = layer.conv_w.vals.as_f32().expect("conv taps are always packed f32");
         let mut u = vec![0.0f32; di];
         for (d, uv) in u.iter_mut().enumerate() {
             let (lo, hi) = (layer.conv_w.row_ptr[d] as usize, layer.conv_w.row_ptr[d + 1] as usize);
@@ -158,7 +159,7 @@ fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<
                     let pos = t_pos + kk - (k - 1);
                     let xv =
                         if pos == t_pos { x_in[d] } else { lst.conv[(pos % (k - 1)) * di + d] };
-                    acc += layer.conv_w.vals[p] * xv;
+                    acc += taps[p] * xv;
                 }
             }
             *uv = silu(acc);

@@ -11,6 +11,7 @@ use crate::benchx::{self, BenchResult};
 use crate::model::FlatParams;
 use crate::rngx::Pcg;
 use crate::sparse::decode;
+use crate::sparse::Dtype;
 use crate::sparse::SparseModel;
 use anyhow::Result;
 
@@ -58,15 +59,17 @@ pub struct ServeRow {
 }
 
 /// Step decode vs full-recompute generation across the standard
-/// [`decode::sweep_variants`] set at batch `bt` and context length `l`.
+/// [`decode::sweep_variants`] set at batch `bt`, context length `l` and
+/// packed value dtype `dtype`.
 pub fn step_vs_full_sweep(
     params: &FlatParams,
     bt: usize,
     l: usize,
     budget_ms: f64,
+    dtype: Dtype,
 ) -> Result<Vec<ServeRow>> {
     let mut rows = Vec::new();
-    for (label, p, policy) in decode::sweep_variants(params)? {
+    for (label, p, policy) in decode::sweep_variants(params, dtype)? {
         let model = SparseModel::compile(&p, &policy)?;
         let formats = model.format_summary();
         let name = format!("step {} B={bt} L={l} [{formats}]", model.meta.name);
@@ -115,7 +118,7 @@ mod tests {
     fn sweep_covers_all_variants_and_step_wins() {
         let p = toy_flat_params_random(4, 2);
         // Even on the toy model, O(1) steps beat O(L) recompute at L=32.
-        let rows = step_vs_full_sweep(&p, 1, 32, 2.0).unwrap();
+        let rows = step_vs_full_sweep(&p, 1, 32, 2.0, Dtype::F32).unwrap();
         assert_eq!(rows.len(), 5);
         for row in &rows {
             assert!(row.step_tps > 0.0 && row.full_tps > 0.0);

@@ -37,8 +37,14 @@ SUBCOMMANDS:
       --mode full            full  = whole-sequence forward tokens/sec
                              step  = stateful step decode vs full-recompute
                                      generation (engine prefill/step path)
+      --dtype f32            packed value dtype: f32 | f16 | i8
       --batch 4  --len 128   batch size and context length
       --budget-ms 800        wall-clock budget per measurement
+      --save PATH            compile a pruned packed model (--sparsity,
+                             --dtype), checkpoint it, verify the roundtrip
+      --load PATH            load a packed checkpoint (no re-packing) and
+                             bench its decode throughput
+      --sparsity 0.5         magnitude-prune level for --save
   generate                   continuous-batching generation on the stateful
                              engine (host-only: random weights, byte vocab)
       --requests 8           queued requests
@@ -47,6 +53,7 @@ SUBCOMMANDS:
       --new 64               tokens to generate per request
       --temp 0.0             0 = greedy; >0 = temperature sampling
       --sparsity 0.5         magnitude-prune level before packing
+      --dtype f32            packed value dtype: f32 | f16 | i8
       --seed 7               RNG seed (prompts + sampling)
   help                       this text
 
@@ -152,53 +159,7 @@ fn real_main(argv: &[String]) -> Result<()> {
             print_row(cfg, &ev.metrics_row("pruned", &p, &corpora)?);
             Ok(())
         }
-        "sparse-bench" => {
-            // Host-only sparse-engine measurement: random weights at m370
-            // dims, so it runs before `make artifacts` ever has.
-            let bt = args.get_usize("batch", 4)?.max(1);
-            let len = args.get_usize("len", 128)?.max(1);
-            let budget = args.get_f64("budget-ms", if args.has("fast") { 250.0 } else { 800.0 })?;
-            let params = sparsessm::sparse::decode::m370_bench_params();
-            match args.get_or("mode", "full") {
-                "full" => {
-                    println!(
-                        "== decode throughput: dense vs packed (m370 dims, B={bt} L={len}) =="
-                    );
-                    for row in
-                        sparsessm::sparse::decode::dense_vs_sparse_sweep(&params, bt, len, budget)?
-                    {
-                        println!(
-                            "  {:<20} {:<24} {:>9.0} tok/s  {:>5.2}x  {:>7.2} MB",
-                            row.label, row.formats, row.tokens_per_sec, row.speedup, row.weight_mb
-                        );
-                    }
-                }
-                "step" => {
-                    println!(
-                        "== generation throughput: step decode vs full recompute \
-                         (m370 dims, B={bt} L={len}) =="
-                    );
-                    println!(
-                        "  {:<20} {:<24} {:>11} {:>11} {:>10}",
-                        "variant", "formats", "step tok/s", "full tok/s", "step/full"
-                    );
-                    for row in
-                        sparsessm::engine::bench::step_vs_full_sweep(&params, bt, len, budget)?
-                    {
-                        println!(
-                            "  {:<20} {:<24} {:>11.0} {:>11.1} {:>9.1}x",
-                            row.label, row.formats, row.step_tps, row.full_tps, row.advantage
-                        );
-                    }
-                    println!(
-                        "  (step = O(1)/token via engine prefill/step state; \
-                         full = O(L)/token whole-sequence recompute)"
-                    );
-                }
-                other => bail!("unknown --mode '{other}' (try: full, step)"),
-            }
-            Ok(())
-        }
+        "sparse-bench" => sparse_bench(&args),
         "generate" => generate(&args),
         "experiment" => {
             let pipe = Pipeline::new(&artifacts, &runs, args.has("fast"))?;
@@ -224,13 +185,101 @@ fn real_main(argv: &[String]) -> Result<()> {
     }
 }
 
+/// Host-only sparse-engine measurement: random weights at m370 dims, so
+/// it runs before `make artifacts` ever has.  `--dtype` picks the packed
+/// value plane for every sweep; `--save`/`--load` checkpoint a packed
+/// model with its structure + value planes written as-is.
+fn sparse_bench(args: &Args) -> Result<()> {
+    use sparsessm::sparse::compile::{magnitude_prune_all, PackPolicy};
+    use sparsessm::sparse::{decode, Dtype, SparseModel};
+
+    let bt = args.get_usize("batch", 4)?.max(1);
+    let len = args.get_usize("len", 128)?.max(1);
+    let budget = args.get_f64("budget-ms", if args.has("fast") { 250.0 } else { 800.0 })?;
+    let dtype_name = args.get_or("dtype", "f32");
+    let dtype = Dtype::parse(dtype_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --dtype '{dtype_name}' (try: f32, f16, i8)"))?;
+
+    if let Some(path) = args.get("load") {
+        let model = SparseModel::load(path)?;
+        println!(
+            "loaded {} [{}] {:.2} MB from {path} (packed planes, no re-packing)",
+            model.meta.name,
+            model.format_summary(),
+            model.memory_bytes() as f64 / 1e6
+        );
+        let (bench, tps) = decode::decode_throughput(&model, bt, len, budget, 7);
+        println!("  decode B={bt} L={len}: {tps:.0} tok/s (p50 {:.3} ms)", bench.p50_ms);
+        return Ok(());
+    }
+    if let Some(path) = args.get("save") {
+        let sparsity = args.get_f64("sparsity", 0.5)?;
+        let mut params = decode::m370_bench_params();
+        if sparsity > 0.0 {
+            magnitude_prune_all(&mut params, sparsity)?;
+        }
+        let model = SparseModel::compile(&params, &PackPolicy::auto().with_dtype(dtype))?;
+        model.save(path)?;
+        let loaded = SparseModel::load(path)?;
+        anyhow::ensure!(loaded == model, "checkpoint roundtrip drifted");
+        let bytes = std::fs::metadata(path)?.len();
+        println!(
+            "saved {} [{}] to {path}: {bytes} bytes ({:.2} MB packed), roundtrip verified",
+            model.meta.name,
+            model.format_summary(),
+            model.memory_bytes() as f64 / 1e6
+        );
+        return Ok(());
+    }
+
+    let params = decode::m370_bench_params();
+    match args.get_or("mode", "full") {
+        "full" => {
+            println!(
+                "== decode throughput: dense vs packed \
+                 (m370 dims, B={bt} L={len}, dtype {dtype_name}) =="
+            );
+            for row in decode::dense_vs_sparse_sweep(&params, bt, len, budget, dtype)? {
+                println!(
+                    "  {:<24} {:<24} {:>9.0} tok/s  {:>5.2}x  {:>7.2} MB",
+                    row.label, row.formats, row.tokens_per_sec, row.speedup, row.weight_mb
+                );
+            }
+        }
+        "step" => {
+            println!(
+                "== generation throughput: step decode vs full recompute \
+                 (m370 dims, B={bt} L={len}, dtype {dtype_name}) =="
+            );
+            println!(
+                "  {:<24} {:<24} {:>11} {:>11} {:>10}",
+                "variant", "formats", "step tok/s", "full tok/s", "step/full"
+            );
+            for row in
+                sparsessm::engine::bench::step_vs_full_sweep(&params, bt, len, budget, dtype)?
+            {
+                println!(
+                    "  {:<24} {:<24} {:>11.0} {:>11.1} {:>9.1}x",
+                    row.label, row.formats, row.step_tps, row.full_tps, row.advantage
+                );
+            }
+            println!(
+                "  (step = O(1)/token via engine prefill/step state; \
+                 full = O(L)/token whole-sequence recompute)"
+            );
+        }
+        other => bail!("unknown --mode '{other}' (try: full, step)"),
+    }
+    Ok(())
+}
+
 /// Continuous-batching generation demo on the stateful engine — random
 /// weights at m370 dims (host-only), byte-level vocab.
 fn generate(args: &Args) -> Result<()> {
     use sparsessm::engine::{Sampling, Scheduler};
     use sparsessm::rngx::Pcg;
     use sparsessm::sparse::compile::{magnitude_prune_all, PackPolicy};
-    use sparsessm::sparse::SparseModel;
+    use sparsessm::sparse::{Dtype, SparseModel};
 
     let requests = args.get_usize("requests", 8)?;
     let batch = args.get_usize("batch", 4)?.max(1);
@@ -238,13 +287,16 @@ fn generate(args: &Args) -> Result<()> {
     let new = args.get_usize("new", 64)?.max(1);
     let temp = args.get_f64("temp", 0.0)?;
     let sparsity = args.get_f64("sparsity", 0.5)?;
+    let dtype_name = args.get_or("dtype", "f32");
+    let dtype = Dtype::parse(dtype_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --dtype '{dtype_name}' (try: f32, f16, i8)"))?;
     let seed = args.get_usize("seed", 7)? as u64;
 
     let mut params = sparsessm::sparse::decode::m370_bench_params();
     if sparsity > 0.0 {
         magnitude_prune_all(&mut params, sparsity)?;
     }
-    let model = SparseModel::compile(&params, &PackPolicy::auto())?;
+    let model = SparseModel::compile(&params, &PackPolicy::auto().with_dtype(dtype))?;
     let sampling = if temp > 0.0 { Sampling::Temperature(temp) } else { Sampling::Greedy };
     println!(
         "engine: m370 dims [{}] | {requests} requests x {new} tokens, batch {batch}, {}",

@@ -7,9 +7,16 @@
 //! Blocks never cross row boundaries — each row owns
 //! `ceil(cols / 64)` blocks, so row kernels stay independent and the
 //! matmul can stripe over rows.
+//!
+//! The **structure plane** (`masks` + `block_off`) is dtype-independent;
+//! the nonzeros live in a [`ValueStore`] value plane (f32 / f16 / i8 +
+//! scales), with `row_dot` monomorphized per dtype.
+
+use super::values::{f16_to_f32, Dtype, I8_GROUP, ValueStore};
+use anyhow::{ensure, Result};
 
 /// Kernel-orientation `[rows, cols]` matrix in bitmask-block form.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BitmaskMatrix {
     pub rows: usize,
     pub cols: usize,
@@ -20,11 +27,16 @@ pub struct BitmaskMatrix {
     /// Prefix offsets into `vals`, one per block plus a terminator
     /// (`block_off[i+1] - block_off[i] == masks[i].count_ones()`).
     pub block_off: Vec<u32>,
-    pub vals: Vec<f32>,
+    pub vals: ValueStore,
 }
 
 impl BitmaskMatrix {
+    /// Pack at f32 (bit-exact with the pre-value-plane layout).
     pub fn from_dense(w: &[f32], rows: usize, cols: usize) -> BitmaskMatrix {
+        BitmaskMatrix::from_dense_dtype(w, rows, cols, Dtype::F32)
+    }
+
+    pub fn from_dense_dtype(w: &[f32], rows: usize, cols: usize, dtype: Dtype) -> BitmaskMatrix {
         assert_eq!(w.len(), rows * cols);
         let blocks_per_row = cols.div_ceil(64).max(1);
         let mut masks = Vec::with_capacity(rows * blocks_per_row);
@@ -47,15 +59,72 @@ impl BitmaskMatrix {
                 block_off.push(vals.len() as u32);
             }
         }
-        BitmaskMatrix { rows, cols, blocks_per_row, masks, block_off, vals }
+        BitmaskMatrix {
+            rows,
+            cols,
+            blocks_per_row,
+            masks,
+            block_off,
+            vals: ValueStore::encode(&vals, dtype),
+        }
     }
 
+    /// Reassemble from already-packed planes (the checkpoint load path —
+    /// no re-packing), validating structure-plane invariants.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        masks: Vec<u64>,
+        block_off: Vec<u32>,
+        vals: ValueStore,
+    ) -> Result<BitmaskMatrix> {
+        let blocks_per_row = cols.div_ceil(64).max(1);
+        // checked_mul: dims come from an untrusted file, keep the
+        // error-not-panic contract even for absurd values.
+        let n_blocks = rows.checked_mul(blocks_per_row).unwrap_or(usize::MAX);
+        ensure!(masks.len() == n_blocks, "bitmask: mask plane length");
+        ensure!(block_off.len() == masks.len() + 1, "bitmask: offset plane length");
+        ensure!(block_off.first() == Some(&0), "bitmask: block_off[0] != 0");
+        for (i, m) in masks.iter().enumerate() {
+            ensure!(
+                block_off[i + 1].wrapping_sub(block_off[i]) == m.count_ones(),
+                "bitmask: offsets disagree with popcounts at block {i}"
+            );
+        }
+        ensure!(*block_off.last().unwrap() as usize == vals.len(), "bitmask: value plane length");
+        // A row's ragged last block must not claim occupancy past `cols`
+        // (kernels index x by bit position, so a stray bit would read out
+        // of bounds; to_dense would bleed into the next row).
+        let tail = cols % 64;
+        let last_valid: u64 = if cols == 0 {
+            0
+        } else if tail == 0 {
+            u64::MAX
+        } else {
+            (1u64 << tail) - 1
+        };
+        for r in 0..rows {
+            let last = (r + 1) * blocks_per_row - 1;
+            ensure!(
+                (masks[last] & !last_valid) == 0,
+                "bitmask: occupancy bits past cols in row {r}"
+            );
+        }
+        Ok(BitmaskMatrix { rows, cols, blocks_per_row, masks, block_off, vals })
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.vals.dtype()
+    }
+
+    /// Stored nonzeros — the structure plane's count, independent of the
+    /// value dtype.
     pub fn nnz(&self) -> usize {
         self.vals.len()
     }
 
     pub fn memory_bytes(&self) -> usize {
-        self.masks.len() * 8 + self.block_off.len() * 4 + self.vals.len() * 4
+        self.masks.len() * 8 + self.block_off.len() * 4 + self.vals.memory_bytes()
     }
 
     pub fn to_dense(&self) -> Vec<f32> {
@@ -67,7 +136,7 @@ impl BitmaskMatrix {
                 let mut off = self.block_off[blk] as usize;
                 while m != 0 {
                     let k = m.trailing_zeros() as usize;
-                    w[r * self.cols + b * 64 + k] = self.vals[off];
+                    w[r * self.cols + b * 64 + k] = self.vals.get(off);
                     off += 1;
                     m &= m - 1;
                 }
@@ -78,6 +147,19 @@ impl BitmaskMatrix {
 
     #[inline]
     pub fn row_dot(&self, r: usize, x: &[f32]) -> f32 {
+        match &self.vals {
+            ValueStore::F32(v) => self.row_dot_with(r, x, |k| v[k]),
+            ValueStore::F16(v) => self.row_dot_with(r, x, |k| f16_to_f32(v[k])),
+            ValueStore::I8 { codes, scales } => {
+                self.row_dot_with(r, x, |k| codes[k] as f32 * scales[k / I8_GROUP])
+            }
+        }
+    }
+
+    /// Structure walk shared by the dtype-monomorphized kernels: `val(k)`
+    /// decodes stored slot `k` and inlines per dtype.
+    #[inline(always)]
+    fn row_dot_with<F: Fn(usize) -> f32>(&self, r: usize, x: &[f32], val: F) -> f32 {
         let mut acc = 0.0f32;
         for b in 0..self.blocks_per_row {
             let blk = r * self.blocks_per_row + b;
@@ -86,7 +168,7 @@ impl BitmaskMatrix {
             let base = b * 64;
             while m != 0 {
                 let k = m.trailing_zeros() as usize;
-                acc += self.vals[off] * x[base + k];
+                acc += val(off) * x[base + k];
                 off += 1;
                 m &= m - 1;
             }
@@ -105,12 +187,7 @@ mod tests {
     use super::*;
     use crate::rngx::Pcg;
     use crate::sparse::dense_matvec;
-
-    fn sparse_random(rng: &mut Pcg, rows: usize, cols: usize, keep: f64) -> Vec<f32> {
-        (0..rows * cols)
-            .map(|_| if rng.uniform() < keep { rng.normal() as f32 } else { 0.0 })
-            .collect()
-    }
+    use crate::sparse::testutil::sparse_random;
 
     #[test]
     fn roundtrip_exact_including_ragged_blocks() {
@@ -159,5 +236,44 @@ mod tests {
         let d = BitmaskMatrix::from_dense(&vec![1.0f32; 8], 2, 4);
         assert_eq!(d.nnz(), 8);
         assert_eq!(d.matvec(&[1.0; 4]), vec![4.0, 4.0]);
+    }
+
+    #[test]
+    fn quantized_planes_share_the_structure() {
+        let mut rng = Pcg::seeded(4);
+        let (r, c) = (9usize, 130usize);
+        let w = sparse_random(&mut rng, r, c, 0.5);
+        let f32m = BitmaskMatrix::from_dense(&w, r, c);
+        for dtype in [Dtype::F16, Dtype::I8] {
+            let q = BitmaskMatrix::from_dense_dtype(&w, r, c, dtype);
+            assert_eq!(q.dtype(), dtype);
+            assert_eq!(q.masks, f32m.masks, "{dtype:?} structure drifted");
+            assert_eq!(q.block_off, f32m.block_off);
+            assert!(q.memory_bytes() < f32m.memory_bytes());
+            let dec = q.to_dense();
+            let x: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+            let want = dense_matvec(&dec, r, c, &x);
+            for (u, v) in q.matvec(&x).iter().zip(&want) {
+                assert!((u - v).abs() < 1e-5, "{dtype:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_validates_popcounts() {
+        let mut rng = Pcg::seeded(5);
+        let w = sparse_random(&mut rng, 3, 70, 0.4);
+        let m = BitmaskMatrix::from_dense(&w, 3, 70);
+        let ok = BitmaskMatrix::from_parts(
+            3,
+            70,
+            m.masks.clone(),
+            m.block_off.clone(),
+            m.vals.clone(),
+        );
+        assert_eq!(ok.unwrap(), m);
+        let mut bad_masks = m.masks.clone();
+        bad_masks[0] ^= 1; // flip one occupancy bit: popcount now disagrees
+        assert!(BitmaskMatrix::from_parts(3, 70, bad_masks, m.block_off, m.vals).is_err());
     }
 }

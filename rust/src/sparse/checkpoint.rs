@@ -1,0 +1,495 @@
+//! Zero-copy checkpointing of packed models: [`SparseModel::save`] /
+//! [`SparseModel::load`] write a versioned flat binary in which every
+//! structure plane (row offsets, occupancy bitmasks, N:M indices) and
+//! every value plane (f32 / f16 / i8+scales) is dumped as-is, so loading
+//! reassembles the exact packed matrices **without re-packing** — no
+//! dense reconstruction, no density dispatch, no re-quantization.
+//!
+//! Layout (all integers little-endian; `vec` = u64 count + payload):
+//!
+//! ```text
+//! "SPSM" · version u32
+//! meta    — name string + the 11 dimension fields as u64
+//! head    — packed matrix (format tag + planes)
+//! norm_f  — f32 vec
+//! layers  — u64 count, then per layer:
+//!           norm · in_proj · conv_w(CSR) · conv_b · x_proj · dt_proj ·
+//!           dt_b · a_log · a · d · out_proj
+//! ```
+//!
+//! Load validates the structure-plane invariants through each format's
+//! `from_parts` (offset monotonicity, popcount agreement, index bounds),
+//! so a corrupt file fails with an error instead of a bad model.
+
+use super::values::{Dtype, I8_GROUP, ValueStore};
+use super::{BitmaskMatrix, CsrMatrix, DenseMatrix, NmMatrix, Packed, SparseLayer, SparseModel};
+use crate::model::ModelMeta;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SPSM";
+const VERSION: u32 = 1;
+
+#[derive(Default)]
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn u16s(&mut self, v: &[u16]) {
+        self.usize(v.len());
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn u32s(&mut self, v: &[u32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn u64s(&mut self, v: &[u64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn u8s(&mut self, v: &[u8]) {
+        self.usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    fn i8s(&mut self, v: &[i8]) {
+        self.usize(v.len());
+        self.buf.extend(v.iter().map(|&x| x as u8));
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(n <= self.buf.len() - self.pos, "checkpoint truncated");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    /// Element count of the next vec, pre-validated against the bytes
+    /// actually left (so a corrupt count can't trigger a huge alloc).
+    fn seq_len(&mut self, elem: usize) -> Result<usize> {
+        let n = self.usize()?;
+        let bytes = n.checked_mul(elem).unwrap_or(usize::MAX);
+        ensure!(bytes <= self.buf.len() - self.pos, "checkpoint truncated");
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.seq_len(1)?;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.seq_len(4)?;
+        let b = self.take(n * 4)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u16s(&mut self) -> Result<Vec<u16>> {
+        let n = self.seq_len(2)?;
+        let b = self.take(n * 2)?;
+        Ok(b.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.seq_len(4)?;
+        let b = self.take(n * 4)?;
+        Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.seq_len(8)?;
+        let b = self.take(n * 8)?;
+        Ok(b.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u8s(&mut self) -> Result<Vec<u8>> {
+        let n = self.seq_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn i8s(&mut self) -> Result<Vec<i8>> {
+        let n = self.seq_len(1)?;
+        Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
+    }
+}
+
+fn write_store(w: &mut Writer, s: &ValueStore) {
+    match s {
+        ValueStore::F32(v) => {
+            w.u8(0);
+            w.f32s(v);
+        }
+        ValueStore::F16(v) => {
+            w.u8(1);
+            w.u16s(v);
+        }
+        ValueStore::I8 { codes, scales } => {
+            w.u8(2);
+            w.i8s(codes);
+            w.f32s(scales);
+        }
+    }
+}
+
+fn read_store(r: &mut Reader) -> Result<ValueStore> {
+    match r.u8()? {
+        0 => Ok(ValueStore::F32(r.f32s()?)),
+        1 => Ok(ValueStore::F16(r.u16s()?)),
+        2 => {
+            let codes = r.i8s()?;
+            let scales = r.f32s()?;
+            ensure!(scales.len() == codes.len().div_ceil(I8_GROUP), "i8 scale plane length");
+            Ok(ValueStore::I8 { codes, scales })
+        }
+        t => bail!("unknown value-store tag {t}"),
+    }
+}
+
+fn write_csr(w: &mut Writer, m: &CsrMatrix) {
+    w.usize(m.rows);
+    w.usize(m.cols);
+    w.u32s(&m.row_ptr);
+    w.u32s(&m.col_idx);
+    write_store(w, &m.vals);
+}
+
+fn read_csr(r: &mut Reader) -> Result<CsrMatrix> {
+    let rows = r.usize()?;
+    let cols = r.usize()?;
+    let row_ptr = r.u32s()?;
+    let col_idx = r.u32s()?;
+    let vals = read_store(r)?;
+    CsrMatrix::from_parts(rows, cols, row_ptr, col_idx, vals)
+}
+
+fn write_packed(w: &mut Writer, p: &Packed) {
+    match p {
+        Packed::Dense(m) => {
+            w.u8(0);
+            w.usize(m.rows);
+            w.usize(m.cols);
+            write_store(w, &m.vals);
+        }
+        Packed::Csr(m) => {
+            w.u8(1);
+            write_csr(w, m);
+        }
+        Packed::Bitmask(m) => {
+            w.u8(2);
+            w.usize(m.rows);
+            w.usize(m.cols);
+            w.u64s(&m.masks);
+            w.u32s(&m.block_off);
+            write_store(w, &m.vals);
+        }
+        Packed::Nm(m) => {
+            w.u8(3);
+            w.usize(m.rows);
+            w.usize(m.cols);
+            w.usize(m.n);
+            w.usize(m.m);
+            w.usize(m.nnz());
+            w.u8s(&m.idx);
+            write_store(w, &m.vals);
+        }
+    }
+}
+
+fn read_packed(r: &mut Reader) -> Result<Packed> {
+    match r.u8()? {
+        0 => {
+            let rows = r.usize()?;
+            let cols = r.usize()?;
+            let vals = read_store(r)?;
+            Ok(Packed::Dense(DenseMatrix::from_parts(rows, cols, vals)?))
+        }
+        1 => Ok(Packed::Csr(read_csr(r)?)),
+        2 => {
+            let rows = r.usize()?;
+            let cols = r.usize()?;
+            let masks = r.u64s()?;
+            let block_off = r.u32s()?;
+            let vals = read_store(r)?;
+            Ok(Packed::Bitmask(BitmaskMatrix::from_parts(rows, cols, masks, block_off, vals)?))
+        }
+        3 => {
+            let rows = r.usize()?;
+            let cols = r.usize()?;
+            let n = r.usize()?;
+            let m = r.usize()?;
+            let nnz = r.usize()?;
+            let idx = r.u8s()?;
+            let vals = read_store(r)?;
+            Ok(Packed::Nm(NmMatrix::from_parts(rows, cols, n, m, nnz, idx, vals)?))
+        }
+        t => bail!("unknown packed-format tag {t}"),
+    }
+}
+
+fn write_meta(w: &mut Writer, meta: &ModelMeta) {
+    w.str(&meta.name);
+    for v in [
+        meta.n_layer,
+        meta.d_model,
+        meta.d_inner,
+        meta.d_state,
+        meta.dt_rank,
+        meta.d_conv,
+        meta.vocab,
+        meta.seq_len,
+        meta.batch_train,
+        meta.batch_eval,
+        meta.batch_calib,
+    ] {
+        w.usize(v);
+    }
+}
+
+fn read_meta(r: &mut Reader) -> Result<ModelMeta> {
+    let name = r.str()?;
+    let mut dims = [0usize; 11];
+    for d in &mut dims {
+        *d = r.usize()?;
+    }
+    Ok(ModelMeta {
+        name,
+        n_layer: dims[0],
+        d_model: dims[1],
+        d_inner: dims[2],
+        d_state: dims[3],
+        dt_rank: dims[4],
+        d_conv: dims[5],
+        vocab: dims[6],
+        seq_len: dims[7],
+        batch_train: dims[8],
+        batch_eval: dims[9],
+        batch_calib: dims[10],
+    })
+}
+
+impl SparseModel {
+    /// Write the packed model as a versioned flat binary (structure +
+    /// value planes as-is — the ROADMAP's "zero-copy checkpoint").
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let mut w = Writer::default();
+        w.buf.extend_from_slice(MAGIC);
+        w.u32(VERSION);
+        write_meta(&mut w, &self.meta);
+        write_packed(&mut w, &self.head);
+        w.f32s(&self.norm_f);
+        w.usize(self.layers.len());
+        for l in &self.layers {
+            w.f32s(&l.norm);
+            write_packed(&mut w, &l.in_proj);
+            write_csr(&mut w, &l.conv_w);
+            w.f32s(&l.conv_b);
+            write_packed(&mut w, &l.x_proj);
+            write_packed(&mut w, &l.dt_proj);
+            w.f32s(&l.dt_b);
+            write_packed(&mut w, &l.a_log);
+            w.f32s(&l.a);
+            w.f32s(&l.d);
+            write_packed(&mut w, &l.out_proj);
+        }
+        let path = path.as_ref();
+        std::fs::write(path, &w.buf)
+            .with_context(|| format!("writing checkpoint {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`SparseModel::save`], reassembling
+    /// the packed planes directly (no re-packing).
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<SparseModel> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let mut r = Reader { buf: &bytes, pos: 0 };
+        ensure!(r.take(4)? == MAGIC.as_slice(), "not a SparseModel checkpoint (bad magic)");
+        let version = r.u32()?;
+        ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let meta = read_meta(&mut r)?;
+        let head = read_packed(&mut r)?;
+        // The serving kernels rely on compile-time invariants a corrupt
+        // file could violate: the tied head is a dense f32 matrix at
+        // [vocab, d_model] (embed_row slices its raw plane), and conv
+        // taps stay f32 (the step/decode conv reads them as a slice).
+        ensure!(
+            matches!(&head, Packed::Dense(m) if m.vals.as_f32().is_some()),
+            "checkpoint head must be a dense f32 matrix (tied embedding)"
+        );
+        ensure!(
+            head.rows() == meta.vocab && head.cols() == meta.d_model,
+            "checkpoint head dims disagree with meta"
+        );
+        let norm_f = r.f32s()?;
+        let n_layers = r.usize()?;
+        ensure!(n_layers == meta.n_layer, "layer count disagrees with meta");
+        ensure!(n_layers <= 1 << 20, "implausible layer count {n_layers}");
+        let mut layers = Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            let layer = SparseLayer {
+                norm: r.f32s()?,
+                in_proj: read_packed(&mut r)?,
+                conv_w: read_csr(&mut r)?,
+                conv_b: r.f32s()?,
+                x_proj: read_packed(&mut r)?,
+                dt_proj: read_packed(&mut r)?,
+                dt_b: r.f32s()?,
+                a_log: read_packed(&mut r)?,
+                a: r.f32s()?,
+                d: r.f32s()?,
+                out_proj: read_packed(&mut r)?,
+            };
+            ensure!(
+                layer.conv_w.dtype() == Dtype::F32,
+                "layer {li}: conv taps must be packed f32"
+            );
+            layers.push(layer);
+        }
+        ensure!(r.pos == bytes.len(), "trailing bytes in checkpoint");
+        Ok(SparseModel { meta, head, layers, norm_f })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::toy::toy_flat_params_random;
+    use crate::sparse::compile::{magnitude_prune_all, PackPolicy};
+    use crate::sparse::{Dtype, Format};
+    use std::path::PathBuf;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("sparsessm-ckpt-{}-{tag}.spsm", std::process::id()))
+    }
+
+    #[test]
+    fn save_load_roundtrips_every_policy() {
+        let mut p = toy_flat_params_random(4, 7);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        let policies = [
+            PackPolicy::auto(),
+            PackPolicy::dense(),
+            PackPolicy::of(Format::Csr),
+            PackPolicy::auto().with_dtype(Dtype::F16),
+            PackPolicy::of(Format::Bitmask).with_dtype(Dtype::I8),
+        ];
+        for (i, policy) in policies.iter().enumerate() {
+            let model = SparseModel::compile(&p, policy).unwrap();
+            let path = tmp_path(&format!("policy{i}"));
+            model.save(&path).unwrap();
+            let loaded = SparseModel::load(&path).unwrap();
+            std::fs::remove_file(&path).unwrap();
+            assert_eq!(loaded, model, "policy {i} drifted through save/load");
+            assert_eq!(loaded.memory_bytes(), model.memory_bytes());
+            assert_eq!(loaded.format_summary(), model.format_summary());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let p = toy_flat_params_random(4, 8);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let path = tmp_path("magic");
+        model.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        let err = SparseModel::load(&path).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        bytes[0] = b'S';
+        bytes[4] = 99; // version
+        std::fs::write(&path, &bytes).unwrap();
+        let err = SparseModel::load(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let p = toy_flat_params_random(4, 9);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let path = tmp_path("trunc");
+        model.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(SparseModel::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn store_tags_roundtrip() {
+        for store in [
+            ValueStore::encode(&[1.0, -2.0, 0.0], Dtype::F32),
+            ValueStore::encode(&[1.0, -2.0, 0.0], Dtype::F16),
+            ValueStore::encode(&[1.0, -2.0, 0.0], Dtype::I8),
+        ] {
+            let mut w = Writer::default();
+            write_store(&mut w, &store);
+            let mut r = Reader { buf: &w.buf, pos: 0 };
+            assert_eq!(read_store(&mut r).unwrap(), store);
+            assert_eq!(r.pos, w.buf.len());
+        }
+    }
+}

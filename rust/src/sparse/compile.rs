@@ -11,29 +11,38 @@
 //! touches every (channel, state) pair regardless of the mask — only
 //! structured d_state surgery shrinks the scan, exactly as in the paper.
 //!
+//! The [`PackPolicy`] carries both planes of the decision: which
+//! **structure** (format, or density dispatch) and which **value dtype**
+//! (f32 / f16 / i8+scales, DESIGN.md §11).  The dtype covers the five
+//! packed projections; the conv taps and the tied head stay f32 (together
+//! they are a rounding error of the footprint, and the step kernel and
+//! `embed_row` rely on raw f32 slices), as do the small dense vectors.
+//!
 //! Masks can be passed explicitly ([`SparseModel::compile_with_masks`]) or
 //! inferred from exact zeros ([`SparseModel::compile`]) — the latter is
 //! the common case since every `pruning` method applies its mask in place.
 
-use super::{CsrMatrix, DenseMatrix, Format, Packed};
+use super::{CsrMatrix, DenseMatrix, Dtype, Format, Packed};
 use crate::coordinator::transpose;
 use crate::model::{FlatParams, ModelMeta, FFN_MODULES};
 use crate::pruning::{magnitude, Mask};
 use anyhow::Result;
 use std::collections::BTreeMap;
 
-/// How to pack each prunable tensor.
+/// How to pack each prunable tensor: structure plane × value dtype.
 #[derive(Debug, Clone, Default)]
 pub struct PackPolicy {
     /// `None` = density-based dispatch ([`Packed::pack`]); `Some(fmt)`
     /// forces one format (with the documented N:M fallback).
     pub force: Option<Format>,
+    /// Value-plane storage dtype for the packed projections.
+    pub dtype: Dtype,
 }
 
 impl PackPolicy {
-    /// Density-dispatched packing (the deployment default).
+    /// Density-dispatched f32 packing (the deployment default).
     pub fn auto() -> PackPolicy {
-        PackPolicy { force: None }
+        PackPolicy { force: None, dtype: Dtype::F32 }
     }
 
     /// Everything dense — the baseline the speedups are measured against,
@@ -43,23 +52,30 @@ impl PackPolicy {
     }
 
     pub fn of(fmt: Format) -> PackPolicy {
-        PackPolicy { force: Some(fmt) }
+        PackPolicy { force: Some(fmt), dtype: Dtype::F32 }
+    }
+
+    /// Same structure decision, values stored at `dtype`.
+    pub fn with_dtype(mut self, dtype: Dtype) -> PackPolicy {
+        self.dtype = dtype;
+        self
     }
 
     fn pack(&self, w: &[f32], rows: usize, cols: usize) -> Packed {
         match self.force {
-            Some(fmt) => Packed::pack_as(w, rows, cols, fmt),
-            None => Packed::pack(w, rows, cols),
+            Some(fmt) => Packed::pack_as_dtype(w, rows, cols, fmt, self.dtype),
+            None => Packed::pack_dtype(w, rows, cols, self.dtype),
         }
     }
 }
 
 /// One Mamba block with packed weights (kernel orientation noted per field).
+#[derive(Debug, Clone, PartialEq)]
 pub struct SparseLayer {
     pub norm: Vec<f32>,
     /// `[2·d_inner, d_model]`
     pub in_proj: Packed,
-    /// `[d_inner, d_conv]` — depthwise taps, always CSR.
+    /// `[d_inner, d_conv]` — depthwise taps, always CSR with f32 values.
     pub conv_w: CsrMatrix,
     pub conv_b: Vec<f32>,
     /// `[dt_rank + 2·d_state, d_inner]`
@@ -77,11 +93,12 @@ pub struct SparseLayer {
 }
 
 /// A compiled, packed model ready for the native decode path.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SparseModel {
     pub meta: ModelMeta,
     /// Tied embedding/LM head, stored once: row-major `[vocab, d_model]`
     /// serves both the token gather ([`SparseModel::embed_row`]) and the
-    /// head matmul (it is already kernel orientation).
+    /// head matmul (it is already kernel orientation).  Always dense f32.
     pub head: Packed,
     pub layers: Vec<SparseLayer>,
     pub norm_f: Vec<f32>,
@@ -121,8 +138,11 @@ impl SparseModel {
     pub fn embed_row(&self, v: usize) -> &[f32] {
         let dm = self.meta.d_model;
         match &self.head {
-            Packed::Dense(m) => &m.vals[v * dm..(v + 1) * dm],
-            // compile always builds a dense head (it is unpruned + tied).
+            // compile always builds a dense f32 head (unpruned + tied).
+            Packed::Dense(m) => {
+                let vals = m.vals.as_f32().expect("tied head is always f32");
+                &vals[v * dm..(v + 1) * dm]
+            }
             _ => unreachable!("tied head is always dense"),
         }
     }
@@ -171,12 +191,17 @@ impl SparseModel {
         (meta.vocab * meta.d_model + meta.n_layer * per_layer + meta.d_model) * 4
     }
 
-    /// Count of packed projections per format, e.g. `"csr×12 dense×3"`.
+    /// Count of packed projections per format (and non-f32 dtype), e.g.
+    /// `"csr×12 dense×3"` or `"bitmask/i8×15"`.
     pub fn format_summary(&self) -> String {
-        let mut counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+        let mut counts: BTreeMap<String, usize> = BTreeMap::new();
         for l in &self.layers {
             for p in [&l.in_proj, &l.x_proj, &l.dt_proj, &l.a_log, &l.out_proj] {
-                *counts.entry(p.format().name()).or_insert(0) += 1;
+                let key = match p.dtype() {
+                    Dtype::F32 => p.format().name().to_string(),
+                    dt => format!("{}/{}", p.format().name(), dt.name()),
+                };
+                *counts.entry(key).or_insert(0) += 1;
             }
         }
         counts
@@ -331,5 +356,49 @@ mod tests {
                 assert!((av + lv.exp()).abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn dtype_policy_quantizes_projections_only() {
+        let mut p = toy_flat_params_random(4, 5);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        let f32m = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        for dtype in [Dtype::F16, Dtype::I8] {
+            let q = SparseModel::compile(&p, &PackPolicy::auto().with_dtype(dtype)).unwrap();
+            for (lq, lf) in q.layers.iter().zip(&f32m.layers) {
+                for (pq, pf) in [
+                    (&lq.in_proj, &lf.in_proj),
+                    (&lq.x_proj, &lf.x_proj),
+                    (&lq.dt_proj, &lf.dt_proj),
+                    (&lq.a_log, &lf.a_log),
+                    (&lq.out_proj, &lf.out_proj),
+                ] {
+                    assert_eq!(pq.dtype(), dtype);
+                    // Same structure decision as the f32 policy.
+                    assert_eq!(pq.format(), pf.format());
+                }
+                // Conv taps, head and the dense vectors stay f32.
+                assert_eq!(lq.conv_w, lf.conv_w);
+                assert_eq!(lq.a, lf.a);
+            }
+            assert_eq!(q.head, f32m.head);
+            assert!(q.memory_bytes() < f32m.memory_bytes(), "{dtype:?}");
+            assert!(q.format_summary().contains(dtype.name()), "{}", q.format_summary());
+        }
+    }
+
+    #[test]
+    fn i8_model_memory_halves_at_50pct_m370_dims() {
+        // The acceptance bar: same 50% mask, bitmask structure (the auto
+        // pick at that density), i8 values < 0.5× the f32 footprint.
+        use crate::model::toy::{custom_flat_params_random, m370_dims_meta};
+        let mut p = custom_flat_params_random(m370_dims_meta(), 42, 0.05);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        let f32m = SparseModel::compile(&p, &PackPolicy::of(Format::Bitmask)).unwrap();
+        let i8m =
+            SparseModel::compile(&p, &PackPolicy::of(Format::Bitmask).with_dtype(Dtype::I8))
+                .unwrap();
+        let ratio = i8m.memory_bytes() as f64 / f32m.memory_bytes() as f64;
+        assert!(ratio < 0.5, "i8/f32 memory ratio {ratio:.3}");
     }
 }

@@ -5,20 +5,32 @@
 //! below 2³² elements, and halving index bandwidth is half the point of
 //! packing.  Zeros are implicit: `from_dense` treats exact `0.0` as
 //! pruned, matching how `pruning::Mask::apply` records decisions.
+//!
+//! The **structure plane** (`row_ptr` + `col_idx`) is dtype-independent;
+//! the nonzeros live in a [`ValueStore`] value plane (f32 / f16 / i8 +
+//! scales), with `row_dot` monomorphized per dtype.
+
+use super::values::{f16_to_f32, Dtype, I8_GROUP, ValueStore};
+use anyhow::{ensure, Result};
 
 /// Row-major CSR matrix in kernel orientation `[rows=out, cols=in]`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CsrMatrix {
     pub rows: usize,
     pub cols: usize,
     /// `row_ptr[r]..row_ptr[r+1]` spans row `r` in `col_idx`/`vals`.
     pub row_ptr: Vec<u32>,
     pub col_idx: Vec<u32>,
-    pub vals: Vec<f32>,
+    pub vals: ValueStore,
 }
 
 impl CsrMatrix {
+    /// Pack at f32 (bit-exact with the pre-value-plane layout).
     pub fn from_dense(w: &[f32], rows: usize, cols: usize) -> CsrMatrix {
+        CsrMatrix::from_dense_dtype(w, rows, cols, Dtype::F32)
+    }
+
+    pub fn from_dense_dtype(w: &[f32], rows: usize, cols: usize, dtype: Dtype) -> CsrMatrix {
         assert_eq!(w.len(), rows * cols);
         assert!(cols < u32::MAX as usize && w.len() < u32::MAX as usize);
         let mut row_ptr = Vec::with_capacity(rows + 1);
@@ -34,11 +46,35 @@ impl CsrMatrix {
             }
             row_ptr.push(vals.len() as u32);
         }
-        CsrMatrix { rows, cols, row_ptr, col_idx, vals }
+        CsrMatrix { rows, cols, row_ptr, col_idx, vals: ValueStore::encode(&vals, dtype) }
     }
 
+    /// Reassemble from already-packed planes (the checkpoint load path —
+    /// no re-packing), validating structure-plane invariants.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<u32>,
+        col_idx: Vec<u32>,
+        vals: ValueStore,
+    ) -> Result<CsrMatrix> {
+        ensure!(rows < usize::MAX && row_ptr.len() == rows + 1, "csr: row_ptr length");
+        ensure!(row_ptr.first() == Some(&0), "csr: row_ptr[0] != 0");
+        ensure!(row_ptr.windows(2).all(|w| w[0] <= w[1]), "csr: row_ptr not monotone");
+        ensure!(*row_ptr.last().unwrap() as usize == col_idx.len(), "csr: col_idx length");
+        ensure!(col_idx.len() == vals.len(), "csr: value plane length");
+        ensure!(col_idx.iter().all(|&c| (c as usize) < cols), "csr: column index out of range");
+        Ok(CsrMatrix { rows, cols, row_ptr, col_idx, vals })
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.vals.dtype()
+    }
+
+    /// Stored nonzeros — the structure plane's count, independent of the
+    /// value dtype.
     pub fn nnz(&self) -> usize {
-        self.vals.len()
+        self.col_idx.len()
     }
 
     pub fn density(&self) -> f64 {
@@ -51,7 +87,7 @@ impl CsrMatrix {
     }
 
     pub fn memory_bytes(&self) -> usize {
-        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.vals.len() * 4
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.vals.memory_bytes()
     }
 
     pub fn to_dense(&self) -> Vec<f32> {
@@ -59,7 +95,7 @@ impl CsrMatrix {
         for r in 0..self.rows {
             let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
             for k in lo..hi {
-                w[r * self.cols + self.col_idx[k] as usize] = self.vals[k];
+                w[r * self.cols + self.col_idx[k] as usize] = self.vals.get(k);
             }
         }
         w
@@ -67,10 +103,23 @@ impl CsrMatrix {
 
     #[inline]
     pub fn row_dot(&self, r: usize, x: &[f32]) -> f32 {
+        match &self.vals {
+            ValueStore::F32(v) => self.row_dot_with(r, x, |k| v[k]),
+            ValueStore::F16(v) => self.row_dot_with(r, x, |k| f16_to_f32(v[k])),
+            ValueStore::I8 { codes, scales } => {
+                self.row_dot_with(r, x, |k| codes[k] as f32 * scales[k / I8_GROUP])
+            }
+        }
+    }
+
+    /// Structure walk shared by the dtype-monomorphized kernels: `val(k)`
+    /// decodes stored slot `k` and inlines per dtype.
+    #[inline(always)]
+    fn row_dot_with<F: Fn(usize) -> f32>(&self, r: usize, x: &[f32], val: F) -> f32 {
         let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
         let mut acc = 0.0f32;
         for k in lo..hi {
-            acc += self.vals[k] * x[self.col_idx[k] as usize];
+            acc += val(k) * x[self.col_idx[k] as usize];
         }
         acc
     }
@@ -86,12 +135,7 @@ mod tests {
     use super::*;
     use crate::rngx::Pcg;
     use crate::sparse::dense_matvec;
-
-    fn sparse_random(rng: &mut Pcg, rows: usize, cols: usize, keep: f64) -> Vec<f32> {
-        (0..rows * cols)
-            .map(|_| if rng.uniform() < keep { rng.normal() as f32 } else { 0.0 })
-            .collect()
-    }
+    use crate::sparse::testutil::sparse_random;
 
     #[test]
     fn roundtrip_exact() {
@@ -134,5 +178,45 @@ mod tests {
         let w = sparse_random(&mut rng, r, c, 0.05);
         let m = CsrMatrix::from_dense(&w, r, c);
         assert!(m.memory_bytes() < r * c * 4 / 2);
+    }
+
+    #[test]
+    fn quantized_planes_share_the_structure() {
+        let mut rng = Pcg::seeded(4);
+        let (r, c) = (13usize, 90usize);
+        let w = sparse_random(&mut rng, r, c, 0.3);
+        let f32m = CsrMatrix::from_dense(&w, r, c);
+        for dtype in [Dtype::F16, Dtype::I8] {
+            let q = CsrMatrix::from_dense_dtype(&w, r, c, dtype);
+            assert_eq!(q.dtype(), dtype);
+            assert_eq!(q.row_ptr, f32m.row_ptr, "{dtype:?} structure drifted");
+            assert_eq!(q.col_idx, f32m.col_idx);
+            assert_eq!(q.nnz(), f32m.nnz());
+            assert!(q.memory_bytes() < f32m.memory_bytes());
+            // matvec must use exactly the decoded value plane.
+            let dec = q.to_dense();
+            let x: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+            let want = dense_matvec(&dec, r, c, &x);
+            for (u, v) in q.matvec(&x).iter().zip(&want) {
+                assert!((u - v).abs() < 1e-5, "{dtype:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_validates_planes() {
+        let w = vec![1.0f32, 0.0, 2.0, 3.0];
+        let m = CsrMatrix::from_dense(&w, 2, 2);
+        let ok = CsrMatrix::from_parts(2, 2, m.row_ptr.clone(), m.col_idx.clone(), m.vals.clone());
+        assert_eq!(ok.unwrap(), m);
+        // Mismatched value-plane length must be rejected.
+        let bad = CsrMatrix::from_parts(
+            2,
+            2,
+            m.row_ptr.clone(),
+            m.col_idx.clone(),
+            ValueStore::encode(&[1.0], Dtype::F32),
+        );
+        assert!(bad.is_err());
     }
 }

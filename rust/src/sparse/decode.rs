@@ -10,13 +10,16 @@
 //!       → rmsnorm → tied head
 //! ```
 //!
-//! (* = sparsity-aware matmul/conv.)  The recurrence itself stays dense
-//! over `d_state` — masked `A_log` zeros decay states (`A = -e⁰ = -1`)
-//! rather than skip them, matching the paper's masked semantics, so the
-//! wall-clock win comes from the projections, which dominate FLOPs.
+//! (* = sparsity-aware matmul/conv, at any value dtype.)  The recurrence
+//! itself stays dense over `d_state` — masked `A_log` zeros decay states
+//! (`A = -e⁰ = -1`) rather than skip them, matching the paper's masked
+//! semantics, so the wall-clock win comes from the projections, which
+//! dominate FLOPs.
 
 use super::compile::{apply_nm_along_input, magnitude_prune_all, PackPolicy, SparseModel};
+use super::values::Dtype;
 use super::CsrMatrix;
+use super::Format;
 use crate::benchx::{self, BenchResult};
 use crate::model::toy::{custom_flat_params_random, m370_dims_meta};
 use crate::model::FlatParams;
@@ -25,9 +28,9 @@ use crate::ssm::{selective_scan, SsmInputs};
 use anyhow::Result;
 
 /// The shared host-only bench model: random weights at real m370 widths,
-/// one seed/scale so the CLI `sparse-bench`, the `sparse_speed`
-/// experiment, `cargo bench` and `examples/sparse_speedup.rs` all
-/// measure the same parameters.
+/// one seed/scale so the CLI `sparse-bench`, the `sparse_speed` and
+/// `quant_speed` experiments, `cargo bench` and
+/// `examples/sparse_speedup.rs` all measure the same parameters.
 pub fn m370_bench_params() -> FlatParams {
     custom_flat_params_random(m370_dims_meta(), 42, 0.05)
 }
@@ -64,7 +67,8 @@ pub(crate) fn rmsnorm(x: &[f32], w: &[f32], dm: usize) -> Vec<f32> {
 }
 
 /// Depthwise causal conv over packed taps, fused with SiLU.  CSR row
-/// iteration visits only surviving taps; pruned taps cost nothing.
+/// iteration visits only surviving taps; pruned taps cost nothing.  The
+/// tap value plane stays f32 by compile-time invariant.
 pub(crate) fn conv1d_causal_silu(
     w: &CsrMatrix,
     bias: &[f32],
@@ -76,6 +80,7 @@ pub(crate) fn conv1d_causal_silu(
     let k = w.cols;
     debug_assert_eq!(w.rows, di);
     debug_assert_eq!(x.len(), bt * l * di);
+    let taps = w.vals.as_f32().expect("conv taps are always packed f32");
     let mut out = vec![0.0f32; bt * l * di];
     for b in 0..bt {
         for t in 0..l {
@@ -88,7 +93,7 @@ pub(crate) fn conv1d_causal_silu(
                     // first K-1 positions are implicit zero padding.
                     let tt = t + w.col_idx[p] as usize;
                     if tt >= k - 1 {
-                        acc += w.vals[p] * x[(b * l + tt - (k - 1)) * di + d];
+                        acc += taps[p] * x[(b * l + tt - (k - 1)) * di + d];
                     }
                 }
                 out[o + d] = silu(acc);
@@ -212,9 +217,11 @@ pub type SweepVariant = (String, FlatParams, PackPolicy);
 
 /// The standard serving-bench variants over `params`: dense baseline,
 /// masked-dense (showing masks alone buy nothing), packed at 50%,
-/// 2:4-packed, CSR-dominated at 90%.  Shared by the full-recompute sweep
-/// below and the engine's step-decode sweep (`engine::bench`).
-pub fn sweep_variants(params: &FlatParams) -> Result<Vec<SweepVariant>> {
+/// 2:4-packed, CSR-dominated at 90%.  Every packed variant stores its
+/// values at `dtype` (the dense f32 baseline is left untouched so
+/// speedups stay anchored).  Shared by the full-recompute sweep below
+/// and the engine's step-decode sweep (`engine::bench`).
+pub fn sweep_variants(params: &FlatParams, dtype: Dtype) -> Result<Vec<SweepVariant>> {
     let prune_all = |sparsity: f64| -> Result<FlatParams> {
         let mut p = params.clone();
         magnitude_prune_all(&mut p, sparsity)?;
@@ -223,26 +230,33 @@ pub fn sweep_variants(params: &FlatParams) -> Result<Vec<SweepVariant>> {
     let mut nm = params.clone();
     apply_nm_along_input(&mut nm, 2, 4)?;
     let half = prune_all(0.5)?;
+    let tag = |label: &str| -> String {
+        match dtype {
+            Dtype::F32 => label.to_string(),
+            dt => format!("{label} {}", dt.name()),
+        }
+    };
     Ok(vec![
         ("dense 0%".to_string(), params.clone(), PackPolicy::dense()),
         ("masked-dense 50%".to_string(), half.clone(), PackPolicy::dense()),
-        ("packed 50% (auto)".to_string(), half, PackPolicy::auto()),
-        ("packed 2:4 (auto)".to_string(), nm, PackPolicy::auto()),
-        ("packed 90% (auto)".to_string(), prune_all(0.9)?, PackPolicy::auto()),
+        (tag("packed 50% (auto)"), half, PackPolicy::auto().with_dtype(dtype)),
+        (tag("packed 2:4 (auto)"), nm, PackPolicy::auto().with_dtype(dtype)),
+        (tag("packed 90% (auto)"), prune_all(0.9)?, PackPolicy::auto().with_dtype(dtype)),
     ])
 }
 
 /// The standard dense-vs-sparse decode sweep over `params` (the
-/// [`sweep_variants`] set).  Shared by the CLI `sparse-bench` subcommand,
-/// the `sparse_speed` experiment, `cargo bench` and
+/// [`sweep_variants`] set at `dtype`).  Shared by the CLI `sparse-bench`
+/// subcommand, the `sparse_speed` experiment, `cargo bench` and
 /// `examples/sparse_speedup.rs`.
 pub fn dense_vs_sparse_sweep(
     params: &FlatParams,
     bt: usize,
     l: usize,
     budget_ms: f64,
+    dtype: Dtype,
 ) -> Result<Vec<SweepRow>> {
-    let variants = sweep_variants(params)?;
+    let variants = sweep_variants(params, dtype)?;
     let mut rows: Vec<SweepRow> = Vec::with_capacity(variants.len());
     let mut dense_tps = 0.0;
     for (label, p, policy) in variants {
@@ -259,6 +273,64 @@ pub fn dense_vs_sparse_sweep(
             weight_mb: model.memory_bytes() as f64 / 1e6,
             bench,
         });
+    }
+    Ok(rows)
+}
+
+/// One row of the format×dtype quantization sweep.
+pub struct QuantRow {
+    pub format: Format,
+    pub dtype: Dtype,
+    pub tokens_per_sec: f64,
+    pub memory_bytes: usize,
+    /// Throughput relative to the f32 row of the same format.
+    pub rel_speed: f64,
+    /// `memory_bytes` relative to the f32 row of the same format.
+    pub rel_memory: f64,
+    pub bench: BenchResult,
+}
+
+/// The `quant_speed` sweep: decode tokens/sec and `memory_bytes` for
+/// every packed format × value dtype on one 50%-pruned model (the 2:4
+/// rows use the N:M-masked variant of the same parameters).  Shared by
+/// the `quant_speed` experiment and the `quant_speed` bench group.
+pub fn quant_sweep(
+    params: &FlatParams,
+    bt: usize,
+    l: usize,
+    budget_ms: f64,
+) -> Result<Vec<QuantRow>> {
+    let mut half = params.clone();
+    magnitude_prune_all(&mut half, 0.5)?;
+    let mut nm = params.clone();
+    apply_nm_along_input(&mut nm, 2, 4)?;
+    let mut rows = Vec::new();
+    for (fmt, p) in [
+        (Format::Dense, &half),
+        (Format::Bitmask, &half),
+        (Format::Csr, &half),
+        (Format::Nm, &nm),
+    ] {
+        let mut f32_tps = 0.0f64;
+        let mut f32_mem = 0usize;
+        for dtype in Dtype::ALL {
+            let model = SparseModel::compile(p, &PackPolicy::of(fmt).with_dtype(dtype))?;
+            let (bench, tps) = decode_throughput(&model, bt, l, budget_ms, 7);
+            let mem = model.memory_bytes();
+            if dtype == Dtype::F32 {
+                f32_tps = tps;
+                f32_mem = mem;
+            }
+            rows.push(QuantRow {
+                format: fmt,
+                dtype,
+                tokens_per_sec: tps,
+                memory_bytes: mem,
+                rel_speed: tps / f32_tps,
+                rel_memory: mem as f64 / f32_mem as f64,
+                bench,
+            });
+        }
     }
     Ok(rows)
 }
@@ -296,11 +368,41 @@ mod tests {
     #[test]
     fn sweep_produces_all_variants() {
         let p = toy_flat_params_random(4, 3);
-        let rows = dense_vs_sparse_sweep(&p, 1, 8, 1.0).unwrap();
+        let rows = dense_vs_sparse_sweep(&p, 1, 8, 1.0, Dtype::F32).unwrap();
         assert_eq!(rows.len(), 5);
         assert!((rows[0].speedup - 1.0).abs() < 1e-12);
         assert!(rows.iter().all(|r| r.tokens_per_sec > 0.0));
         // 90% CSR variant must store less than the dense baseline.
         assert!(rows[4].weight_mb < rows[0].weight_mb);
+    }
+
+    #[test]
+    fn quantized_sweep_keeps_the_dense_anchor() {
+        let p = toy_flat_params_random(4, 4);
+        let rows = dense_vs_sparse_sweep(&p, 1, 6, 1.0, Dtype::I8).unwrap();
+        assert_eq!(rows.len(), 5);
+        assert!((rows[0].speedup - 1.0).abs() < 1e-12);
+        // Packed variants advertise the dtype; the dense baseline doesn't.
+        assert!(rows[2].label.contains("i8"));
+        assert!(!rows[0].label.contains("i8"));
+        assert!(rows[2].formats.contains("i8"), "{}", rows[2].formats);
+    }
+
+    #[test]
+    fn quant_sweep_covers_formats_times_dtypes() {
+        let p = toy_flat_params_random(4, 5);
+        let rows = quant_sweep(&p, 1, 6, 1.0).unwrap();
+        assert_eq!(rows.len(), 12); // 4 formats × 3 dtypes
+        for row in &rows {
+            assert!(row.tokens_per_sec > 0.0);
+            assert!(row.memory_bytes > 0);
+            if row.dtype == Dtype::F32 {
+                assert!((row.rel_speed - 1.0).abs() < 1e-12);
+                assert!((row.rel_memory - 1.0).abs() < 1e-12);
+            } else {
+                // Quantized planes never cost more than f32 ones.
+                assert!(row.rel_memory < 1.0, "{:?}/{:?}", row.format, row.dtype);
+            }
+        }
     }
 }

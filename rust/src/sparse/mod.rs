@@ -1,5 +1,5 @@
 //! Sparse execution engine: packed weight formats and sparsity-aware
-//! kernels, so pruned models actually run faster (DESIGN.md §9).
+//! kernels, so pruned models actually run faster (DESIGN.md §9, §11).
 //!
 //! Mask-based pruning (unstructured, N:M) zeroes weights but the dense
 //! kernels still multiply by every zero — only structured d_state surgery
@@ -12,10 +12,16 @@
 //! * [`nm`]       — N:M-packed layout (values + 2-bit-ish group indices)
 //!                  specialized for the 2:4 masks
 //!                  `pruning::semistructured` emits.
+//! * [`values`]   — the value planes: every format stores its nonzeros
+//!                  in a [`ValueStore`] (f32 / f16 / i8+scales), split
+//!                  from the dtype-independent structure planes.
 //! * [`compile`]  — [`SparseModel`]: pack a pruned [`crate::model::FlatParams`]
 //!                  (all five FFN projections + `A_log`) once, serve many.
 //! * [`decode`]   — the native pruned-decode path: packed projections
 //!                  chained with [`crate::ssm::selective_scan`] end-to-end.
+//! * [`checkpoint`] — versioned flat-binary save/load of a packed
+//!                  [`SparseModel`] (planes written as-is, no re-packing).
+//! * [`testutil`] — shared random-matrix generators for tests/benches.
 //!
 //! All packed matrices live in **kernel orientation** `[out_rows, in_cols]`
 //! (`y[r] = Σ_c M[r,c]·x[c]`), i.e. the transpose of the `x @ W` storage
@@ -28,17 +34,22 @@
 //! on anything is always safe.
 
 pub mod bitmask;
+pub mod checkpoint;
 pub mod compile;
 pub mod csr;
 pub mod decode;
 pub mod nm;
+pub mod testutil;
+pub mod values;
 
 pub use bitmask::BitmaskMatrix;
 pub use compile::{PackPolicy, SparseLayer, SparseModel};
 pub use csr::CsrMatrix;
 pub use nm::NmMatrix;
+pub use values::{Dtype, ValueStore};
 
 use crate::threadx;
+use values::{f16_to_f32, I8_GROUP};
 
 /// Above this density CSR's index indirection costs more than it saves.
 pub const CSR_MAX_DENSITY: f64 = 0.2;
@@ -74,32 +85,73 @@ impl Format {
 }
 
 /// Plain row-major matrix wrapped in the same kernel interface, used as
-/// the dispatcher's fallback and as the speed baseline in benches.
-#[derive(Debug, Clone)]
+/// the dispatcher's fallback and as the speed baseline in benches.  Its
+/// structure plane is trivial (every slot stored), but the value plane
+/// still composes with any dtype.
+#[derive(Debug, Clone, PartialEq)]
 pub struct DenseMatrix {
     pub rows: usize,
     pub cols: usize,
-    pub vals: Vec<f32>,
+    pub vals: ValueStore,
 }
 
 impl DenseMatrix {
+    /// Pack at f32 (bit-exact with the pre-value-plane layout).
     pub fn from_dense(w: &[f32], rows: usize, cols: usize) -> DenseMatrix {
+        DenseMatrix::from_dense_dtype(w, rows, cols, Dtype::F32)
+    }
+
+    pub fn from_dense_dtype(w: &[f32], rows: usize, cols: usize, dtype: Dtype) -> DenseMatrix {
         assert_eq!(w.len(), rows * cols);
-        DenseMatrix { rows, cols, vals: w.to_vec() }
+        DenseMatrix { rows, cols, vals: ValueStore::encode(w, dtype) }
+    }
+
+    /// Reassemble from an already-packed value plane (checkpoint load).
+    pub fn from_parts(rows: usize, cols: usize, vals: ValueStore) -> anyhow::Result<DenseMatrix> {
+        // checked_mul: dims come from an untrusted file, keep the
+        // error-not-panic contract even for absurd values.
+        let total = rows.checked_mul(cols).unwrap_or(usize::MAX);
+        anyhow::ensure!(vals.len() == total, "dense: value plane length");
+        Ok(DenseMatrix { rows, cols, vals })
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.vals.dtype()
     }
 
     #[inline]
     pub fn row_dot(&self, r: usize, x: &[f32]) -> f32 {
-        let row = &self.vals[r * self.cols..(r + 1) * self.cols];
-        let mut acc = 0.0f32;
-        for (w, v) in row.iter().zip(x) {
-            acc += w * v;
+        match &self.vals {
+            ValueStore::F32(v) => {
+                let row = &v[r * self.cols..(r + 1) * self.cols];
+                let mut acc = 0.0f32;
+                for (w, xv) in row.iter().zip(x) {
+                    acc += w * xv;
+                }
+                acc
+            }
+            ValueStore::F16(v) => {
+                let row = &v[r * self.cols..(r + 1) * self.cols];
+                let mut acc = 0.0f32;
+                for (&h, xv) in row.iter().zip(x) {
+                    acc += f16_to_f32(h) * xv;
+                }
+                acc
+            }
+            ValueStore::I8 { codes, scales } => {
+                let base = r * self.cols;
+                let row = &codes[base..base + self.cols];
+                let mut acc = 0.0f32;
+                for (k, (&c, xv)) in row.iter().zip(x).enumerate() {
+                    acc += c as f32 * scales[(base + k) / I8_GROUP] * xv;
+                }
+                acc
+            }
         }
-        acc
     }
 
     pub fn memory_bytes(&self) -> usize {
-        self.vals.len() * 4
+        self.vals.memory_bytes()
     }
 }
 
@@ -121,7 +173,7 @@ pub fn dense_matvec(w: &[f32], rows: usize, cols: usize, x: &[f32]) -> Vec<f32> 
 }
 
 /// One packed matrix in kernel orientation; the unit every kernel runs on.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Packed {
     Dense(DenseMatrix),
     Csr(CsrMatrix),
@@ -130,37 +182,51 @@ pub enum Packed {
 }
 
 impl Packed {
+    /// Density-dispatched f32 packing — bit-exact with the
+    /// pre-value-plane engine (see [`Packed::pack_dtype`]).
+    pub fn pack(w: &[f32], rows: usize, cols: usize) -> Packed {
+        Packed::pack_dtype(w, rows, cols, Dtype::F32)
+    }
+
     /// Density-dispatched packing: CSR when sparse enough, the 2:4 layout
     /// when the tensor satisfies it, bitmask-block in the mid band, dense
-    /// otherwise.
-    pub fn pack(w: &[f32], rows: usize, cols: usize) -> Packed {
+    /// otherwise.  The chosen structure plane is dtype-independent; the
+    /// value plane is encoded at `dtype`.
+    pub fn pack_dtype(w: &[f32], rows: usize, cols: usize, dtype: Dtype) -> Packed {
         assert_eq!(w.len(), rows * cols);
         let nnz = w.iter().filter(|&&v| v != 0.0).count();
         let density = if w.is_empty() { 0.0 } else { nnz as f64 / w.len() as f64 };
         if density <= CSR_MAX_DENSITY {
-            return Packed::Csr(CsrMatrix::from_dense(w, rows, cols));
+            return Packed::Csr(CsrMatrix::from_dense_dtype(w, rows, cols, dtype));
         }
-        if let Some(m) = NmMatrix::try_from_dense(w, rows, cols, 2, 4) {
+        if let Some(m) = NmMatrix::try_from_dense_dtype(w, rows, cols, 2, 4, dtype) {
             return Packed::Nm(m);
         }
         if density <= BITMASK_MAX_DENSITY {
-            return Packed::Bitmask(BitmaskMatrix::from_dense(w, rows, cols));
+            return Packed::Bitmask(BitmaskMatrix::from_dense_dtype(w, rows, cols, dtype));
         }
-        Packed::Dense(DenseMatrix::from_dense(w, rows, cols))
+        Packed::Dense(DenseMatrix::from_dense_dtype(w, rows, cols, dtype))
+    }
+
+    /// [`Packed::pack_as_dtype`] at f32.
+    pub fn pack_as(w: &[f32], rows: usize, cols: usize, fmt: Format) -> Packed {
+        Packed::pack_as_dtype(w, rows, cols, fmt, Dtype::F32)
     }
 
     /// Pack as a specific format.  A requested `Nm` that the tensor does
     /// not satisfy (wrong pattern or `cols % 4 != 0`) falls back to the
     /// density dispatcher, so a single policy can cover a whole model.
-    pub fn pack_as(w: &[f32], rows: usize, cols: usize, fmt: Format) -> Packed {
+    pub fn pack_as_dtype(w: &[f32], rows: usize, cols: usize, fmt: Format, dtype: Dtype) -> Packed {
         assert_eq!(w.len(), rows * cols);
         match fmt {
-            Format::Dense => Packed::Dense(DenseMatrix::from_dense(w, rows, cols)),
-            Format::Csr => Packed::Csr(CsrMatrix::from_dense(w, rows, cols)),
-            Format::Bitmask => Packed::Bitmask(BitmaskMatrix::from_dense(w, rows, cols)),
-            Format::Nm => match NmMatrix::try_from_dense(w, rows, cols, 2, 4) {
+            Format::Dense => Packed::Dense(DenseMatrix::from_dense_dtype(w, rows, cols, dtype)),
+            Format::Csr => Packed::Csr(CsrMatrix::from_dense_dtype(w, rows, cols, dtype)),
+            Format::Bitmask => {
+                Packed::Bitmask(BitmaskMatrix::from_dense_dtype(w, rows, cols, dtype))
+            }
+            Format::Nm => match NmMatrix::try_from_dense_dtype(w, rows, cols, 2, 4, dtype) {
                 Some(m) => Packed::Nm(m),
-                None => Packed::pack(w, rows, cols),
+                None => Packed::pack_dtype(w, rows, cols, dtype),
             },
         }
     }
@@ -171,6 +237,16 @@ impl Packed {
             Packed::Csr(_) => Format::Csr,
             Packed::Bitmask(_) => Format::Bitmask,
             Packed::Nm(_) => Format::Nm,
+        }
+    }
+
+    /// Value-plane storage dtype.
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Packed::Dense(m) => m.dtype(),
+            Packed::Csr(m) => m.dtype(),
+            Packed::Bitmask(m) => m.dtype(),
+            Packed::Nm(m) => m.dtype(),
         }
     }
 
@@ -193,10 +269,12 @@ impl Packed {
     }
 
     /// True nonzero count (N:M padding slots excluded), so `density()`
-    /// agrees with `Mask::density` for every format.
+    /// agrees with `Mask::density` for every format.  CSR / bitmask / NM
+    /// read their structure planes (dtype-independent); dense counts
+    /// decoded nonzeros.
     pub fn nnz(&self) -> usize {
         match self {
-            Packed::Dense(m) => m.vals.iter().filter(|&&v| v != 0.0).count(),
+            Packed::Dense(m) => m.vals.count_nonzero(),
             Packed::Csr(m) => m.nnz(),
             Packed::Bitmask(m) => m.nnz(),
             Packed::Nm(m) => m.nnz(),
@@ -232,10 +310,11 @@ impl Packed {
         }
     }
 
-    /// Reconstruct the row-major dense matrix (pack→unpack roundtrip).
+    /// Reconstruct the row-major dense matrix (pack→unpack roundtrip;
+    /// lossless only at f32 — quantized planes decode their codes).
     pub fn to_dense(&self) -> Vec<f32> {
         match self {
-            Packed::Dense(m) => m.vals.clone(),
+            Packed::Dense(m) => m.vals.to_f32(),
             Packed::Csr(m) => m.to_dense(),
             Packed::Bitmask(m) => m.to_dense(),
             Packed::Nm(m) => m.to_dense(),
@@ -314,15 +393,10 @@ impl Packed {
 
 #[cfg(test)]
 mod tests {
+    use super::testutil::masked_random;
     use super::*;
     use crate::pruning::{magnitude, Mask};
     use crate::rngx::Pcg;
-
-    fn masked_random(rng: &mut Pcg, rows: usize, cols: usize, sparsity: f64) -> Vec<f32> {
-        let mut w: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() * 0.5) as f32).collect();
-        magnitude::magnitude_mask(&w, sparsity).apply(&mut w);
-        w
-    }
 
     #[test]
     fn dispatcher_picks_by_density() {
@@ -333,6 +407,7 @@ mod tests {
             let w = masked_random(&mut rng, r, c, sparsity);
             let p = Packed::pack(&w, r, c);
             assert_eq!(p.format(), want, "sparsity {sparsity}");
+            assert_eq!(p.dtype(), Dtype::F32);
             assert_eq!(p.to_dense(), w);
         }
     }
@@ -394,5 +469,37 @@ mod tests {
         let p = Packed::pack(&w, 8, 8);
         assert!((p.density() - mask.density()).abs() < 1e-12);
         assert_eq!(p.nnz(), mask.len() - mask.pruned_count());
+    }
+
+    #[test]
+    fn dtype_threads_through_the_dispatcher() {
+        let mut rng = Pcg::seeded(5);
+        let (r, c) = (16usize, 64usize);
+        for (sparsity, want) in [(0.95, Format::Csr), (0.5, Format::Bitmask)] {
+            let w = masked_random(&mut rng, r, c, sparsity);
+            for dtype in Dtype::ALL {
+                let p = Packed::pack_dtype(&w, r, c, dtype);
+                assert_eq!(p.format(), want);
+                assert_eq!(p.dtype(), dtype);
+                // Stored-slot counts come from the structure plane.
+                assert_eq!(p.stored(), Packed::pack(&w, r, c).stored());
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_matmul_matches_repeated_matvec() {
+        let mut rng = Pcg::seeded(6);
+        let (r, c, t) = (70usize, 48usize, 21usize);
+        let w = masked_random(&mut rng, r, c, 0.5);
+        for dtype in [Dtype::F16, Dtype::I8] {
+            let p = Packed::pack_dtype(&w, r, c, dtype);
+            let x: Vec<f32> = (0..t * c).map(|_| rng.normal() as f32).collect();
+            let y = p.matmul(&x, t);
+            for ti in 0..t {
+                let yt = p.matvec(&x[ti * c..(ti + 1) * c]);
+                assert_eq!(&y[ti * r..(ti + 1) * r], &yt[..], "{dtype:?} token {ti}");
+            }
+        }
     }
 }

@@ -11,9 +11,17 @@
 //! nothing.  The groups must run along the reduction axis (the packed
 //! matrix's columns), which is why `compile` transposes weights into
 //! kernel orientation before 2:4 masking.
+//!
+//! The **structure plane** (`idx` + the fixed stride) is
+//! dtype-independent; the survivor values live in a [`ValueStore`] value
+//! plane (f32 / f16 / i8 + scales), with `row_dot` monomorphized per
+//! dtype.  Padding slots encode exact `0.0`, which every dtype preserves.
+
+use super::values::{f16_to_f32, Dtype, I8_GROUP, ValueStore};
+use anyhow::{ensure, Result};
 
 /// Kernel-orientation `[rows, cols]` matrix with an N:M column pattern.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NmMatrix {
     pub rows: usize,
     pub cols: usize,
@@ -22,22 +30,38 @@ pub struct NmMatrix {
     pub m: usize,
     /// Survivors per group (`m - n`), the fixed stride of `vals`/`idx`.
     keep: usize,
+    /// True survivor count (padding slots excluded), recorded at pack
+    /// time so lossy dtypes don't blur it.
+    nnz: usize,
     /// `rows * (cols/m) * keep` packed values (padding slots are `0.0`).
-    pub vals: Vec<f32>,
+    pub vals: ValueStore,
     /// In-group column index of each packed value (`< m`, fits `u8`).
     pub idx: Vec<u8>,
 }
 
 impl NmMatrix {
-    /// Pack if `w` satisfies the pattern: `cols % m == 0` and every
-    /// `m`-wide group of every row holds at most `m - n` nonzeros.
-    /// Returns `None` otherwise (callers fall back to another format).
+    /// Pack at f32 if `w` satisfies the pattern (see
+    /// [`NmMatrix::try_from_dense_dtype`]).
     pub fn try_from_dense(
         w: &[f32],
         rows: usize,
         cols: usize,
         n: usize,
         m: usize,
+    ) -> Option<NmMatrix> {
+        NmMatrix::try_from_dense_dtype(w, rows, cols, n, m, Dtype::F32)
+    }
+
+    /// Pack if `w` satisfies the pattern: `cols % m == 0` and every
+    /// `m`-wide group of every row holds at most `m - n` nonzeros.
+    /// Returns `None` otherwise (callers fall back to another format).
+    pub fn try_from_dense_dtype(
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        n: usize,
+        m: usize,
+        dtype: Dtype,
     ) -> Option<NmMatrix> {
         assert_eq!(w.len(), rows * cols);
         assert!(n < m && m > 0 && m <= 256);
@@ -48,6 +72,7 @@ impl NmMatrix {
         let groups = cols / m;
         let mut vals = Vec::with_capacity(rows * groups * keep);
         let mut idx = Vec::with_capacity(rows * groups * keep);
+        let mut nnz = 0usize;
         for r in 0..rows {
             let row = &w[r * cols..(r + 1) * cols];
             for g in 0..groups {
@@ -60,6 +85,7 @@ impl NmMatrix {
                         }
                         vals.push(v);
                         idx.push(k as u8);
+                        nnz += 1;
                     }
                 }
                 while vals.len() - before < keep {
@@ -68,7 +94,60 @@ impl NmMatrix {
                 }
             }
         }
-        Some(NmMatrix { rows, cols, n, m, keep, vals, idx })
+        Some(NmMatrix { rows, cols, n, m, keep, nnz, vals: ValueStore::encode(&vals, dtype), idx })
+    }
+
+    /// Reassemble from already-packed planes (the checkpoint load path —
+    /// no re-packing), validating structure-plane invariants.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        n: usize,
+        m: usize,
+        nnz: usize,
+        idx: Vec<u8>,
+        vals: ValueStore,
+    ) -> Result<NmMatrix> {
+        ensure!(n < m && m > 0 && m <= 256, "nm: bad pattern {n}:{m}");
+        ensure!(cols > 0 && cols % m == 0, "nm: cols not divisible by m");
+        let keep = m - n;
+        // checked_mul: dims come from an untrusted file, keep the
+        // error-not-panic contract even for absurd values.
+        let stored = rows
+            .checked_mul(cols / m)
+            .and_then(|x| x.checked_mul(keep))
+            .unwrap_or(usize::MAX);
+        ensure!(idx.len() == stored, "nm: index plane length");
+        ensure!(vals.len() == stored, "nm: value plane length");
+        ensure!(idx.iter().all(|&k| (k as usize) < m), "nm: in-group index out of range");
+        ensure!(nnz <= stored, "nm: nnz exceeds stored slots");
+        ensure!(nnz >= vals.count_nonzero(), "nm: nnz below decoded survivors");
+        // Survivors within a group carry strictly increasing in-group
+        // indices (packing order); a repeated index would double-count
+        // one input column in row_dot.  Padding/quantized-to-zero slots
+        // contribute nothing, so only decoded-nonzero slots are checked.
+        let groups = cols / m;
+        for r in 0..rows {
+            for g in 0..groups {
+                let p = (r * groups + g) * keep;
+                let mut last: i32 = -1;
+                for s in 0..keep {
+                    if vals.get(p + s) != 0.0 {
+                        let k = idx[p + s] as i32;
+                        ensure!(
+                            k > last,
+                            "nm: group ({r},{g}) survivor indices not strictly increasing"
+                        );
+                        last = k;
+                    }
+                }
+            }
+        }
+        Ok(NmMatrix { rows, cols, n, m, keep, nnz, vals, idx })
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.vals.dtype()
     }
 
     /// Stored slots (incl. padding) — the multiply-adds one row costs.
@@ -76,13 +155,13 @@ impl NmMatrix {
         self.vals.len()
     }
 
-    /// True nonzero count (padding excluded).
+    /// True survivor count (padding excluded), from the structure plane.
     pub fn nnz(&self) -> usize {
-        self.vals.iter().filter(|&&v| v != 0.0).count()
+        self.nnz
     }
 
     pub fn memory_bytes(&self) -> usize {
-        self.vals.len() * 4 + self.idx.len()
+        self.vals.memory_bytes() + self.idx.len()
     }
 
     pub fn to_dense(&self) -> Vec<f32> {
@@ -92,7 +171,7 @@ impl NmMatrix {
             for g in 0..groups {
                 let p = (r * groups + g) * self.keep;
                 for s in 0..self.keep {
-                    let v = self.vals[p + s];
+                    let v = self.vals.get(p + s);
                     if v != 0.0 {
                         w[r * self.cols + g * self.m + self.idx[p + s] as usize] = v;
                     }
@@ -104,6 +183,19 @@ impl NmMatrix {
 
     #[inline]
     pub fn row_dot(&self, r: usize, x: &[f32]) -> f32 {
+        match &self.vals {
+            ValueStore::F32(v) => self.row_dot_with(r, x, |k| v[k]),
+            ValueStore::F16(v) => self.row_dot_with(r, x, |k| f16_to_f32(v[k])),
+            ValueStore::I8 { codes, scales } => {
+                self.row_dot_with(r, x, |k| codes[k] as f32 * scales[k / I8_GROUP])
+            }
+        }
+    }
+
+    /// Structure walk shared by the dtype-monomorphized kernels: `val(k)`
+    /// decodes stored slot `k` and inlines per dtype.
+    #[inline(always)]
+    fn row_dot_with<F: Fn(usize) -> f32>(&self, r: usize, x: &[f32], val: F) -> f32 {
         let groups = self.cols / self.m;
         let mut p = r * groups * self.keep;
         let mut acc = 0.0f32;
@@ -111,15 +203,15 @@ impl NmMatrix {
             // 2:4 fast path: two fused slots per group, no inner loop.
             for g in 0..groups {
                 let base = g * self.m;
-                acc += self.vals[p] * x[base + self.idx[p] as usize]
-                    + self.vals[p + 1] * x[base + self.idx[p + 1] as usize];
+                acc += val(p) * x[base + self.idx[p] as usize]
+                    + val(p + 1) * x[base + self.idx[p + 1] as usize];
                 p += 2;
             }
         } else {
             for g in 0..groups {
                 let base = g * self.m;
                 for s in 0..self.keep {
-                    acc += self.vals[p + s] * x[base + self.idx[p + s] as usize];
+                    acc += val(p + s) * x[base + self.idx[p + s] as usize];
                 }
                 p += self.keep;
             }
@@ -136,16 +228,9 @@ impl NmMatrix {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pruning::magnitude;
     use crate::rngx::Pcg;
     use crate::sparse::dense_matvec;
-
-    fn nm_random(rng: &mut Pcg, rows: usize, cols: usize, n: usize, m: usize) -> Vec<f32> {
-        // +2.0 shift keeps survivors nonzero so nnz is exactly rows*cols*(m-n)/m.
-        let mut w: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() + 2.0) as f32).collect();
-        magnitude::magnitude_nm_mask(&w, n, m).apply(&mut w);
-        w
-    }
+    use crate::sparse::testutil::nm_random;
 
     #[test]
     fn roundtrip_exact_2_4_and_4_8() {
@@ -202,5 +287,37 @@ mod tests {
         // 2:4 stores half the values + 1 byte/value of metadata.
         assert_eq!(p.memory_bytes(), r * c / 2 * 4 + r * c / 2);
         assert!(p.memory_bytes() < r * c * 4);
+    }
+
+    #[test]
+    fn quantized_planes_share_the_structure() {
+        let mut rng = Pcg::seeded(4);
+        let (r, c) = (12usize, 96usize);
+        let w = nm_random(&mut rng, r, c, 2, 4);
+        let f32m = NmMatrix::try_from_dense(&w, r, c, 2, 4).unwrap();
+        for dtype in [Dtype::F16, Dtype::I8] {
+            let q = NmMatrix::try_from_dense_dtype(&w, r, c, 2, 4, dtype).unwrap();
+            assert_eq!(q.dtype(), dtype);
+            assert_eq!(q.idx, f32m.idx, "{dtype:?} structure drifted");
+            assert_eq!(q.nnz(), f32m.nnz(), "nnz comes from the structure plane");
+            assert!(q.memory_bytes() < f32m.memory_bytes());
+            let dec = q.to_dense();
+            let x: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+            let want = dense_matvec(&dec, r, c, &x);
+            for (u, v) in q.matvec(&x).iter().zip(&want) {
+                assert!((u - v).abs() < 1e-5, "{dtype:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_validates_planes() {
+        let w = vec![0.0f32, 5.0, 0.0, 0.0, 1.0, 0.0, 2.0, 0.0];
+        let p = NmMatrix::try_from_dense(&w, 1, 8, 2, 4).unwrap();
+        let ok =
+            NmMatrix::from_parts(1, 8, 2, 4, p.nnz(), p.idx.clone(), p.vals.clone()).unwrap();
+        assert_eq!(ok, p);
+        // Wrong stride (idx plane too short) must be rejected.
+        assert!(NmMatrix::from_parts(1, 8, 2, 4, 3, vec![0, 1], p.vals).is_err());
     }
 }

@@ -1,0 +1,34 @@
+//! Shared random-matrix generators for the sparse subsystem's tests and
+//! benches (the in-crate unit tests, `tests/prop_sparse.rs` and
+//! `tests/prop_engine.rs` all draw from the same distributions).
+//!
+//! Not `#[cfg(test)]`-gated for the same reason `model::toy` isn't: the
+//! integration tests and benches link the library crate, so the helpers
+//! must be part of its public surface.
+
+use crate::pruning::magnitude;
+use crate::rngx::Pcg;
+
+/// IID values with independent keep probability `keep` (exact zeros for
+/// the pruned entries) — the formats' packing-level generator.
+pub fn sparse_random(rng: &mut Pcg, rows: usize, cols: usize, keep: f64) -> Vec<f32> {
+    (0..rows * cols)
+        .map(|_| if rng.uniform() < keep { rng.normal() as f32 } else { 0.0 })
+        .collect()
+}
+
+/// Gaussian matrix magnitude-masked to exactly `sparsity` — mirrors how
+/// `pruning` produces unstructured masks in the pipeline.
+pub fn masked_random(rng: &mut Pcg, rows: usize, cols: usize, sparsity: f64) -> Vec<f32> {
+    let mut w: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() * 0.5) as f32).collect();
+    magnitude::magnitude_mask(&w, sparsity).apply(&mut w);
+    w
+}
+
+/// Gaussian matrix under an exact N:M magnitude mask.  The +2.0 shift
+/// keeps survivors nonzero so `nnz` is exactly `rows·cols·(m−n)/m`.
+pub fn nm_random(rng: &mut Pcg, rows: usize, cols: usize, n: usize, m: usize) -> Vec<f32> {
+    let mut w: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() + 2.0) as f32).collect();
+    magnitude::magnitude_nm_mask(&w, n, m).apply(&mut w);
+    w
+}

@@ -1,0 +1,364 @@
+//! Value planes: the nonzero payload of every packed format, split from
+//! the structure planes (row offsets, occupancy bitmasks, N:M group
+//! indices) so one structure composes with any storage dtype.
+//!
+//! Three dtypes ship:
+//!
+//! * [`Dtype::F32`] — today's layout, bit-exact with the pre-split
+//!   formats (the serving default and the only dtype kernels ran on
+//!   before this module existed).
+//! * [`Dtype::F16`] — IEEE-754 binary16 stored as `u16`, encoded with
+//!   round-to-nearest-even ([`f32_to_f16`] / [`f16_to_f32`] are in-repo:
+//!   the offline vendor set has no `half` crate).  Relative error is
+//!   ≤ 2⁻¹¹ per element in the normal range.
+//! * [`Dtype::I8`] — absmax quantization: groups of [`I8_GROUP`]
+//!   consecutive packed values share one f32 scale (`absmax / 127`);
+//!   each value stores as `round(v / scale)` in `[-127, 127]`.  Absolute
+//!   error is ≤ `scale / 2` per element, and exact zeros stay exact —
+//!   quantization never disturbs the structure planes' pruning decisions.
+//!   Rows are contiguous in every format's value plane, so a scale group
+//!   covers a run of same-row (or adjacent-row) weights — the "row
+//!   group" of the quantization literature.
+//!
+//! Kernels stay monomorphized per dtype: each format's `row_dot`
+//! matches on the store once and runs a dtype-specialized inner loop
+//! (see the `row_dot_with` helpers), so the f32 fast path compiles to
+//! exactly the direct-indexing loop it was before the split.
+
+/// Packed values per i8 scale group.
+pub const I8_GROUP: usize = 64;
+
+/// Storage dtype of a value plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dtype {
+    #[default]
+    F32,
+    F16,
+    I8,
+}
+
+impl Dtype {
+    /// All dtypes, in serving-preference order (used by sweeps).
+    pub const ALL: [Dtype; 3] = [Dtype::F32, Dtype::F16, Dtype::I8];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F16 => "f16",
+            Dtype::I8 => "i8",
+        }
+    }
+
+    /// Parse a CLI spelling (`f32` / `f16` / `i8`).
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "f16" => Some(Dtype::F16),
+            "i8" => Some(Dtype::I8),
+            _ => None,
+        }
+    }
+
+    /// Bytes per stored value (i8 scale overhead excluded).
+    pub fn value_bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F16 => 2,
+            Dtype::I8 => 1,
+        }
+    }
+}
+
+/// The value plane of one packed matrix: the nonzeros in packing order,
+/// stored at one of the three dtypes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ValueStore {
+    F32(Vec<f32>),
+    /// IEEE-754 binary16 bits.
+    F16(Vec<u16>),
+    /// Absmax-quantized codes plus one f32 scale per [`I8_GROUP`]
+    /// consecutive values (`scales[k / I8_GROUP]` decodes `codes[k]`).
+    I8 { codes: Vec<i8>, scales: Vec<f32> },
+}
+
+impl ValueStore {
+    /// Encode a packed f32 value stream at `dtype`.
+    pub fn encode(vals: &[f32], dtype: Dtype) -> ValueStore {
+        match dtype {
+            Dtype::F32 => ValueStore::F32(vals.to_vec()),
+            Dtype::F16 => ValueStore::F16(vals.iter().map(|&v| f32_to_f16(v)).collect()),
+            Dtype::I8 => {
+                let mut codes = Vec::with_capacity(vals.len());
+                let mut scales = Vec::with_capacity(vals.len().div_ceil(I8_GROUP));
+                for group in vals.chunks(I8_GROUP) {
+                    let absmax = group.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    let scale = absmax / 127.0;
+                    scales.push(scale);
+                    if scale > 0.0 {
+                        for &v in group {
+                            codes.push((v / scale).round().clamp(-127.0, 127.0) as i8);
+                        }
+                    } else {
+                        codes.resize(codes.len() + group.len(), 0);
+                    }
+                }
+                ValueStore::I8 { codes, scales }
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            ValueStore::F32(_) => Dtype::F32,
+            ValueStore::F16(_) => Dtype::F16,
+            ValueStore::I8 { .. } => Dtype::I8,
+        }
+    }
+
+    /// Stored value count (identical to the structure plane's slot count).
+    pub fn len(&self) -> usize {
+        match self {
+            ValueStore::F32(v) => v.len(),
+            ValueStore::F16(v) => v.len(),
+            ValueStore::I8 { codes, .. } => codes.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decode one value.  Kernels should not call this per element —
+    /// they match on the variant once and run a monomorphized loop.
+    #[inline]
+    pub fn get(&self, k: usize) -> f32 {
+        match self {
+            ValueStore::F32(v) => v[k],
+            ValueStore::F16(v) => f16_to_f32(v[k]),
+            ValueStore::I8 { codes, scales } => codes[k] as f32 * scales[k / I8_GROUP],
+        }
+    }
+
+    /// Decode the whole plane back to f32 (lossless only for `F32`).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self {
+            ValueStore::F32(v) => v.clone(),
+            ValueStore::F16(v) => v.iter().map(|&h| f16_to_f32(h)).collect(),
+            ValueStore::I8 { codes, scales } => codes
+                .iter()
+                .enumerate()
+                .map(|(k, &c)| c as f32 * scales[k / I8_GROUP])
+                .collect(),
+        }
+    }
+
+    /// Zero-copy view of an f32 plane (the fast paths that need a raw
+    /// slice — tied head rows, conv taps — require this dtype).
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            ValueStore::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Decoded-nonzero count (for density reporting; values a lossy
+    /// dtype collapses to zero count as pruned).
+    pub fn count_nonzero(&self) -> usize {
+        match self {
+            ValueStore::F32(v) => v.iter().filter(|&&x| x != 0.0).count(),
+            ValueStore::F16(v) => v.iter().filter(|&&h| (h & 0x7fff) != 0).count(),
+            ValueStore::I8 { codes, .. } => codes.iter().filter(|&&c| c != 0).count(),
+        }
+    }
+
+    /// Resident bytes of this plane (codes + i8 scales).
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            ValueStore::F32(v) => v.len() * 4,
+            ValueStore::F16(v) => v.len() * 2,
+            ValueStore::I8 { codes, scales } => codes.len() + scales.len() * 4,
+        }
+    }
+}
+
+/// IEEE-754 binary16 bits → f32 (exact: every f16 is representable).
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // Subnormal: man · 2⁻²⁴, exact in f32.
+        let v = man as f32 / 16_777_216.0;
+        return if sign != 0 { -v } else { v };
+    }
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13)); // ±inf / NaN
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// f32 → IEEE-754 binary16 bits, round-to-nearest-even.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // ±inf / NaN (keep NaN quiet with a payload bit).
+        let nan = if man != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | nan;
+    }
+    let e = exp - 127;
+    if e >= 16 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e >= -14 {
+        // Normal half: drop 13 mantissa bits, round to nearest even.
+        let mut h_exp = (e + 15) as u32;
+        let mut h_man = man >> 13;
+        let rest = man & 0x1fff;
+        if rest > 0x1000 || (rest == 0x1000 && (h_man & 1) == 1) {
+            h_man += 1;
+            if h_man == 0x400 {
+                h_man = 0;
+                h_exp += 1;
+                if h_exp == 31 {
+                    return sign | 0x7c00;
+                }
+            }
+        }
+        return sign | ((h_exp << 10) | h_man) as u16;
+    }
+    if e >= -25 {
+        // Subnormal half: value = h_man · 2⁻²⁴ with the implicit bit
+        // made explicit; shift = −e − 1 ∈ [14, 24].
+        let man = man | 0x0080_0000;
+        let shift = (-1 - e) as u32;
+        let halfway = 1u32 << (shift - 1);
+        let rest = man & ((1u32 << shift) - 1);
+        let mut h_man = man >> shift;
+        if rest > halfway || (rest == halfway && (h_man & 1) == 1) {
+            h_man += 1; // carry into the exponent field = smallest normal
+        }
+        return sign | h_man as u16;
+    }
+    sign // underflow → ±0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg;
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1.0), 0x3c00);
+        assert_eq!(f32_to_f16(-2.0), 0xc000);
+        assert_eq!(f32_to_f16(0.5), 0x3800);
+        assert_eq!(f32_to_f16(65504.0), 0x7bff); // largest finite half
+        assert_eq!(f32_to_f16(65520.0), 0x7c00); // rounds to +inf
+        assert_eq!(f32_to_f16(1.0e30), 0x7c00);
+        assert_eq!(f32_to_f16(f32::from_bits(0x3380_0000)), 0x0001); // 2⁻²⁴
+        assert_eq!(f32_to_f16(f32::from_bits(0x3300_0000)), 0x0000); // 2⁻²⁵ RNE → 0
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0x3800), 0.5);
+        assert_eq!(f16_to_f32(0x0001), f32::from_bits(0x3380_0000));
+        assert_eq!(f16_to_f32(0x7bff), 65504.0);
+    }
+
+    #[test]
+    fn f16_bits_roundtrip_every_finite_half() {
+        for h in 0..=0xffffu16 {
+            if ((h >> 10) & 0x1f) == 0x1f {
+                continue; // inf / NaN
+            }
+            assert_eq!(f32_to_f16(f16_to_f32(h)), h, "bits {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_relative_error_within_half_ulp() {
+        let mut rng = Pcg::seeded(1);
+        for _ in 0..4000 {
+            // Magnitudes inside the half normal range.
+            let mag = 10.0f64.powf(rng.uniform() * 8.0 - 3.0);
+            let x = ((rng.uniform() * 2.0 - 1.0) * mag) as f32;
+            let back = f16_to_f32(f32_to_f16(x));
+            let tol = (x.abs() * (1.0 / 2048.0)).max(3.0e-8);
+            assert!((back - x).abs() <= tol, "{x} -> {back}");
+        }
+    }
+
+    #[test]
+    fn i8_groups_share_scales_and_zeros_stay_exact() {
+        let mut rng = Pcg::seeded(2);
+        let vals: Vec<f32> = (0..I8_GROUP * 3 + 7)
+            .map(|i| if i % 5 == 0 { 0.0 } else { rng.normal() as f32 })
+            .collect();
+        let store = ValueStore::encode(&vals, Dtype::I8);
+        let ValueStore::I8 { codes, scales } = &store else {
+            panic!("wrong variant");
+        };
+        assert_eq!(codes.len(), vals.len());
+        assert_eq!(scales.len(), vals.len().div_ceil(I8_GROUP));
+        for (k, &v) in vals.iter().enumerate() {
+            let dec = store.get(k);
+            if v == 0.0 {
+                assert_eq!(dec, 0.0, "zero disturbed at {k}");
+            }
+            assert!((dec - v).abs() <= scales[k / I8_GROUP] / 2.0 + 1e-12, "element {k}");
+        }
+    }
+
+    #[test]
+    fn i8_all_zero_group_encodes_cleanly() {
+        let store = ValueStore::encode(&[0.0; 10], Dtype::I8);
+        assert_eq!(store.to_f32(), vec![0.0; 10]);
+        assert_eq!(store.count_nonzero(), 0);
+    }
+
+    #[test]
+    fn store_metadata_per_dtype() {
+        let vals: Vec<f32> = (0..100).map(|i| i as f32 - 50.0).collect();
+        for dtype in Dtype::ALL {
+            let s = ValueStore::encode(&vals, dtype);
+            assert_eq!(s.dtype(), dtype);
+            assert_eq!(s.len(), 100);
+            assert!(!s.is_empty());
+            assert_eq!(s.to_f32().len(), 100);
+        }
+        assert_eq!(ValueStore::encode(&vals, Dtype::F32).memory_bytes(), 400);
+        assert_eq!(ValueStore::encode(&vals, Dtype::F16).memory_bytes(), 200);
+        // 100 codes + 2 group scales.
+        assert_eq!(ValueStore::encode(&vals, Dtype::I8).memory_bytes(), 108);
+        assert!(ValueStore::encode(&vals, Dtype::F32).as_f32().is_some());
+        assert!(ValueStore::encode(&vals, Dtype::F16).as_f32().is_none());
+    }
+
+    #[test]
+    fn f32_encode_is_bit_exact() {
+        let vals = [1.0f32, -2.5, 0.0, 3.0e-20, f32::MIN_POSITIVE];
+        let s = ValueStore::encode(&vals, Dtype::F32);
+        assert_eq!(s.to_f32(), vals);
+        for (k, &v) in vals.iter().enumerate() {
+            assert_eq!(s.get(k).to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn dtype_names_parse_back() {
+        for dtype in Dtype::ALL {
+            assert_eq!(Dtype::parse(dtype.name()), Some(dtype));
+        }
+        assert_eq!(Dtype::parse("bf16"), None);
+        assert_eq!(Dtype::default(), Dtype::F32);
+        assert_eq!(Dtype::F16.value_bytes(), 2);
+    }
+}

@@ -19,7 +19,7 @@ use sparsessm::model::toy::toy_flat_params_random;
 use sparsessm::model::FlatParams;
 use sparsessm::rngx::Pcg;
 use sparsessm::sparse::compile::{apply_nm_along_input, magnitude_prune_all, PackPolicy};
-use sparsessm::sparse::{decode, Format, SparseModel};
+use sparsessm::sparse::{decode, Dtype, Format, SparseModel};
 
 /// Mini property harness: run `f` for `cases` seeds; on failure report
 /// the seed so the case can be replayed.
@@ -229,6 +229,111 @@ fn prop_scheduler_matches_solo_generation() {
                         "{sampling:?} request {id}: scheduler {:?} vs solo {want:?}",
                         gens[id].tokens
                     ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Quantized serving contract, part 1 (tight): on the *same* quantized
+/// model, engine prefill+N×steps must match the whole-sequence oracle
+/// within the usual float-accumulation tolerance — both paths decode the
+/// same value planes, so any scale-indexing or state-handoff bug in the
+/// dtype kernels shows up here at 1e-4.
+#[test]
+fn prop_quantized_engine_matches_same_model_oracle() {
+    check("engine-quantized-oracle", 3, |rng| {
+        let seed = rng.next_u64();
+        let l = 6 + rng.below(5);
+        let tokens: Vec<i32> = (0..l).map(|_| rng.below(16) as i32).collect();
+        let split = 1 + rng.below(l - 1);
+        for sparsity in [0.0, 0.5, 0.9] {
+            let mut params = toy_flat_params_random(4, seed);
+            if sparsity > 0.0 {
+                magnitude_prune_all(&mut params, sparsity).map_err(|e| e.to_string())?;
+            }
+            for fmt in [Format::Dense, Format::Bitmask, Format::Csr] {
+                for dtype in Dtype::ALL {
+                    let policy = PackPolicy::of(fmt).with_dtype(dtype);
+                    let model =
+                        SparseModel::compile(&params, &policy).map_err(|e| e.to_string())?;
+                    let want = decode::forward_logits(&model, &tokens, 1, l);
+                    let got = prefill_then_steps(&model, &tokens, split);
+                    let diff = max_abs_diff(&got, &want);
+                    if diff > 1e-4 {
+                        return Err(format!(
+                            "{fmt:?}/{dtype:?} @{sparsity} split {split}: max diff {diff}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Quantized serving contract, part 1b: the 2:4 layout across dtypes.
+#[test]
+fn prop_quantized_engine_matches_same_model_oracle_2_4() {
+    check("engine-quantized-oracle-2:4", 3, |rng| {
+        let seed = rng.next_u64();
+        let l = 6 + rng.below(4);
+        let tokens: Vec<i32> = (0..l).map(|_| rng.below(16) as i32).collect();
+        let split = 1 + rng.below(l - 1);
+        let mut params = toy_flat_params_random(4, seed);
+        apply_nm_along_input(&mut params, 2, 4).map_err(|e| e.to_string())?;
+        for dtype in Dtype::ALL {
+            let policy = PackPolicy::of(Format::Nm).with_dtype(dtype);
+            let model = SparseModel::compile(&params, &policy).map_err(|e| e.to_string())?;
+            if !model.format_summary().contains("2:4") {
+                return Err(format!("no 2:4 tensors packed: {}", model.format_summary()));
+            }
+            let want = decode::forward_logits(&model, &tokens, 1, l);
+            let got = prefill_then_steps(&model, &tokens, split);
+            let diff = max_abs_diff(&got, &want);
+            if diff > 1e-4 {
+                return Err(format!("{dtype:?} split {split}: max diff {diff}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Quantized serving contract, part 2 (dtype-dependent): against the
+/// dense **f32** oracle, the quantized engine's logits drift only by
+/// quantization noise.  Bounds scale with the oracle's magnitude: f16
+/// carries ~2⁻¹¹ relative error per weight, i8 ~scale/2 per weight.
+#[test]
+fn prop_quantized_engine_close_to_f32_oracle() {
+    check("engine-quantized-vs-f32", 3, |rng| {
+        let seed = rng.next_u64();
+        let l = 5 + rng.below(5);
+        let tokens: Vec<i32> = (0..l).map(|_| rng.below(16) as i32).collect();
+        let split = 1 + rng.below(l - 1);
+        for sparsity in [0.0, 0.5, 0.9] {
+            let mut params = toy_flat_params_random(4, seed);
+            if sparsity > 0.0 {
+                magnitude_prune_all(&mut params, sparsity).map_err(|e| e.to_string())?;
+            }
+            let oracle = SparseModel::compile(&params, &PackPolicy::dense())
+                .map_err(|e| e.to_string())?;
+            let want = decode::forward_logits(&oracle, &tokens, 1, l);
+            let scale = 1.0 + want.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let bounds = [(Dtype::F32, 1e-4f32), (Dtype::F16, 0.05), (Dtype::I8, 0.5)];
+            for fmt in [Format::Dense, Format::Bitmask, Format::Csr] {
+                for (dtype, rel) in bounds {
+                    let policy = PackPolicy::of(fmt).with_dtype(dtype);
+                    let model =
+                        SparseModel::compile(&params, &policy).map_err(|e| e.to_string())?;
+                    let got = prefill_then_steps(&model, &tokens, split);
+                    let diff = max_abs_diff(&got, &want);
+                    if diff > rel * scale {
+                        return Err(format!(
+                            "{fmt:?}/{dtype:?} @{sparsity}: diff {diff} vs bound {}",
+                            rel * scale
+                        ));
+                    }
                 }
             }
         }

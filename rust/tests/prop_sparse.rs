@@ -3,16 +3,22 @@
 //! runner that reports the failing seed).
 //!
 //! Invariants pinned here are the subsystem's acceptance contract:
-//! pack→unpack is lossless for every format, packed matvec matches the
-//! dense reference within 1e-5 across the whole sparsity range (incl.
-//! the 2:4 layout), and the packed end-to-end decode matches the
-//! dense-masked forward within 1e-4.
+//! pack→unpack is lossless for every format at f32 (bit-identical to the
+//! pre-value-plane packing), quantized value planes respect their error
+//! bounds (f16 ≤ 2⁻¹¹ relative, i8 ≤ scale/2 absolute) while never
+//! disturbing exact zeros, packed matvec matches the dense reference on
+//! the *decoded* weights within 1e-5 across formats × dtypes ×
+//! sparsities, the packed end-to-end decode matches the dense-masked
+//! forward within 1e-4, and pack→save→load reproduces every plane
+//! bit-exactly.
 
 use sparsessm::model::toy::toy_flat_params_random;
 use sparsessm::pruning::magnitude;
 use sparsessm::rngx::Pcg;
 use sparsessm::sparse::compile::{apply_nm_along_input, magnitude_prune_all, PackPolicy};
-use sparsessm::sparse::{decode, dense_matvec, Format, NmMatrix, Packed, SparseModel};
+use sparsessm::sparse::testutil::masked_random;
+use sparsessm::sparse::values::{f16_to_f32, f32_to_f16, I8_GROUP, ValueStore};
+use sparsessm::sparse::{decode, dense_matvec, Dtype, Format, NmMatrix, Packed, SparseModel};
 
 /// Mini property harness: run `f` for `cases` seeds; on failure report the
 /// seed so the case can be replayed.
@@ -28,11 +34,8 @@ fn check<F: Fn(&mut Pcg) -> Result<(), String>>(name: &str, cases: u64, f: F) {
 /// The sparsity grid the ISSUE pins: 0 / 25 / 50 / 90 / 100 %.
 const SPARSITIES: [f64; 5] = [0.0, 0.25, 0.5, 0.9, 1.0];
 
-fn masked_random(rng: &mut Pcg, rows: usize, cols: usize, sparsity: f64) -> Vec<f32> {
-    let mut w: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() * 0.5) as f32).collect();
-    magnitude::magnitude_mask(&w, sparsity).apply(&mut w);
-    w
-}
+/// The dtype-bound grid: 0 / 50 / 90 %.
+const DTYPE_SPARSITIES: [f64; 3] = [0.0, 0.5, 0.9];
 
 #[test]
 fn prop_pack_unpack_roundtrip_all_formats() {
@@ -147,6 +150,137 @@ fn prop_matmul_equals_repeated_matvec() {
     });
 }
 
+/// f16 value-plane roundtrip: relative error ≤ 2⁻¹¹ per element in the
+/// normal range (absolute floor 2⁻²⁵ covers half-subnormal results).
+#[test]
+fn prop_f16_roundtrip_error_bound() {
+    check("f16-error-bound", 10, |rng| {
+        let n = 64 + rng.below(400);
+        let vals: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.5) as f32).collect();
+        let store = ValueStore::encode(&vals, Dtype::F16);
+        for (k, &v) in vals.iter().enumerate() {
+            let dec = store.get(k);
+            let tol = (v.abs() * (1.0 / 2048.0)).max(3.0e-8);
+            if (dec - v).abs() > tol {
+                return Err(format!("element {k}: {v} -> {dec}"));
+            }
+            if f16_to_f32(f32_to_f16(v)) != dec {
+                return Err(format!("element {k}: store and codec disagree"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// i8 value-plane roundtrip: absolute error ≤ scale/2 per element (the
+/// per-row-group absmax scale), and exact zeros stay exact.
+#[test]
+fn prop_i8_roundtrip_error_bound() {
+    check("i8-error-bound", 10, |rng| {
+        let n = 64 + rng.below(400);
+        let vals: Vec<f32> = (0..n)
+            .map(|_| if rng.uniform() < 0.3 { 0.0 } else { (rng.normal() * 0.5) as f32 })
+            .collect();
+        let store = ValueStore::encode(&vals, Dtype::I8);
+        let ValueStore::I8 { codes, scales } = &store else {
+            return Err("wrong store variant".into());
+        };
+        if codes.len() != n || scales.len() != n.div_ceil(I8_GROUP) {
+            return Err("plane shapes off".into());
+        }
+        for (k, &v) in vals.iter().enumerate() {
+            let dec = store.get(k);
+            if v == 0.0 && dec != 0.0 {
+                return Err(format!("element {k}: exact zero disturbed -> {dec}"));
+            }
+            let tol = scales[k / I8_GROUP] / 2.0 + 1e-12;
+            if (dec - v).abs() > tol {
+                return Err(format!("element {k}: {v} -> {dec} (scale {})", scales[k / I8_GROUP]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Every format × dtype × sparsity: the packed matvec must agree with
+/// the dense reference run on the *decoded* weights (catches any
+/// scale-indexing or structure/value misalignment in the kernels), and
+/// the decoded plane must respect the dtype's error bound vs the
+/// original weights.
+#[test]
+fn prop_quantized_pack_and_matvec_bounds() {
+    check("quantized-pack-bounds", 8, |rng| {
+        let rows = 1 + rng.below(40);
+        let cols = 4 * (1 + rng.below(40));
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal() as f32).collect();
+        for sparsity in DTYPE_SPARSITIES {
+            let w = masked_random(rng, rows, cols, sparsity);
+            let absmax = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            for fmt in [Format::Dense, Format::Csr, Format::Bitmask] {
+                for dtype in Dtype::ALL {
+                    let p = Packed::pack_as_dtype(&w, rows, cols, fmt, dtype);
+                    let dec = p.to_dense();
+                    for (k, (&d, &orig)) in dec.iter().zip(&w).enumerate() {
+                        if orig == 0.0 && d != 0.0 {
+                            return Err(format!(
+                                "{fmt:?}/{dtype:?} @{sparsity}: zero disturbed at {k}"
+                            ));
+                        }
+                        let tol = match dtype {
+                            Dtype::F32 => 0.0,
+                            Dtype::F16 => (orig.abs() * (1.0 / 2048.0)).max(3.0e-8),
+                            Dtype::I8 => absmax / 254.0 + 1e-12,
+                        };
+                        if (d - orig).abs() > tol {
+                            return Err(format!(
+                                "{fmt:?}/{dtype:?} @{sparsity}: element {k} {orig} -> {d}"
+                            ));
+                        }
+                    }
+                    let want = dense_matvec(&dec, rows, cols, &x);
+                    for (r, (u, v)) in p.matvec(&x).iter().zip(&want).enumerate() {
+                        if (u - v).abs() > 1e-5 {
+                            return Err(format!(
+                                "{fmt:?}/{dtype:?} @{sparsity}: row {r} {u} vs {v}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Same contract for the 2:4 layout across dtypes.
+#[test]
+fn prop_quantized_nm_matvec_bound() {
+    check("quantized-nm-bounds", 8, |rng| {
+        let rows = 1 + rng.below(32);
+        let cols = 4 * (1 + rng.below(32));
+        let mut w: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() * 0.5) as f32).collect();
+        magnitude::magnitude_nm_mask(&w, 2, 4).apply(&mut w);
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal() as f32).collect();
+        for dtype in Dtype::ALL {
+            let p = Packed::pack_as_dtype(&w, rows, cols, Format::Nm, dtype);
+            if p.format() != Format::Nm {
+                return Err(format!("{dtype:?}: 2:4 mask not packed as Nm"));
+            }
+            let dec = p.to_dense();
+            let want = dense_matvec(&dec, rows, cols, &x);
+            for (u, v) in p.matvec(&x).iter().zip(&want) {
+                if (u - v).abs() > 1e-5 {
+                    return Err(format!("{dtype:?}: {u} vs {v}"));
+                }
+            }
+            if dtype == Dtype::F32 && dec != w {
+                return Err("f32 2:4 roundtrip not exact".into());
+            }
+        }
+        Ok(())
+    });
+}
+
 /// End-to-end acceptance: packed pruned decode == dense masked decode
 /// within 1e-4, across sparsity levels and pack policies.
 #[test]
@@ -200,6 +334,55 @@ fn prop_forward_equivalence_2_4() {
         for (i, (u, v)) in got.iter().zip(&want).enumerate() {
             if (u - v).abs() > 1e-4 {
                 return Err(format!("logit {i}: {u} vs {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// pack → save → load reproduces every structure and value plane
+/// bit-exactly (model equality is derived `PartialEq` over all planes),
+/// and the reloaded model decodes bit-identically — across formats ×
+/// dtypes × sparsities.
+#[test]
+fn prop_pack_save_load_bit_exact() {
+    check("save-load-bit-exact", 3, |rng| {
+        let seed = rng.next_u64();
+        let (bt, l) = (1usize, 5usize);
+        let tokens: Vec<i32> = (0..bt * l).map(|_| rng.below(16) as i32).collect();
+        for sparsity in DTYPE_SPARSITIES {
+            let mut params = toy_flat_params_random(4, seed);
+            if sparsity > 0.0 {
+                magnitude_prune_all(&mut params, sparsity).map_err(|e| e.to_string())?;
+            }
+            let fmts = [Format::Dense, Format::Csr, Format::Bitmask, Format::Nm];
+            for (fi, fmt) in fmts.iter().enumerate() {
+                for dtype in Dtype::ALL {
+                    let policy = PackPolicy::of(*fmt).with_dtype(dtype);
+                    let model =
+                        SparseModel::compile(&params, &policy).map_err(|e| e.to_string())?;
+                    let path = std::env::temp_dir().join(format!(
+                        "sparsessm-prop-ckpt-{}-{seed}-{fi}-{}-{}.spsm",
+                        std::process::id(),
+                        dtype.name(),
+                        (sparsity * 100.0) as u32
+                    ));
+                    model.save(&path).map_err(|e| e.to_string())?;
+                    let loaded = SparseModel::load(&path).map_err(|e| e.to_string())?;
+                    let _ = std::fs::remove_file(&path);
+                    if loaded != model {
+                        return Err(format!(
+                            "{fmt:?}/{dtype:?} @{sparsity}: planes drifted through save/load"
+                        ));
+                    }
+                    let want = decode::forward_logits(&model, &tokens, bt, l);
+                    let got = decode::forward_logits(&loaded, &tokens, bt, l);
+                    if want != got {
+                        return Err(format!(
+                            "{fmt:?}/{dtype:?} @{sparsity}: reloaded decode differs"
+                        ));
+                    }
+                }
             }
         }
         Ok(())

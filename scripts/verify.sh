@@ -1,19 +1,33 @@
 #!/usr/bin/env bash
-# Tier-1 verification gate (ROADMAP.md) plus lint + formatting.
+# Tier-1 verification gate (ROADMAP.md) plus formatting + lint, run as
+# named fail-fast stages:
 #
-#   scripts/verify.sh          # build + tests + clippy + fmt check
+#   scripts/verify.sh          # build + tests + fmt check + clippy
 #   scripts/verify.sh --fix    # same, but apply formatting instead of checking
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+step() {
+    echo
+    echo "==== [verify] $1 ===="
+}
+
+step "build (cargo build --release)"
 cargo build --release
+
+step "test (cargo test -q)"
 cargo test -q
-cargo clippy --all-targets -- -D warnings
 
 if [[ "${1:-}" == "--fix" ]]; then
+    step "fmt (cargo fmt — applying)"
     cargo fmt
 else
+    step "fmt (cargo fmt --check)"
     cargo fmt --check
 fi
 
+step "clippy (cargo clippy --all-targets -- -D warnings)"
+cargo clippy --all-targets -- -D warnings
+
+echo
 echo "verify OK"
