@@ -14,7 +14,7 @@
 
 use anyhow::Result;
 use sparsessm::sparse::decode::{dense_vs_sparse_sweep, m370_bench_params};
-use sparsessm::sparse::Dtype;
+use sparsessm::sparse::{Dtype, Kernel};
 
 fn main() -> Result<()> {
     let params = m370_bench_params();
@@ -28,7 +28,7 @@ fn main() -> Result<()> {
     // sweep stacks quantized value planes on the same structure planes
     // (run `sparsessm experiment --id quant_speed` for the full grid).
     for dtype in [Dtype::F32, Dtype::I8] {
-        for row in dense_vs_sparse_sweep(&params, bt, l, 800.0, dtype)? {
+        for row in dense_vs_sparse_sweep(&params, bt, l, 800.0, dtype, Kernel::default())? {
             println!(
                 "{:<24} {:<24} {:>10.0} {:>7.2}x {:>12.2}",
                 row.label, row.formats, row.tokens_per_sec, row.speedup, row.weight_mb

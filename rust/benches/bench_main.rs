@@ -16,7 +16,7 @@ use sparsessm::linalg::gram_f32;
 use sparsessm::pruning::{aggregate, magnitude, semistructured, sparsegpt};
 use sparsessm::rngx::Pcg;
 use sparsessm::runtime::lit_f32;
-use sparsessm::sparse::{decode, Dtype, Format, Packed, SparseModel};
+use sparsessm::sparse::{decode, Dtype, Format, Kernel, Packed, SparseModel};
 use sparsessm::tensor::Tensor;
 
 fn main() {
@@ -124,7 +124,7 @@ fn main() {
         for sparsity in [0.5f64, 0.9, 0.99] {
             let mut w = dense_w.clone();
             magnitude::magnitude_mask(&w, sparsity).apply(&mut w);
-            for fmt in [Format::Bitmask, Format::Csr] {
+            for fmt in [Format::Bitmask, Format::Csr, Format::Bcsr] {
                 let p = Packed::pack_as(&w, rows, cols, fmt);
                 let name =
                     format!("matvec {} @{:.0}%", p.format().name(), 100.0 * sparsity);
@@ -139,7 +139,10 @@ fn main() {
     // m370 dims (host-only — needs no artifacts).
     run("sparse_decode_throughput", &mut |res| {
         let params = decode::m370_bench_params();
-        for row in decode::dense_vs_sparse_sweep(&params, 2, 64, 300.0, Dtype::F32).unwrap() {
+        let rows =
+            decode::dense_vs_sparse_sweep(&params, 2, 64, 300.0, Dtype::F32, Kernel::default())
+                .unwrap();
+        for row in rows {
             eprintln!(
                 "  {:<20} {:>9.0} tok/s ({:.2}x, {:.2} MB)",
                 row.label, row.tokens_per_sec, row.speedup, row.weight_mb
@@ -152,7 +155,15 @@ fn main() {
     // packed format × dtype at the same 50% / 2:4 masks (host-only).
     run("quant_speed", &mut |res| {
         let params = decode::m370_bench_params();
-        for row in decode::quant_sweep(&params, 2, 48, 150.0).unwrap() {
+        let rows = decode::quant_sweep(&params, 2, 48, 150.0, Kernel::default()).unwrap();
+        if let Err(e) = decode::update_bench_kernels_json(
+            &decode::bench_kernels_json_path(),
+            "quant_speed",
+            decode::quant_rows_json(&rows),
+        ) {
+            eprintln!("  [warn] {}: {e}", decode::BENCH_KERNELS_JSON);
+        }
+        for row in rows {
             eprintln!(
                 "  {:<8} {:<4} {:>9.0} tok/s ({:.2}x)  {:>9} B ({:.2}x f32)",
                 row.format.name(),
@@ -166,11 +177,37 @@ fn main() {
         }
     });
 
+    // SIMD vs scalar row kernels: matmul tokens/sec per format × dtype ×
+    // kernel at the m370 in_proj shape (host-only).  The acceptance bar:
+    // simd ≥1.5x scalar for the f32 bitmask and 2:4 rows at 50%.
+    run("kernel_speed", &mut |res| {
+        let rows = decode::kernel_sweep(32, 200.0);
+        if let Err(e) = decode::update_bench_kernels_json(
+            &decode::bench_kernels_json_path(),
+            "kernel_speed",
+            decode::kernel_rows_json(&rows),
+        ) {
+            eprintln!("  [warn] {}: {e}", decode::BENCH_KERNELS_JSON);
+        }
+        for row in rows {
+            eprintln!(
+                "  {:<8} {:<4} {:<7} {:>12.0} tok/s ({:.2}x scalar)",
+                row.format.name(),
+                row.dtype.name(),
+                row.kernel.name(),
+                row.tokens_per_sec,
+                row.rel_scalar
+            );
+            res.push(row.bench);
+        }
+    });
+
     // engine: steady-state step decode — O(1)/token batched sessions
     // over one shared packed model (host-only).
     run("engine_step_decode", &mut |res| {
         let params = decode::m370_bench_params();
-        for (label, p, policy) in decode::sweep_variants(&params, Dtype::F32).unwrap() {
+        let variants = decode::sweep_variants(&params, Dtype::F32, Kernel::default()).unwrap();
+        for (label, p, policy) in variants {
             let model = SparseModel::compile(&p, &policy).unwrap();
             let (r, tps) = engine::bench::step_decode_throughput(
                 &model,

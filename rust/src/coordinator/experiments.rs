@@ -7,6 +7,7 @@
 use super::report::{metric_header, Report};
 use super::{FfnMethod, Pipeline, SsmMethod};
 use crate::benchx;
+use crate::engine;
 use crate::eval::MetricsRow;
 use crate::model::FFN_MODULES;
 use crate::pruning::shedder;
@@ -17,11 +18,11 @@ use anyhow::{bail, Result};
 
 /// All experiment ids: the paper's tables/figures in paper order, plus
 /// repo-native serving experiments (`sparse_speed`, `serve_engine`,
-/// `quant_speed`).
-pub const ALL_IDS: [&str; 18] = [
+/// `quant_speed`, `kernel_speed`).
+pub const ALL_IDS: [&str; 19] = [
     "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "table9",
     "table10", "table11", "table12", "fig2", "fig3", "fig4", "sparse_speed", "serve_engine",
-    "quant_speed",
+    "quant_speed", "kernel_speed",
 ];
 
 pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
@@ -45,6 +46,7 @@ pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
         "sparse_speed" => sparse_speed(pipe)?,
         "serve_engine" => serve_engine(pipe)?,
         "quant_speed" => quant_speed(pipe)?,
+        "kernel_speed" => kernel_speed(pipe)?,
         other => bail!("unknown experiment id '{other}' (known: {:?})", ALL_IDS),
     };
     rep.note(&format!(
@@ -478,7 +480,9 @@ fn sparse_speed(pipe: &Pipeline) -> Result<Report> {
     let params = crate::sparse::decode::m370_bench_params();
     let (bt, l, budget) = if pipe.fast { (2, 64, 250.0) } else { (8, 128, 1000.0) };
     let dtype = crate::sparse::Dtype::F32;
-    for row in crate::sparse::decode::dense_vs_sparse_sweep(&params, bt, l, budget, dtype)? {
+    let kernel = crate::sparse::Kernel::default();
+    let rows = crate::sparse::decode::dense_vs_sparse_sweep(&params, bt, l, budget, dtype, kernel)?;
+    for row in rows {
         rep.push_row(vec![
             row.label,
             row.formats,
@@ -510,8 +514,10 @@ fn serve_engine(pipe: &Pipeline) -> Result<Report> {
     let (l, budget) = if pipe.fast { (64usize, 150.0) } else { (128usize, 500.0) };
     let batches: &[usize] = if pipe.fast { &[1, 4] } else { &[1, 4, 8] };
     let dtype = crate::sparse::Dtype::F32;
+    let kernel = crate::sparse::Kernel::default();
     for &bt in batches {
-        for row in crate::engine::bench::step_vs_full_sweep(&params, bt, l, budget, dtype)? {
+        let rows = engine::bench::step_vs_full_sweep(&params, bt, l, budget, dtype, kernel)?;
+        for row in rows {
             rep.push_row(vec![
                 bt.to_string(),
                 row.label,
@@ -545,7 +551,9 @@ fn quant_speed(pipe: &Pipeline) -> Result<Report> {
     // and dtypes, not trained values.
     let params = crate::sparse::decode::m370_bench_params();
     let (bt, l, budget) = if pipe.fast { (2, 48, 150.0) } else { (4, 96, 500.0) };
-    for row in crate::sparse::decode::quant_sweep(&params, bt, l, budget)? {
+    let kernel = crate::sparse::Kernel::default();
+    let rows = crate::sparse::decode::quant_sweep(&params, bt, l, budget, kernel)?;
+    for row in &rows {
         rep.push_row(vec![
             row.format.name().to_string(),
             row.dtype.name().to_string(),
@@ -556,6 +564,20 @@ fn quant_speed(pipe: &Pipeline) -> Result<Report> {
             format!("{:.2}x", row.rel_memory),
         ]);
     }
+    // Best-effort: the measurements above are already in the report;
+    // a perf-log write failure must not discard them.
+    let log = crate::sparse::decode::bench_kernels_json_path();
+    match crate::sparse::decode::update_bench_kernels_json(
+        &log,
+        "quant_speed",
+        crate::sparse::decode::quant_rows_json(&rows),
+    ) {
+        Ok(()) => rep.note(&format!(
+            "machine-readable rows folded into {} (quant_speed section)",
+            log.display()
+        )),
+        Err(e) => rep.note(&format!("[warn] perf log not updated: {e:#}")),
+    }
     rep.note(
         "one structure plane per format composes with every value dtype (DESIGN.md §11); \
          i8 halves the bitmask/dense footprint at the same 50% mask",
@@ -563,6 +585,52 @@ fn quant_speed(pipe: &Pipeline) -> Result<Report> {
     rep.note(
         "csr's u32 column indices dominate its footprint, so quantizing its values buys \
          proportionally less than for bitmask/2:4",
+    );
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// kernel_speed — SIMD vs scalar row kernels, format × dtype grid
+// ---------------------------------------------------------------------
+
+fn kernel_speed(pipe: &Pipeline) -> Result<Report> {
+    let mut rep = Report::new(
+        "kernel_speed",
+        "SIMD vs scalar row kernels: matmul tokens/sec per format × dtype \
+         (m370 in_proj shape, 50% / 2:4 masks)",
+        &["Format", "Dtype", "Kernel", "tok/s", "vs scalar", "p50 (ms)"],
+    );
+    // Host-only: the kernels see only shapes, structure planes and
+    // dtypes — random weights at the real m370 in_proj shape suffice.
+    let (t, budget) = if pipe.fast { (16, 60.0) } else { (32, 300.0) };
+    let rows = crate::sparse::decode::kernel_sweep(t, budget);
+    for row in &rows {
+        rep.push_row(vec![
+            row.format.name().to_string(),
+            row.dtype.name().to_string(),
+            row.kernel.name().to_string(),
+            format!("{:.0}", row.tokens_per_sec),
+            format!("{:.2}x", row.rel_scalar),
+            format!("{:.4}", row.bench.p50_ms),
+        ]);
+    }
+    // Best-effort, as in quant_speed: never discard a measured report
+    // over a perf-log write failure.
+    let log = crate::sparse::decode::bench_kernels_json_path();
+    match crate::sparse::decode::update_bench_kernels_json(
+        &log,
+        "kernel_speed",
+        crate::sparse::decode::kernel_rows_json(&rows),
+    ) {
+        Ok(()) => rep.note(&format!(
+            "machine-readable rows folded into {} (kernel_speed section)",
+            log.display()
+        )),
+        Err(e) => rep.note(&format!("[warn] perf log not updated: {e:#}")),
+    }
+    rep.note(
+        "acceptance bar: simd ≥1.5x scalar for the f32 bitmask and 2:4 rows at 50% sparsity \
+         (multi-token kernels amortize structure/value decode across the token tile)",
     );
     Ok(rep)
 }

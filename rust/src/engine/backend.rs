@@ -22,7 +22,7 @@
 
 use super::EngineState;
 use crate::model::{FlatParams, ModelMeta};
-use crate::sparse::decode::{conv1d_causal_silu, rmsnorm, silu, softplus};
+use crate::sparse::decode::{conv1d_causal_silu, rmsnorm, rmsnorm_into, silu, softplus};
 use crate::sparse::SparseModel;
 use crate::ssm::{selective_scan_with_state, SsmInputs};
 use crate::threadx;
@@ -130,27 +130,32 @@ impl Backend for SparseModel {
 
 /// Single-token step on the packed model: packed matvecs + ring-buffer
 /// conv + in-place scan update.  Op-for-op the same arithmetic as
-/// `decode::forward_logits` restricted to one position.
+/// `decode::forward_logits` restricted to one position.  All working
+/// buffers come from the session's [`super::StepScratch`] and every
+/// projection runs its `_into` kernel, so the only allocation per token
+/// is the returned logits vector.
 fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<f32> {
     let meta = &model.meta;
     let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
+    let kernel = model.kernel;
     let v = token as usize;
     assert!(v < meta.vocab, "token {token} out of vocab {}", meta.vocab);
     debug_assert_eq!(state.layers.len(), model.layers.len());
     let t_pos = state.seq_len;
+    state.scratch.ensure(meta);
+    let s = &mut state.scratch;
 
-    let mut x = model.embed_row(v).to_vec();
+    s.x.copy_from_slice(model.embed_row(v));
     for (layer, lst) in model.layers.iter().zip(&mut state.layers) {
-        let xn = rmsnorm(&x, &layer.norm, dm);
-        let xr = layer.in_proj.matvec(&xn); // [2di] = [x_in | res]
-        let (x_in, res) = xr.split_at(di);
+        rmsnorm_into(&s.x, &layer.norm, dm, &mut s.xn);
+        layer.in_proj.matvec_into_k(&s.xn, &mut s.xr, kernel); // [2di] = [x_in | res]
+        let (x_in, res) = s.xr.split_at(di);
 
         // Causal conv over packed taps, reading the ring buffer for past
         // positions; tap kk addresses sequence position t_pos + kk − (K−1).
         let k = layer.conv_w.cols;
         let taps = layer.conv_w.vals.as_f32().expect("conv taps are always packed f32");
-        let mut u = vec![0.0f32; di];
-        for (d, uv) in u.iter_mut().enumerate() {
+        for (d, uv) in s.u.iter_mut().enumerate() {
             let (lo, hi) = (layer.conv_w.row_ptr[d] as usize, layer.conv_w.row_ptr[d + 1] as usize);
             let mut acc = layer.conv_b[d];
             for p in lo..hi {
@@ -168,20 +173,19 @@ fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<
             lst.conv[(t_pos % (k - 1)) * di..][..di].copy_from_slice(x_in);
         }
 
-        let xdbc = layer.x_proj.matvec(&u); // [dr + 2ds] = [δ_r | B | C]
-        let (delta_r, bc) = xdbc.split_at(dr);
+        layer.x_proj.matvec_into_k(&s.u, &mut s.xdbc, kernel); // [dr + 2ds] = [δ_r | B | C]
+        let (delta_r, bc) = s.xdbc.split_at(dr);
         let (bv, cv) = bc.split_at(ds);
 
-        let mut delta = layer.dt_proj.matvec(delta_r); // [di]
-        for (dv, &bb) in delta.iter_mut().zip(&layer.dt_b) {
+        layer.dt_proj.matvec_into_k(delta_r, &mut s.delta, kernel); // [di]
+        for (dv, &bb) in s.delta.iter_mut().zip(&layer.dt_b) {
             *dv = softplus(*dv + bb);
         }
 
         // One scan step: h ← exp(δA)·h + δu·B, y = h·C + D·u, in place.
-        let mut y = vec![0.0f32; di];
-        for (d, yv) in y.iter_mut().enumerate() {
-            let dt = delta[d];
-            let xt = u[d];
+        for (d, yv) in s.y.iter_mut().enumerate() {
+            let dt = s.delta[d];
+            let xt = s.u[d];
             let dx = dt * xt;
             let arow = &layer.a[d * ds..(d + 1) * ds];
             let hrow = &mut lst.h[d * ds..(d + 1) * ds];
@@ -194,18 +198,18 @@ fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<
             *yv = acc + layer.d[d] * xt;
         }
 
-        for (yv, &rv) in y.iter_mut().zip(res) {
+        for (yv, &rv) in s.y.iter_mut().zip(res) {
             *yv *= silu(rv);
         }
-        let out = layer.out_proj.matvec(&y);
-        for (xv, &ov) in x.iter_mut().zip(&out) {
+        layer.out_proj.matvec_into_k(&s.y, &mut s.out, kernel);
+        for (xv, &ov) in s.x.iter_mut().zip(&s.out) {
             *xv += ov;
         }
     }
 
-    let xn = rmsnorm(&x, &model.norm_f, dm);
+    rmsnorm_into(&s.x, &model.norm_f, dm, &mut s.xn);
     state.seq_len = t_pos + 1;
-    model.head.matvec(&xn)
+    model.head.matvec_k(&s.xn, kernel)
 }
 
 /// Whole-prompt prefill on the packed model: the `forward_logits` op
@@ -217,6 +221,7 @@ fn sparse_prefill(model: &SparseModel, tokens: &[i32], last_only: bool) -> (Vec<
     assert!(!tokens.is_empty(), "prefill needs at least one token");
     let meta = &model.meta;
     let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
+    let kernel = model.kernel;
     let l = tokens.len();
     let mut state = EngineState::new(meta);
 
@@ -229,7 +234,7 @@ fn sparse_prefill(model: &SparseModel, tokens: &[i32], last_only: bool) -> (Vec<
 
     for (layer, lst) in model.layers.iter().zip(&mut state.layers) {
         let xn = rmsnorm(&x, &layer.norm, dm);
-        let xr = layer.in_proj.matmul(&xn, l); // [l, 2di] = [x_in | res]
+        let xr = layer.in_proj.matmul_k(&xn, l, kernel); // [l, 2di] = [x_in | res]
         let mut x_in = vec![0.0f32; l * di];
         let mut res = vec![0.0f32; l * di];
         for ti in 0..l {
@@ -250,7 +255,7 @@ fn sparse_prefill(model: &SparseModel, tokens: &[i32], last_only: bool) -> (Vec<
 
         let u = conv1d_causal_silu(&layer.conv_w, &layer.conv_b, &x_in, 1, l, di);
 
-        let xdbc = layer.x_proj.matmul(&u, l); // [l, dr + 2ds]
+        let xdbc = layer.x_proj.matmul_k(&u, l, kernel); // [l, dr + 2ds]
         let width = dr + 2 * ds;
         let mut delta_r = vec![0.0f32; l * dr];
         let mut bmat = vec![0.0f32; l * ds];
@@ -262,7 +267,7 @@ fn sparse_prefill(model: &SparseModel, tokens: &[i32], last_only: bool) -> (Vec<
             cmat[ti * ds..(ti + 1) * ds].copy_from_slice(&row[dr + ds..]);
         }
 
-        let mut delta = layer.dt_proj.matmul(&delta_r, l); // [l, di]
+        let mut delta = layer.dt_proj.matmul_k(&delta_r, l, kernel); // [l, di]
         for row in delta.chunks_exact_mut(di) {
             for (dv, &bb) in row.iter_mut().zip(&layer.dt_b) {
                 *dv = softplus(*dv + bb);
@@ -287,7 +292,7 @@ fn sparse_prefill(model: &SparseModel, tokens: &[i32], last_only: bool) -> (Vec<
         for (g, &rv) in gated.iter_mut().zip(&res) {
             *g *= silu(rv);
         }
-        let out = layer.out_proj.matmul(&gated, l);
+        let out = layer.out_proj.matmul_k(&gated, l, kernel);
         for (xv, &ov) in x.iter_mut().zip(&out) {
             *xv += ov;
         }
@@ -296,10 +301,10 @@ fn sparse_prefill(model: &SparseModel, tokens: &[i32], last_only: bool) -> (Vec<
     state.seq_len = l;
     if last_only {
         let xn = rmsnorm(&x[(l - 1) * dm..], &model.norm_f, dm);
-        (model.head.matvec(&xn), state)
+        (model.head.matvec_k(&xn, kernel), state)
     } else {
         let xn = rmsnorm(&x, &model.norm_f, dm);
-        (model.head.matmul(&xn, l), state)
+        (model.head.matmul_k(&xn, l, kernel), state)
     }
 }
 

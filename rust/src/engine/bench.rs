@@ -12,6 +12,7 @@ use crate::model::FlatParams;
 use crate::rngx::Pcg;
 use crate::sparse::decode;
 use crate::sparse::Dtype;
+use crate::sparse::Kernel;
 use crate::sparse::SparseModel;
 use anyhow::Result;
 
@@ -59,17 +60,18 @@ pub struct ServeRow {
 }
 
 /// Step decode vs full-recompute generation across the standard
-/// [`decode::sweep_variants`] set at batch `bt`, context length `l` and
-/// packed value dtype `dtype`.
+/// [`decode::sweep_variants`] set at batch `bt`, context length `l`,
+/// packed value dtype `dtype` and row kernel `kernel`.
 pub fn step_vs_full_sweep(
     params: &FlatParams,
     bt: usize,
     l: usize,
     budget_ms: f64,
     dtype: Dtype,
+    kernel: Kernel,
 ) -> Result<Vec<ServeRow>> {
     let mut rows = Vec::new();
-    for (label, p, policy) in decode::sweep_variants(params, dtype)? {
+    for (label, p, policy) in decode::sweep_variants(params, dtype, kernel)? {
         let model = SparseModel::compile(&p, &policy)?;
         let formats = model.format_summary();
         let name = format!("step {} B={bt} L={l} [{formats}]", model.meta.name);
@@ -118,7 +120,7 @@ mod tests {
     fn sweep_covers_all_variants_and_step_wins() {
         let p = toy_flat_params_random(4, 2);
         // Even on the toy model, O(1) steps beat O(L) recompute at L=32.
-        let rows = step_vs_full_sweep(&p, 1, 32, 2.0, Dtype::F32).unwrap();
+        let rows = step_vs_full_sweep(&p, 1, 32, 2.0, Dtype::F32, Kernel::default()).unwrap();
         assert_eq!(rows.len(), 5);
         for row in &rows {
             assert!(row.step_tps > 0.0 && row.full_tps > 0.0);

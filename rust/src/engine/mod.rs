@@ -41,4 +41,4 @@ pub use backend::Backend;
 pub use sampler::{Sampler, Sampling};
 pub use scheduler::{session_seed, Generation, Request, Scheduler, SchedulerStats};
 pub use session::Session;
-pub use state::{EngineState, LayerState};
+pub use state::{EngineState, LayerState, StepScratch};

@@ -26,13 +26,65 @@ pub struct LayerState {
     pub conv: Vec<f32>,
 }
 
+/// Reusable per-session working buffers for the single-token step path.
+/// Not recurrent state: every field is fully overwritten within one
+/// `step` call — keeping them on the session just spares the hot decode
+/// loop ~8 heap allocations per layer per token.  Sized lazily on first
+/// use ([`StepScratch::ensure`]), a no-op afterwards.
+#[derive(Debug, Clone, Default)]
+pub struct StepScratch {
+    /// Residual stream `[d_model]`.
+    pub x: Vec<f32>,
+    /// rmsnorm output `[d_model]` (reused for the final norm).
+    pub xn: Vec<f32>,
+    /// in_proj output `[2·d_inner]` = `[x_in | res]`.
+    pub xr: Vec<f32>,
+    /// conv+SiLU output `[d_inner]`.
+    pub u: Vec<f32>,
+    /// x_proj output `[dt_rank + 2·d_state]` = `[δ_r | B | C]`.
+    pub xdbc: Vec<f32>,
+    /// dt_proj output `[d_inner]`.
+    pub delta: Vec<f32>,
+    /// Scan output `[d_inner]`.
+    pub y: Vec<f32>,
+    /// out_proj output `[d_model]`.
+    pub out: Vec<f32>,
+}
+
+impl StepScratch {
+    /// Size every buffer for `meta` (no-op once sized).
+    pub fn ensure(&mut self, meta: &ModelMeta) {
+        let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
+        self.x.resize(dm, 0.0);
+        self.xn.resize(dm, 0.0);
+        self.xr.resize(2 * di, 0.0);
+        self.u.resize(di, 0.0);
+        self.xdbc.resize(dr + 2 * ds, 0.0);
+        self.delta.resize(di, 0.0);
+        self.y.resize(di, 0.0);
+        self.out.resize(dm, 0.0);
+    }
+}
+
 /// Full per-session recurrent state: one [`LayerState`] per layer plus
-/// the number of tokens consumed so far.
-#[derive(Debug, Clone, Default, PartialEq)]
+/// the number of tokens consumed so far (and the reusable step scratch,
+/// which is *not* part of the state proper).
+#[derive(Debug, Clone, Default)]
 pub struct EngineState {
     /// Tokens consumed so far (the next step processes position `seq_len`).
     pub seq_len: usize,
     pub layers: Vec<LayerState>,
+    /// Transient working memory for `step` (see [`StepScratch`]).
+    pub scratch: StepScratch,
+}
+
+impl PartialEq for EngineState {
+    /// State equality is the recurrent content only — scratch holds
+    /// whatever the last step left behind and must not distinguish
+    /// otherwise-identical sessions.
+    fn eq(&self, other: &Self) -> bool {
+        self.seq_len == other.seq_len && self.layers == other.layers
+    }
 }
 
 impl EngineState {
@@ -45,11 +97,12 @@ impl EngineState {
                 conv: vec![0.0; dc.saturating_sub(1) * di],
             })
             .collect();
-        EngineState { seq_len: 0, layers }
+        EngineState { seq_len: 0, layers, scratch: StepScratch::default() }
     }
 
-    /// Resident bytes of this session's state (constant in sequence
-    /// length — the whole point of step decode).
+    /// Resident bytes of this session's recurrent state (constant in
+    /// sequence length — the whole point of step decode).  Scratch is
+    /// excluded: it is transient working memory, also constant-size.
     pub fn memory_bytes(&self) -> usize {
         self.layers.iter().map(|l| (l.h.len() + l.conv.len()) * 4).sum::<usize>()
             + std::mem::size_of::<usize>()

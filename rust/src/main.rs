@@ -38,6 +38,8 @@ SUBCOMMANDS:
                              step  = stateful step decode vs full-recompute
                                      generation (engine prefill/step path)
       --dtype f32            packed value dtype: f32 | f16 | i8
+      --kernel simd          row kernels: simd (lane-chunked + AVX2/FMA)
+                             | scalar (the reference walk) — A/B either
       --batch 4  --len 128   batch size and context length
       --budget-ms 800        wall-clock budget per measurement
       --save PATH            compile a pruned packed model (--sparsity,
@@ -54,6 +56,7 @@ SUBCOMMANDS:
       --temp 0.0             0 = greedy; >0 = temperature sampling
       --sparsity 0.5         magnitude-prune level before packing
       --dtype f32            packed value dtype: f32 | f16 | i8
+      --kernel simd          row kernels: simd | scalar
       --seed 7               RNG seed (prompts + sampling)
   help                       this text
 
@@ -187,11 +190,12 @@ fn real_main(argv: &[String]) -> Result<()> {
 
 /// Host-only sparse-engine measurement: random weights at m370 dims, so
 /// it runs before `make artifacts` ever has.  `--dtype` picks the packed
-/// value plane for every sweep; `--save`/`--load` checkpoint a packed
+/// value plane and `--kernel` the row kernels (scalar = the reference
+/// walk, for A/B) for every sweep; `--save`/`--load` checkpoint a packed
 /// model with its structure + value planes written as-is.
 fn sparse_bench(args: &Args) -> Result<()> {
     use sparsessm::sparse::compile::{magnitude_prune_all, PackPolicy};
-    use sparsessm::sparse::{decode, Dtype, SparseModel};
+    use sparsessm::sparse::{decode, Dtype, Kernel, SparseModel};
 
     let bt = args.get_usize("batch", 4)?.max(1);
     let len = args.get_usize("len", 128)?.max(1);
@@ -199,9 +203,13 @@ fn sparse_bench(args: &Args) -> Result<()> {
     let dtype_name = args.get_or("dtype", "f32");
     let dtype = Dtype::parse(dtype_name)
         .ok_or_else(|| anyhow::anyhow!("unknown --dtype '{dtype_name}' (try: f32, f16, i8)"))?;
+    let kernel_name = args.get_or("kernel", "simd");
+    let kernel = Kernel::parse(kernel_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --kernel '{kernel_name}' (try: simd, scalar)"))?;
 
     if let Some(path) = args.get("load") {
-        let model = SparseModel::load(path)?;
+        let mut model = SparseModel::load(path)?;
+        model.kernel = kernel;
         println!(
             "loaded {} [{}] {:.2} MB from {path} (packed planes, no re-packing)",
             model.meta.name,
@@ -218,7 +226,8 @@ fn sparse_bench(args: &Args) -> Result<()> {
         if sparsity > 0.0 {
             magnitude_prune_all(&mut params, sparsity)?;
         }
-        let model = SparseModel::compile(&params, &PackPolicy::auto().with_dtype(dtype))?;
+        let policy = PackPolicy::auto().with_dtype(dtype).with_kernel(kernel);
+        let model = SparseModel::compile(&params, &policy)?;
         model.save(path)?;
         let loaded = SparseModel::load(path)?;
         anyhow::ensure!(loaded == model, "checkpoint roundtrip drifted");
@@ -237,9 +246,9 @@ fn sparse_bench(args: &Args) -> Result<()> {
         "full" => {
             println!(
                 "== decode throughput: dense vs packed \
-                 (m370 dims, B={bt} L={len}, dtype {dtype_name}) =="
+                 (m370 dims, B={bt} L={len}, dtype {dtype_name}, kernel {kernel_name}) =="
             );
-            for row in decode::dense_vs_sparse_sweep(&params, bt, len, budget, dtype)? {
+            for row in decode::dense_vs_sparse_sweep(&params, bt, len, budget, dtype, kernel)? {
                 println!(
                     "  {:<24} {:<24} {:>9.0} tok/s  {:>5.2}x  {:>7.2} MB",
                     row.label, row.formats, row.tokens_per_sec, row.speedup, row.weight_mb
@@ -249,15 +258,16 @@ fn sparse_bench(args: &Args) -> Result<()> {
         "step" => {
             println!(
                 "== generation throughput: step decode vs full recompute \
-                 (m370 dims, B={bt} L={len}, dtype {dtype_name}) =="
+                 (m370 dims, B={bt} L={len}, dtype {dtype_name}, kernel {kernel_name}) =="
             );
             println!(
                 "  {:<24} {:<24} {:>11} {:>11} {:>10}",
                 "variant", "formats", "step tok/s", "full tok/s", "step/full"
             );
-            for row in
-                sparsessm::engine::bench::step_vs_full_sweep(&params, bt, len, budget, dtype)?
-            {
+            let rows = sparsessm::engine::bench::step_vs_full_sweep(
+                &params, bt, len, budget, dtype, kernel,
+            )?;
+            for row in rows {
                 println!(
                     "  {:<24} {:<24} {:>11.0} {:>11.1} {:>9.1}x",
                     row.label, row.formats, row.step_tps, row.full_tps, row.advantage
@@ -279,7 +289,7 @@ fn generate(args: &Args) -> Result<()> {
     use sparsessm::engine::{Sampling, Scheduler};
     use sparsessm::rngx::Pcg;
     use sparsessm::sparse::compile::{magnitude_prune_all, PackPolicy};
-    use sparsessm::sparse::{Dtype, SparseModel};
+    use sparsessm::sparse::{Dtype, Kernel, SparseModel};
 
     let requests = args.get_usize("requests", 8)?;
     let batch = args.get_usize("batch", 4)?.max(1);
@@ -290,13 +300,17 @@ fn generate(args: &Args) -> Result<()> {
     let dtype_name = args.get_or("dtype", "f32");
     let dtype = Dtype::parse(dtype_name)
         .ok_or_else(|| anyhow::anyhow!("unknown --dtype '{dtype_name}' (try: f32, f16, i8)"))?;
+    let kernel_name = args.get_or("kernel", "simd");
+    let kernel = Kernel::parse(kernel_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --kernel '{kernel_name}' (try: simd, scalar)"))?;
     let seed = args.get_usize("seed", 7)? as u64;
 
     let mut params = sparsessm::sparse::decode::m370_bench_params();
     if sparsity > 0.0 {
         magnitude_prune_all(&mut params, sparsity)?;
     }
-    let model = SparseModel::compile(&params, &PackPolicy::auto().with_dtype(dtype))?;
+    let policy = PackPolicy::auto().with_dtype(dtype).with_kernel(kernel);
+    let model = SparseModel::compile(&params, &policy)?;
     let sampling = if temp > 0.0 { Sampling::Temperature(temp) } else { Sampling::Greedy };
     println!(
         "engine: m370 dims [{}] | {requests} requests x {new} tokens, batch {batch}, {}",

@@ -1,0 +1,328 @@
+//! Blocked CSR: CSR over fixed 1×[`BCSR_BLOCK`] column blocks — the
+//! "wider stripes" format of the serving roadmap.
+//!
+//! Where CSR indexes every nonzero individually (4 index bytes per
+//! value) and pays a gather per element, BCSR stores one `u32` column
+//! index per **block of 8 consecutive columns** and keeps the block's
+//! values contiguous, zeros included.  Every stored block is therefore
+//! a straight vector FMA against a contiguous `x` window — the one
+//! sparse layout with no gather in its inner loop (see
+//! `kernels::bcsr`).  The trade: intra-block zeros are stored and
+//! multiplied, so BCSR wins when nonzeros cluster into column runs
+//! (structured/column-wise pruning, wide stripes) and loses to bitmask
+//! at fine-grained random sparsity, where most blocks are half-empty.
+//!
+//! The **structure plane** (`row_ptr` + `col_blk` + recorded `nnz`) is
+//! dtype-independent; block values (padding zeros included) live in a
+//! [`ValueStore`] value plane, so f32/f16/i8 support is inherited from
+//! the plane split for free.  A ragged final block (cols not a multiple
+//! of 8) stores zero padding past `cols`; kernels clip to the real
+//! width.
+
+use super::values::{f16_to_f32, Dtype, I8_GROUP, ValueStore};
+use anyhow::{ensure, Result};
+
+/// Columns per block: one portable vector register of f32.
+pub const BCSR_BLOCK: usize = 8;
+
+/// Kernel-orientation `[rows, cols]` matrix in 1×8 blocked-CSR form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BcsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// `row_ptr[r]..row_ptr[r+1]` spans row `r`'s blocks in `col_blk`.
+    pub row_ptr: Vec<u32>,
+    /// Column-block index of each stored block (block `b` covers columns
+    /// `b·8 .. b·8+8`), strictly increasing within a row.
+    pub col_blk: Vec<u32>,
+    /// True nonzero count (padding zeros excluded), recorded at pack
+    /// time so lossy dtypes don't blur it.
+    nnz: usize,
+    /// `col_blk.len() · 8` values: blocks verbatim, zeros included.
+    pub vals: ValueStore,
+}
+
+impl BcsrMatrix {
+    /// Pack at f32 (lossless).
+    pub fn from_dense(w: &[f32], rows: usize, cols: usize) -> BcsrMatrix {
+        BcsrMatrix::from_dense_dtype(w, rows, cols, Dtype::F32)
+    }
+
+    /// Pack any matrix: blocks with at least one nonzero are stored
+    /// whole (8 values, ragged tails zero-padded), all-zero blocks are
+    /// skipped.
+    pub fn from_dense_dtype(w: &[f32], rows: usize, cols: usize, dtype: Dtype) -> BcsrMatrix {
+        assert_eq!(w.len(), rows * cols);
+        assert!(cols < u32::MAX as usize / BCSR_BLOCK);
+        let blocks_per_row = cols.div_ceil(BCSR_BLOCK);
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_blk = Vec::new();
+        let mut vals = Vec::new();
+        let mut nnz = 0usize;
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            let row = &w[r * cols..(r + 1) * cols];
+            for b in 0..blocks_per_row {
+                let lo = b * BCSR_BLOCK;
+                let hi = (lo + BCSR_BLOCK).min(cols);
+                let blk = &row[lo..hi];
+                let blk_nnz = blk.iter().filter(|&&v| v != 0.0).count();
+                if blk_nnz == 0 {
+                    continue;
+                }
+                nnz += blk_nnz;
+                col_blk.push(b as u32);
+                vals.extend_from_slice(blk);
+                vals.resize(col_blk.len() * BCSR_BLOCK, 0.0);
+            }
+            row_ptr.push(col_blk.len() as u32);
+        }
+        BcsrMatrix { rows, cols, row_ptr, col_blk, nnz, vals: ValueStore::encode(&vals, dtype) }
+    }
+
+    /// Reassemble from already-packed planes (the checkpoint load path —
+    /// no re-packing), validating structure-plane invariants.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        nnz: usize,
+        row_ptr: Vec<u32>,
+        col_blk: Vec<u32>,
+        vals: ValueStore,
+    ) -> Result<BcsrMatrix> {
+        ensure!(rows < usize::MAX && row_ptr.len() == rows + 1, "bcsr: row_ptr length");
+        ensure!(row_ptr.first() == Some(&0), "bcsr: row_ptr[0] != 0");
+        ensure!(row_ptr.windows(2).all(|w| w[0] <= w[1]), "bcsr: row_ptr not monotone");
+        ensure!(*row_ptr.last().unwrap() as usize == col_blk.len(), "bcsr: col_blk length");
+        // checked_mul: dims come from an untrusted file, keep the
+        // error-not-panic contract even for absurd values.
+        let stored = col_blk.len().checked_mul(BCSR_BLOCK).unwrap_or(usize::MAX);
+        ensure!(vals.len() == stored, "bcsr: value plane length");
+        let blocks_per_row = cols.div_ceil(BCSR_BLOCK);
+        ensure!(
+            col_blk.iter().all(|&b| (b as usize) < blocks_per_row),
+            "bcsr: column block out of range"
+        );
+        for r in 0..rows {
+            let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+            ensure!(
+                col_blk[lo..hi].windows(2).all(|w| w[0] < w[1]),
+                "bcsr: row {r} blocks not strictly increasing"
+            );
+        }
+        // Ragged-tail padding must be exact zero, or the kernels (which
+        // clip to `cols`) and `to_dense` would disagree with the plane.
+        let tail = cols % BCSR_BLOCK;
+        if tail != 0 {
+            let last_blk = (blocks_per_row - 1) as u32;
+            for (i, &b) in col_blk.iter().enumerate() {
+                if b == last_blk {
+                    for j in tail..BCSR_BLOCK {
+                        ensure!(
+                            vals.get(i * BCSR_BLOCK + j) == 0.0,
+                            "bcsr: nonzero padding past cols in block {i}"
+                        );
+                    }
+                }
+            }
+        }
+        ensure!(nnz <= stored, "bcsr: nnz exceeds stored slots");
+        // f32 planes are lossless, so the recorded count must match the
+        // plane exactly; lossy dtypes may have collapsed small survivors
+        // to zero, so only the lower bound can be checked.
+        if vals.dtype() == Dtype::F32 {
+            ensure!(nnz == vals.count_nonzero(), "bcsr: nnz disagrees with f32 plane");
+        } else {
+            ensure!(nnz >= vals.count_nonzero(), "bcsr: nnz below decoded survivors");
+        }
+        Ok(BcsrMatrix { rows, cols, row_ptr, col_blk, nnz, vals })
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.vals.dtype()
+    }
+
+    /// True nonzero count (padding excluded), from the structure plane.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Stored slots (incl. padding) — the multiply-adds one pass costs.
+    pub fn stored(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_blk.len() * 4 + self.vals.memory_bytes()
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            for i in lo..hi {
+                let base = self.col_blk[i] as usize * BCSR_BLOCK;
+                let width = BCSR_BLOCK.min(self.cols - base);
+                for j in 0..width {
+                    w[r * self.cols + base + j] = self.vals.get(i * BCSR_BLOCK + j);
+                }
+            }
+        }
+        w
+    }
+
+    #[inline]
+    pub fn row_dot(&self, r: usize, x: &[f32]) -> f32 {
+        match &self.vals {
+            ValueStore::F32(v) => self.row_dot_with(r, x, |k| v[k]),
+            ValueStore::F16(v) => self.row_dot_with(r, x, |k| f16_to_f32(v[k])),
+            ValueStore::I8 { codes, scales } => {
+                self.row_dot_with(r, x, |k| codes[k] as f32 * scales[k / I8_GROUP])
+            }
+        }
+    }
+
+    /// Structure walk shared by the dtype-monomorphized kernels: `val(k)`
+    /// decodes stored slot `k` and inlines per dtype.
+    #[inline(always)]
+    fn row_dot_with<F: Fn(usize) -> f32>(&self, r: usize, x: &[f32], val: F) -> f32 {
+        let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+        let mut acc = 0.0f32;
+        for i in lo..hi {
+            let base = self.col_blk[i] as usize * BCSR_BLOCK;
+            let width = BCSR_BLOCK.min(self.cols - base);
+            let p = i * BCSR_BLOCK;
+            for j in 0..width {
+                acc += val(p + j) * x[base + j];
+            }
+        }
+        acc
+    }
+
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows).map(|r| self.row_dot(r, x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg;
+    use crate::sparse::dense_matvec;
+    use crate::sparse::testutil::sparse_random;
+
+    #[test]
+    fn roundtrip_exact_including_ragged_tails() {
+        let mut rng = Pcg::seeded(1);
+        // cols 3 < one block; 13 and 67 force ragged tails.
+        for (r, c) in [(2usize, 3usize), (4, 8), (5, 13), (7, 67), (3, 64)] {
+            let w = sparse_random(&mut rng, r, c, 0.5);
+            let m = BcsrMatrix::from_dense(&w, r, c);
+            assert_eq!(m.to_dense(), w, "dims ({r},{c})");
+            assert_eq!(m.nnz(), w.iter().filter(|&&v| v != 0.0).count());
+            assert_eq!(m.stored(), m.col_blk.len() * BCSR_BLOCK);
+        }
+    }
+
+    #[test]
+    fn skips_zero_blocks_and_stores_whole_ones() {
+        // Row of 16 cols: block 0 all zero, block 1 one nonzero.
+        let mut w = vec![0.0f32; 16];
+        w[9] = 3.0;
+        let m = BcsrMatrix::from_dense(&w, 1, 16);
+        assert_eq!(m.col_blk, vec![1]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.stored(), BCSR_BLOCK);
+        assert_eq!(m.matvec(&[1.0; 16]), vec![3.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Pcg::seeded(2);
+        let (r, c) = (17usize, 53usize);
+        let w = sparse_random(&mut rng, r, c, 0.4);
+        let x: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        let m = BcsrMatrix::from_dense(&w, r, c);
+        let want = dense_matvec(&w, r, c, &x);
+        for (u, v) in m.matvec(&x).iter().zip(&want) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn quantized_planes_share_the_structure() {
+        let mut rng = Pcg::seeded(3);
+        let (r, c) = (9usize, 61usize);
+        let w = sparse_random(&mut rng, r, c, 0.5);
+        let f32m = BcsrMatrix::from_dense(&w, r, c);
+        for dtype in [Dtype::F16, Dtype::I8] {
+            let q = BcsrMatrix::from_dense_dtype(&w, r, c, dtype);
+            assert_eq!(q.dtype(), dtype);
+            assert_eq!(q.row_ptr, f32m.row_ptr, "{dtype:?} structure drifted");
+            assert_eq!(q.col_blk, f32m.col_blk);
+            assert_eq!(q.nnz(), f32m.nnz(), "nnz comes from the structure plane");
+            assert!(q.memory_bytes() < f32m.memory_bytes());
+            let dec = q.to_dense();
+            let x: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+            let want = dense_matvec(&dec, r, c, &x);
+            for (u, v) in q.matvec(&x).iter().zip(&want) {
+                assert!((u - v).abs() < 1e-5, "{dtype:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_validates_planes() {
+        let mut rng = Pcg::seeded(4);
+        let w = sparse_random(&mut rng, 3, 20, 0.5);
+        let m = BcsrMatrix::from_dense(&w, 3, 20);
+        let ok = BcsrMatrix::from_parts(
+            3,
+            20,
+            m.nnz(),
+            m.row_ptr.clone(),
+            m.col_blk.clone(),
+            m.vals.clone(),
+        );
+        assert_eq!(ok.unwrap(), m);
+        // Out-of-range column block must be rejected.
+        let mut bad = m.col_blk.clone();
+        if let Some(b) = bad.first_mut() {
+            *b = 99;
+        }
+        assert!(BcsrMatrix::from_parts(3, 20, m.nnz(), m.row_ptr.clone(), bad, m.vals.clone())
+            .is_err());
+        // Wrong value-plane length must be rejected.
+        assert!(BcsrMatrix::from_parts(
+            3,
+            20,
+            m.nnz(),
+            m.row_ptr.clone(),
+            m.col_blk.clone(),
+            ValueStore::encode(&[1.0], Dtype::F32),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn from_parts_rejects_nonzero_tail_padding() {
+        // 1×10: one ragged block pair (block 1 covers cols 8..10).
+        let w = vec![1.0f32; 10];
+        let m = BcsrMatrix::from_dense(&w, 1, 10);
+        let mut vals = match &m.vals {
+            ValueStore::F32(v) => v.clone(),
+            _ => unreachable!(),
+        };
+        *vals.last_mut().unwrap() = 7.0; // padding slot past cols
+        let bad = BcsrMatrix::from_parts(
+            1,
+            10,
+            m.nnz(),
+            m.row_ptr.clone(),
+            m.col_blk.clone(),
+            ValueStore::F32(vals),
+        );
+        assert!(bad.is_err());
+    }
+}

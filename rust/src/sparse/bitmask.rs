@@ -117,6 +117,12 @@ impl BitmaskMatrix {
         self.vals.dtype()
     }
 
+    /// Occupancy words per row (`ceil(cols / 64)`) — the structure-plane
+    /// stride the SIMD kernels walk.
+    pub fn blocks_per_row(&self) -> usize {
+        self.blocks_per_row
+    }
+
     /// Stored nonzeros — the structure plane's count, independent of the
     /// value dtype.
     pub fn nnz(&self) -> usize {

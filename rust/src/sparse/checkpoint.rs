@@ -22,7 +22,10 @@
 //! so a corrupt file fails with an error instead of a bad model.
 
 use super::values::{Dtype, I8_GROUP, ValueStore};
-use super::{BitmaskMatrix, CsrMatrix, DenseMatrix, NmMatrix, Packed, SparseLayer, SparseModel};
+use super::{
+    BcsrMatrix, BitmaskMatrix, CsrMatrix, DenseMatrix, Kernel, NmMatrix, Packed, SparseLayer,
+    SparseModel,
+};
 use crate::model::ModelMeta;
 use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
@@ -253,6 +256,15 @@ fn write_packed(w: &mut Writer, p: &Packed) {
             w.u8s(&m.idx);
             write_store(w, &m.vals);
         }
+        Packed::Bcsr(m) => {
+            w.u8(4);
+            w.usize(m.rows);
+            w.usize(m.cols);
+            w.usize(m.nnz());
+            w.u32s(&m.row_ptr);
+            w.u32s(&m.col_blk);
+            write_store(w, &m.vals);
+        }
     }
 }
 
@@ -282,6 +294,15 @@ fn read_packed(r: &mut Reader) -> Result<Packed> {
             let idx = r.u8s()?;
             let vals = read_store(r)?;
             Ok(Packed::Nm(NmMatrix::from_parts(rows, cols, n, m, nnz, idx, vals)?))
+        }
+        4 => {
+            let rows = r.usize()?;
+            let cols = r.usize()?;
+            let nnz = r.usize()?;
+            let row_ptr = r.u32s()?;
+            let col_blk = r.u32s()?;
+            let vals = read_store(r)?;
+            Ok(Packed::Bcsr(BcsrMatrix::from_parts(rows, cols, nnz, row_ptr, col_blk, vals)?))
         }
         t => bail!("unknown packed-format tag {t}"),
     }
@@ -408,7 +429,8 @@ impl SparseModel {
             layers.push(layer);
         }
         ensure!(r.pos == bytes.len(), "trailing bytes in checkpoint");
-        Ok(SparseModel { meta, head, layers, norm_f })
+        // The kernel choice is a serving-time preference, not model data.
+        Ok(SparseModel { meta, head, layers, norm_f, kernel: Kernel::default() })
     }
 }
 
@@ -434,6 +456,8 @@ mod tests {
             PackPolicy::of(Format::Csr),
             PackPolicy::auto().with_dtype(Dtype::F16),
             PackPolicy::of(Format::Bitmask).with_dtype(Dtype::I8),
+            PackPolicy::of(Format::Bcsr),
+            PackPolicy::of(Format::Bcsr).with_dtype(Dtype::I8),
         ];
         for (i, policy) in policies.iter().enumerate() {
             let model = SparseModel::compile(&p, policy).unwrap();

@@ -11,25 +11,30 @@
 //! touches every (channel, state) pair regardless of the mask — only
 //! structured d_state surgery shrinks the scan, exactly as in the paper.
 //!
-//! The [`PackPolicy`] carries both planes of the decision: which
-//! **structure** (format, or density dispatch) and which **value dtype**
-//! (f32 / f16 / i8+scales, DESIGN.md §11).  The dtype covers the five
-//! packed projections; the conv taps and the tied head stay f32 (together
-//! they are a rounding error of the footprint, and the step kernel and
-//! `embed_row` rely on raw f32 slices), as do the small dense vectors.
+//! The [`PackPolicy`] carries all three planes of the decision: which
+//! **structure** (format, or density dispatch), which **value dtype**
+//! (f32 / f16 / i8+scales, DESIGN.md §11), and which **kernel** (SIMD
+//! microkernels or the scalar reference, DESIGN.md §12).  The dtype
+//! covers the five packed projections; the conv taps and the tied head
+//! stay f32 (together they are a rounding error of the footprint, and
+//! the step kernel and `embed_row` rely on raw f32 slices), as do the
+//! small dense vectors.  The kernel choice lands on the compiled
+//! [`SparseModel`] so the decode and engine paths pick it up without
+//! re-plumbing every call.
 //!
 //! Masks can be passed explicitly ([`SparseModel::compile_with_masks`]) or
 //! inferred from exact zeros ([`SparseModel::compile`]) — the latter is
 //! the common case since every `pruning` method applies its mask in place.
 
-use super::{CsrMatrix, DenseMatrix, Dtype, Format, Packed};
+use super::{CsrMatrix, DenseMatrix, Dtype, Format, Kernel, Packed};
 use crate::coordinator::transpose;
 use crate::model::{FlatParams, ModelMeta, FFN_MODULES};
 use crate::pruning::{magnitude, Mask};
 use anyhow::Result;
 use std::collections::BTreeMap;
 
-/// How to pack each prunable tensor: structure plane × value dtype.
+/// How to pack each prunable tensor: structure plane × value dtype ×
+/// row kernel.
 #[derive(Debug, Clone, Default)]
 pub struct PackPolicy {
     /// `None` = density-based dispatch ([`Packed::pack`]); `Some(fmt)`
@@ -37,12 +42,15 @@ pub struct PackPolicy {
     pub force: Option<Format>,
     /// Value-plane storage dtype for the packed projections.
     pub dtype: Dtype,
+    /// Row-kernel implementation the compiled model serves with
+    /// (SIMD default; scalar is the A/B reference).
+    pub kernel: Kernel,
 }
 
 impl PackPolicy {
     /// Density-dispatched f32 packing (the deployment default).
     pub fn auto() -> PackPolicy {
-        PackPolicy { force: None, dtype: Dtype::F32 }
+        PackPolicy { force: None, dtype: Dtype::F32, kernel: Kernel::default() }
     }
 
     /// Everything dense — the baseline the speedups are measured against,
@@ -52,12 +60,18 @@ impl PackPolicy {
     }
 
     pub fn of(fmt: Format) -> PackPolicy {
-        PackPolicy { force: Some(fmt), dtype: Dtype::F32 }
+        PackPolicy { force: Some(fmt), dtype: Dtype::F32, kernel: Kernel::default() }
     }
 
     /// Same structure decision, values stored at `dtype`.
     pub fn with_dtype(mut self, dtype: Dtype) -> PackPolicy {
         self.dtype = dtype;
+        self
+    }
+
+    /// Same packing decisions, served by `kernel`.
+    pub fn with_kernel(mut self, kernel: Kernel) -> PackPolicy {
+        self.kernel = kernel;
         self
     }
 
@@ -93,7 +107,7 @@ pub struct SparseLayer {
 }
 
 /// A compiled, packed model ready for the native decode path.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct SparseModel {
     pub meta: ModelMeta,
     /// Tied embedding/LM head, stored once: row-major `[vocab, d_model]`
@@ -102,6 +116,21 @@ pub struct SparseModel {
     pub head: Packed,
     pub layers: Vec<SparseLayer>,
     pub norm_f: Vec<f32>,
+    /// Row-kernel implementation the decode/engine paths run (from
+    /// [`PackPolicy::kernel`]; checkpoints load with the default).
+    pub kernel: Kernel,
+}
+
+impl PartialEq for SparseModel {
+    /// Model equality is the packed planes only: `kernel` is a runtime
+    /// serving preference, not model data (checkpoints don't record it),
+    /// so save/load roundtrips compare equal regardless of it.
+    fn eq(&self, other: &Self) -> bool {
+        self.meta == other.meta
+            && self.head == other.head
+            && self.layers == other.layers
+            && self.norm_f == other.norm_f
+    }
 }
 
 impl SparseModel {
@@ -130,7 +159,13 @@ impl SparseModel {
                 out_proj: policy.pack(&transpose(v("out_proj")?, di, dm), dm, di),
             });
         }
-        Ok(SparseModel { meta, head, layers, norm_f: params.view("norm_f")?.to_vec() })
+        Ok(SparseModel {
+            meta,
+            head,
+            layers,
+            norm_f: params.view("norm_f")?.to_vec(),
+            kernel: policy.kernel,
+        })
     }
 
     /// Row `v` of the tied embedding/head matrix (token gather).
@@ -385,6 +420,20 @@ mod tests {
             assert!(q.memory_bytes() < f32m.memory_bytes(), "{dtype:?}");
             assert!(q.format_summary().contains(dtype.name()), "{}", q.format_summary());
         }
+    }
+
+    #[test]
+    fn kernel_choice_lands_on_the_model_not_its_planes() {
+        let mut p = toy_flat_params_random(4, 6);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        let simd = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let scalar =
+            SparseModel::compile(&p, &PackPolicy::auto().with_kernel(Kernel::Scalar)).unwrap();
+        assert_eq!(simd.kernel, Kernel::Simd);
+        assert_eq!(scalar.kernel, Kernel::Scalar);
+        // Equality compares packed planes only — the kernel is a runtime
+        // serving preference (checkpoints load with the default).
+        assert_eq!(simd, scalar);
     }
 
     #[test]

@@ -64,6 +64,17 @@ impl CsrMatrix {
         ensure!(*row_ptr.last().unwrap() as usize == col_idx.len(), "csr: col_idx length");
         ensure!(col_idx.len() == vals.len(), "csr: value plane length");
         ensure!(col_idx.iter().all(|&c| (c as usize) < cols), "csr: column index out of range");
+        // Columns must be strictly increasing within a row (packing
+        // order): a repeated index would double-count one input column
+        // in row_dot while to_dense keeps only the last write — a model
+        // that disagrees with its own dense reconstruction.
+        for r in 0..rows {
+            let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+            ensure!(
+                col_idx[lo..hi].windows(2).all(|w| w[0] < w[1]),
+                "csr: row {r} columns not strictly increasing"
+            );
+        }
         Ok(CsrMatrix { rows, cols, row_ptr, col_idx, vals })
     }
 
@@ -218,5 +229,18 @@ mod tests {
             ValueStore::encode(&[1.0], Dtype::F32),
         );
         assert!(bad.is_err());
+    }
+
+    #[test]
+    fn from_parts_rejects_duplicate_or_unsorted_columns() {
+        // Row 1 of a 2x3 matrix with two entries.
+        let w = vec![0.0f32, 0.0, 0.0, 1.0, 0.0, 2.0];
+        let m = CsrMatrix::from_dense(&w, 2, 3);
+        // Duplicate column in one row: row_dot would double-count x[0].
+        let dup = CsrMatrix::from_parts(2, 3, m.row_ptr.clone(), vec![0, 0], m.vals.clone());
+        assert!(dup.is_err());
+        // Unsorted columns break the packing-order invariant.
+        let unsorted = CsrMatrix::from_parts(2, 3, m.row_ptr.clone(), vec![2, 0], m.vals.clone());
+        assert!(unsorted.is_err());
     }
 }

@@ -19,13 +19,16 @@
 use super::compile::{apply_nm_along_input, magnitude_prune_all, PackPolicy, SparseModel};
 use super::values::Dtype;
 use super::CsrMatrix;
-use super::Format;
+use super::{Format, Kernel, Packed};
 use crate::benchx::{self, BenchResult};
 use crate::model::toy::{custom_flat_params_random, m370_dims_meta};
 use crate::model::FlatParams;
+use crate::pruning::magnitude;
 use crate::rngx::Pcg;
 use crate::ssm::{selective_scan, SsmInputs};
-use anyhow::Result;
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::path::Path;
 
 /// The shared host-only bench model: random weights at real m370 widths,
 /// one seed/scale so the CLI `sparse-bench`, the `sparse_speed` and
@@ -49,10 +52,12 @@ pub(crate) fn softplus(x: f32) -> f32 {
     }
 }
 
-pub(crate) fn rmsnorm(x: &[f32], w: &[f32], dm: usize) -> Vec<f32> {
+/// Allocation-free rmsnorm into a caller buffer (the engine's step path
+/// reuses per-session scratch through this).
+pub(crate) fn rmsnorm_into(x: &[f32], w: &[f32], dm: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len() % dm, 0);
     debug_assert_eq!(w.len(), dm);
-    let mut out = vec![0.0f32; x.len()];
+    debug_assert_eq!(out.len(), x.len());
     for (row, orow) in x.chunks_exact(dm).zip(out.chunks_exact_mut(dm)) {
         let mut ss = 0.0f32;
         for &v in row {
@@ -63,6 +68,11 @@ pub(crate) fn rmsnorm(x: &[f32], w: &[f32], dm: usize) -> Vec<f32> {
             *o = v * scale * wv;
         }
     }
+}
+
+pub(crate) fn rmsnorm(x: &[f32], w: &[f32], dm: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    rmsnorm_into(x, w, dm, &mut out);
     out
 }
 
@@ -115,6 +125,7 @@ pub(crate) fn conv1d_causal_silu(
 pub fn forward_logits(model: &SparseModel, tokens: &[i32], bt: usize, l: usize) -> Vec<f32> {
     let meta = &model.meta;
     let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
+    let kernel = model.kernel;
     let t = bt * l;
     assert_eq!(tokens.len(), t);
 
@@ -127,7 +138,7 @@ pub fn forward_logits(model: &SparseModel, tokens: &[i32], bt: usize, l: usize) 
 
     for layer in &model.layers {
         let xn = rmsnorm(&x, &layer.norm, dm);
-        let xr = layer.in_proj.matmul(&xn, t); // [t, 2di] = [x_in | res]
+        let xr = layer.in_proj.matmul_k(&xn, t, kernel); // [t, 2di] = [x_in | res]
         let mut x_in = vec![0.0f32; t * di];
         let mut res = vec![0.0f32; t * di];
         for ti in 0..t {
@@ -138,7 +149,7 @@ pub fn forward_logits(model: &SparseModel, tokens: &[i32], bt: usize, l: usize) 
 
         let u = conv1d_causal_silu(&layer.conv_w, &layer.conv_b, &x_in, bt, l, di);
 
-        let xdbc = layer.x_proj.matmul(&u, t); // [t, dr + 2ds] = [δ_r | B | C]
+        let xdbc = layer.x_proj.matmul_k(&u, t, kernel); // [t, dr + 2ds] = [δ_r | B | C]
         let width = dr + 2 * ds;
         let mut delta_r = vec![0.0f32; t * dr];
         let mut bmat = vec![0.0f32; t * ds];
@@ -150,7 +161,7 @@ pub fn forward_logits(model: &SparseModel, tokens: &[i32], bt: usize, l: usize) 
             cmat[ti * ds..(ti + 1) * ds].copy_from_slice(&row[dr + ds..]);
         }
 
-        let mut delta = layer.dt_proj.matmul(&delta_r, t); // [t, di]
+        let mut delta = layer.dt_proj.matmul_k(&delta_r, t, kernel); // [t, di]
         for row in delta.chunks_exact_mut(di) {
             for (dv, &bv) in row.iter_mut().zip(&layer.dt_b) {
                 *dv = softplus(*dv + bv);
@@ -171,14 +182,14 @@ pub fn forward_logits(model: &SparseModel, tokens: &[i32], bt: usize, l: usize) 
         for (g, &rv) in gated.iter_mut().zip(&res) {
             *g *= silu(rv);
         }
-        let out = layer.out_proj.matmul(&gated, t); // [t, dm]
+        let out = layer.out_proj.matmul_k(&gated, t, kernel); // [t, dm]
         for (xv, &ov) in x.iter_mut().zip(&out) {
             *xv += ov;
         }
     }
 
     let xn = rmsnorm(&x, &model.norm_f, dm);
-    model.head.matmul(&xn, t) // [t, vocab]
+    model.head.matmul_k(&xn, t, kernel) // [t, vocab]
 }
 
 /// Time the decode path on random tokens; returns the bench row and the
@@ -218,10 +229,15 @@ pub type SweepVariant = (String, FlatParams, PackPolicy);
 /// The standard serving-bench variants over `params`: dense baseline,
 /// masked-dense (showing masks alone buy nothing), packed at 50%,
 /// 2:4-packed, CSR-dominated at 90%.  Every packed variant stores its
-/// values at `dtype` (the dense f32 baseline is left untouched so
-/// speedups stay anchored).  Shared by the full-recompute sweep below
-/// and the engine's step-decode sweep (`engine::bench`).
-pub fn sweep_variants(params: &FlatParams, dtype: Dtype) -> Result<Vec<SweepVariant>> {
+/// values at `dtype` and serves with `kernel` (the dense f32 baseline
+/// keeps the same kernel so speedups stay format-vs-format).  Shared by
+/// the full-recompute sweep below and the engine's step-decode sweep
+/// (`engine::bench`).
+pub fn sweep_variants(
+    params: &FlatParams,
+    dtype: Dtype,
+    kernel: Kernel,
+) -> Result<Vec<SweepVariant>> {
     let prune_all = |sparsity: f64| -> Result<FlatParams> {
         let mut p = params.clone();
         magnitude_prune_all(&mut p, sparsity)?;
@@ -236,27 +252,29 @@ pub fn sweep_variants(params: &FlatParams, dtype: Dtype) -> Result<Vec<SweepVari
             dt => format!("{label} {}", dt.name()),
         }
     };
+    let auto = || PackPolicy::auto().with_dtype(dtype).with_kernel(kernel);
     Ok(vec![
-        ("dense 0%".to_string(), params.clone(), PackPolicy::dense()),
-        ("masked-dense 50%".to_string(), half.clone(), PackPolicy::dense()),
-        (tag("packed 50% (auto)"), half, PackPolicy::auto().with_dtype(dtype)),
-        (tag("packed 2:4 (auto)"), nm, PackPolicy::auto().with_dtype(dtype)),
-        (tag("packed 90% (auto)"), prune_all(0.9)?, PackPolicy::auto().with_dtype(dtype)),
+        ("dense 0%".to_string(), params.clone(), PackPolicy::dense().with_kernel(kernel)),
+        ("masked-dense 50%".to_string(), half.clone(), PackPolicy::dense().with_kernel(kernel)),
+        (tag("packed 50% (auto)"), half, auto()),
+        (tag("packed 2:4 (auto)"), nm, auto()),
+        (tag("packed 90% (auto)"), prune_all(0.9)?, auto()),
     ])
 }
 
 /// The standard dense-vs-sparse decode sweep over `params` (the
-/// [`sweep_variants`] set at `dtype`).  Shared by the CLI `sparse-bench`
-/// subcommand, the `sparse_speed` experiment, `cargo bench` and
-/// `examples/sparse_speedup.rs`.
+/// [`sweep_variants`] set at `dtype` × `kernel`).  Shared by the CLI
+/// `sparse-bench` subcommand, the `sparse_speed` experiment,
+/// `cargo bench` and `examples/sparse_speedup.rs`.
 pub fn dense_vs_sparse_sweep(
     params: &FlatParams,
     bt: usize,
     l: usize,
     budget_ms: f64,
     dtype: Dtype,
+    kernel: Kernel,
 ) -> Result<Vec<SweepRow>> {
-    let variants = sweep_variants(params, dtype)?;
+    let variants = sweep_variants(params, dtype, kernel)?;
     let mut rows: Vec<SweepRow> = Vec::with_capacity(variants.len());
     let mut dense_tps = 0.0;
     for (label, p, policy) in variants {
@@ -292,13 +310,15 @@ pub struct QuantRow {
 
 /// The `quant_speed` sweep: decode tokens/sec and `memory_bytes` for
 /// every packed format × value dtype on one 50%-pruned model (the 2:4
-/// rows use the N:M-masked variant of the same parameters).  Shared by
-/// the `quant_speed` experiment and the `quant_speed` bench group.
+/// rows use the N:M-masked variant of the same parameters), served with
+/// `kernel`.  Shared by the `quant_speed` experiment and the
+/// `quant_speed` bench group.
 pub fn quant_sweep(
     params: &FlatParams,
     bt: usize,
     l: usize,
     budget_ms: f64,
+    kernel: Kernel,
 ) -> Result<Vec<QuantRow>> {
     let mut half = params.clone();
     magnitude_prune_all(&mut half, 0.5)?;
@@ -309,12 +329,16 @@ pub fn quant_sweep(
         (Format::Dense, &half),
         (Format::Bitmask, &half),
         (Format::Csr, &half),
+        (Format::Bcsr, &half),
         (Format::Nm, &nm),
     ] {
         let mut f32_tps = 0.0f64;
         let mut f32_mem = 0usize;
         for dtype in Dtype::ALL {
-            let model = SparseModel::compile(p, &PackPolicy::of(fmt).with_dtype(dtype))?;
+            let model = SparseModel::compile(
+                p,
+                &PackPolicy::of(fmt).with_dtype(dtype).with_kernel(kernel),
+            )?;
             let (bench, tps) = decode_throughput(&model, bt, l, budget_ms, 7);
             let mem = model.memory_bytes();
             if dtype == Dtype::F32 {
@@ -333,6 +357,151 @@ pub fn quant_sweep(
         }
     }
     Ok(rows)
+}
+
+/// One row of the kernel A/B grid: row-kernel throughput for one
+/// format × dtype × kernel.
+pub struct KernelRow {
+    pub format: Format,
+    pub dtype: Dtype,
+    pub kernel: Kernel,
+    /// Tokens through one in_proj-shaped `matmul` per second.
+    pub tokens_per_sec: f64,
+    /// Throughput relative to the scalar row of the same format × dtype.
+    pub rel_scalar: f64,
+    pub bench: BenchResult,
+}
+
+/// The `kernel_speed` sweep: SIMD-vs-scalar row-kernel throughput on an
+/// in_proj-shaped matmul at m370 dims (`[2·d_inner, d_model]`, `t`
+/// tokens), per format × dtype × kernel.  Unstructured formats run the
+/// 50% magnitude mask (the acceptance point), 2:4 its N:M mask.  Shared
+/// by the `kernel_speed` experiment and the `kernel_speed` bench group;
+/// both also fold the rows into `BENCH_kernels.json`
+/// ([`update_bench_kernels_json`]).
+pub fn kernel_sweep(t: usize, budget_ms: f64) -> Vec<KernelRow> {
+    let meta = m370_dims_meta();
+    let (rows, cols) = (2 * meta.d_inner, meta.d_model);
+    let mut rng = Pcg::seeded(21);
+    let dense_w: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() * 0.5) as f32).collect();
+    let mut half = dense_w.clone();
+    magnitude::magnitude_mask(&half, 0.5).apply(&mut half);
+    let mut nm = dense_w;
+    magnitude::magnitude_nm_mask(&nm, 2, 4).apply(&mut nm);
+    let x: Vec<f32> = (0..t * cols).map(|_| rng.normal() as f32).collect();
+
+    let mut out = Vec::new();
+    for (fmt, w) in [
+        (Format::Dense, &half),
+        (Format::Bitmask, &half),
+        (Format::Csr, &half),
+        (Format::Bcsr, &half),
+        (Format::Nm, &nm),
+    ] {
+        for dtype in Dtype::ALL {
+            let p = Packed::pack_as_dtype(w, rows, cols, fmt, dtype);
+            let mut scalar_tps = 0.0f64;
+            for kernel in Kernel::ALL {
+                let mut y = vec![0.0f32; t * rows];
+                let name = format!(
+                    "matmul {rows}x{cols} t={t} {} {} {}",
+                    fmt.name(),
+                    dtype.name(),
+                    kernel.name()
+                );
+                let bench = benchx::bench_for(&name, budget_ms, || {
+                    p.matmul_into_k(&x, t, &mut y, kernel);
+                    benchx::black_box(&y);
+                });
+                let tps = t as f64 / (bench.p50_ms / 1e3);
+                if kernel == Kernel::Scalar {
+                    scalar_tps = tps;
+                }
+                out.push(KernelRow {
+                    format: fmt,
+                    dtype,
+                    kernel,
+                    tokens_per_sec: tps,
+                    rel_scalar: tps / scalar_tps,
+                    bench,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// File name of the machine-readable kernel/quant perf log.
+pub const BENCH_KERNELS_JSON: &str = "BENCH_kernels.json";
+
+/// Canonical location of the perf log: next to the crate manifest, so
+/// `cargo bench`, `cargo run -- experiment` and any other surface all
+/// fold their sections into **one** file regardless of the invocation
+/// directory.
+pub fn bench_kernels_json_path() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(BENCH_KERNELS_JSON)
+}
+
+/// Merge one sweep's rows into the JSON perf log at `path` (an object
+/// keyed by sweep name), preserving every other section so
+/// `kernel_speed` and `quant_speed` runs accumulate into one file and
+/// the perf trajectory stays diffable across PRs.  Only a genuinely
+/// absent file starts a fresh log; an existing file that cannot be read
+/// or is not a JSON object is an error, not an overwrite — a corrupt
+/// log must never silently destroy the other sections' history.
+pub fn update_bench_kernels_json(path: &Path, section: &str, rows: Json) -> Result<()> {
+    let mut root = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let parsed = Json::parse(&text).with_context(|| {
+                format!("existing {} is not valid JSON (refusing to overwrite)", path.display())
+            })?;
+            anyhow::ensure!(
+                matches!(parsed, Json::Obj(_)),
+                "existing {} is not a JSON object (refusing to overwrite)",
+                path.display()
+            );
+            parsed
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => json::obj(vec![]),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading {}", path.display()));
+        }
+    };
+    if let Json::Obj(m) = &mut root {
+        m.insert(section.to_string(), rows);
+    }
+    std::fs::write(path, root.to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// `kernel_speed` rows as JSON (tokens/sec per format × dtype × kernel).
+pub fn kernel_rows_json(rows: &[KernelRow]) -> Json {
+    json::arr(rows.iter().map(|r| {
+        json::obj(vec![
+            ("format", json::s(r.format.name())),
+            ("dtype", json::s(r.dtype.name())),
+            ("kernel", json::s(r.kernel.name())),
+            ("tokens_per_sec", json::num(r.tokens_per_sec)),
+            ("rel_scalar", json::num(r.rel_scalar)),
+            ("p50_ms", json::num(r.bench.p50_ms)),
+        ])
+    }))
+}
+
+/// `quant_speed` rows as JSON (tokens/sec + memory per format × dtype).
+pub fn quant_rows_json(rows: &[QuantRow]) -> Json {
+    json::arr(rows.iter().map(|r| {
+        json::obj(vec![
+            ("format", json::s(r.format.name())),
+            ("dtype", json::s(r.dtype.name())),
+            ("tokens_per_sec", json::num(r.tokens_per_sec)),
+            ("memory_bytes", json::num(r.memory_bytes as f64)),
+            ("rel_speed", json::num(r.rel_speed)),
+            ("rel_memory", json::num(r.rel_memory)),
+            ("p50_ms", json::num(r.bench.p50_ms)),
+        ])
+    }))
 }
 
 #[cfg(test)]
@@ -368,7 +537,7 @@ mod tests {
     #[test]
     fn sweep_produces_all_variants() {
         let p = toy_flat_params_random(4, 3);
-        let rows = dense_vs_sparse_sweep(&p, 1, 8, 1.0, Dtype::F32).unwrap();
+        let rows = dense_vs_sparse_sweep(&p, 1, 8, 1.0, Dtype::F32, Kernel::default()).unwrap();
         assert_eq!(rows.len(), 5);
         assert!((rows[0].speedup - 1.0).abs() < 1e-12);
         assert!(rows.iter().all(|r| r.tokens_per_sec > 0.0));
@@ -379,7 +548,7 @@ mod tests {
     #[test]
     fn quantized_sweep_keeps_the_dense_anchor() {
         let p = toy_flat_params_random(4, 4);
-        let rows = dense_vs_sparse_sweep(&p, 1, 6, 1.0, Dtype::I8).unwrap();
+        let rows = dense_vs_sparse_sweep(&p, 1, 6, 1.0, Dtype::I8, Kernel::default()).unwrap();
         assert_eq!(rows.len(), 5);
         assert!((rows[0].speedup - 1.0).abs() < 1e-12);
         // Packed variants advertise the dtype; the dense baseline doesn't.
@@ -391,8 +560,8 @@ mod tests {
     #[test]
     fn quant_sweep_covers_formats_times_dtypes() {
         let p = toy_flat_params_random(4, 5);
-        let rows = quant_sweep(&p, 1, 6, 1.0).unwrap();
-        assert_eq!(rows.len(), 12); // 4 formats × 3 dtypes
+        let rows = quant_sweep(&p, 1, 6, 1.0, Kernel::default()).unwrap();
+        assert_eq!(rows.len(), 15); // 5 formats × 3 dtypes
         for row in &rows {
             assert!(row.tokens_per_sec > 0.0);
             assert!(row.memory_bytes > 0);
@@ -404,5 +573,42 @@ mod tests {
                 assert!(row.rel_memory < 1.0, "{:?}/{:?}", row.format, row.dtype);
             }
         }
+    }
+
+    #[test]
+    fn kernel_sweep_covers_the_ab_grid() {
+        // Tiny token count / budget: correctness of the grid, not speed.
+        let rows = kernel_sweep(2, 0.5);
+        assert_eq!(rows.len(), 5 * 3 * 2); // formats × dtypes × kernels
+        for pair in rows.chunks_exact(2) {
+            assert_eq!(pair[0].kernel, Kernel::Scalar);
+            assert_eq!(pair[1].kernel, Kernel::Simd);
+            assert_eq!(pair[0].format, pair[1].format);
+            assert!((pair[0].rel_scalar - 1.0).abs() < 1e-12);
+            assert!(pair[1].tokens_per_sec > 0.0);
+        }
+    }
+
+    #[test]
+    fn bench_kernels_json_merges_sections() {
+        let path = std::env::temp_dir()
+            .join(format!("sparsessm-bench-kernels-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let rows = kernel_sweep(1, 0.1);
+        update_bench_kernels_json(&path, "kernel_speed", kernel_rows_json(&rows)).unwrap();
+        update_bench_kernels_json(&path, "quant_speed", json::arr(vec![])).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        // Both sections survive, and rows carry the grid keys.
+        assert_eq!(root.get("kernel_speed").unwrap().as_arr().unwrap().len(), rows.len());
+        assert!(root.get("quant_speed").unwrap().as_arr().unwrap().is_empty());
+        let first = &root.get("kernel_speed").unwrap().as_arr().unwrap()[0];
+        for key in ["format", "dtype", "kernel", "tokens_per_sec"] {
+            assert!(first.opt(key).is_some(), "missing {key}");
+        }
+        // A corrupt log must be an error, never a silent wipe.
+        std::fs::write(&path, "not json {").unwrap();
+        assert!(update_bench_kernels_json(&path, "kernel_speed", json::arr(vec![])).is_err());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "not json {");
+        std::fs::remove_file(&path).unwrap();
     }
 }

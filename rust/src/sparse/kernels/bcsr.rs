@@ -1,0 +1,36 @@
+//! SIMD row kernel for [`BcsrMatrix`]: the format was designed for this
+//! kernel — every stored block is [`BCSR_BLOCK`] contiguous values
+//! against a contiguous `x` window, so there is **no gather at all**:
+//! decode the block run, [`dot`] it against `x[base..base+8]`, done.
+//! Only a ragged final column block (cols not a multiple of 8) narrows
+//! the window.
+
+use super::{decode_run, dot, UNIT};
+use crate::sparse::BcsrMatrix;
+
+/// Block width, restated locally (`bcsr::BCSR_BLOCK`).
+const BLOCK: usize = crate::sparse::bcsr::BCSR_BLOCK;
+
+/// `out[ti] = row r · xs[ti]` for `t` tokens (`xs` is `[t, cols]`
+/// row-major); per-token arithmetic is independent of `t`.
+pub(crate) fn row_dot_tokens(m: &BcsrMatrix, r: usize, xs: &[f32], t: usize, out: &mut [f32]) {
+    let cols = m.cols;
+    debug_assert_eq!(xs.len(), t * cols);
+    debug_assert!(out.len() >= t);
+    for o in out[..t].iter_mut() {
+        *o = 0.0;
+    }
+    let (lo, hi) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+    let mut vbuf = [0.0f32; UNIT];
+    for i in lo..hi {
+        let base = m.col_blk[i] as usize * BLOCK;
+        let w = BLOCK.min(cols - base);
+        // Padding slots past `w` are exact zeros by pack invariant, so
+        // restricting the run to `w` drops nothing.
+        let run = decode_run(&m.vals, i * BLOCK, w, &mut vbuf);
+        for (ti, o) in out[..t].iter_mut().enumerate() {
+            let xrow = &xs[ti * cols..(ti + 1) * cols];
+            *o += dot(run, &xrow[base..base + w]);
+        }
+    }
+}

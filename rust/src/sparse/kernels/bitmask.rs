@@ -1,0 +1,58 @@
+//! SIMD row kernel for [`BitmaskMatrix`]: each 64-column occupancy word
+//! is one run.  Bit positions are expanded once per block with
+//! popcount/trailing-zeros into a stack buffer, values decoded once,
+//! and `x` gathered + [`dot`]-reduced per token.  A **full block**
+//! (`mask == u64::MAX`) needs no expansion or gather at all — both the
+//! value run and the `x` window are already contiguous — so dense
+//! stretches of a mid-sparsity matrix stream at dense-kernel speed.
+
+use super::{decode_run, dot, UNIT};
+use crate::sparse::BitmaskMatrix;
+
+/// `out[ti] = row r · xs[ti]` for `t` tokens (`xs` is `[t, cols]`
+/// row-major); per-token arithmetic is independent of `t`.
+pub(crate) fn row_dot_tokens(m: &BitmaskMatrix, r: usize, xs: &[f32], t: usize, out: &mut [f32]) {
+    let cols = m.cols;
+    debug_assert_eq!(xs.len(), t * cols);
+    debug_assert!(out.len() >= t);
+    for o in out[..t].iter_mut() {
+        *o = 0.0;
+    }
+    let bpr = m.blocks_per_row();
+    let mut vbuf = [0.0f32; UNIT];
+    let mut xb = [0.0f32; UNIT];
+    let mut pos = [0u8; UNIT];
+    for b in 0..bpr {
+        let blk = r * bpr + b;
+        let mask = m.masks[blk];
+        if mask == 0 {
+            continue;
+        }
+        let off = m.block_off[blk] as usize;
+        let n = mask.count_ones() as usize;
+        let base = b * 64;
+        let run = decode_run(&m.vals, off, n, &mut vbuf);
+        if mask == u64::MAX {
+            // Full block: bit k covers column base+k, so the x window is
+            // contiguous (occupancy past `cols` is impossible — validated
+            // structure-plane invariant).
+            for (ti, o) in out[..t].iter_mut().enumerate() {
+                let xrow = &xs[ti * cols..(ti + 1) * cols];
+                *o += dot(run, &xrow[base..base + 64]);
+            }
+        } else {
+            let mut mm = mask;
+            for p in pos[..n].iter_mut() {
+                *p = mm.trailing_zeros() as u8;
+                mm &= mm - 1;
+            }
+            for (ti, o) in out[..t].iter_mut().enumerate() {
+                let xrow = &xs[ti * cols..(ti + 1) * cols];
+                for (slot, &p) in xb[..n].iter_mut().zip(&pos[..n]) {
+                    *slot = xrow[base + p as usize];
+                }
+                *o += dot(run, &xb[..n]);
+            }
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! SIMD row kernel for [`CsrMatrix`]: the row's nonzeros are processed
+//! in [`UNIT`]-wide tiles — values decoded once per tile, `x` gathered
+//! by column index into a stack buffer, then one [`dot`] per tile.  The
+//! gather is scalar (there is no portable gather), but the reduction
+//! runs on independent lanes instead of the scalar walk's single
+//! accumulator chain, and the multi-token variant replays only the
+//! gather + dot per token.
+
+use super::{decode_run, dot, UNIT};
+use crate::sparse::CsrMatrix;
+
+/// `out[ti] = row r · xs[ti]` for `t` tokens (`xs` is `[t, cols]`
+/// row-major); per-token arithmetic is independent of `t`.
+pub(crate) fn row_dot_tokens(m: &CsrMatrix, r: usize, xs: &[f32], t: usize, out: &mut [f32]) {
+    let cols = m.cols;
+    debug_assert_eq!(xs.len(), t * cols);
+    debug_assert!(out.len() >= t);
+    for o in out[..t].iter_mut() {
+        *o = 0.0;
+    }
+    let (lo, hi) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+    let mut vbuf = [0.0f32; UNIT];
+    let mut xb = [0.0f32; UNIT];
+    let mut k = lo;
+    while k < hi {
+        let w = UNIT.min(hi - k);
+        let run = decode_run(&m.vals, k, w, &mut vbuf);
+        let idx = &m.col_idx[k..k + w];
+        for (ti, o) in out[..t].iter_mut().enumerate() {
+            let xrow = &xs[ti * cols..(ti + 1) * cols];
+            for (slot, &c) in xb[..w].iter_mut().zip(idx) {
+                *slot = xrow[c as usize];
+            }
+            *o += dot(run, &xb[..w]);
+        }
+        k += w;
+    }
+}

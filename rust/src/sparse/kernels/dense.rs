@@ -1,0 +1,106 @@
+//! SIMD kernels for [`DenseMatrix`] — the floor every sparse kernel's
+//! win is measured against.
+//!
+//! Two shapes ship:
+//!
+//! * [`row_dot_tokens`] — one row × `t` tokens; the f32 path is a
+//!   single [`dot`] over the row, quantized planes decode in
+//!   [`UNIT`]-wide tiles so the decode is paid once per tile instead of
+//!   once per token.
+//! * [`panel_dot_tokens`] — a **row panel** of up to [`PANEL`] rows ×
+//!   `t` tokens: each `x` chunk is loaded once and feeds every panel
+//!   row's lane accumulators, so the batched paths stop re-reading the
+//!   input per row (the tied head, `[vocab, d_model]`, is the biggest
+//!   beneficiary).  Per-row arithmetic is identical for every panel
+//!   width, so tail panels and full panels agree bit-exactly — and
+//!   `matvec`/`matmul` both route dense f32 through panels at the same
+//!   boundaries, keeping `matmul == repeated matvec` exact.
+
+use super::{decode_run, dot, fmadd, LANES, PANEL, UNIT};
+use crate::sparse::DenseMatrix;
+
+/// `out[ti] = row r · xs[ti]` for `t` tokens (`xs` is `[t, cols]`
+/// row-major).  `t = 1` is the matvec case; per-token arithmetic is
+/// identical for every `t`, which keeps `matmul == repeated matvec`
+/// bit-exact.
+pub(crate) fn row_dot_tokens(m: &DenseMatrix, r: usize, xs: &[f32], t: usize, out: &mut [f32]) {
+    let cols = m.cols;
+    debug_assert_eq!(xs.len(), t * cols);
+    debug_assert!(out.len() >= t);
+    if let Some(v) = m.vals.as_f32() {
+        let row = &v[r * cols..(r + 1) * cols];
+        for (ti, o) in out[..t].iter_mut().enumerate() {
+            *o = dot(row, &xs[ti * cols..(ti + 1) * cols]);
+        }
+        return;
+    }
+    for o in out[..t].iter_mut() {
+        *o = 0.0;
+    }
+    let mut vbuf = [0.0f32; UNIT];
+    let base = r * cols;
+    let mut c = 0usize;
+    while c < cols {
+        let w = UNIT.min(cols - c);
+        let run = decode_run(&m.vals, base + c, w, &mut vbuf);
+        for (ti, o) in out[..t].iter_mut().enumerate() {
+            let xrow = &xs[ti * cols..(ti + 1) * cols];
+            *o += dot(run, &xrow[c..c + w]);
+        }
+        c += w;
+    }
+}
+
+/// Row-panel kernel: `out[pi * t + ti] = row (r0+pi) · xs[ti]` for
+/// `p ≤ PANEL` rows and `t` tokens.  The f32 path walks each token's
+/// `x` in lane chunks **once**, feeding all `p` rows' accumulators per
+/// loaded chunk; each row keeps its own eight lanes with the same chunk
+/// order, pairwise fold and scalar tail as a solo run, so a row's
+/// result never depends on which rows share its panel.  Quantized
+/// planes fall back to the per-row tile kernel (their bandwidth is
+/// already dominated by value decode, which that path amortizes).
+pub(crate) fn panel_dot_tokens(
+    m: &DenseMatrix,
+    r0: usize,
+    p: usize,
+    xs: &[f32],
+    t: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(p >= 1 && p <= PANEL);
+    let cols = m.cols;
+    debug_assert_eq!(xs.len(), t * cols);
+    debug_assert!(out.len() >= p * t);
+    let Some(v) = m.vals.as_f32() else {
+        for pi in 0..p {
+            row_dot_tokens(m, r0 + pi, xs, t, &mut out[pi * t..(pi + 1) * t]);
+        }
+        return;
+    };
+    let chunks = cols / LANES;
+    for ti in 0..t {
+        let xrow = &xs[ti * cols..(ti + 1) * cols];
+        let mut lanes = [[0.0f32; LANES]; PANEL];
+        for c in 0..chunks {
+            let base = c * LANES;
+            let xc = &xrow[base..base + LANES];
+            for (pi, lane) in lanes[..p].iter_mut().enumerate() {
+                let rbase = (r0 + pi) * cols + base;
+                let row = &v[rbase..rbase + LANES];
+                for ((l, &rv), &xv) in lane.iter_mut().zip(row).zip(xc) {
+                    *l = fmadd(rv, xv, *l);
+                }
+            }
+        }
+        for (pi, lane) in lanes[..p].iter().enumerate() {
+            let even = (lane[0] + lane[4]) + (lane[1] + lane[5]);
+            let odd = (lane[2] + lane[6]) + (lane[3] + lane[7]);
+            let mut acc = even + odd;
+            let row = &v[(r0 + pi) * cols..(r0 + pi + 1) * cols];
+            for k in chunks * LANES..cols {
+                acc = fmadd(row[k], xrow[k], acc);
+            }
+            out[pi * t + ti] = acc;
+        }
+    }
+}

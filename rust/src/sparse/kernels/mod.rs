@@ -1,0 +1,272 @@
+//! SIMD microkernel layer: lane-width-generic row kernels shared by
+//! every packed format (DESIGN.md §12).
+//!
+//! The scalar `row_dot` walks in the format modules are *latency*-bound:
+//! one multiply feeds one accumulator, so each nonzero costs a full
+//! FMA-latency chain regardless of how wide the machine is.  The kernels
+//! here restructure every row into **contiguous runs** of at most
+//! [`UNIT`] stored values:
+//!
+//! 1. decode the run's structure once (bit positions, column indices,
+//!    N:M group columns) into small stack buffers;
+//! 2. decode the run's values once ([`decode_run`] — f32 planes are
+//!    borrowed in place, f16/i8 decode into a stack buffer);
+//! 3. gather the matching `x` entries and reduce with [`dot`], a
+//!    fixed-width lane accumulator written to autovectorize on stable
+//!    Rust, with a runtime-dispatched AVX2+FMA path on `x86_64`.
+//!
+//! Splitting the reduction over [`LANES`] independent accumulators turns
+//! the dependency chain into a throughput problem, which is where the
+//! speedup comes from; the run decomposition is also what the
+//! **multi-token** kernels reuse — `row_dot_tokens` decodes structure
+//! and values once per run and replays only the gather + dot per token,
+//! so `matmul`/`step_batch` stop re-reading row metadata for every
+//! token.
+//!
+//! Numerics: lane accumulation reassociates the sum, so SIMD results
+//! differ from the scalar reference by normal float-reassociation noise
+//! (property-tested at ≤1e-4 relative, `tests/prop_sparse.rs`).  Within
+//! one kernel choice results are deterministic, and `matvec` is the
+//! `t = 1` case of `row_dot_tokens`, so `matmul == repeated matvec`
+//! stays bit-exact per kernel.
+//!
+//! The scalar walks survive untouched in the format modules as the
+//! reference implementation ([`Kernel::Scalar`], A/B-able via
+//! `sparse-bench --kernel`).
+
+pub(crate) mod bcsr;
+pub(crate) mod bitmask;
+pub(crate) mod csr;
+pub(crate) mod dense;
+pub(crate) mod nm;
+
+use super::values::{f16_to_f32, I8_GROUP, ValueStore};
+
+/// Independent accumulator lanes in the portable dot (matches one AVX
+/// register of f32; narrower machines just unroll).
+pub const LANES: usize = 8;
+
+/// Longest contiguous run a kernel materializes on the stack (one
+/// bitmask occupancy word; also the gather/decode tile for CSR and N:M).
+pub const UNIT: usize = 64;
+
+/// Rows per panel in the multi-row (row-panel) kernels: each loaded `x`
+/// chunk feeds this many rows' accumulators before the next load, so
+/// `matvec`/`matmul` stop re-reading the input once per row.  Divides
+/// the 64-row matmul stripe, so matvec and striped matmul see identical
+/// panel boundaries (part of the `matmul == repeated matvec` contract).
+pub const PANEL: usize = 4;
+
+/// Which row-kernel implementation a packed matrix runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Kernel {
+    /// The reference per-row closure walk (pre-SIMD engine behavior).
+    Scalar,
+    /// Lane-chunked runs + runtime AVX2/FMA dot (the serving default).
+    #[default]
+    Simd,
+}
+
+impl Kernel {
+    /// Both kernels, scalar first (the A/B baseline order).
+    pub const ALL: [Kernel; 2] = [Kernel::Scalar, Kernel::Simd];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Simd => "simd",
+        }
+    }
+
+    /// Parse a CLI spelling (`scalar` / `simd`).
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s {
+            "scalar" => Some(Kernel::Scalar),
+            "simd" => Some(Kernel::Simd),
+            _ => None,
+        }
+    }
+}
+
+/// Fused multiply-add that only pays for fusion where the hardware has
+/// it: `mul_add` lowers to one FMA instruction under `target_feature =
+/// "fma"`, but becomes a correctly-rounded libm call everywhere else —
+/// far slower than the separate multiply+add we fall back to.
+#[inline(always)]
+pub(crate) fn fmadd(a: f32, b: f32, acc: f32) -> f32 {
+    if cfg!(target_feature = "fma") {
+        a.mul_add(b, acc)
+    } else {
+        acc + a * b
+    }
+}
+
+/// Portable lane-accumulator dot product.  Eight independent partial
+/// sums per iteration keep the FMA pipeline full (the compiler maps the
+/// fixed-width inner loop onto whatever vector width the target has),
+/// then a deterministic pairwise tree folds the lanes.
+#[inline(always)]
+fn dot_portable(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (av, bv) in (&mut ac).zip(&mut bc) {
+        for ((l, &x), &y) in lanes.iter_mut().zip(av).zip(bv) {
+            *l = fmadd(x, y, *l);
+        }
+    }
+    let even = (lanes[0] + lanes[4]) + (lanes[1] + lanes[5]);
+    let odd = (lanes[2] + lanes[6]) + (lanes[3] + lanes[7]);
+    let mut acc = even + odd;
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        acc = fmadd(x, y, acc);
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! Explicit AVX2+FMA dot, compiled on every x86_64 build and entered
+    //! only after a runtime feature check (default builds target SSE2,
+    //! so the portable path cannot assume these instructions exist).
+
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Callers must have verified `avx2` and `fma` at runtime.
+    // The inner `unsafe` block keeps the body well-formed whether the
+    // crate edition treats intrinsic calls in an `unsafe fn` as already
+    // covered (2021, where the block is redundant) or not (2024).
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    #[allow(unused_unsafe)]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        unsafe {
+            let n = a.len().min(b.len());
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 16 <= n {
+                let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
+                let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
+                acc0 = _mm256_fmadd_ps(a0, b0, acc0);
+                let a1 = _mm256_loadu_ps(a.as_ptr().add(i + 8));
+                let b1 = _mm256_loadu_ps(b.as_ptr().add(i + 8));
+                acc1 = _mm256_fmadd_ps(a1, b1, acc1);
+                i += 16;
+            }
+            if i + 8 <= n {
+                let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
+                let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
+                acc0 = _mm256_fmadd_ps(a0, b0, acc0);
+                i += 8;
+            }
+            let acc = _mm256_add_ps(acc0, acc1);
+            let mut tmp = [0.0f32; 8];
+            _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+            let even = (tmp[0] + tmp[4]) + (tmp[1] + tmp[5]);
+            let odd = (tmp[2] + tmp[6]) + (tmp[3] + tmp[7]);
+            let mut total = even + odd;
+            while i < n {
+                total = a[i].mul_add(b[i], total);
+                i += 1;
+            }
+            total
+        }
+    }
+}
+
+/// Vector dot product of two equal-length runs — the single reduction
+/// primitive every SIMD row kernel bottoms out in.
+#[inline]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        // SAFETY: both required CPU features were verified at runtime.
+        return unsafe { x86::dot(a, b) };
+    }
+    dot_portable(a, b)
+}
+
+/// Decode stored slots `[k, k+w)` of a value plane to f32: f32 planes
+/// are borrowed in place (zero-copy), f16/i8 decode into `buf` once per
+/// run — which is exactly what the multi-token kernels amortize across
+/// tokens.  `w` must be ≤ [`UNIT`].
+#[inline(always)]
+pub(crate) fn decode_run<'a>(
+    vals: &'a ValueStore,
+    k: usize,
+    w: usize,
+    buf: &'a mut [f32; UNIT],
+) -> &'a [f32] {
+    debug_assert!(w <= UNIT);
+    match vals {
+        ValueStore::F32(v) => &v[k..k + w],
+        ValueStore::F16(v) => {
+            for (o, &h) in buf[..w].iter_mut().zip(&v[k..k + w]) {
+                *o = f16_to_f32(h);
+            }
+            &buf[..w]
+        }
+        ValueStore::I8 { codes, scales } => {
+            for (j, (o, &c)) in buf[..w].iter_mut().zip(&codes[k..k + w]).enumerate() {
+                *o = c as f32 * scales[(k + j) / I8_GROUP];
+            }
+            &buf[..w]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg;
+    use crate::sparse::Dtype;
+
+    #[test]
+    fn dot_matches_serial_reference() {
+        let mut rng = Pcg::seeded(1);
+        for n in [0usize, 1, 7, 8, 9, 16, 63, 64, 65, 200] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot(&a, &b);
+            let tol = 1e-5 * want.abs().max(1.0);
+            assert!((got - want).abs() <= tol, "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn dot_is_deterministic() {
+        let mut rng = Pcg::seeded(2);
+        let a: Vec<f32> = (0..137).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..137).map(|_| rng.normal() as f32).collect();
+        assert_eq!(dot(&a, &b).to_bits(), dot(&a, &b).to_bits());
+    }
+
+    #[test]
+    fn decode_run_matches_store_get() {
+        let mut rng = Pcg::seeded(3);
+        let vals: Vec<f32> = (0..200).map(|_| rng.normal() as f32).collect();
+        for dtype in Dtype::ALL {
+            let store = ValueStore::encode(&vals, dtype);
+            let mut buf = [0.0f32; UNIT];
+            for (k, w) in [(0usize, 64usize), (10, 50), (190, 10), (63, 2)] {
+                let run = decode_run(&store, k, w, &mut buf);
+                for (j, &v) in run.iter().enumerate() {
+                    assert_eq!(v, store.get(k + j), "{dtype:?} slot {}", k + j);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_names_parse_back() {
+        for k in Kernel::ALL {
+            assert_eq!(Kernel::parse(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::parse("avx"), None);
+        assert_eq!(Kernel::default(), Kernel::Simd);
+    }
+}

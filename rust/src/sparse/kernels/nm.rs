@@ -1,0 +1,58 @@
+//! SIMD group kernel for [`NmMatrix`]: whole N:M groups are processed
+//! in register-width batches.  A tile of `UNIT / keep` groups (32 groups
+//! × 2 slots for 2:4) resolves its absolute columns (`group·m +
+//! in-group index`) once, decodes its value run once, then gathers `x`
+//! and [`dot`]-reduces per token — the fixed stride means no per-group
+//! branching, matching how sparse tensor cores consume the layout.
+
+use super::{decode_run, dot, UNIT};
+use crate::sparse::NmMatrix;
+
+/// `out[ti] = row r · xs[ti]` for `t` tokens (`xs` is `[t, cols]`
+/// row-major); per-token arithmetic is independent of `t`.
+pub(crate) fn row_dot_tokens(nm: &NmMatrix, r: usize, xs: &[f32], t: usize, out: &mut [f32]) {
+    let cols = nm.cols;
+    debug_assert_eq!(xs.len(), t * cols);
+    debug_assert!(out.len() >= t);
+    let keep = nm.keep();
+    if keep > UNIT {
+        // Patterns wider than one tile (m − n > 64 survivors per group)
+        // never occur in practice; fall back to the scalar reference.
+        for (ti, o) in out[..t].iter_mut().enumerate() {
+            *o = nm.row_dot(r, &xs[ti * cols..(ti + 1) * cols]);
+        }
+        return;
+    }
+    for o in out[..t].iter_mut() {
+        *o = 0.0;
+    }
+    let groups = cols / nm.m;
+    let mut vbuf = [0.0f32; UNIT];
+    let mut xb = [0.0f32; UNIT];
+    let mut colb = [0u32; UNIT];
+    let mut g = 0usize;
+    let mut p = r * groups * keep;
+    while g < groups {
+        let gw = (UNIT / keep).min(groups - g);
+        let w = gw * keep;
+        // Absolute column of every slot in this tile, resolved once.
+        let mut j = 0usize;
+        for gg in g..g + gw {
+            let base = (gg * nm.m) as u32;
+            for _ in 0..keep {
+                colb[j] = base + nm.idx[p + j] as u32;
+                j += 1;
+            }
+        }
+        let run = decode_run(&nm.vals, p, w, &mut vbuf);
+        for (ti, o) in out[..t].iter_mut().enumerate() {
+            let xrow = &xs[ti * cols..(ti + 1) * cols];
+            for (slot, &c) in xb[..w].iter_mut().zip(&colb[..w]) {
+                *slot = xrow[c as usize];
+            }
+            *o += dot(run, &xb[..w]);
+        }
+        g += gw;
+        p += w;
+    }
+}

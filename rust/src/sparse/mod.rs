@@ -12,9 +12,15 @@
 //! * [`nm`]       — N:M-packed layout (values + 2-bit-ish group indices)
 //!                  specialized for the 2:4 masks
 //!                  `pruning::semistructured` emits.
+//! * [`bcsr`]     — blocked CSR (1×8 column blocks stored whole): the
+//!                  wider-stripe format whose inner loop needs no
+//!                  gather; wins when nonzeros cluster into runs.
 //! * [`values`]   — the value planes: every format stores its nonzeros
 //!                  in a [`ValueStore`] (f32 / f16 / i8+scales), split
 //!                  from the dtype-independent structure planes.
+//! * [`kernels`]  — the SIMD microkernel layer ([`Kernel`]): lane-width
+//!                  row/multi-token kernels every format dispatches to;
+//!                  the scalar walks stay as the reference.
 //! * [`compile`]  — [`SparseModel`]: pack a pruned [`crate::model::FlatParams`]
 //!                  (all five FFN projections + `A_log`) once, serve many.
 //! * [`decode`]   — the native pruned-decode path: packed projections
@@ -33,18 +39,22 @@
 //! profit from a sparse format fall back to [`DenseMatrix`], so calling it
 //! on anything is always safe.
 
+pub mod bcsr;
 pub mod bitmask;
 pub mod checkpoint;
 pub mod compile;
 pub mod csr;
 pub mod decode;
+pub mod kernels;
 pub mod nm;
 pub mod testutil;
 pub mod values;
 
+pub use bcsr::BcsrMatrix;
 pub use bitmask::BitmaskMatrix;
 pub use compile::{PackPolicy, SparseLayer, SparseModel};
 pub use csr::CsrMatrix;
+pub use kernels::Kernel;
 pub use nm::NmMatrix;
 pub use values::{Dtype, ValueStore};
 
@@ -64,13 +74,16 @@ pub const PARALLEL_MIN_WORK: usize = 1 << 15;
 /// Rows per parallel stripe (matches the `ssm` kernel's striping).
 const ROW_STRIPE: usize = 64;
 
-/// Packed weight formats, in dispatch-preference order.
+/// Packed weight formats, in dispatch-preference order.  `Bcsr` is
+/// never auto-picked (its win depends on nonzero clustering the density
+/// dispatcher can't see); force it through [`PackPolicy`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Format {
     Dense,
     Csr,
     Bitmask,
     Nm,
+    Bcsr,
 }
 
 impl Format {
@@ -80,6 +93,7 @@ impl Format {
             Format::Csr => "csr",
             Format::Bitmask => "bitmask",
             Format::Nm => "2:4",
+            Format::Bcsr => "bcsr",
         }
     }
 }
@@ -179,6 +193,7 @@ pub enum Packed {
     Csr(CsrMatrix),
     Bitmask(BitmaskMatrix),
     Nm(NmMatrix),
+    Bcsr(BcsrMatrix),
 }
 
 impl Packed {
@@ -228,6 +243,7 @@ impl Packed {
                 Some(m) => Packed::Nm(m),
                 None => Packed::pack_dtype(w, rows, cols, dtype),
             },
+            Format::Bcsr => Packed::Bcsr(BcsrMatrix::from_dense_dtype(w, rows, cols, dtype)),
         }
     }
 
@@ -237,6 +253,7 @@ impl Packed {
             Packed::Csr(_) => Format::Csr,
             Packed::Bitmask(_) => Format::Bitmask,
             Packed::Nm(_) => Format::Nm,
+            Packed::Bcsr(_) => Format::Bcsr,
         }
     }
 
@@ -247,6 +264,7 @@ impl Packed {
             Packed::Csr(m) => m.dtype(),
             Packed::Bitmask(m) => m.dtype(),
             Packed::Nm(m) => m.dtype(),
+            Packed::Bcsr(m) => m.dtype(),
         }
     }
 
@@ -256,6 +274,7 @@ impl Packed {
             Packed::Csr(m) => m.rows,
             Packed::Bitmask(m) => m.rows,
             Packed::Nm(m) => m.rows,
+            Packed::Bcsr(m) => m.rows,
         }
     }
 
@@ -265,30 +284,33 @@ impl Packed {
             Packed::Csr(m) => m.cols,
             Packed::Bitmask(m) => m.cols,
             Packed::Nm(m) => m.cols,
+            Packed::Bcsr(m) => m.cols,
         }
     }
 
-    /// True nonzero count (N:M padding slots excluded), so `density()`
-    /// agrees with `Mask::density` for every format.  CSR / bitmask / NM
-    /// read their structure planes (dtype-independent); dense counts
-    /// decoded nonzeros.
+    /// True nonzero count (N:M/BCSR padding slots excluded), so
+    /// `density()` agrees with `Mask::density` for every format.  The
+    /// sparse formats read their structure planes (dtype-independent);
+    /// dense counts decoded nonzeros.
     pub fn nnz(&self) -> usize {
         match self {
             Packed::Dense(m) => m.vals.count_nonzero(),
             Packed::Csr(m) => m.nnz(),
             Packed::Bitmask(m) => m.nnz(),
             Packed::Nm(m) => m.nnz(),
+            Packed::Bcsr(m) => m.nnz(),
         }
     }
 
     /// Stored multiply-add slots per full pass — what one matvec costs
-    /// (includes N:M padding and dense zeros).
+    /// (includes N:M/BCSR padding and dense zeros).
     pub fn stored(&self) -> usize {
         match self {
             Packed::Dense(m) => m.vals.len(),
             Packed::Csr(m) => m.nnz(),
             Packed::Bitmask(m) => m.nnz(),
             Packed::Nm(m) => m.stored(),
+            Packed::Bcsr(m) => m.stored(),
         }
     }
 
@@ -307,6 +329,7 @@ impl Packed {
             Packed::Csr(m) => m.memory_bytes(),
             Packed::Bitmask(m) => m.memory_bytes(),
             Packed::Nm(m) => m.memory_bytes(),
+            Packed::Bcsr(m) => m.memory_bytes(),
         }
     }
 
@@ -318,9 +341,12 @@ impl Packed {
             Packed::Csr(m) => m.to_dense(),
             Packed::Bitmask(m) => m.to_dense(),
             Packed::Nm(m) => m.to_dense(),
+            Packed::Bcsr(m) => m.to_dense(),
         }
     }
 
+    /// Scalar reference row kernel (the pre-SIMD closure walk, kept as
+    /// the A/B baseline — see [`Packed::row_dot_k`]).
     #[inline]
     pub fn row_dot(&self, r: usize, x: &[f32]) -> f32 {
         match self {
@@ -328,43 +354,145 @@ impl Packed {
             Packed::Csr(m) => m.row_dot(r, x),
             Packed::Bitmask(m) => m.row_dot(r, x),
             Packed::Nm(m) => m.row_dot(r, x),
+            Packed::Bcsr(m) => m.row_dot(r, x),
+        }
+    }
+
+    /// Row dots of row `r` against `t` tokens at once (`xs` is
+    /// `[t, cols]` row-major, `out[..t]` receives the results).  The
+    /// SIMD kernels decode the row's structure and values once per run
+    /// and replay only the gather + dot per token; per-token arithmetic
+    /// is independent of `t`, so `matmul == repeated matvec` holds
+    /// bit-exactly for either kernel.
+    #[inline]
+    fn row_dot_tokens(&self, r: usize, xs: &[f32], t: usize, out: &mut [f32], kernel: Kernel) {
+        match kernel {
+            Kernel::Scalar => {
+                let cols = self.cols();
+                for (ti, o) in out[..t].iter_mut().enumerate() {
+                    *o = self.row_dot(r, &xs[ti * cols..(ti + 1) * cols]);
+                }
+            }
+            Kernel::Simd => match self {
+                Packed::Dense(m) => kernels::dense::row_dot_tokens(m, r, xs, t, out),
+                Packed::Csr(m) => kernels::csr::row_dot_tokens(m, r, xs, t, out),
+                Packed::Bitmask(m) => kernels::bitmask::row_dot_tokens(m, r, xs, t, out),
+                Packed::Nm(m) => kernels::nm::row_dot_tokens(m, r, xs, t, out),
+                Packed::Bcsr(m) => kernels::bcsr::row_dot_tokens(m, r, xs, t, out),
+            },
+        }
+    }
+
+    /// Row dot under an explicit kernel choice.  Single-row helper: the
+    /// batched paths below route dense f32 through the row-panel kernel
+    /// instead, whose lane fold may reassociate differently (within the
+    /// documented tolerance).
+    #[inline]
+    pub fn row_dot_k(&self, r: usize, x: &[f32], kernel: Kernel) -> f32 {
+        let mut out = [0.0f32];
+        self.row_dot_tokens(r, x, 1, &mut out, kernel);
+        out[0]
+    }
+
+    /// Row-panel variant: rows `r0..r0+p` (`p ≤ kernels::PANEL`) × `t`
+    /// tokens into `out[pi * t + ti]`.  Dense f32 runs the true
+    /// multi-row kernel (each `x` chunk loaded once per panel); every
+    /// other format/kernel falls back to per-row [`Packed::row_dot_tokens`],
+    /// whose per-row results are panel-independent by construction —
+    /// either way `matvec` and `matmul` (which both come through here)
+    /// stay bit-identical per row.
+    #[inline]
+    fn rows_dot_tokens(
+        &self,
+        r0: usize,
+        p: usize,
+        xs: &[f32],
+        t: usize,
+        out: &mut [f32],
+        kernel: Kernel,
+    ) {
+        match (kernel, self) {
+            (Kernel::Simd, Packed::Dense(m)) => {
+                kernels::dense::panel_dot_tokens(m, r0, p, xs, t, out);
+            }
+            _ => {
+                for pi in 0..p {
+                    self.row_dot_tokens(r0 + pi, xs, t, &mut out[pi * t..(pi + 1) * t], kernel);
+                }
+            }
         }
     }
 
     /// `y[r] = Σ_c M[r,c]·x[c]` — single token, serial (threading never
     /// pays off at matvec sizes; see `matmul` for the batched path).
+    /// Runs the default kernel; `matvec_k` selects explicitly.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        self.matvec_k(x, Kernel::default())
+    }
+
+    pub fn matvec_k(&self, x: &[f32], kernel: Kernel) -> Vec<f32> {
         assert_eq!(x.len(), self.cols());
         let mut y = vec![0.0f32; self.rows()];
-        self.matvec_into(x, &mut y);
+        self.matvec_into_k(x, &mut y, kernel);
         y
     }
 
+    /// Allocation-free matvec into a caller buffer (the engine's step
+    /// path reuses per-session scratch through this).
     pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
+        self.matvec_into_k(x, y, Kernel::default());
+    }
+
+    pub fn matvec_into_k(&self, x: &[f32], y: &mut [f32], kernel: Kernel) {
         debug_assert_eq!(x.len(), self.cols());
         debug_assert_eq!(y.len(), self.rows());
-        for (r, yr) in y.iter_mut().enumerate() {
-            *yr = self.row_dot(r, x);
+        let rows = self.rows();
+        let mut r = 0usize;
+        while r < rows {
+            let p = kernels::PANEL.min(rows - r);
+            // t = 1: the [p, t] output block is exactly y[r..r+p].
+            self.rows_dot_tokens(r, p, x, 1, &mut y[r..r + p], kernel);
+            r += p;
         }
     }
 
     /// Batched kernel: `x[t, cols] → y[t, rows]` for `t` tokens,
     /// parallelized over row stripes via [`threadx::parallel_map`] once the
-    /// work crosses [`PARALLEL_MIN_WORK`].  Row stripes keep each packed
-    /// row's metadata hot in cache across all `t` tokens.
+    /// work crosses [`PARALLEL_MIN_WORK`].  Row-major over rows so each
+    /// packed row's structure/value decode is paid once for all `t`
+    /// tokens ([`Packed::row_dot_tokens`]).  Runs the default kernel.
     pub fn matmul(&self, x: &[f32], t: usize) -> Vec<f32> {
+        self.matmul_k(x, t, Kernel::default())
+    }
+
+    pub fn matmul_k(&self, x: &[f32], t: usize, kernel: Kernel) -> Vec<f32> {
+        let mut y = vec![0.0f32; t * self.rows()];
+        self.matmul_into_k(x, t, &mut y, kernel);
+        y
+    }
+
+    /// Allocation-free batched kernel into a caller buffer.
+    pub fn matmul_into_k(&self, x: &[f32], t: usize, y: &mut [f32], kernel: Kernel) {
         let (rows, cols) = (self.rows(), self.cols());
         assert_eq!(x.len(), t * cols);
-        let mut y = vec![0.0f32; t * rows];
+        assert_eq!(y.len(), t * rows);
         if t * self.stored().max(1) < PARALLEL_MIN_WORK {
-            for ti in 0..t {
-                let xt = &x[ti * cols..(ti + 1) * cols];
-                for r in 0..rows {
-                    y[ti * rows + r] = self.row_dot(r, xt);
+            let mut tmp = vec![0.0f32; kernels::PANEL * t];
+            let mut r = 0usize;
+            while r < rows {
+                let p = kernels::PANEL.min(rows - r);
+                self.rows_dot_tokens(r, p, x, t, &mut tmp[..p * t], kernel);
+                for pi in 0..p {
+                    for (ti, &v) in tmp[pi * t..(pi + 1) * t].iter().enumerate() {
+                        y[ti * rows + r + pi] = v;
+                    }
                 }
+                r += p;
             }
-            return y;
+            return;
         }
+        // ROW_STRIPE is a multiple of PANEL, so striped panels land on
+        // the same boundaries the serial path (and matvec) use.
         let stripe = ROW_STRIPE.min(rows).max(1);
         let n_stripes = rows.div_ceil(stripe);
 
@@ -378,16 +506,21 @@ impl Packed {
             let yp = &yp;
             let r0 = s * stripe;
             let r1 = (r0 + stripe).min(rows);
-            for r in r0..r1 {
-                for ti in 0..t {
-                    let v = self.row_dot(r, &x[ti * cols..(ti + 1) * cols]);
-                    // SAFETY: stripe jobs own disjoint r ranges; each
-                    // (ti, r) slot is written exactly once.
-                    unsafe { *yp.0.add(ti * rows + r) = v };
+            let mut tmp = vec![0.0f32; kernels::PANEL * t];
+            let mut r = r0;
+            while r < r1 {
+                let p = kernels::PANEL.min(r1 - r);
+                self.rows_dot_tokens(r, p, x, t, &mut tmp[..p * t], kernel);
+                for pi in 0..p {
+                    for (ti, &v) in tmp[pi * t..(pi + 1) * t].iter().enumerate() {
+                        // SAFETY: stripe jobs own disjoint r ranges; each
+                        // (ti, r) slot is written exactly once.
+                        unsafe { *yp.0.add(ti * rows + r + pi) = v };
+                    }
                 }
+                r += p;
             }
         });
-        y
     }
 }
 
@@ -438,11 +571,14 @@ mod tests {
         let w = masked_random(&mut rng, r, c, 0.5);
         let x: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
         let want = dense_matvec(&w, r, c, &x);
-        for fmt in [Format::Dense, Format::Csr, Format::Bitmask] {
+        for fmt in [Format::Dense, Format::Csr, Format::Bitmask, Format::Bcsr] {
             let p = Packed::pack_as(&w, r, c, fmt);
-            let got = p.matvec(&x);
-            for (u, v) in got.iter().zip(&want) {
-                assert!((u - v).abs() < 1e-5, "{fmt:?}: {u} vs {v}");
+            for kernel in Kernel::ALL {
+                let got = p.matvec_k(&x, kernel);
+                for (u, v) in got.iter().zip(&want) {
+                    let tol = 1e-4 * v.abs().max(1.0);
+                    assert!((u - v).abs() <= tol, "{fmt:?}/{kernel:?}: {u} vs {v}");
+                }
             }
         }
     }
@@ -454,10 +590,51 @@ mod tests {
         let w = masked_random(&mut rng, r, c, 0.8);
         let p = Packed::pack(&w, r, c);
         let x: Vec<f32> = (0..t * c).map(|_| rng.normal() as f32).collect();
-        let y = p.matmul(&x, t);
-        for ti in 0..t {
-            let yt = p.matvec(&x[ti * c..(ti + 1) * c]);
-            assert_eq!(&y[ti * r..(ti + 1) * r], &yt[..]);
+        for kernel in Kernel::ALL {
+            let y = p.matmul_k(&x, t, kernel);
+            for ti in 0..t {
+                let yt = p.matvec_k(&x[ti * c..(ti + 1) * c], kernel);
+                assert_eq!(&y[ti * r..(ti + 1) * r], &yt[..], "{kernel:?} token {ti}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_panel_results_are_width_independent() {
+        // A row's result must not depend on which rows share its panel:
+        // width-1 panels must reproduce the full matvec bit-exactly
+        // (11 rows forces a ragged tail panel; 53 cols a lane tail).
+        let mut rng = Pcg::seeded(8);
+        let (r, c) = (11usize, 53usize);
+        let w: Vec<f32> = (0..r * c).map(|_| rng.normal() as f32).collect();
+        let p = Packed::pack_as(&w, r, c, Format::Dense);
+        let x: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        let full = p.matvec_k(&x, Kernel::Simd);
+        for row in 0..r {
+            let mut solo = [0.0f32];
+            p.rows_dot_tokens(row, 1, &x, 1, &mut solo, Kernel::Simd);
+            assert_eq!(solo[0].to_bits(), full[row].to_bits(), "row {row}");
+        }
+    }
+
+    #[test]
+    fn simd_kernel_matches_scalar_reference() {
+        let mut rng = Pcg::seeded(7);
+        // 67 columns: a ragged bitmask word, a ragged BCSR block, and a
+        // lane tail all at once.
+        let (r, c) = (23usize, 67usize);
+        for sparsity in [0.0, 0.5, 0.9] {
+            let w = masked_random(&mut rng, r, c, sparsity);
+            let x: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+            for fmt in [Format::Dense, Format::Csr, Format::Bitmask, Format::Bcsr] {
+                let p = Packed::pack_as(&w, r, c, fmt);
+                let scalar = p.matvec_k(&x, Kernel::Scalar);
+                let simd = p.matvec_k(&x, Kernel::Simd);
+                for (u, v) in simd.iter().zip(&scalar) {
+                    let tol = 1e-4 * v.abs().max(1.0);
+                    assert!((u - v).abs() <= tol, "{fmt:?} @{sparsity}: {u} vs {v}");
+                }
+            }
         }
     }
 

@@ -150,6 +150,12 @@ impl NmMatrix {
         self.vals.dtype()
     }
 
+    /// Survivors per group (`m − n`) — the fixed slot stride the SIMD
+    /// group kernels walk.
+    pub fn keep(&self) -> usize {
+        self.keep
+    }
+
     /// Stored slots (incl. padding) — the multiply-adds one row costs.
     pub fn stored(&self) -> usize {
         self.vals.len()

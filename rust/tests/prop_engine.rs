@@ -19,7 +19,7 @@ use sparsessm::model::toy::toy_flat_params_random;
 use sparsessm::model::FlatParams;
 use sparsessm::rngx::Pcg;
 use sparsessm::sparse::compile::{apply_nm_along_input, magnitude_prune_all, PackPolicy};
-use sparsessm::sparse::{decode, Dtype, Format, SparseModel};
+use sparsessm::sparse::{decode, Dtype, Format, Kernel, SparseModel};
 
 /// Mini property harness: run `f` for `cases` seeds; on failure report
 /// the seed so the case can be replayed.
@@ -59,7 +59,7 @@ fn prop_prefill_steps_match_oracle_all_formats() {
             if sparsity > 0.0 {
                 magnitude_prune_all(&mut params, sparsity).map_err(|e| e.to_string())?;
             }
-            for fmt in [Format::Dense, Format::Bitmask, Format::Csr] {
+            for fmt in [Format::Dense, Format::Bitmask, Format::Csr, Format::Bcsr] {
                 let model = SparseModel::compile(&params, &PackPolicy::of(fmt))
                     .map_err(|e| e.to_string())?;
                 let want = decode::forward_logits(&model, &tokens, 1, l);
@@ -71,6 +71,40 @@ fn prop_prefill_steps_match_oracle_all_formats() {
                     ));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+/// The kernel choice threads consistently through compile → prefill →
+/// step → oracle: under either row kernel (SIMD default or the scalar
+/// reference), engine logits match the same model's whole-sequence
+/// oracle, and the two kernels agree with each other to within float
+/// reassociation noise.
+#[test]
+fn prop_engine_kernel_choice_is_consistent() {
+    check("engine-kernel-threading", 4, |rng| {
+        let seed = rng.next_u64();
+        let l = 6 + rng.below(5);
+        let tokens: Vec<i32> = (0..l).map(|_| rng.below(16) as i32).collect();
+        let split = 1 + rng.below(l - 1);
+        let mut params = toy_flat_params_random(4, seed);
+        magnitude_prune_all(&mut params, 0.5).map_err(|e| e.to_string())?;
+        let mut per_kernel = Vec::new();
+        for kernel in Kernel::ALL {
+            let policy = PackPolicy::auto().with_kernel(kernel);
+            let model = SparseModel::compile(&params, &policy).map_err(|e| e.to_string())?;
+            let want = decode::forward_logits(&model, &tokens, 1, l);
+            let got = prefill_then_steps(&model, &tokens, split);
+            let diff = max_abs_diff(&got, &want);
+            if diff > 1e-4 {
+                return Err(format!("{kernel:?} split {split}: max diff {diff}"));
+            }
+            per_kernel.push(got);
+        }
+        let cross = max_abs_diff(&per_kernel[0], &per_kernel[1]);
+        if cross > 1e-3 {
+            return Err(format!("scalar vs simd engines diverge: {cross}"));
         }
         Ok(())
     });

@@ -7,8 +7,10 @@
 //! pre-value-plane packing), quantized value planes respect their error
 //! bounds (f16 ≤ 2⁻¹¹ relative, i8 ≤ scale/2 absolute) while never
 //! disturbing exact zeros, packed matvec matches the dense reference on
-//! the *decoded* weights within 1e-5 across formats × dtypes ×
-//! sparsities, the packed end-to-end decode matches the dense-masked
+//! the *decoded* weights (tolerance-based — the SIMD kernels reassociate
+//! sums) across formats × dtypes × sparsities, SIMD kernels match the
+//! scalar reference within 1e-4 relative (f32) including ragged tail
+//! widths, the packed end-to-end decode matches the dense-masked
 //! forward within 1e-4, and pack→save→load reproduces every plane
 //! bit-exactly.
 
@@ -18,7 +20,15 @@ use sparsessm::rngx::Pcg;
 use sparsessm::sparse::compile::{apply_nm_along_input, magnitude_prune_all, PackPolicy};
 use sparsessm::sparse::testutil::masked_random;
 use sparsessm::sparse::values::{f16_to_f32, f32_to_f16, I8_GROUP, ValueStore};
-use sparsessm::sparse::{decode, dense_matvec, Dtype, Format, NmMatrix, Packed, SparseModel};
+use sparsessm::sparse::{
+    decode, dense_matvec, BcsrMatrix, Dtype, Format, Kernel, NmMatrix, Packed, SparseModel,
+};
+
+/// Tolerance for sums the SIMD kernels may reassociate: 1e-4 relative
+/// with an absolute floor of 1e-4.
+fn close(u: f32, v: f32) -> bool {
+    (u - v).abs() <= 1e-4 * v.abs().max(1.0)
+}
 
 /// Mini property harness: run `f` for `cases` seeds; on failure report the
 /// seed so the case can be replayed.
@@ -44,7 +54,7 @@ fn prop_pack_unpack_roundtrip_all_formats() {
         let cols = 1 + rng.below(130);
         for sparsity in SPARSITIES {
             let w = masked_random(rng, rows, cols, sparsity);
-            for fmt in [Format::Dense, Format::Csr, Format::Bitmask] {
+            for fmt in [Format::Dense, Format::Csr, Format::Bitmask, Format::Bcsr] {
                 let p = Packed::pack_as(&w, rows, cols, fmt);
                 if p.to_dense() != w {
                     return Err(format!("{fmt:?} roundtrip differs at sparsity {sparsity}"));
@@ -93,14 +103,69 @@ fn prop_matvec_matches_dense_across_sparsities() {
         for sparsity in SPARSITIES {
             let w = masked_random(rng, rows, cols, sparsity);
             let want = dense_matvec(&w, rows, cols, &x);
-            for fmt in [Format::Dense, Format::Csr, Format::Bitmask] {
+            for fmt in [Format::Dense, Format::Csr, Format::Bitmask, Format::Bcsr] {
                 let p = Packed::pack_as(&w, rows, cols, fmt);
-                for (r, (u, v)) in p.matvec(&x).iter().zip(&want).enumerate() {
-                    if (u - v).abs() > 1e-5 {
-                        return Err(format!(
-                            "{fmt:?} @{sparsity}: row {r} {u} vs {v}"
-                        ));
+                for kernel in Kernel::ALL {
+                    for (r, (u, v)) in p.matvec_k(&x, kernel).iter().zip(&want).enumerate() {
+                        if !close(*u, *v) {
+                            return Err(format!(
+                                "{fmt:?}/{kernel:?} @{sparsity}: row {r} {u} vs {v}"
+                            ));
+                        }
                     }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The new SIMD kernels against the scalar reference: every format ×
+/// dtype × sparsity, at widths chosen to exercise ragged tails (columns
+/// not a multiple of the 8-lane width, the 64-bit occupancy word, or
+/// the 8-wide BCSR block).  Tolerance-based since SIMD reassociates
+/// sums: ≤1e-4 relative (the values both kernels decode are identical,
+/// so dtype does not change the bound).
+#[test]
+fn prop_kernel_simd_matches_scalar() {
+    check("kernel-simd-vs-scalar", 12, |rng| {
+        let rows = 1 + rng.below(48);
+        // Widths straddling every alignment boundary, plus a random one.
+        let widths = [7usize, 8, 9, 63, 64, 65, 4 * (1 + rng.below(40)), 1 + rng.below(150)];
+        let cols = widths[rng.below(widths.len())];
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal() as f32).collect();
+        for sparsity in DTYPE_SPARSITIES {
+            let w = masked_random(rng, rows, cols, sparsity);
+            for fmt in [Format::Dense, Format::Csr, Format::Bitmask, Format::Bcsr] {
+                for dtype in Dtype::ALL {
+                    let p = Packed::pack_as_dtype(&w, rows, cols, fmt, dtype);
+                    let scalar = p.matvec_k(&x, Kernel::Scalar);
+                    let simd = p.matvec_k(&x, Kernel::Simd);
+                    for (r, (u, v)) in simd.iter().zip(&scalar).enumerate() {
+                        if !close(*u, *v) {
+                            return Err(format!(
+                                "{fmt:?}/{dtype:?} @{sparsity} cols {cols}: row {r} {u} vs {v}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        // The 2:4 group kernel on a pattern-true matrix.
+        let cols = 4 * (1 + rng.below(40));
+        let mut w: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() * 0.5) as f32).collect();
+        magnitude::magnitude_nm_mask(&w, 2, 4).apply(&mut w);
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal() as f32).collect();
+        for dtype in Dtype::ALL {
+            let p = Packed::pack_as_dtype(&w, rows, cols, Format::Nm, dtype);
+            if p.format() != Format::Nm {
+                return Err(format!("{dtype:?}: 2:4 mask not packed as Nm"));
+            }
+            let scalar = p.matvec_k(&x, Kernel::Scalar);
+            let simd = p.matvec_k(&x, Kernel::Simd);
+            for (r, (u, v)) in simd.iter().zip(&scalar).enumerate() {
+                if !close(*u, *v) {
+                    return Err(format!("Nm/{dtype:?}: row {r} {u} vs {v}"));
                 }
             }
         }
@@ -122,7 +187,7 @@ fn prop_nm_matvec_matches_dense() {
         }
         let want = dense_matvec(&w, rows, cols, &x);
         for (u, v) in p.matvec(&x).iter().zip(&want) {
-            if (u - v).abs() > 1e-5 {
+            if !close(*u, *v) {
                 return Err(format!("{u} vs {v}"));
             }
         }
@@ -130,6 +195,9 @@ fn prop_nm_matvec_matches_dense() {
     });
 }
 
+/// `matmul` must equal repeated `matvec` **bit-exactly** for either
+/// kernel: the multi-token SIMD kernels amortize structure/value decode
+/// across the token tile but keep per-token arithmetic identical.
 #[test]
 fn prop_matmul_equals_repeated_matvec() {
     check("matmul-consistency", 10, |rng| {
@@ -137,13 +205,17 @@ fn prop_matmul_equals_repeated_matvec() {
         let cols = 1 + rng.below(90);
         let t = 1 + rng.below(40);
         let w = masked_random(rng, rows, cols, 0.2 + 0.7 * rng.uniform());
-        let p = Packed::pack(&w, rows, cols);
         let x: Vec<f32> = (0..t * cols).map(|_| rng.normal() as f32).collect();
-        let y = p.matmul(&x, t);
-        for ti in 0..t {
-            let yt = p.matvec(&x[ti * cols..(ti + 1) * cols]);
-            if y[ti * rows..(ti + 1) * rows] != yt[..] {
-                return Err(format!("token {ti} differs ({:?})", p.format()));
+        for fmt in [Format::Dense, Format::Csr, Format::Bitmask, Format::Bcsr] {
+            let p = Packed::pack_as(&w, rows, cols, fmt);
+            for kernel in Kernel::ALL {
+                let y = p.matmul_k(&x, t, kernel);
+                for ti in 0..t {
+                    let yt = p.matvec_k(&x[ti * cols..(ti + 1) * cols], kernel);
+                    if y[ti * rows..(ti + 1) * rows] != yt[..] {
+                        return Err(format!("{fmt:?}/{kernel:?}: token {ti} differs"));
+                    }
+                }
             }
         }
         Ok(())
@@ -216,7 +288,7 @@ fn prop_quantized_pack_and_matvec_bounds() {
         for sparsity in DTYPE_SPARSITIES {
             let w = masked_random(rng, rows, cols, sparsity);
             let absmax = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            for fmt in [Format::Dense, Format::Csr, Format::Bitmask] {
+            for fmt in [Format::Dense, Format::Csr, Format::Bitmask, Format::Bcsr] {
                 for dtype in Dtype::ALL {
                     let p = Packed::pack_as_dtype(&w, rows, cols, fmt, dtype);
                     let dec = p.to_dense();
@@ -239,7 +311,7 @@ fn prop_quantized_pack_and_matvec_bounds() {
                     }
                     let want = dense_matvec(&dec, rows, cols, &x);
                     for (r, (u, v)) in p.matvec(&x).iter().zip(&want).enumerate() {
-                        if (u - v).abs() > 1e-5 {
+                        if !close(*u, *v) {
                             return Err(format!(
                                 "{fmt:?}/{dtype:?} @{sparsity}: row {r} {u} vs {v}"
                             ));
@@ -269,7 +341,7 @@ fn prop_quantized_nm_matvec_bound() {
             let dec = p.to_dense();
             let want = dense_matvec(&dec, rows, cols, &x);
             for (u, v) in p.matvec(&x).iter().zip(&want) {
-                if (u - v).abs() > 1e-5 {
+                if !close(*u, *v) {
                     return Err(format!("{dtype:?}: {u} vs {v}"));
                 }
             }
@@ -341,9 +413,9 @@ fn prop_forward_equivalence_2_4() {
 }
 
 /// pack → save → load reproduces every structure and value plane
-/// bit-exactly (model equality is derived `PartialEq` over all planes),
-/// and the reloaded model decodes bit-identically — across formats ×
-/// dtypes × sparsities.
+/// bit-exactly (model equality compares all packed planes; the runtime
+/// kernel preference is deliberately excluded), and the reloaded model
+/// decodes bit-identically — across formats × dtypes × sparsities.
 #[test]
 fn prop_pack_save_load_bit_exact() {
     check("save-load-bit-exact", 3, |rng| {
@@ -355,7 +427,7 @@ fn prop_pack_save_load_bit_exact() {
             if sparsity > 0.0 {
                 magnitude_prune_all(&mut params, sparsity).map_err(|e| e.to_string())?;
             }
-            let fmts = [Format::Dense, Format::Csr, Format::Bitmask, Format::Nm];
+            let fmts = [Format::Dense, Format::Csr, Format::Bitmask, Format::Nm, Format::Bcsr];
             for (fi, fmt) in fmts.iter().enumerate() {
                 for dtype in Dtype::ALL {
                     let policy = PackPolicy::of(*fmt).with_dtype(dtype);
@@ -382,6 +454,46 @@ fn prop_pack_save_load_bit_exact() {
                             "{fmt:?}/{dtype:?} @{sparsity}: reloaded decode differs"
                         ));
                     }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// BCSR pack → plane roundtrip at matrix level: ragged widths, every
+/// dtype, structure shared across dtypes, `from_parts` re-validation of
+/// the exact planes the checkpoint writer serializes.
+#[test]
+fn prop_bcsr_pack_roundtrip_and_from_parts() {
+    check("bcsr-roundtrip", 12, |rng| {
+        let rows = 1 + rng.below(40);
+        let cols = 1 + rng.below(100);
+        for sparsity in SPARSITIES {
+            let w = masked_random(rng, rows, cols, sparsity);
+            let m = BcsrMatrix::from_dense(&w, rows, cols);
+            if m.to_dense() != w {
+                return Err(format!("roundtrip differs at {sparsity} ({rows}x{cols})"));
+            }
+            if m.nnz() != w.iter().filter(|&&v| v != 0.0).count() {
+                return Err("nnz drifted from the mask".into());
+            }
+            for dtype in Dtype::ALL {
+                let q = BcsrMatrix::from_dense_dtype(&w, rows, cols, dtype);
+                if q.row_ptr != m.row_ptr || q.col_blk != m.col_blk {
+                    return Err(format!("{dtype:?} structure drifted"));
+                }
+                let back = BcsrMatrix::from_parts(
+                    rows,
+                    cols,
+                    q.nnz(),
+                    q.row_ptr.clone(),
+                    q.col_blk.clone(),
+                    q.vals.clone(),
+                )
+                .map_err(|e| e.to_string())?;
+                if back != q {
+                    return Err(format!("{dtype:?} from_parts not identity"));
                 }
             }
         }

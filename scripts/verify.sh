@@ -29,5 +29,14 @@ fi
 step "clippy (cargo clippy --all-targets -- -D warnings)"
 cargo clippy --all-targets -- -D warnings
 
+step "bench compile (cargo bench --no-run)"
+cargo bench --no-run
+
+# Fast kernel-equivalence smoke: the SIMD-vs-scalar properties in
+# release mode, i.e. the exact codegen the serving path ships.
+step "kernel smoke (release SIMD-vs-scalar equivalence props)"
+cargo test --release -q --test prop_sparse prop_kernel
+cargo test --release -q --test prop_sparse prop_matmul_equals_repeated_matvec
+
 echo
 echo "verify OK"
