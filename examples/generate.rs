@@ -36,7 +36,7 @@ fn main() -> Result<()> {
     let vocab = model.meta.vocab;
     for i in 0..8usize {
         let prompt: Vec<i32> = (0..8 + 4 * i).map(|_| rng.below(vocab) as i32).collect();
-        let id = sched.submit(prompt, 32);
+        let id = sched.submit(prompt, 32)?;
         println!("queued request {id} (prompt {} tokens, 32 to generate)", 8 + 4 * i);
     }
 

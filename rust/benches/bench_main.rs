@@ -202,6 +202,30 @@ fn main() {
         }
     });
 
+    // SIMD vs scalar selective scan: prefill and batch-major step
+    // shapes at m370 dims, plus the structured-d_state skip variant
+    // (host-only).  The acceptance bar: simd ≥1.5x scalar.
+    run("scan_speed", &mut |res| {
+        let rows = decode::scan_sweep(200.0);
+        if let Err(e) = decode::update_bench_kernels_json(
+            &decode::bench_kernels_json_path(),
+            "scan_speed",
+            decode::scan_rows_json(&rows),
+        ) {
+            eprintln!("  [warn] {}: {e}", decode::BENCH_KERNELS_JSON);
+        }
+        for row in rows {
+            eprintln!(
+                "  {:<16} {:<7} {:>12.0} tok/s ({:.2}x scalar)",
+                row.shape,
+                row.kernel.name(),
+                row.tokens_per_sec,
+                row.rel_scalar
+            );
+            res.push(row.bench);
+        }
+    });
+
     // engine: steady-state step decode — O(1)/token batched sessions
     // over one shared packed model (host-only).
     run("engine_step_decode", &mut |res| {
@@ -235,7 +259,7 @@ fn main() {
         res.push(bench_for("scheduler 8 reqs x 16 new, batch 4", 600.0, || {
             let mut sched = Scheduler::new(&model, 4, Sampling::Greedy, 17);
             for p in &prompts {
-                sched.submit(p.clone(), 16);
+                sched.submit(p.clone(), 16).unwrap();
             }
             black_box(sched.run_until_idle());
         }));

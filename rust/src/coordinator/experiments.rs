@@ -18,11 +18,11 @@ use anyhow::{bail, Result};
 
 /// All experiment ids: the paper's tables/figures in paper order, plus
 /// repo-native serving experiments (`sparse_speed`, `serve_engine`,
-/// `quant_speed`, `kernel_speed`).
-pub const ALL_IDS: [&str; 19] = [
+/// `quant_speed`, `kernel_speed`, `scan_speed`).
+pub const ALL_IDS: [&str; 20] = [
     "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "table9",
     "table10", "table11", "table12", "fig2", "fig3", "fig4", "sparse_speed", "serve_engine",
-    "quant_speed", "kernel_speed",
+    "quant_speed", "kernel_speed", "scan_speed",
 ];
 
 pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
@@ -47,6 +47,7 @@ pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
         "serve_engine" => serve_engine(pipe)?,
         "quant_speed" => quant_speed(pipe)?,
         "kernel_speed" => kernel_speed(pipe)?,
+        "scan_speed" => scan_speed(pipe)?,
         other => bail!("unknown experiment id '{other}' (known: {:?})", ALL_IDS),
     };
     rep.note(&format!(
@@ -631,6 +632,51 @@ fn kernel_speed(pipe: &Pipeline) -> Result<Report> {
     rep.note(
         "acceptance bar: simd ≥1.5x scalar for the f32 bitmask and 2:4 rows at 50% sparsity \
          (multi-token kernels amortize structure/value decode across the token tile)",
+    );
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// scan_speed — SIMD vs scalar selective scan, prefill + step shapes
+// ---------------------------------------------------------------------
+
+fn scan_speed(pipe: &Pipeline) -> Result<Report> {
+    let mut rep = Report::new(
+        "scan_speed",
+        "scan microkernels: selective-scan tokens/sec per shape × kernel \
+         (m370 dims; +skip50 = structured d_state plan at 50%)",
+        &["Shape", "Kernel", "tok/s", "vs scalar", "p50 (ms)"],
+    );
+    // Host-only: the scan sees only shapes and values — random inputs
+    // at real m370 widths suffice.
+    let budget = if pipe.fast { 60.0 } else { 300.0 };
+    let rows = crate::sparse::decode::scan_sweep(budget);
+    for row in &rows {
+        rep.push_row(vec![
+            row.shape.clone(),
+            row.kernel.name().to_string(),
+            format!("{:.0}", row.tokens_per_sec),
+            format!("{:.2}x", row.rel_scalar),
+            format!("{:.4}", row.bench.p50_ms),
+        ]);
+    }
+    // Best-effort, as in kernel_speed: never discard a measured report
+    // over a perf-log write failure.
+    let log = crate::sparse::decode::bench_kernels_json_path();
+    match crate::sparse::decode::update_bench_kernels_json(
+        &log,
+        "scan_speed",
+        crate::sparse::decode::scan_rows_json(&rows),
+    ) {
+        Ok(()) => rep.note(&format!(
+            "machine-readable rows folded into {} (scan_speed section)",
+            log.display()
+        )),
+        Err(e) => rep.note(&format!("[warn] perf log not updated: {e:#}")),
+    }
+    rep.note(
+        "acceptance bar: simd ≥1.5x scalar on both the prefill and step-batch shapes \
+         (the scalar walk pays a libm exp per (d, n) element per token)",
     );
     Ok(rep)
 }

@@ -4,10 +4,13 @@
 //! Two implementations ship in-tree:
 //!
 //! * [`crate::sparse::SparseModel`] — the serving path.  `prefill` runs
-//!   the batched packed kernels (matmul + [`crate::ssm`] scan) over the
-//!   whole prompt at once and hands the final recurrent state off;
-//!   `step` advances one token with packed matvecs and an in-place
-//!   scan update; `step_batch` stripes independent sessions across
+//!   the fused single-pass layer forward
+//!   ([`crate::sparse::decode::fused_layer_forward`]) over the whole
+//!   prompt at once and hands the final recurrent state off; `step`
+//!   advances one token with packed matvecs and an in-place scan
+//!   update; `step_batch` is **batch-major**: every projection runs as
+//!   one multi-token matmul across the sessions (weight decode
+//!   amortized over the batch) and the conv/scan stages stripe across
 //!   [`crate::threadx`] workers.
 //! * [`crate::model::FlatParams`] — the dense reference backend, written
 //!   directly against the `x @ W` storage orientation with no packing at
@@ -20,12 +23,94 @@
 //! +res]×L → rmsnorm → tied head), so prefill+N×step logits match a full
 //! recompute to float precision — pinned by `tests/prop_engine.rs`.
 
-use super::EngineState;
+use super::{EngineState, LayerState};
 use crate::model::{FlatParams, ModelMeta};
-use crate::sparse::decode::{conv1d_causal_silu, rmsnorm, rmsnorm_into, silu, softplus};
-use crate::sparse::SparseModel;
-use crate::ssm::{selective_scan_with_state, SsmInputs};
+use crate::sparse::decode::{
+    embed_tokens, fused_layer_forward, rmsnorm, rmsnorm_into, silu, softplus, ScanHandoff,
+};
+use crate::sparse::{Kernel, PARALLEL_MIN_WORK, SparseLayer, SparseModel};
+use crate::ssm::kernels::{scan_update, ScanStep};
 use crate::threadx;
+
+/// Per-session slices one layer's scan + gate consumes (all post-
+/// projection): δ, the conv output `u`, the token's B/C rows, and the
+/// gate residual.
+struct StepSlices<'a> {
+    delta: &'a [f32],
+    u: &'a [f32],
+    b: &'a [f32],
+    c: &'a [f32],
+    res: &'a [f32],
+}
+
+/// One session's causal-conv ring step for one layer: reads `x_in` for
+/// the current position and the ring buffer for past ones, writes
+/// SiLU(conv) into `u`, then records `x_in` in the ring slot for
+/// `t_pos`.  Shared by the solo and batch-major step paths — the
+/// batched == solo bit-exact contract holds because both run literally
+/// this code.
+fn conv_ring_step(
+    layer: &SparseLayer,
+    lst: &mut LayerState,
+    t_pos: usize,
+    x_in: &[f32],
+    u: &mut [f32],
+) {
+    let di = layer.conv_w.rows;
+    let k = layer.conv_w.cols;
+    let taps = layer.conv_w.vals.as_f32().expect("conv taps are always packed f32");
+    // Tap kk addresses sequence position t_pos + kk − (K−1).
+    for (d, uv) in u.iter_mut().enumerate() {
+        let (lo, hi) = (layer.conv_w.row_ptr[d] as usize, layer.conv_w.row_ptr[d + 1] as usize);
+        let mut acc = layer.conv_b[d];
+        for p in lo..hi {
+            let kk = layer.conv_w.col_idx[p] as usize;
+            if t_pos + kk >= k - 1 {
+                let pos = t_pos + kk - (k - 1);
+                let xv = if pos == t_pos { x_in[d] } else { lst.conv[(pos % (k - 1)) * di + d] };
+                acc += taps[p] * xv;
+            }
+        }
+        *uv = silu(acc);
+    }
+    if k > 1 {
+        lst.conv[(t_pos % (k - 1)) * di..][..di].copy_from_slice(x_in);
+    }
+}
+
+/// One session's scan + SiLU-gate step for one layer over all channels:
+/// `h ← exp(δA)·h + δu·B, y = (h·C + D·u)·silu(res)`, in place, through
+/// the shared scan microkernel (skipping structurally dead state
+/// columns per the layer's compile-time plan).  Shared by the solo and
+/// batch-major step paths, like [`conv_ring_step`].
+fn scan_gate_step(
+    layer: &SparseLayer,
+    kernel: Kernel,
+    lst: &mut LayerState,
+    io: &StepSlices<'_>,
+    y: &mut [f32],
+    ebuf: &mut [f32],
+) {
+    let di = y.len();
+    let ds = if di == 0 { 0 } else { layer.a.len() / di };
+    let plan = layer.scan_plan();
+    for (d, yv) in y.iter_mut().enumerate() {
+        let xt = io.u[d];
+        let step = ScanStep {
+            dt: io.delta[d],
+            xt,
+            a: &layer.a[d * ds..(d + 1) * ds],
+            b: io.b,
+            c: io.c,
+        };
+        let hrow = &mut lst.h[d * ds..(d + 1) * ds];
+        let acc = scan_update(kernel, &step, hrow, ebuf, plan);
+        *yv = acc + layer.d[d] * xt;
+    }
+    for (yv, &rv) in y.iter_mut().zip(io.res) {
+        *yv *= silu(rv);
+    }
+}
 
 /// Stateful inference over one model: prefill a prompt once, then decode
 /// each further token in O(1) work (independent of the sequence length).
@@ -97,34 +182,17 @@ impl Backend for SparseModel {
         sparse_prefill(self, tokens, true)
     }
 
-    /// One fused step for many sessions, striped across [`threadx`]
-    /// workers.  Sessions are independent, so each job runs the full
-    /// per-session step and writes disjoint logits/state slots.
+    /// Batch-major fused step for many sessions: one multi-token matmul
+    /// per projection across the whole batch (so the row kernels decode
+    /// each weight row once per step instead of once per session), with
+    /// the per-session conv rings and scan states advanced in place by
+    /// [`threadx`]-striped stages.  Per-session arithmetic is identical
+    /// to a solo [`Backend::step`] — the row kernels are token-count
+    /// independent and both paths funnel the recurrence through
+    /// `ssm::kernels::scan_update` — so batching never changes results
+    /// (pinned bit-exactly by `tests/prop_engine.rs`).
     fn step_batch(&self, states: &mut [EngineState], tokens: &[i32]) -> Vec<f32> {
-        assert_eq!(states.len(), tokens.len());
-        let n = states.len();
-        let vocab = self.meta.vocab;
-        let mut out = vec![0.0f32; n * vocab];
-
-        struct Ptr<T>(*mut T);
-        unsafe impl<T> Send for Ptr<T> {}
-        unsafe impl<T> Sync for Ptr<T> {}
-        let sp = Ptr(states.as_mut_ptr());
-        let op = Ptr(out.as_mut_ptr());
-
-        threadx::parallel_map(n, |i| {
-            let sp = &sp;
-            let op = &op;
-            // SAFETY: each session index is claimed exactly once, so the
-            // &mut state and the [i*vocab, (i+1)*vocab) logits slot are
-            // exclusive to this job.
-            let st = unsafe { &mut *sp.0.add(i) };
-            let logits = sparse_step(self, st, tokens[i]);
-            unsafe {
-                std::ptr::copy_nonoverlapping(logits.as_ptr(), op.0.add(i * vocab), vocab);
-            }
-        });
-        out
+        sparse_step_batch(self, states, tokens)
     }
 }
 
@@ -151,27 +219,8 @@ fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<
         layer.in_proj.matvec_into_k(&s.xn, &mut s.xr, kernel); // [2di] = [x_in | res]
         let (x_in, res) = s.xr.split_at(di);
 
-        // Causal conv over packed taps, reading the ring buffer for past
-        // positions; tap kk addresses sequence position t_pos + kk − (K−1).
-        let k = layer.conv_w.cols;
-        let taps = layer.conv_w.vals.as_f32().expect("conv taps are always packed f32");
-        for (d, uv) in s.u.iter_mut().enumerate() {
-            let (lo, hi) = (layer.conv_w.row_ptr[d] as usize, layer.conv_w.row_ptr[d + 1] as usize);
-            let mut acc = layer.conv_b[d];
-            for p in lo..hi {
-                let kk = layer.conv_w.col_idx[p] as usize;
-                if t_pos + kk >= k - 1 {
-                    let pos = t_pos + kk - (k - 1);
-                    let xv =
-                        if pos == t_pos { x_in[d] } else { lst.conv[(pos % (k - 1)) * di + d] };
-                    acc += taps[p] * xv;
-                }
-            }
-            *uv = silu(acc);
-        }
-        if k > 1 {
-            lst.conv[(t_pos % (k - 1)) * di..][..di].copy_from_slice(x_in);
-        }
+        // Causal conv over packed taps + ring buffer (shared helper).
+        conv_ring_step(layer, lst, t_pos, x_in, &mut s.u);
 
         layer.x_proj.matvec_into_k(&s.u, &mut s.xdbc, kernel); // [dr + 2ds] = [δ_r | B | C]
         let (delta_r, bc) = s.xdbc.split_at(dr);
@@ -182,25 +231,17 @@ fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<
             *dv = softplus(*dv + bb);
         }
 
-        // One scan step: h ← exp(δA)·h + δu·B, y = h·C + D·u, in place.
-        for (d, yv) in s.y.iter_mut().enumerate() {
-            let dt = s.delta[d];
-            let xt = s.u[d];
-            let dx = dt * xt;
-            let arow = &layer.a[d * ds..(d + 1) * ds];
-            let hrow = &mut lst.h[d * ds..(d + 1) * ds];
-            let mut acc = 0.0f32;
-            for kk in 0..ds {
-                let hv = (dt * arow[kk]).exp() * hrow[kk] + dx * bv[kk];
-                hrow[kk] = hv;
-                acc += hv * cv[kk];
-            }
-            *yv = acc + layer.d[d] * xt;
-        }
-
-        for (yv, &rv) in s.y.iter_mut().zip(res) {
-            *yv *= silu(rv);
-        }
+        // One scan + gate step through the shared helper (and the
+        // shared scan microkernel, with the layer's structured-d_state
+        // plan).
+        scan_gate_step(
+            layer,
+            kernel,
+            lst,
+            &StepSlices { delta: &s.delta, u: &s.u, b: bv, c: cv, res },
+            &mut s.y,
+            &mut s.escan,
+        );
         layer.out_proj.matvec_into_k(&s.y, &mut s.out, kernel);
         for (xv, &ov) in s.x.iter_mut().zip(&s.out) {
             *xv += ov;
@@ -212,90 +253,34 @@ fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<
     model.head.matvec_k(&s.xn, kernel)
 }
 
-/// Whole-prompt prefill on the packed model: the `forward_logits` op
-/// sequence with bt=1, plus state capture (conv tail into the ring,
-/// scan final state via [`selective_scan_with_state`]).  With
+/// Whole-prompt prefill on the packed model: the fused layer forward
+/// with bt=1 ([`fused_layer_forward`] — the exact op sequence of the
+/// `forward_logits` oracle), with state capture (conv tail into the
+/// ring, scan final state) threaded through its [`ScanHandoff`].  With
 /// `last_only`, the final rmsnorm + tied head run on the last position
 /// alone.
 fn sparse_prefill(model: &SparseModel, tokens: &[i32], last_only: bool) -> (Vec<f32>, EngineState) {
     assert!(!tokens.is_empty(), "prefill needs at least one token");
     let meta = &model.meta;
-    let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
+    let dm = meta.d_model;
     let kernel = model.kernel;
     let l = tokens.len();
     let mut state = EngineState::new(meta);
 
-    let mut x = vec![0.0f32; l * dm];
-    for (i, &tok) in tokens.iter().enumerate() {
-        let v = tok as usize;
-        assert!(v < meta.vocab, "token {tok} out of vocab {}", meta.vocab);
-        x[i * dm..(i + 1) * dm].copy_from_slice(model.embed_row(v));
-    }
+    // Prompts are validated at the serving boundary (Scheduler::submit);
+    // inside the engine a bad token is a caller bug, not a request error.
+    let mut x = embed_tokens(model, tokens).expect("prefill tokens validated by the caller");
 
     for (layer, lst) in model.layers.iter().zip(&mut state.layers) {
-        let xn = rmsnorm(&x, &layer.norm, dm);
-        let xr = layer.in_proj.matmul_k(&xn, l, kernel); // [l, 2di] = [x_in | res]
-        let mut x_in = vec![0.0f32; l * di];
-        let mut res = vec![0.0f32; l * di];
-        for ti in 0..l {
-            let row = &xr[ti * 2 * di..(ti + 1) * 2 * di];
-            x_in[ti * di..(ti + 1) * di].copy_from_slice(&row[..di]);
-            res[ti * di..(ti + 1) * di].copy_from_slice(&row[di..]);
-        }
-
-        // Stash the conv window tail: positions l−(K−1)..l−1 land in
-        // their ring slots so the first step sees them.
-        let k = layer.conv_w.cols;
-        if k > 1 {
-            for tt in l.saturating_sub(k - 1)..l {
-                lst.conv[(tt % (k - 1)) * di..][..di]
-                    .copy_from_slice(&x_in[tt * di..(tt + 1) * di]);
-            }
-        }
-
-        let u = conv1d_causal_silu(&layer.conv_w, &layer.conv_b, &x_in, 1, l, di);
-
-        let xdbc = layer.x_proj.matmul_k(&u, l, kernel); // [l, dr + 2ds]
-        let width = dr + 2 * ds;
-        let mut delta_r = vec![0.0f32; l * dr];
-        let mut bmat = vec![0.0f32; l * ds];
-        let mut cmat = vec![0.0f32; l * ds];
-        for ti in 0..l {
-            let row = &xdbc[ti * width..(ti + 1) * width];
-            delta_r[ti * dr..(ti + 1) * dr].copy_from_slice(&row[..dr]);
-            bmat[ti * ds..(ti + 1) * ds].copy_from_slice(&row[dr..dr + ds]);
-            cmat[ti * ds..(ti + 1) * ds].copy_from_slice(&row[dr + ds..]);
-        }
-
-        let mut delta = layer.dt_proj.matmul_k(&delta_r, l, kernel); // [l, di]
-        for row in delta.chunks_exact_mut(di) {
-            for (dv, &bb) in row.iter_mut().zip(&layer.dt_b) {
-                *dv = softplus(*dv + bb);
-            }
-        }
-
-        let (y, h_final) = selective_scan_with_state(
-            &SsmInputs {
-                a: &layer.a,
-                delta: &delta,
-                b: &bmat,
-                c: &cmat,
-                x: &u,
-                dp: &layer.d,
-                dims: (1, l, di, ds),
-            },
-            None,
+        fused_layer_forward(
+            layer,
+            meta,
+            kernel,
+            &mut x,
+            1,
+            l,
+            Some(ScanHandoff { h: &mut lst.h, conv: &mut lst.conv }),
         );
-        lst.h = h_final; // [1·di·ds]
-
-        let mut gated = y;
-        for (g, &rv) in gated.iter_mut().zip(&res) {
-            *g *= silu(rv);
-        }
-        let out = layer.out_proj.matmul_k(&gated, l, kernel);
-        for (xv, &ov) in x.iter_mut().zip(&out) {
-            *xv += ov;
-        }
     }
 
     state.seq_len = l;
@@ -306,6 +291,143 @@ fn sparse_prefill(model: &SparseModel, tokens: &[i32], last_only: bool) -> (Vec<
         let xn = rmsnorm(&x, &model.norm_f, dm);
         (model.head.matmul_k(&xn, l, kernel), state)
     }
+}
+
+/// Batch-major fused step (the tentpole of the step-decode path): lay
+/// the batch out `[session, feature]` and run each projection as **one**
+/// multi-token matmul over all sessions, so the packed row kernels
+/// decode every weight row's structure/values once per step instead of
+/// once per session.  The per-session stages (conv ring, scan state,
+/// gate) stripe across [`threadx`] workers and mutate each session's
+/// state in place; the scan goes through the same
+/// `ssm::kernels::scan_update` (with the layer's structured-d_state
+/// plan) as a solo step, which keeps batched == solo bit-exact.
+fn sparse_step_batch(model: &SparseModel, states: &mut [EngineState], tokens: &[i32]) -> Vec<f32> {
+    assert_eq!(states.len(), tokens.len());
+    let meta = &model.meta;
+    let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
+    let kernel = model.kernel;
+    let s_n = states.len();
+    if s_n == 0 {
+        return Vec::new();
+    }
+    if s_n == 1 {
+        // A one-session batch has nothing to amortize — the solo step
+        // (allocation-free scratch, serial matvecs) is the fast path,
+        // and delegating keeps batched == solo trivially exact.
+        return sparse_step(model, &mut states[0], tokens[0]);
+    }
+
+    debug_assert!(states.iter().all(|st| st.layers.len() == model.layers.len()));
+    // One embed row per session — validated at the serving boundary,
+    // like the prefill path.
+    let mut x = embed_tokens(model, tokens).expect("step tokens validated by the caller");
+
+    // Batch working buffers, `[session, feature]` row-major — one
+    // allocation per buffer per batched step, amortized over sessions.
+    let mut xn = vec![0.0f32; s_n * dm];
+    let mut x_in = vec![0.0f32; s_n * di];
+    let mut res = vec![0.0f32; s_n * di];
+    let mut u = vec![0.0f32; s_n * di];
+    let mut delta_r = vec![0.0f32; s_n * dr];
+    let mut bmat = vec![0.0f32; s_n * ds];
+    let mut cmat = vec![0.0f32; s_n * ds];
+    let mut delta = vec![0.0f32; s_n * di];
+    let mut y = vec![0.0f32; s_n * di];
+    let mut out = vec![0.0f32; s_n * dm];
+
+    struct Ptr<T>(*mut T);
+    unsafe impl<T> Send for Ptr<T> {}
+    unsafe impl<T> Sync for Ptr<T> {}
+
+    for (li, layer) in model.layers.iter().enumerate() {
+        rmsnorm_into(&x, &layer.norm, dm, &mut xn);
+        layer.in_proj.matmul_rows_into_k(&xn, s_n, 0, di, &mut x_in, kernel);
+        layer.in_proj.matmul_rows_into_k(&xn, s_n, di, 2 * di, &mut res, kernel);
+
+        // Causal conv per session (ring positions differ), striped only
+        // once the batch carries enough work to amortize thread spawns.
+        {
+            let sp = Ptr(states.as_mut_ptr());
+            let up = Ptr(u.as_mut_ptr());
+            let x_in = &x_in;
+            let k = layer.conv_w.cols;
+            let job = |i: usize| {
+                let sp = &sp;
+                let up = &up;
+                // SAFETY: each session index is claimed exactly once, so
+                // the &mut state and the u row are exclusive to this job.
+                let st = unsafe { &mut *sp.0.add(i) };
+                let urow = unsafe { std::slice::from_raw_parts_mut(up.0.add(i * di), di) };
+                let t_pos = st.seq_len;
+                let lst = &mut st.layers[li];
+                conv_ring_step(layer, lst, t_pos, &x_in[i * di..(i + 1) * di], urow);
+            };
+            if s_n * di * k >= PARALLEL_MIN_WORK {
+                threadx::parallel_map(s_n, job);
+            } else {
+                for i in 0..s_n {
+                    job(i);
+                }
+            }
+        }
+
+        layer.x_proj.matmul_rows_into_k(&u, s_n, 0, dr, &mut delta_r, kernel);
+        layer.x_proj.matmul_rows_into_k(&u, s_n, dr, dr + ds, &mut bmat, kernel);
+        layer.x_proj.matmul_rows_into_k(&u, s_n, dr + ds, dr + 2 * ds, &mut cmat, kernel);
+
+        layer.dt_proj.matmul_into_k(&delta_r, s_n, &mut delta, kernel);
+        for row in delta.chunks_exact_mut(di) {
+            for (dv, &bb) in row.iter_mut().zip(&layer.dt_b) {
+                *dv = softplus(*dv + bb);
+            }
+        }
+
+        // Scan + gate per session, striped under the same work gate;
+        // each session's h advances in place through the same
+        // `scan_update` a solo step runs.
+        {
+            let sp = Ptr(states.as_mut_ptr());
+            let yp = Ptr(y.as_mut_ptr());
+            let (delta, u, bmat, cmat, res) = (&delta, &u, &bmat, &cmat, &res);
+            let job = |i: usize| {
+                let sp = &sp;
+                let yp = &yp;
+                // SAFETY: session i's state and y row belong to this job.
+                let st = unsafe { &mut *sp.0.add(i) };
+                let yrow = unsafe { std::slice::from_raw_parts_mut(yp.0.add(i * di), di) };
+                st.scratch.ensure(meta);
+                let EngineState { layers, scratch, .. } = st;
+                let lst = &mut layers[li];
+                let io = StepSlices {
+                    delta: &delta[i * di..(i + 1) * di],
+                    u: &u[i * di..(i + 1) * di],
+                    b: &bmat[i * ds..(i + 1) * ds],
+                    c: &cmat[i * ds..(i + 1) * ds],
+                    res: &res[i * di..(i + 1) * di],
+                };
+                scan_gate_step(layer, kernel, lst, &io, yrow, &mut scratch.escan);
+            };
+            if s_n * di * ds >= PARALLEL_MIN_WORK {
+                threadx::parallel_map(s_n, job);
+            } else {
+                for i in 0..s_n {
+                    job(i);
+                }
+            }
+        }
+
+        layer.out_proj.matmul_into_k(&y, s_n, &mut out, kernel);
+        for (xv, &ov) in x.iter_mut().zip(&out) {
+            *xv += ov;
+        }
+    }
+
+    rmsnorm_into(&x, &model.norm_f, dm, &mut xn);
+    for st in states.iter_mut() {
+        st.seq_len += 1;
+    }
+    model.head.matmul_k(&xn, s_n, kernel) // [s_n, vocab]
 }
 
 impl Backend for FlatParams {
@@ -332,8 +454,30 @@ fn dense_step(params: &FlatParams, state: &mut EngineState, token: i32) -> Vec<f
     let t_pos = state.seq_len;
     let embed = params.view("embedding").expect("layout embedding");
 
+    // Discretizable A = −exp(A_log), cached on the session's scratch at
+    // the first step: the reference path used to re-materialize it with
+    // a libm exp per (d, n) element per decoded token.  Keyed on the
+    // parameter buffer's identity so a session stepped against a
+    // different (even same-shape) `FlatParams` rebuilds instead of
+    // serving stale `A`.
+    let src = params.data.as_ptr() as usize;
+    if state.scratch.dense_a.len() != meta.n_layer || state.scratch.dense_a_src != src {
+        state.scratch.dense_a = (0..meta.n_layer)
+            .map(|li| {
+                params
+                    .view(&format!("layers.{li}.A_log"))
+                    .expect("layout A_log")
+                    .iter()
+                    .map(|&x| -x.exp())
+                    .collect()
+            })
+            .collect();
+        state.scratch.dense_a_src = src;
+    }
+
+    let EngineState { layers, scratch, .. } = &mut *state;
     let mut x = embed[v * dm..(v + 1) * dm].to_vec();
-    for (li, lst) in state.layers.iter_mut().enumerate() {
+    for (li, lst) in layers.iter_mut().enumerate() {
         let view = |m: &str| params.view(&format!("layers.{li}.{m}")).expect("layout tensor");
         let xn = rmsnorm(&x, view("norm"), dm);
 
@@ -392,20 +536,19 @@ fn dense_step(params: &FlatParams, state: &mut EngineState, token: i32) -> Vec<f
             *dv = softplus(*dv + bb);
         }
 
-        // Scan step with A = −exp(A_log) materialized on the fly.
-        let a_log = view("A_log");
+        // Scan step with the session-cached A = −exp(A_log).
+        let a_mat = &scratch.dense_a[li];
         let d_vec = view("D");
         let mut y = vec![0.0f32; di];
         for (d, yv) in y.iter_mut().enumerate() {
             let dt = delta[d];
             let xt = u[d];
             let dx = dt * xt;
-            let arow = &a_log[d * ds..(d + 1) * ds];
+            let arow = &a_mat[d * ds..(d + 1) * ds];
             let hrow = &mut lst.h[d * ds..(d + 1) * ds];
             let mut acc = 0.0f32;
             for kk in 0..ds {
-                let a = -arow[kk].exp();
-                let hv = (dt * a).exp() * hrow[kk] + dx * bv[kk];
+                let hv = (dt * arow[kk]).exp() * hrow[kk] + dx * bv[kk];
                 hrow[kk] = hv;
                 acc += hv * cv[kk];
             }
@@ -463,7 +606,7 @@ mod tests {
         magnitude_prune_all(&mut p, 0.5).unwrap();
         let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
         let tokens = [3i32, 1, 4, 1, 5, 9, 2, 6];
-        let want = forward_logits(&model, &tokens, 1, tokens.len());
+        let want = forward_logits(&model, &tokens, 1, tokens.len()).unwrap();
         let (mut got, mut state) = model.prefill(&tokens[..3]);
         for &t in &tokens[3..] {
             got.extend(model.step(&mut state, t));

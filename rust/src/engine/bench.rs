@@ -85,7 +85,10 @@ pub fn step_vs_full_sweep(
             &format!("full {} B={bt} L={l} [{formats}]", model.meta.name),
             budget_ms / 2.0,
             || {
-                benchx::black_box(decode::forward_logits(&model, &tokens, bt, l));
+                benchx::black_box(
+                    decode::forward_logits(&model, &tokens, bt, l)
+                        .expect("bench tokens in vocab"),
+                );
             },
         );
         let full_tps = bt as f64 / (full.p50_ms / 1e3);

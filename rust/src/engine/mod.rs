@@ -11,10 +11,10 @@
 //!                   the last `K−1` inputs; constant-size per session.
 //! * [`backend`]   — the [`Backend`] trait (`prefill` → `step` →
 //!                   `step_batch`), implemented for the packed
-//!                   [`crate::sparse::SparseModel`] (serving path,
-//!                   batched prefill + threaded batch step) and for
-//!                   dense [`crate::model::FlatParams`] (independent
-//!                   reference implementation).
+//!                   [`crate::sparse::SparseModel`] (fused-forward
+//!                   prefill + batch-major batched step, DESIGN.md §13)
+//!                   and for dense [`crate::model::FlatParams`]
+//!                   (independent reference implementation).
 //! * [`session`]   — [`Session`]: one request's state + logits +
 //!                   seeded sampler; [`Session::run_solo`] is the
 //!                   unbatched reference.

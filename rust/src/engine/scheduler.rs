@@ -21,6 +21,7 @@
 //! identical to its solo run regardless of batch composition.
 
 use super::{Backend, EngineState, Sampling, Session};
+use anyhow::{ensure, Result};
 use std::collections::VecDeque;
 
 /// A queued generation request.
@@ -87,14 +88,22 @@ impl<'a, B: Backend> Scheduler<'a, B> {
         }
     }
 
-    /// Enqueue a request; returns its id.
-    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> usize {
-        assert!(!prompt.is_empty(), "request needs a non-empty prompt");
-        assert!(max_new_tokens > 0, "request must generate at least one token");
+    /// Enqueue a request; returns its id.  Malformed requests — empty
+    /// prompt, zero budget, out-of-vocab (or negative) tokens — are
+    /// rejected with an error here, at the serving boundary, so a bad
+    /// request can never reach the engine's internal asserts and take
+    /// the process down.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> Result<usize> {
+        ensure!(!prompt.is_empty(), "request needs a non-empty prompt");
+        ensure!(max_new_tokens > 0, "request must generate at least one token");
+        let vocab = self.backend.meta().vocab;
+        if let Some(&bad) = prompt.iter().find(|&&t| t < 0 || t as usize >= vocab) {
+            anyhow::bail!("prompt token {bad} out of vocab {vocab}");
+        }
         let id = self.next_id;
         self.next_id += 1;
         self.queue.push_back(Request { id, prompt, max_new_tokens });
-        id
+        Ok(id)
     }
 
     pub fn pending(&self) -> usize {
@@ -202,7 +211,7 @@ mod tests {
         let mut sched = Scheduler::new(&model, 2, Sampling::Greedy, 0);
         let budgets = [3usize, 1, 4, 2, 5];
         for (i, &n) in budgets.iter().enumerate() {
-            sched.submit(vec![(i % 16) as i32, ((i + 3) % 16) as i32], n);
+            sched.submit(vec![(i % 16) as i32, ((i + 3) % 16) as i32], n).unwrap();
         }
         let gens = sched.run_until_idle();
         assert_eq!(gens.len(), budgets.len());
@@ -224,9 +233,9 @@ mod tests {
         let mut sched = Scheduler::new(&model, 2, Sampling::Greedy, 0);
         // One long request and several one-token requests: the short ones
         // must flow through the second slot while the long one runs.
-        sched.submit(vec![1, 2], 8);
+        sched.submit(vec![1, 2], 8).unwrap();
         for i in 0..3i32 {
-            sched.submit(vec![3 + i], 1);
+            sched.submit(vec![3 + i], 1).unwrap();
         }
         let mut finished_before_long = 0usize;
         let mut long_done = false;
@@ -242,6 +251,23 @@ mod tests {
         assert!(long_done);
         assert_eq!(finished_before_long, 3, "short requests should overtake the long one");
         assert!(sched.stats().peak_batch <= 2);
+    }
+
+    #[test]
+    fn bad_requests_are_rejected_not_served() {
+        let model = toy_model(4);
+        let mut sched = Scheduler::new(&model, 2, Sampling::Greedy, 0);
+        assert!(sched.submit(vec![], 4).is_err(), "empty prompt");
+        assert!(sched.submit(vec![1, 2], 0).is_err(), "zero budget");
+        assert!(sched.submit(vec![1, 99], 4).is_err(), "out-of-vocab token");
+        assert!(sched.submit(vec![-1], 4).is_err(), "negative token");
+        assert_eq!(sched.pending(), 0, "rejected requests must not enqueue");
+        // A good request after rejections still flows through.
+        let id = sched.submit(vec![1, 2], 2).unwrap();
+        assert_eq!(id, 0);
+        let gens = sched.run_until_idle();
+        assert_eq!(gens.len(), 1);
+        assert_eq!(gens[0].tokens.len(), 2);
     }
 
     #[test]

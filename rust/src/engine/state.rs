@@ -49,6 +49,19 @@ pub struct StepScratch {
     pub y: Vec<f32>,
     /// out_proj output `[d_model]`.
     pub out: Vec<f32>,
+    /// Scan-kernel exp scratch `[d_state]` (`ssm::kernels::scan_update`
+    /// writes the discretization factors here under `Kernel::Simd`).
+    pub escan: Vec<f32>,
+    /// Dense reference backend only: `A = −exp(A_log)` cached per layer
+    /// on the first step, so the libm exp per `(d, n)` element is paid
+    /// once per session instead of once per decoded token (the packed
+    /// backend precomputes `A` at compile time instead).  Constant-size,
+    /// like every other scratch field.
+    pub dense_a: Vec<Vec<f32>>,
+    /// Identity of the parameter buffer `dense_a` was built from (its
+    /// data pointer), so stepping the same session against a different
+    /// `FlatParams` rebuilds the cache instead of serving stale `A`.
+    pub dense_a_src: usize,
 }
 
 impl StepScratch {
@@ -63,6 +76,7 @@ impl StepScratch {
         self.delta.resize(di, 0.0);
         self.y.resize(di, 0.0);
         self.out.resize(dm, 0.0);
+        self.escan.resize(ds, 0.0);
     }
 }
 

@@ -38,8 +38,9 @@ SUBCOMMANDS:
                              step  = stateful step decode vs full-recompute
                                      generation (engine prefill/step path)
       --dtype f32            packed value dtype: f32 | f16 | i8
-      --kernel simd          row kernels: simd (lane-chunked + AVX2/FMA)
-                             | scalar (the reference walk) — A/B either
+      --kernel simd          row + scan kernels: simd (lane-chunked +
+                             AVX2/FMA matvecs, vectorized-exp scan)
+                             | scalar (the reference walks) — A/B either
       --batch 4  --len 128   batch size and context length
       --budget-ms 800        wall-clock budget per measurement
       --save PATH            compile a pruned packed model (--sparsity,
@@ -56,7 +57,7 @@ SUBCOMMANDS:
       --temp 0.0             0 = greedy; >0 = temperature sampling
       --sparsity 0.5         magnitude-prune level before packing
       --dtype f32            packed value dtype: f32 | f16 | i8
-      --kernel simd          row kernels: simd | scalar
+      --kernel simd          row + scan kernels: simd | scalar
       --seed 7               RNG seed (prompts + sampling)
   help                       this text
 
@@ -326,7 +327,7 @@ fn generate(args: &Args) -> Result<()> {
     let vocab = model.meta.vocab;
     for _ in 0..requests {
         let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(vocab) as i32).collect();
-        sched.submit(prompt, new);
+        sched.submit(prompt, new)?;
     }
 
     let sw = sparsessm::util::Stopwatch::new();

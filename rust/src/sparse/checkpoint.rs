@@ -21,6 +21,7 @@
 //! `from_parts` (offset monotonicity, popcount agreement, index bounds),
 //! so a corrupt file fails with an error instead of a bad model.
 
+use super::compile::scan_active_states;
 use super::values::{Dtype, I8_GROUP, ValueStore};
 use super::{
     BcsrMatrix, BitmaskMatrix, CsrMatrix, DenseMatrix, Kernel, NmMatrix, Packed, SparseLayer,
@@ -409,18 +410,36 @@ impl SparseModel {
         ensure!(n_layers <= 1 << 20, "implausible layer count {n_layers}");
         let mut layers = Vec::with_capacity(n_layers);
         for li in 0..n_layers {
+            // Field-by-field locals: the reader is strictly sequential,
+            // and the scan plan is derived (not serialized) from the
+            // x_proj/A_log planes exactly as `compile` derives it, so
+            // save/load roundtrips compare equal.
+            let norm = r.f32s()?;
+            let in_proj = read_packed(&mut r)?;
+            let conv_w = read_csr(&mut r)?;
+            let conv_b = r.f32s()?;
+            let x_proj = read_packed(&mut r)?;
+            let dt_proj = read_packed(&mut r)?;
+            let dt_b = r.f32s()?;
+            let a_log = read_packed(&mut r)?;
+            let a = r.f32s()?;
+            let d = r.f32s()?;
+            let out_proj = read_packed(&mut r)?;
+            let scan_active =
+                scan_active_states(&x_proj, &a_log, meta.dt_rank, meta.d_state, meta.d_inner);
             let layer = SparseLayer {
-                norm: r.f32s()?,
-                in_proj: read_packed(&mut r)?,
-                conv_w: read_csr(&mut r)?,
-                conv_b: r.f32s()?,
-                x_proj: read_packed(&mut r)?,
-                dt_proj: read_packed(&mut r)?,
-                dt_b: r.f32s()?,
-                a_log: read_packed(&mut r)?,
-                a: r.f32s()?,
-                d: r.f32s()?,
-                out_proj: read_packed(&mut r)?,
+                norm,
+                in_proj,
+                conv_w,
+                conv_b,
+                x_proj,
+                dt_proj,
+                dt_b,
+                a_log,
+                a,
+                d,
+                out_proj,
+                scan_active,
             };
             ensure!(
                 layer.conv_w.dtype() == Dtype::F32,

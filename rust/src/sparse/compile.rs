@@ -104,6 +104,64 @@ pub struct SparseLayer {
     pub d: Vec<f32>,
     /// `[d_model, d_inner]`
     pub out_proj: Packed,
+    /// Scan plan for structured `d_state` pruning: `Some(active)` lists
+    /// the state columns the scan must visit when at least one column
+    /// is structurally dead — its `A_log` column **and** both its B and
+    /// C rows of `x_proj` decode to exact zeros — so skipping it cannot
+    /// change the output (B ≡ 0 keeps `h` at its zero init, C ≡ 0 mutes
+    /// it in `y`).  Derived from the packed planes
+    /// ([`scan_active_states`]) at compile **and** checkpoint-load time,
+    /// so save/load roundtrips stay equal; `None` = no skippable column
+    /// (the fast path).
+    pub scan_active: Option<Vec<u32>>,
+}
+
+impl SparseLayer {
+    /// The scan's active-column list, in the form
+    /// [`crate::ssm::selective_scan_with_state_plan`] consumes.
+    #[inline]
+    pub fn scan_plan(&self) -> Option<&[u32]> {
+        self.scan_active.as_deref()
+    }
+}
+
+/// Derive the structured-`d_state` scan plan from packed planes: state
+/// column `k` is skippable iff the decoded `A_log` column `k` and the
+/// decoded `x_proj` output rows `dt_rank + k` (B) and `dt_rank + d_state
+/// + k` (C) are all exact zeros — the signature structured d_state
+/// pruning leaves behind.  Working off the *decoded* planes keeps the
+/// decision identical between `compile` and checkpoint `load` for every
+/// value dtype (quantized planes never disturb exact zeros, and a value
+/// a dtype rounds to zero is zero as served).  Returns `None` when
+/// nothing is skippable or the plane shapes are not the expected ones.
+pub(crate) fn scan_active_states(
+    x_proj: &Packed,
+    a_log: &Packed,
+    dr: usize,
+    ds: usize,
+    di: usize,
+) -> Option<Vec<u32>> {
+    if ds == 0
+        || x_proj.rows() != dr + 2 * ds
+        || x_proj.cols() != di
+        || a_log.rows() != di
+        || a_log.cols() != ds
+    {
+        return None;
+    }
+    let xp = x_proj.to_dense(); // [dr + 2ds, di]
+    let al = a_log.to_dense(); // [di, ds]
+    let row_zero = |r: usize| xp[r * di..(r + 1) * di].iter().all(|&v| v == 0.0);
+    let col_zero = |k: usize| (0..di).all(|dd| al[dd * ds + k] == 0.0);
+    let active: Vec<u32> = (0..ds)
+        .filter(|&k| !(row_zero(dr + k) && row_zero(dr + ds + k) && col_zero(k)))
+        .map(|k| k as u32)
+        .collect();
+    if active.len() == ds {
+        None
+    } else {
+        Some(active)
+    }
 }
 
 /// A compiled, packed model ready for the native decode path.
@@ -145,18 +203,22 @@ impl SparseModel {
         for l in 0..meta.n_layer {
             let v = |m: &str| params.view(&format!("layers.{l}.{m}"));
             let a_log_w = v("A_log")?;
+            let x_proj = policy.pack(&transpose(v("x_proj")?, di, dr + 2 * ds), dr + 2 * ds, di);
+            let a_log = policy.pack(a_log_w, di, ds);
+            let scan_active = scan_active_states(&x_proj, &a_log, dr, ds, di);
             layers.push(SparseLayer {
                 norm: v("norm")?.to_vec(),
                 in_proj: policy.pack(&transpose(v("in_proj")?, dm, 2 * di), 2 * di, dm),
                 conv_w: CsrMatrix::from_dense(v("conv1d_w")?, di, dc),
                 conv_b: v("conv1d_b")?.to_vec(),
-                x_proj: policy.pack(&transpose(v("x_proj")?, di, dr + 2 * ds), dr + 2 * ds, di),
+                x_proj,
                 dt_proj: policy.pack(&transpose(v("dt_proj_w")?, dr, di), di, dr),
                 dt_b: v("dt_proj_b")?.to_vec(),
-                a_log: policy.pack(a_log_w, di, ds),
+                a_log,
                 a: a_log_w.iter().map(|&x| -x.exp()).collect(),
                 d: v("D")?.to_vec(),
                 out_proj: policy.pack(&transpose(v("out_proj")?, di, dm), dm, di),
+                scan_active,
             });
         }
         Ok(SparseModel {
@@ -378,6 +440,41 @@ mod tests {
         let a = p.view("layers.0.A_log").unwrap();
         let mask = Mask { prune: a.iter().map(|&v| v == 0.0).collect() };
         assert!(semistructured::satisfies_nm(&mask, 2, 4));
+    }
+
+    #[test]
+    fn structured_d_state_columns_yield_a_scan_plan() {
+        let mut p = toy_flat_params_random(4, 10);
+        // toy dims: di=8, ds=4, dr=3.  Structurally prune state column 2
+        // of layer 0: zero A_log[:, 2] plus the x_proj storage columns
+        // that produce B_2 and C_2.
+        let (di, ds, dr) = (8usize, 4usize, 3usize);
+        let width = dr + 2 * ds;
+        {
+            let a = p.view_mut("layers.0.A_log").unwrap();
+            for d in 0..di {
+                a[d * ds + 2] = 0.0;
+            }
+        }
+        {
+            let w = p.view_mut("layers.0.x_proj").unwrap(); // storage [di, width]
+            for d in 0..di {
+                w[d * width + dr + 2] = 0.0;
+                w[d * width + dr + ds + 2] = 0.0;
+            }
+        }
+        let m = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        assert_eq!(m.layers[0].scan_plan(), Some(&[0u32, 1, 3][..]));
+        assert_eq!(m.layers[1].scan_plan(), None, "untouched layer must have no plan");
+        // A_log zeros alone (masked semantics: A = −1 decays) must NOT
+        // trigger skipping — B/C rows have to be dead too.
+        let mut q = toy_flat_params_random(4, 11);
+        let a = q.view_mut("layers.0.A_log").unwrap();
+        for d in 0..di {
+            a[d * ds + 1] = 0.0;
+        }
+        let mq = SparseModel::compile(&q, &PackPolicy::auto()).unwrap();
+        assert_eq!(mq.layers[0].scan_plan(), None);
     }
 
     #[test]

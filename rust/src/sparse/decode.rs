@@ -10,24 +10,34 @@
 //!       → rmsnorm → tied head
 //! ```
 //!
-//! (* = sparsity-aware matmul/conv, at any value dtype.)  The recurrence
-//! itself stays dense over `d_state` — masked `A_log` zeros decay states
-//! (`A = -e⁰ = -1`) rather than skip them, matching the paper's masked
-//! semantics, so the wall-clock win comes from the projections, which
-//! dominate FLOPs.
+//! (* = sparsity-aware matmul/conv, at any value dtype.)  The layer body
+//! runs as one fused pass ([`fused_layer_forward`], DESIGN.md §13):
+//! row-range matmuls drop every projection segment (x_in/res, δ_r/B/C)
+//! straight into its scan-ready buffer instead of materializing wide
+//! outputs and de-interleaving them (that path survives as
+//! [`forward_logits_unfused`], the A/B reference).
+//!
+//! The recurrence stays dense over `d_state` under *masked* pruning —
+//! masked `A_log` zeros decay states (`A = -e⁰ = -1`) rather than skip
+//! them, matching the paper's masked semantics.  Only *structurally*
+//! dead state columns (zero `A_log` column **and** zero B/C rows, the
+//! compile-derived `scan_active` plan) are skipped in the scan, which
+//! is exact.
 
-use super::compile::{apply_nm_along_input, magnitude_prune_all, PackPolicy, SparseModel};
+use super::compile::{
+    apply_nm_along_input, magnitude_prune_all, PackPolicy, SparseLayer, SparseModel,
+};
 use super::values::Dtype;
 use super::CsrMatrix;
 use super::{Format, Kernel, Packed};
 use crate::benchx::{self, BenchResult};
 use crate::model::toy::{custom_flat_params_random, m370_dims_meta};
-use crate::model::FlatParams;
+use crate::model::{FlatParams, ModelMeta};
 use crate::pruning::magnitude;
 use crate::rngx::Pcg;
-use crate::ssm::{selective_scan, SsmInputs};
+use crate::ssm::{selective_scan_k, selective_scan_with_state_plan, SsmInputs};
 use crate::util::json::{self, Json};
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::path::Path;
 
 /// The shared host-only bench model: random weights at real m370 widths,
@@ -113,29 +123,179 @@ pub(crate) fn conv1d_causal_silu(
     out
 }
 
+/// Conv-ring + scan-state capture destinations for one layer of a
+/// stateful prefill (`bt` must be 1): the engine hands its per-session
+/// state buffers in here so [`fused_layer_forward`] fills them without
+/// `decode` depending on engine types.
+pub(crate) struct ScanHandoff<'a> {
+    /// Receives the scan's final hidden state `[d_inner · d_state]`.
+    pub h: &'a mut Vec<f32>,
+    /// Conv ring buffer `[(d_conv − 1) · d_inner]`; the slot for
+    /// sequence position `p` is `p % (d_conv − 1)`.
+    pub conv: &'a mut [f32],
+}
+
+/// Materialize the embedding rows for `tokens` into a fresh residual
+/// stream `[t, d_model]`, rejecting out-of-vocab (or negative) tokens
+/// with an error instead of a panic — a bad request must not take down
+/// a serving process.
+pub(crate) fn embed_tokens(model: &SparseModel, tokens: &[i32]) -> Result<Vec<f32>> {
+    let dm = model.meta.d_model;
+    let mut x = vec![0.0f32; tokens.len() * dm];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let v = usize::try_from(tok).ok().filter(|&v| v < model.meta.vocab).ok_or_else(|| {
+            anyhow::anyhow!("token {tok} at position {i} out of vocab {}", model.meta.vocab)
+        })?;
+        x[i * dm..(i + 1) * dm].copy_from_slice(model.embed_row(v));
+    }
+    Ok(x)
+}
+
+/// One fused layer pass over the residual stream `x[t, d_model]`
+/// (`t = bt·l`), updated in place:
+///
+/// ```text
+/// rmsnorm → in_proj (row-range split: x_in | res) → conv+SiLU
+///         → x_proj (row-range split: δ_r | B | C, scan-ready)
+///         → dt_proj → softplus → scan (structured-d_state plan)
+///         → SiLU gate → out_proj → +residual
+/// ```
+///
+/// The row-range matmuls ([`Packed::matmul_rows_into_k`]) write every
+/// projection segment straight into its own contiguous buffer, so the
+/// materialize-then-de-interleave copy loops of the pre-fusion path
+/// (kept as [`forward_logits_unfused`]) disappear, and B/C land exactly
+/// in the `[bt, l, N]` layout the scan consumes.  Shared by the oracle
+/// [`forward_logits`] and the engine's batched prefill; `handoff`
+/// additionally captures the conv-ring tail and the scan's final state
+/// for the prefill→step transition.
+pub(crate) fn fused_layer_forward(
+    layer: &SparseLayer,
+    meta: &ModelMeta,
+    kernel: Kernel,
+    x: &mut [f32],
+    bt: usize,
+    l: usize,
+    mut handoff: Option<ScanHandoff<'_>>,
+) {
+    let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
+    let t = bt * l;
+    debug_assert_eq!(x.len(), t * dm);
+
+    let xn = rmsnorm(x, &layer.norm, dm);
+    let mut x_in = vec![0.0f32; t * di];
+    let mut res = vec![0.0f32; t * di];
+    layer.in_proj.matmul_rows_into_k(&xn, t, 0, di, &mut x_in, kernel);
+    layer.in_proj.matmul_rows_into_k(&xn, t, di, 2 * di, &mut res, kernel);
+
+    // Stash the conv window tail before the conv consumes x_in:
+    // positions l−(K−1)..l−1 land in their ring slots so the first
+    // engine step sees them.
+    if let Some(h) = handoff.as_mut() {
+        debug_assert_eq!(bt, 1, "state capture is single-sequence");
+        let k = layer.conv_w.cols;
+        if k > 1 {
+            for tt in l.saturating_sub(k - 1)..l {
+                h.conv[(tt % (k - 1)) * di..][..di]
+                    .copy_from_slice(&x_in[tt * di..(tt + 1) * di]);
+            }
+        }
+    }
+
+    let u = conv1d_causal_silu(&layer.conv_w, &layer.conv_b, &x_in, bt, l, di);
+
+    let mut delta_r = vec![0.0f32; t * dr];
+    let mut bmat = vec![0.0f32; t * ds];
+    let mut cmat = vec![0.0f32; t * ds];
+    layer.x_proj.matmul_rows_into_k(&u, t, 0, dr, &mut delta_r, kernel);
+    layer.x_proj.matmul_rows_into_k(&u, t, dr, dr + ds, &mut bmat, kernel);
+    layer.x_proj.matmul_rows_into_k(&u, t, dr + ds, dr + 2 * ds, &mut cmat, kernel);
+
+    let mut delta = layer.dt_proj.matmul_k(&delta_r, t, kernel); // [t, di]
+    for row in delta.chunks_exact_mut(di) {
+        for (dv, &bv) in row.iter_mut().zip(&layer.dt_b) {
+            *dv = softplus(*dv + bv);
+        }
+    }
+
+    let (y, h_final) = selective_scan_with_state_plan(
+        &SsmInputs {
+            a: &layer.a,
+            delta: &delta,
+            b: &bmat,
+            c: &cmat,
+            x: &u,
+            dp: &layer.d,
+            dims: (bt, l, di, ds),
+        },
+        None,
+        kernel,
+        layer.scan_plan(),
+    );
+    if let Some(h) = handoff {
+        *h.h = h_final; // [1·di·ds]
+    }
+
+    let mut gated = y;
+    for (g, &rv) in gated.iter_mut().zip(&res) {
+        *g *= silu(rv);
+    }
+    let mut out = vec![0.0f32; t * dm];
+    layer.out_proj.matmul_into_k(&gated, t, &mut out, kernel); // [t, dm]
+    for (xv, &ov) in x.iter_mut().zip(&out) {
+        *xv += ov;
+    }
+}
+
 /// Full forward over `tokens[bt, l]`, returning logits `[bt, l, vocab]`.
-/// Mirrors `model.py::forward_logits` (same recurrence, same tied head).
+/// Mirrors `model.py::forward_logits` (same recurrence, same tied head),
+/// running the fused single-pass layer forward.
 ///
 /// This whole-sequence recompute is the **reference oracle**: serving
 /// goes through the stateful `engine` (prefill/step sessions, O(1) per
 /// decoded token), and `tests/prop_engine.rs` pins the engine's
 /// prefill+step logits to this function.  It also remains the
 /// full-recompute baseline the step-decode benches are measured against,
-/// and `tests/prop_sparse.rs` pins packed-vs-dense compilation through it.
-pub fn forward_logits(model: &SparseModel, tokens: &[i32], bt: usize, l: usize) -> Vec<f32> {
+/// and `tests/prop_sparse.rs` pins packed-vs-dense compilation through
+/// it.  Out-of-vocab tokens are an error, not a panic.
+pub fn forward_logits(
+    model: &SparseModel,
+    tokens: &[i32],
+    bt: usize,
+    l: usize,
+) -> Result<Vec<f32>> {
+    let meta = &model.meta;
+    let dm = meta.d_model;
+    let kernel = model.kernel;
+    let t = bt * l;
+    ensure!(tokens.len() == t, "got {} tokens for B={bt} L={l}", tokens.len());
+
+    let mut x = embed_tokens(model, tokens)?;
+    for layer in &model.layers {
+        fused_layer_forward(layer, meta, kernel, &mut x, bt, l, None);
+    }
+    let xn = rmsnorm(&x, &model.norm_f, dm);
+    Ok(model.head.matmul_k(&xn, t, kernel)) // [t, vocab]
+}
+
+/// The pre-fusion whole-sequence forward, retained verbatim as the A/B
+/// reference for [`forward_logits`]: full-width matmuls followed by
+/// explicit de-interleave copies, and a plan-less scan.
+/// `tests/prop_sparse.rs` pins fused == unfused across formats × dtypes
+/// × kernels.
+pub fn forward_logits_unfused(
+    model: &SparseModel,
+    tokens: &[i32],
+    bt: usize,
+    l: usize,
+) -> Result<Vec<f32>> {
     let meta = &model.meta;
     let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
     let kernel = model.kernel;
     let t = bt * l;
-    assert_eq!(tokens.len(), t);
+    ensure!(tokens.len() == t, "got {} tokens for B={bt} L={l}", tokens.len());
 
-    let mut x = vec![0.0f32; t * dm];
-    for (i, &tok) in tokens.iter().enumerate() {
-        let v = tok as usize;
-        assert!(v < meta.vocab, "token {tok} out of vocab {}", meta.vocab);
-        x[i * dm..(i + 1) * dm].copy_from_slice(model.embed_row(v));
-    }
-
+    let mut x = embed_tokens(model, tokens)?;
     for layer in &model.layers {
         let xn = rmsnorm(&x, &layer.norm, dm);
         let xr = layer.in_proj.matmul_k(&xn, t, kernel); // [t, 2di] = [x_in | res]
@@ -168,15 +328,18 @@ pub fn forward_logits(model: &SparseModel, tokens: &[i32], bt: usize, l: usize) 
             }
         }
 
-        let y = selective_scan(&SsmInputs {
-            a: &layer.a,
-            delta: &delta,
-            b: &bmat,
-            c: &cmat,
-            x: &u,
-            dp: &layer.d,
-            dims: (bt, l, di, ds),
-        });
+        let y = selective_scan_k(
+            &SsmInputs {
+                a: &layer.a,
+                delta: &delta,
+                b: &bmat,
+                c: &cmat,
+                x: &u,
+                dp: &layer.d,
+                dims: (bt, l, di, ds),
+            },
+            kernel,
+        );
 
         let mut gated = y;
         for (g, &rv) in gated.iter_mut().zip(&res) {
@@ -189,7 +352,7 @@ pub fn forward_logits(model: &SparseModel, tokens: &[i32], bt: usize, l: usize) 
     }
 
     let xn = rmsnorm(&x, &model.norm_f, dm);
-    model.head.matmul_k(&xn, t, kernel) // [t, vocab]
+    Ok(model.head.matmul_k(&xn, t, kernel)) // [t, vocab]
 }
 
 /// Time the decode path on random tokens; returns the bench row and the
@@ -205,7 +368,7 @@ pub fn decode_throughput(
     let tokens: Vec<i32> = (0..bt * l).map(|_| rng.below(model.meta.vocab) as i32).collect();
     let name = format!("decode {} B={bt} L={l} [{}]", model.meta.name, model.format_summary());
     let r = benchx::bench_for(&name, budget_ms, || {
-        benchx::black_box(forward_logits(model, &tokens, bt, l));
+        benchx::black_box(forward_logits(model, &tokens, bt, l).expect("bench tokens in vocab"));
     });
     let tps = (bt * l) as f64 / (r.p50_ms / 1e3);
     (r, tps)
@@ -431,6 +594,104 @@ pub fn kernel_sweep(t: usize, budget_ms: f64) -> Vec<KernelRow> {
     out
 }
 
+/// One row of the scan-kernel A/B grid: selective-scan throughput for
+/// one shape × kernel (plus a structured-d_state skip variant).
+pub struct ScanSpeedRow {
+    pub shape: String,
+    pub kernel: Kernel,
+    /// Scanned tokens (B·L per invocation) per second.
+    pub tokens_per_sec: f64,
+    /// Throughput relative to the scalar row of the same shape.
+    pub rel_scalar: f64,
+    pub bench: BenchResult,
+}
+
+/// The `scan_speed` sweep: scalar-vs-SIMD selective-scan throughput at
+/// m370 dims on a prefill-shaped whole-sequence scan and a batch-major
+/// step-decode shape (many sessions × one token), plus a SIMD row with
+/// half the state columns skipped (the structured-d_state plan).
+/// Shared by the `scan_speed` experiment and the `scan_speed` bench
+/// group; both fold the rows into `BENCH_kernels.json`
+/// ([`update_bench_kernels_json`]).  Acceptance: SIMD ≥ 1.5× scalar.
+pub fn scan_sweep(budget_ms: f64) -> Vec<ScanSpeedRow> {
+    let meta = m370_dims_meta();
+    let (di, ds) = (meta.d_inner, meta.d_state);
+    let mut rng = Pcg::seeded(23);
+    let mut out = Vec::new();
+    for (label, b, l) in [("prefill", 4usize, 128usize), ("step-batch", 16, 1)] {
+        let a: Vec<f32> = (0..di * ds).map(|_| -(0.1 + rng.uniform()) as f32).collect();
+        let delta: Vec<f32> =
+            (0..b * l * di).map(|_| (0.01 + 0.2 * rng.uniform()) as f32).collect();
+        let bm: Vec<f32> = (0..b * l * ds).map(|_| rng.normal() as f32).collect();
+        let cm: Vec<f32> = (0..b * l * ds).map(|_| rng.normal() as f32).collect();
+        let xv: Vec<f32> = (0..b * l * di).map(|_| rng.normal() as f32).collect();
+        let dp: Vec<f32> = (0..di).map(|_| rng.normal() as f32).collect();
+        let inp = SsmInputs {
+            a: &a,
+            delta: &delta,
+            b: &bm,
+            c: &cm,
+            x: &xv,
+            dp: &dp,
+            dims: (b, l, di, ds),
+        };
+        let mut scalar_tps = 0.0f64;
+        for kernel in Kernel::ALL {
+            let name = format!("scan {label} B={b} L={l} D={di} N={ds} {}", kernel.name());
+            let bench = benchx::bench_for(&name, budget_ms, || {
+                benchx::black_box(selective_scan_k(&inp, kernel));
+            });
+            let tps = (b * l) as f64 / (bench.p50_ms / 1e3);
+            if kernel == Kernel::Scalar {
+                scalar_tps = tps;
+            }
+            out.push(ScanSpeedRow {
+                shape: label.to_string(),
+                kernel,
+                tokens_per_sec: tps,
+                rel_scalar: tps / scalar_tps,
+                bench,
+            });
+        }
+        // Structured d_state pruning at 50%: the plan visits half the
+        // columns; measured against the same shape's scalar baseline
+        // (timing only — exactness of skipping is property-tested on
+        // plans whose pruned B/C rows are genuinely zero).
+        let active: Vec<u32> = (0..(ds / 2) as u32).collect();
+        let name = format!("scan {label}+skip50 B={b} L={l} D={di} N={ds} simd");
+        let bench = benchx::bench_for(&name, budget_ms, || {
+            benchx::black_box(selective_scan_with_state_plan(
+                &inp,
+                None,
+                Kernel::Simd,
+                Some(&active),
+            ));
+        });
+        let tps = (b * l) as f64 / (bench.p50_ms / 1e3);
+        out.push(ScanSpeedRow {
+            shape: format!("{label}+skip50"),
+            kernel: Kernel::Simd,
+            tokens_per_sec: tps,
+            rel_scalar: tps / scalar_tps,
+            bench,
+        });
+    }
+    out
+}
+
+/// `scan_speed` rows as JSON (tokens/sec per shape × kernel).
+pub fn scan_rows_json(rows: &[ScanSpeedRow]) -> Json {
+    json::arr(rows.iter().map(|r| {
+        json::obj(vec![
+            ("shape", json::s(&r.shape)),
+            ("kernel", json::s(r.kernel.name())),
+            ("tokens_per_sec", json::num(r.tokens_per_sec)),
+            ("rel_scalar", json::num(r.rel_scalar)),
+            ("p50_ms", json::num(r.bench.p50_ms)),
+        ])
+    }))
+}
+
 /// File name of the machine-readable kernel/quant perf log.
 pub const BENCH_KERNELS_JSON: &str = "BENCH_kernels.json";
 
@@ -515,9 +776,56 @@ mod tests {
         let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
         let (bt, l) = (2usize, 6usize);
         let tokens: Vec<i32> = (0..bt * l).map(|i| (i % 16) as i32).collect();
-        let logits = forward_logits(&model, &tokens, bt, l);
+        let logits = forward_logits(&model, &tokens, bt, l).unwrap();
         assert_eq!(logits.len(), bt * l * 16);
         assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn out_of_vocab_token_is_an_error_not_a_panic() {
+        let p = toy_flat_params_random(4, 9);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        for bad in [16i32, 999, -1] {
+            let err = forward_logits(&model, &[1, bad, 2], 1, 3);
+            assert!(err.is_err(), "token {bad} should be rejected");
+            assert!(err.unwrap_err().to_string().contains("vocab"));
+            let err = forward_logits_unfused(&model, &[bad], 1, 1);
+            assert!(err.is_err(), "token {bad} should be rejected (unfused)");
+        }
+        // Token-count mismatch is an error too.
+        assert!(forward_logits(&model, &[1, 2], 1, 3).is_err());
+    }
+
+    #[test]
+    fn fused_forward_matches_unfused_reference() {
+        let mut p = toy_flat_params_random(4, 12);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        let (bt, l) = (2usize, 6usize);
+        let tokens: Vec<i32> = (0..bt * l).map(|i| ((i * 5) % 16) as i32).collect();
+        for kernel in Kernel::ALL {
+            let model =
+                SparseModel::compile(&p, &PackPolicy::auto().with_kernel(kernel)).unwrap();
+            let fused = forward_logits(&model, &tokens, bt, l).unwrap();
+            let reference = forward_logits_unfused(&model, &tokens, bt, l).unwrap();
+            for (i, (u, v)) in fused.iter().zip(&reference).enumerate() {
+                let tol = 1e-4 * v.abs().max(1.0);
+                assert!((u - v).abs() <= tol, "{kernel:?} logit {i}: {u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn scan_sweep_covers_the_grid() {
+        // Tiny budget: correctness of the grid, not speed.
+        let rows = scan_sweep(0.5);
+        assert_eq!(rows.len(), 2 * 3); // shapes × (scalar, simd, simd+skip)
+        for group in rows.chunks_exact(3) {
+            assert_eq!(group[0].kernel, Kernel::Scalar);
+            assert!((group[0].rel_scalar - 1.0).abs() < 1e-12);
+            assert_eq!(group[1].kernel, Kernel::Simd);
+            assert!(group[2].shape.contains("skip50"), "{}", group[2].shape);
+            assert!(group.iter().all(|r| r.tokens_per_sec > 0.0));
+        }
     }
 
     #[test]
@@ -529,7 +837,7 @@ mod tests {
         let seq: Vec<i32> = vec![3, 1, 4, 1, 5];
         let mut tokens = seq.clone();
         tokens.extend_from_slice(&seq);
-        let logits = forward_logits(&model, &tokens, 2, l);
+        let logits = forward_logits(&model, &tokens, 2, l).unwrap();
         let (a, b) = logits.split_at(l * 16);
         assert_eq!(a, b);
     }

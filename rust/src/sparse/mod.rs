@@ -473,18 +473,48 @@ impl Packed {
 
     /// Allocation-free batched kernel into a caller buffer.
     pub fn matmul_into_k(&self, x: &[f32], t: usize, y: &mut [f32], kernel: Kernel) {
+        self.matmul_rows_into_k(x, t, 0, self.rows(), y, kernel);
+    }
+
+    /// Batched kernel restricted to output rows `r0..r1`, written
+    /// row-block compact: `y[ti * (r1-r0) + (r - r0)]`.  This is how the
+    /// fused layer forward splits `in_proj` into `[x_in | res]` and
+    /// `x_proj` into `[δ_r | B | C]` **without** materialize-then-copy
+    /// de-interleave passes: each segment lands scan-ready in its own
+    /// contiguous buffer.  Row results are panel-width-independent (the
+    /// dense-f32 panel kernel guarantees it; every other format computes
+    /// rows independently), so a row-range call is bit-exact with the
+    /// same rows of a full `matmul_into_k`.
+    pub fn matmul_rows_into_k(
+        &self,
+        x: &[f32],
+        t: usize,
+        r0: usize,
+        r1: usize,
+        y: &mut [f32],
+        kernel: Kernel,
+    ) {
         let (rows, cols) = (self.rows(), self.cols());
+        assert!(r0 <= r1 && r1 <= rows, "row range {r0}..{r1} out of {rows}");
+        let width = r1 - r0;
         assert_eq!(x.len(), t * cols);
-        assert_eq!(y.len(), t * rows);
-        if t * self.stored().max(1) < PARALLEL_MIN_WORK {
+        assert_eq!(y.len(), t * width);
+        if width == 0 {
+            return;
+        }
+        // Work estimate: the full matrix's stored slots scaled to the
+        // requested row range (a heuristic — parallel and serial paths
+        // produce identical bits either way).
+        let work = t * (self.stored() * width / rows.max(1)).max(1);
+        if work < PARALLEL_MIN_WORK {
             let mut tmp = vec![0.0f32; kernels::PANEL * t];
-            let mut r = 0usize;
-            while r < rows {
-                let p = kernels::PANEL.min(rows - r);
+            let mut r = r0;
+            while r < r1 {
+                let p = kernels::PANEL.min(r1 - r);
                 self.rows_dot_tokens(r, p, x, t, &mut tmp[..p * t], kernel);
                 for pi in 0..p {
                     for (ti, &v) in tmp[pi * t..(pi + 1) * t].iter().enumerate() {
-                        y[ti * rows + r + pi] = v;
+                        y[ti * width + (r - r0) + pi] = v;
                     }
                 }
                 r += p;
@@ -493,8 +523,8 @@ impl Packed {
         }
         // ROW_STRIPE is a multiple of PANEL, so striped panels land on
         // the same boundaries the serial path (and matvec) use.
-        let stripe = ROW_STRIPE.min(rows).max(1);
-        let n_stripes = rows.div_ceil(stripe);
+        let stripe = ROW_STRIPE.min(width).max(1);
+        let n_stripes = width.div_ceil(stripe);
 
         // Each stripe job writes a disjoint set of y columns.
         struct YPtr(*mut f32);
@@ -504,18 +534,18 @@ impl Packed {
 
         threadx::parallel_map(n_stripes, |s| {
             let yp = &yp;
-            let r0 = s * stripe;
-            let r1 = (r0 + stripe).min(rows);
+            let s0 = r0 + s * stripe;
+            let s1 = (s0 + stripe).min(r1);
             let mut tmp = vec![0.0f32; kernels::PANEL * t];
-            let mut r = r0;
-            while r < r1 {
-                let p = kernels::PANEL.min(r1 - r);
+            let mut r = s0;
+            while r < s1 {
+                let p = kernels::PANEL.min(s1 - r);
                 self.rows_dot_tokens(r, p, x, t, &mut tmp[..p * t], kernel);
                 for pi in 0..p {
                     for (ti, &v) in tmp[pi * t..(pi + 1) * t].iter().enumerate() {
                         // SAFETY: stripe jobs own disjoint r ranges; each
                         // (ti, r) slot is written exactly once.
-                        unsafe { *yp.0.add(ti * rows + r + pi) = v };
+                        unsafe { *yp.0.add(ti * width + (r - r0) + pi) = v };
                     }
                 }
                 r += p;
@@ -633,6 +663,70 @@ mod tests {
                 for (u, v) in simd.iter().zip(&scalar) {
                     let tol = 1e-4 * v.abs().max(1.0);
                     assert!((u - v).abs() <= tol, "{fmt:?} @{sparsity}: {u} vs {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_range_matmul_matches_full_matmul_bitwise() {
+        // The fused layer forward splits projections into row-range
+        // calls; each range must reproduce the same rows of the full
+        // matmul bit-exactly (panel-width independence).  27 rows / 53
+        // cols force ragged panels and lane tails; the 11..27 range
+        // starts off every panel boundary.
+        let mut rng = Pcg::seeded(9);
+        let (r, c, t) = (27usize, 53usize, 5usize);
+        for sparsity in [0.0, 0.5, 0.9] {
+            let w = masked_random(&mut rng, r, c, sparsity);
+            let x: Vec<f32> = (0..t * c).map(|_| rng.normal() as f32).collect();
+            for fmt in [Format::Dense, Format::Csr, Format::Bitmask, Format::Bcsr] {
+                let p = Packed::pack_as(&w, r, c, fmt);
+                for kernel in Kernel::ALL {
+                    let full = p.matmul_k(&x, t, kernel);
+                    for (r0, r1) in [(0usize, r), (0, 11), (11, 27), (7, 9), (13, 13)] {
+                        let w0 = r1 - r0;
+                        let mut part = vec![0.0f32; t * w0];
+                        p.matmul_rows_into_k(&x, t, r0, r1, &mut part, kernel);
+                        for ti in 0..t {
+                            assert_eq!(
+                                &part[ti * w0..(ti + 1) * w0],
+                                &full[ti * r + r0..ti * r + r1],
+                                "{fmt:?}/{kernel:?} @{sparsity} rows {r0}..{r1} token {ti}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_range_matmul_parallel_path_matches_serial_matvecs() {
+        // Shapes large enough that t·stored crosses PARALLEL_MIN_WORK,
+        // so the striped branch — including its r0-rebased write
+        // offsets — is pinned bit-exactly against serial matvecs, for
+        // full and (panel-misaligned) sub ranges.
+        let mut rng = Pcg::seeded(10);
+        let (r, c, t) = (80usize, 64usize, 9usize);
+        let w: Vec<f32> = (0..r * c).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..t * c).map(|_| rng.normal() as f32).collect();
+        for fmt in [Format::Dense, Format::Bitmask] {
+            let p = Packed::pack_as(&w, r, c, fmt);
+            assert!(t * p.stored() >= PARALLEL_MIN_WORK, "shape must cross the threshold");
+            for kernel in Kernel::ALL {
+                for (r0, r1) in [(0usize, r), (16, 80), (4, 76)] {
+                    let width = r1 - r0;
+                    let mut part = vec![0.0f32; t * width];
+                    p.matmul_rows_into_k(&x, t, r0, r1, &mut part, kernel);
+                    for ti in 0..t {
+                        let yt = p.matvec_k(&x[ti * c..(ti + 1) * c], kernel);
+                        assert_eq!(
+                            &part[ti * width..(ti + 1) * width],
+                            &yt[r0..r1],
+                            "{fmt:?}/{kernel:?} rows {r0}..{r1} token {ti}"
+                        );
+                    }
                 }
             }
         }

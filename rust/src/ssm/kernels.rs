@@ -1,0 +1,360 @@
+//! Scan microkernels: the vectorized inner loop of the selective scan
+//! (DESIGN.md §13) — the scan-side counterpart of `sparse::kernels`.
+//!
+//! The scalar scan update pays a correctly-rounded libm `exp()` per
+//! `(channel, state)` element per token, which dominates the recurrence
+//! once the projections run SIMD matmuls.  The kernels here replace it
+//! with:
+//!
+//! 1. [`exp_approx`] — a bit-trick base-2 exponential (split `x·log₂e`
+//!    into integer + fraction, degree-6 polynomial for the fraction,
+//!    exponent-bit assembly for the integer).  Relative error ~3e-7
+//!    plus `|x|·ε` from the f32 argument scaling — orders below the
+//!    1e-4 scan tolerance for every argument the scan produces, and far
+//!    below the f16 / i8 value-plane noise already accepted on the
+//!    projections.
+//! 2. [`exp_dt_a`] — `out[k] = exp(dt · a[k])` over a whole state row:
+//!    a portable autovectorized path plus a runtime-detected AVX2+FMA
+//!    path on `x86_64` (mirroring `sparse::kernels::dot`).
+//! 3. [`scan_update`] — one `(token, channel)` recurrence step
+//!    `h ← e ⊙ h + δx·B, return h·C`, lane-accumulated over the state
+//!    dimension, with an optional active-column list that skips
+//!    structurally-pruned `d_state` columns outright.
+//!
+//! Kernel selection reuses [`Kernel`] from the sparse layer: `Scalar`
+//! keeps the original libm walk bit-for-bit as the reference, `Simd`
+//! runs the approximate-exp lane kernels.  Both the engine's step paths
+//! and the whole-sequence scan dispatch through [`scan_update`], so a
+//! solo step, a batched step and a prefill scan stay arithmetically
+//! identical for a given kernel choice.
+
+use crate::sparse::kernels::{fmadd, Kernel, LANES};
+
+/// 1.5 · 2²³ — adding then subtracting it rounds an f32 in (−2²², 2²²)
+/// to the nearest integer (ties to even) without a libm call, and the
+/// idiom autovectorizes.
+const ROUND_MAGIC: f32 = 12_582_912.0;
+
+/// Taylor coefficients of `e^r` (r ∈ [−ln2/2, ln2/2] after range
+/// reduction; the degree-6 tail bounds the relative error at ~2e-7).
+const C2: f32 = 0.5;
+const C3: f32 = 1.0 / 6.0;
+const C4: f32 = 1.0 / 24.0;
+const C5: f32 = 1.0 / 120.0;
+const C6: f32 = 1.0 / 720.0;
+
+#[inline(always)]
+fn exp_poly(r: f32) -> f32 {
+    let mut p = C6;
+    p = fmadd(p, r, C5);
+    p = fmadd(p, r, C4);
+    p = fmadd(p, r, C3);
+    p = fmadd(p, r, C2);
+    p = fmadd(p, r, 1.0);
+    fmadd(p, r, 1.0)
+}
+
+/// Approximate `e^x`: `2^(x·log₂e)` with the integer part assembled
+/// straight into the exponent bits and the fraction covered by
+/// [`exp_poly`].  Clamping to ±126 powers of two flushes arguments
+/// below ~−87 to a subnormal-free ~1e-38 (the scan multiplies decayed
+/// state by it, so the residue is invisible) and keeps the bit
+/// assembly in the normal range.
+#[inline(always)]
+pub fn exp_approx(x: f32) -> f32 {
+    let t = (x * std::f32::consts::LOG2_E).clamp(-126.0, 126.0);
+    let n = (t + ROUND_MAGIC) - ROUND_MAGIC;
+    let r = (t - n) * std::f32::consts::LN_2;
+    let bits = (((n as i32) + 127) << 23) as u32;
+    f32::from_bits(bits) * exp_poly(r)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! Explicit AVX2+FMA exponential row, compiled on every x86_64
+    //! build and entered only after a runtime feature check (default
+    //! builds target SSE2).
+
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Callers must have verified `avx2` and `fma` at runtime.
+    // The inner `unsafe` block keeps the body well-formed whether the
+    // crate edition treats intrinsic calls in an `unsafe fn` as already
+    // covered (2021) or not (2024).
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    #[allow(unused_unsafe)]
+    pub(super) unsafe fn exp_dt_a(dt: f32, a: &[f32], out: &mut [f32]) {
+        unsafe {
+            let n = a.len();
+            let scale = _mm256_set1_ps(dt * std::f32::consts::LOG2_E);
+            let lo = _mm256_set1_ps(-126.0);
+            let hi = _mm256_set1_ps(126.0);
+            let ln2 = _mm256_set1_ps(std::f32::consts::LN_2);
+            let one = _mm256_set1_ps(1.0);
+            let c2 = _mm256_set1_ps(super::C2);
+            let c3 = _mm256_set1_ps(super::C3);
+            let c4 = _mm256_set1_ps(super::C4);
+            let c5 = _mm256_set1_ps(super::C5);
+            let c6 = _mm256_set1_ps(super::C6);
+            let bias = _mm256_set1_epi32(127);
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let av = _mm256_loadu_ps(a.as_ptr().add(i));
+                let t = _mm256_max_ps(_mm256_min_ps(_mm256_mul_ps(av, scale), hi), lo);
+                let nf =
+                    _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(t);
+                let r = _mm256_mul_ps(_mm256_sub_ps(t, nf), ln2);
+                let mut p = _mm256_fmadd_ps(c6, r, c5);
+                p = _mm256_fmadd_ps(p, r, c4);
+                p = _mm256_fmadd_ps(p, r, c3);
+                p = _mm256_fmadd_ps(p, r, c2);
+                p = _mm256_fmadd_ps(p, r, one);
+                p = _mm256_fmadd_ps(p, r, one);
+                let pow2 = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+                    _mm256_cvtps_epi32(nf),
+                    bias,
+                )));
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(pow2, p));
+                i += 8;
+            }
+            while i < n {
+                *out.get_unchecked_mut(i) = super::exp_approx(dt * *a.get_unchecked(i));
+                i += 1;
+            }
+        }
+    }
+}
+
+/// `out[k] = exp(dt · a[k])` for a whole state row — the discretization
+/// factors one scan update consumes.  Runtime-dispatched AVX2+FMA on
+/// `x86_64`, a portable autovectorized loop elsewhere.
+#[inline]
+pub fn exp_dt_a(dt: f32, a: &[f32], out: &mut [f32]) {
+    // Hard assert: the AVX2 path writes `a.len()` slots through raw
+    // pointers, so a short `out` from a safe caller must never reach it
+    // (a debug_assert would compile out exactly where it matters).
+    assert!(out.len() >= a.len(), "exp_dt_a: out shorter than a");
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        // SAFETY: both required CPU features were verified at runtime.
+        unsafe { x86::exp_dt_a(dt, a, out) };
+        return;
+    }
+    for (o, &av) in out.iter_mut().zip(a) {
+        *o = exp_approx(dt * av);
+    }
+}
+
+/// Inputs of one `(token, channel)` scan update: the discretization
+/// step `dt`, the channel input `xt`, and the channel's A row / token's
+/// B and C rows over the state dimension.
+pub struct ScanStep<'a> {
+    pub dt: f32,
+    pub xt: f32,
+    pub a: &'a [f32],
+    pub b: &'a [f32],
+    pub c: &'a [f32],
+}
+
+/// One recurrence step `h ← exp(δA) ⊙ h + δx·B`, returning `h·C`, under
+/// an explicit kernel choice.  `ebuf` is caller scratch (≥ `d_state`
+/// long, only written under `Kernel::Simd`).  `active`, when present,
+/// lists the state columns to visit; the rest are skipped outright —
+/// exact whenever their B/C rows are structurally zero (the
+/// compile-side plan only marks such columns) — and their `h` slots are
+/// left untouched.
+///
+/// Every scan surface (whole-sequence scan, solo step, batched step)
+/// funnels through this function, so one kernel choice yields one
+/// arithmetic everywhere — which is what keeps batched decode
+/// bit-identical to solo decode.
+#[inline]
+pub fn scan_update(
+    kernel: Kernel,
+    step: &ScanStep<'_>,
+    hrow: &mut [f32],
+    ebuf: &mut [f32],
+    active: Option<&[u32]>,
+) -> f32 {
+    match (kernel, active) {
+        (Kernel::Scalar, None) => scan_update_scalar(step, hrow),
+        (Kernel::Simd, None) => scan_update_simd(step, hrow, ebuf),
+        (Kernel::Scalar, Some(act)) => scan_update_active(step, hrow, act, false),
+        (Kernel::Simd, Some(act)) => scan_update_active(step, hrow, act, true),
+    }
+}
+
+/// The original libm walk, kept bit-for-bit as the reference.
+fn scan_update_scalar(step: &ScanStep<'_>, hrow: &mut [f32]) -> f32 {
+    let dx = step.dt * step.xt;
+    let mut acc = 0.0f32;
+    for (((&av, &bv), &cv), h) in step.a.iter().zip(step.b).zip(step.c).zip(hrow.iter_mut()) {
+        let hv = (step.dt * av).exp() * *h + dx * bv;
+        *h = hv;
+        acc += hv * cv;
+    }
+    acc
+}
+
+/// Lane-accumulated update: one vectorized exponential row, then eight
+/// independent partial sums for `h·C` (pairwise-folded like
+/// `sparse::kernels::dot`), which turns the latency chain of the scalar
+/// walk into a throughput problem.
+fn scan_update_simd(step: &ScanStep<'_>, hrow: &mut [f32], ebuf: &mut [f32]) -> f32 {
+    let n = step.a.len();
+    exp_dt_a(step.dt, step.a, ebuf);
+    let dx = step.dt * step.xt;
+    let chunks = n / LANES;
+    let mut lanes = [0.0f32; LANES];
+    for ch in 0..chunks {
+        let base = ch * LANES;
+        let e = &ebuf[base..base + LANES];
+        let b = &step.b[base..base + LANES];
+        let c = &step.c[base..base + LANES];
+        let h = &mut hrow[base..base + LANES];
+        for j in 0..LANES {
+            let hv = fmadd(e[j], h[j], dx * b[j]);
+            h[j] = hv;
+            lanes[j] = fmadd(hv, c[j], lanes[j]);
+        }
+    }
+    let even = (lanes[0] + lanes[4]) + (lanes[1] + lanes[5]);
+    let odd = (lanes[2] + lanes[6]) + (lanes[3] + lanes[7]);
+    let mut acc = even + odd;
+    for k in chunks * LANES..n {
+        let hv = fmadd(ebuf[k], hrow[k], dx * step.b[k]);
+        hrow[k] = hv;
+        acc = fmadd(hv, step.c[k], acc);
+    }
+    acc
+}
+
+/// Update restricted to `active` state columns (structured `d_state`
+/// pruning): skipped columns cost nothing and keep their `h` slots.
+fn scan_update_active(step: &ScanStep<'_>, hrow: &mut [f32], active: &[u32], approx: bool) -> f32 {
+    let dx = step.dt * step.xt;
+    let mut acc = 0.0f32;
+    for &k in active {
+        let k = k as usize;
+        let e = if approx { exp_approx(step.dt * step.a[k]) } else { (step.dt * step.a[k]).exp() };
+        let hv = e * hrow[k] + dx * step.b[k];
+        hrow[k] = hv;
+        acc += hv * step.c[k];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg;
+
+    #[test]
+    fn exp_approx_tracks_libm_over_the_scan_range() {
+        // dt·A mostly lives in (−5, 0) in practice; sample far past it
+        // on both sides of zero, staying above the underflow clamp
+        // (below ~−87 both sides vanish — asserted separately).
+        let mut rng = Pcg::seeded(1);
+        for i in 0..4000 {
+            let x = if i % 4 == 0 {
+                -(rng.uniform() * 80.0) as f32
+            } else {
+                ((rng.uniform() - 0.9) * 12.0) as f32
+            };
+            let want = x.exp();
+            let got = exp_approx(x);
+            // Polynomial error ~3e-7 plus |x|·ε from rounding the base-2
+            // argument scaling (x·log₂e in f32).
+            let rel = 1e-6 + x.abs() * 2.4e-7;
+            let tol = rel * want.abs().max(f32::MIN_POSITIVE);
+            assert!((got - want).abs() <= tol, "x={x}: {got} vs {want}");
+        }
+        // Deep underflow decays to (effectively) zero, never blows up.
+        assert!(exp_approx(-1.0e4) < 1.0e-37);
+        assert!(exp_approx(-1.0e4) >= 0.0);
+    }
+
+    #[test]
+    fn exp_row_matches_scalar_helper() {
+        let mut rng = Pcg::seeded(2);
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 33, 64] {
+            let a: Vec<f32> = (0..n).map(|_| -(0.1 + rng.uniform()) as f32).collect();
+            let dt = (0.01 + rng.uniform()) as f32;
+            let mut out = vec![0.0f32; n];
+            exp_dt_a(dt, &a, &mut out);
+            for (k, &o) in out.iter().enumerate() {
+                let want = exp_approx(dt * a[k]);
+                let tol = 1e-6 * want.abs().max(1e-30);
+                assert!((o - want).abs() <= tol, "n={n} k={k}: {o} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_update_matches_scalar_update() {
+        let mut rng = Pcg::seeded(3);
+        for n in [1usize, 4, 7, 8, 9, 16, 17, 31, 33] {
+            let a: Vec<f32> = (0..n).map(|_| -(0.1 + rng.uniform()) as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let c: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let h0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let step = ScanStep {
+                dt: (0.02 + rng.uniform() * 0.2) as f32,
+                xt: rng.normal() as f32,
+                a: &a,
+                b: &b,
+                c: &c,
+            };
+            let mut hs = h0.clone();
+            let mut hv = h0.clone();
+            let mut ebuf = vec![0.0f32; n];
+            let ys = scan_update(Kernel::Scalar, &step, &mut hs, &mut ebuf, None);
+            let yv = scan_update(Kernel::Simd, &step, &mut hv, &mut ebuf, None);
+            let tol = 1e-4 * ys.abs().max(1.0);
+            assert!((ys - yv).abs() <= tol, "n={n}: {ys} vs {yv}");
+            for (k, (u, v)) in hv.iter().zip(&hs).enumerate() {
+                let tol = 1e-4 * v.abs().max(1.0);
+                assert!((u - v).abs() <= tol, "n={n} h[{k}]: {u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn active_update_skips_exactly_the_pruned_columns() {
+        // Columns with zero B and C rows contribute nothing; the active
+        // kernel must reproduce the full update on the surviving ones
+        // and leave skipped h slots untouched.
+        let mut rng = Pcg::seeded(4);
+        let n = 16usize;
+        let a: Vec<f32> = (0..n).map(|_| -(0.1 + rng.uniform()) as f32).collect();
+        let mut b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut c: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let active: Vec<u32> = (0..n as u32).filter(|k| k % 3 != 0).collect();
+        for k in 0..n {
+            if k % 3 == 0 {
+                b[k] = 0.0;
+                c[k] = 0.0;
+            }
+        }
+        let step = ScanStep { dt: 0.1, xt: 0.7, a: &a, b: &b, c: &c };
+        for kernel in Kernel::ALL {
+            let mut h_full = vec![0.0f32; n];
+            let mut h_skip = vec![0.0f32; n];
+            let mut ebuf = vec![0.0f32; n];
+            let y_full = scan_update(kernel, &step, &mut h_full, &mut ebuf, None);
+            let y_skip = scan_update(kernel, &step, &mut h_skip, &mut ebuf, Some(&active));
+            let tol = 1e-5 * y_full.abs().max(1.0);
+            assert!((y_full - y_skip).abs() <= tol, "{kernel:?}: {y_full} vs {y_skip}");
+            for (k, (u, v)) in h_skip.iter().zip(&h_full).enumerate() {
+                if k % 3 == 0 {
+                    assert_eq!(*u, 0.0, "{kernel:?}: skipped column {k} was touched");
+                } else {
+                    let tol = 1e-5 * v.abs().max(1.0);
+                    assert!((u - v).abs() <= tol, "{kernel:?} h[{k}]: {u} vs {v}");
+                }
+            }
+        }
+    }
+}

@@ -16,8 +16,19 @@
 //! compute-bound and threads over (batch × channel stripes), making the
 //! d_state dependence measurable on this testbed.  Correctness is pinned
 //! to the AOT artifact by an integration test.
+//!
+//! The inner recurrence dispatches through [`kernels::scan_update`]
+//! (DESIGN.md §13): `Kernel::Simd` (the default) runs a vectorized
+//! approximate exponential + lane-accumulated state update,
+//! `Kernel::Scalar` keeps the original libm walk as the reference, and
+//! an optional active-column plan skips structurally-pruned `d_state`
+//! columns ([`selective_scan_with_state_plan`]).
 
+pub mod kernels;
+
+use crate::sparse::Kernel;
 use crate::threadx;
+use kernels::ScanStep;
 
 /// Inputs for one SSM module invocation (shapes as in ref.py).
 pub struct SsmInputs<'a> {
@@ -33,8 +44,15 @@ pub struct SsmInputs<'a> {
 /// Run the scan, returning y[B, L, D].  Parallelises over batch × channel
 /// stripes; the running state h[stripe, N] stays in cache across the
 /// sequential L loop (the CPU analogue of the Pallas VMEM-resident state).
+/// Runs the default kernel; [`selective_scan_k`] selects explicitly.
 pub fn selective_scan(inp: &SsmInputs<'_>) -> Vec<f32> {
-    selective_scan_with_state(inp, None).0
+    selective_scan_k(inp, Kernel::default())
+}
+
+/// [`selective_scan`] under an explicit scan-kernel choice (`Scalar` =
+/// the original libm walk, `Simd` = the `ssm::kernels` lane update).
+pub fn selective_scan_k(inp: &SsmInputs<'_>, kernel: Kernel) -> Vec<f32> {
+    selective_scan_with_state_plan(inp, None, kernel, None).0
 }
 
 /// [`selective_scan`] with explicit recurrent state: seeds the recurrence
@@ -45,6 +63,31 @@ pub fn selective_scan_with_state(
     inp: &SsmInputs<'_>,
     h0: Option<&[f32]>,
 ) -> (Vec<f32>, Vec<f32>) {
+    selective_scan_with_state_plan(inp, h0, Kernel::default(), None)
+}
+
+/// [`selective_scan_with_state`] under an explicit kernel choice.
+pub fn selective_scan_with_state_k(
+    inp: &SsmInputs<'_>,
+    h0: Option<&[f32]>,
+    kernel: Kernel,
+) -> (Vec<f32>, Vec<f32>) {
+    selective_scan_with_state_plan(inp, h0, kernel, None)
+}
+
+/// The general scan: explicit state, kernel choice, and an optional
+/// active-column plan.  `active`, when present, lists the state columns
+/// to visit (sorted, in `[0, N)`); the rest — structurally-pruned
+/// `d_state` columns whose B/C rows are identically zero — are skipped
+/// outright and their `h` slots pass from `h0` to the final state
+/// untouched (exactly `h0`'s value, which is zero everywhere the engine
+/// uses plans, since prefill seeds from zeros).
+pub fn selective_scan_with_state_plan(
+    inp: &SsmInputs<'_>,
+    h0: Option<&[f32]>,
+    kernel: Kernel,
+    active: Option<&[u32]>,
+) -> (Vec<f32>, Vec<f32>) {
     let (bt, l, d, n) = inp.dims;
     debug_assert_eq!(inp.a.len(), d * n);
     debug_assert_eq!(inp.delta.len(), bt * l * d);
@@ -52,6 +95,9 @@ pub fn selective_scan_with_state(
     debug_assert_eq!(inp.x.len(), bt * l * d);
     if let Some(h) = h0 {
         debug_assert_eq!(h.len(), bt * d * n);
+    }
+    if let Some(act) = active {
+        debug_assert!(act.iter().all(|&k| (k as usize) < n));
     }
     let stripe = 64.min(d);
     let n_stripes = d.div_ceil(stripe);
@@ -74,6 +120,7 @@ pub fn selective_scan_with_state(
         let d1 = (d0 + stripe).min(d);
         let w = d1 - d0;
         let mut h = vec![0.0f32; w * n];
+        let mut ebuf = vec![0.0f32; n];
         if let Some(h0) = h0 {
             h.copy_from_slice(&h0[(b * d + d0) * n..(b * d + d1) * n]);
         }
@@ -84,17 +131,16 @@ pub fn selective_scan_with_state(
             let cv = &inp.c[base_n..base_n + n];
             for di in 0..w {
                 let dg = d0 + di;
-                let dt = inp.delta[base_d + dg];
                 let xt = inp.x[base_d + dg];
-                let dx = dt * xt;
-                let arow = &inp.a[dg * n..dg * n + n];
+                let step = ScanStep {
+                    dt: inp.delta[base_d + dg],
+                    xt,
+                    a: &inp.a[dg * n..dg * n + n],
+                    b: bv,
+                    c: cv,
+                };
                 let hrow = &mut h[di * n..di * n + n];
-                let mut acc = 0.0f32;
-                for k in 0..n {
-                    let hv = (dt * arow[k]).exp() * hrow[k] + dx * bv[k];
-                    hrow[k] = hv;
-                    acc += hv * cv[k];
-                }
+                let acc = kernels::scan_update(kernel, &step, hrow, &mut ebuf, active);
                 let yv = acc + inp.dp[dg] * xt;
                 // SAFETY: (b, dg, t) slabs are disjoint across jobs.
                 unsafe { *yp.0.add(base_d + dg) = yv };
@@ -159,10 +205,12 @@ mod tests {
         for dims in [(1, 5, 3, 2), (2, 9, 130, 4), (3, 7, 64, 16)] {
             let (a, delta, b, c, x, dp) = rand_inputs(&mut rng, dims);
             let inp = SsmInputs { a: &a, delta: &delta, b: &b, c: &c, x: &x, dp: &dp, dims };
-            let fast = selective_scan(&inp);
-            let slow = scan_naive(&inp);
-            for (u, v) in fast.iter().zip(&slow) {
-                assert!((u - v).abs() < 1e-4, "{u} vs {v} dims={dims:?}");
+            for kernel in Kernel::ALL {
+                let fast = selective_scan_k(&inp, kernel);
+                let slow = scan_naive(&inp);
+                for (u, v) in fast.iter().zip(&slow) {
+                    assert!((u - v).abs() < 1e-4, "{kernel:?}: {u} vs {v} dims={dims:?}");
+                }
             }
         }
     }

@@ -62,7 +62,8 @@ fn prop_prefill_steps_match_oracle_all_formats() {
             for fmt in [Format::Dense, Format::Bitmask, Format::Csr, Format::Bcsr] {
                 let model = SparseModel::compile(&params, &PackPolicy::of(fmt))
                     .map_err(|e| e.to_string())?;
-                let want = decode::forward_logits(&model, &tokens, 1, l);
+                let want =
+                    decode::forward_logits(&model, &tokens, 1, l).map_err(|e| e.to_string())?;
                 let got = prefill_then_steps(&model, &tokens, split);
                 let diff = max_abs_diff(&got, &want);
                 if diff > 1e-4 {
@@ -94,7 +95,7 @@ fn prop_engine_kernel_choice_is_consistent() {
         for kernel in Kernel::ALL {
             let policy = PackPolicy::auto().with_kernel(kernel);
             let model = SparseModel::compile(&params, &policy).map_err(|e| e.to_string())?;
-            let want = decode::forward_logits(&model, &tokens, 1, l);
+            let want = decode::forward_logits(&model, &tokens, 1, l).map_err(|e| e.to_string())?;
             let got = prefill_then_steps(&model, &tokens, split);
             let diff = max_abs_diff(&got, &want);
             if diff > 1e-4 {
@@ -125,7 +126,7 @@ fn prop_prefill_steps_match_oracle_2_4() {
         if !model.format_summary().contains("2:4") {
             return Err(format!("no 2:4 tensors packed: {}", model.format_summary()));
         }
-        let want = decode::forward_logits(&model, &tokens, 1, l);
+        let want = decode::forward_logits(&model, &tokens, 1, l).map_err(|e| e.to_string())?;
         let got = prefill_then_steps(&model, &tokens, split);
         let diff = max_abs_diff(&got, &want);
         if diff > 1e-4 {
@@ -151,7 +152,7 @@ fn prop_dense_reference_backend_matches_oracle() {
             }
             let oracle = SparseModel::compile(&params, &PackPolicy::dense())
                 .map_err(|e| e.to_string())?;
-            let want = decode::forward_logits(&oracle, &tokens, 1, l);
+            let want = decode::forward_logits(&oracle, &tokens, 1, l).map_err(|e| e.to_string())?;
             let got = prefill_then_steps(&params, &tokens, split);
             let diff = max_abs_diff(&got, &want);
             if diff > 1e-4 {
@@ -242,7 +243,7 @@ fn prop_scheduler_matches_solo_generation() {
         for sampling in [Sampling::Greedy, Sampling::Temperature(0.9)] {
             let mut sched = Scheduler::new(&model, 2, sampling, base_seed);
             for (prompt, max_new) in &requests {
-                sched.submit(prompt.clone(), *max_new);
+                sched.submit(prompt.clone(), *max_new).map_err(|e| e.to_string())?;
             }
             let mut gens = sched.run_until_idle();
             gens.sort_by_key(|g| g.id);
@@ -292,7 +293,8 @@ fn prop_quantized_engine_matches_same_model_oracle() {
                     let policy = PackPolicy::of(fmt).with_dtype(dtype);
                     let model =
                         SparseModel::compile(&params, &policy).map_err(|e| e.to_string())?;
-                    let want = decode::forward_logits(&model, &tokens, 1, l);
+                    let want =
+                    decode::forward_logits(&model, &tokens, 1, l).map_err(|e| e.to_string())?;
                     let got = prefill_then_steps(&model, &tokens, split);
                     let diff = max_abs_diff(&got, &want);
                     if diff > 1e-4 {
@@ -323,7 +325,7 @@ fn prop_quantized_engine_matches_same_model_oracle_2_4() {
             if !model.format_summary().contains("2:4") {
                 return Err(format!("no 2:4 tensors packed: {}", model.format_summary()));
             }
-            let want = decode::forward_logits(&model, &tokens, 1, l);
+            let want = decode::forward_logits(&model, &tokens, 1, l).map_err(|e| e.to_string())?;
             let got = prefill_then_steps(&model, &tokens, split);
             let diff = max_abs_diff(&got, &want);
             if diff > 1e-4 {
@@ -352,7 +354,7 @@ fn prop_quantized_engine_close_to_f32_oracle() {
             }
             let oracle = SparseModel::compile(&params, &PackPolicy::dense())
                 .map_err(|e| e.to_string())?;
-            let want = decode::forward_logits(&oracle, &tokens, 1, l);
+            let want = decode::forward_logits(&oracle, &tokens, 1, l).map_err(|e| e.to_string())?;
             let scale = 1.0 + want.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
             let bounds = [(Dtype::F32, 1e-4f32), (Dtype::F16, 0.05), (Dtype::I8, 0.5)];
             for fmt in [Format::Dense, Format::Bitmask, Format::Csr] {

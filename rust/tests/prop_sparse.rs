@@ -366,11 +366,13 @@ fn prop_forward_equivalence_packed_vs_dense_masked() {
             magnitude_prune_all(&mut params, sparsity).map_err(|e| e.to_string())?;
             let reference = SparseModel::compile(&params, &PackPolicy::dense())
                 .map_err(|e| e.to_string())?;
-            let want = decode::forward_logits(&reference, &tokens, bt, l);
+            let want = decode::forward_logits(&reference, &tokens, bt, l)
+                .map_err(|e| e.to_string())?;
             for policy in [PackPolicy::auto(), PackPolicy::of(Format::Csr)] {
                 let model =
                     SparseModel::compile(&params, &policy).map_err(|e| e.to_string())?;
-                let got = decode::forward_logits(&model, &tokens, bt, l);
+                let got = decode::forward_logits(&model, &tokens, bt, l)
+                    .map_err(|e| e.to_string())?;
                 for (i, (u, v)) in got.iter().zip(&want).enumerate() {
                     if (u - v).abs() > 1e-4 {
                         return Err(format!(
@@ -396,16 +398,57 @@ fn prop_forward_equivalence_2_4() {
         apply_nm_along_input(&mut params, 2, 4).map_err(|e| e.to_string())?;
         let reference =
             SparseModel::compile(&params, &PackPolicy::dense()).map_err(|e| e.to_string())?;
-        let want = decode::forward_logits(&reference, &tokens, bt, l);
+        let want = decode::forward_logits(&reference, &tokens, bt, l).map_err(|e| e.to_string())?;
         let packed =
             SparseModel::compile(&params, &PackPolicy::of(Format::Nm)).map_err(|e| e.to_string())?;
         if !packed.format_summary().contains("2:4") {
             return Err(format!("no 2:4 tensors packed: {}", packed.format_summary()));
         }
-        let got = decode::forward_logits(&packed, &tokens, bt, l);
+        let got = decode::forward_logits(&packed, &tokens, bt, l).map_err(|e| e.to_string())?;
         for (i, (u, v)) in got.iter().zip(&want).enumerate() {
             if (u - v).abs() > 1e-4 {
                 return Err(format!("logit {i}: {u} vs {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The fused single-pass layer forward (row-range splits + scan plan)
+/// against the retained pre-fusion reference
+/// (`decode::forward_logits_unfused`): identical logits within the
+/// float-reassociation tolerance across formats × dtypes × kernels ×
+/// sparsities — fusion changes the data movement, never the math.
+#[test]
+fn prop_fused_forward_matches_unfused() {
+    check("fused-vs-unfused-forward", 4, |rng| {
+        let seed = rng.next_u64();
+        let (bt, l) = (2usize, 5usize);
+        let tokens: Vec<i32> = (0..bt * l).map(|_| rng.below(16) as i32).collect();
+        for sparsity in DTYPE_SPARSITIES {
+            let mut params = toy_flat_params_random(4, seed);
+            if sparsity > 0.0 {
+                magnitude_prune_all(&mut params, sparsity).map_err(|e| e.to_string())?;
+            }
+            for fmt in [Format::Dense, Format::Bitmask, Format::Csr, Format::Bcsr] {
+                for dtype in Dtype::ALL {
+                    for kernel in Kernel::ALL {
+                        let policy = PackPolicy::of(fmt).with_dtype(dtype).with_kernel(kernel);
+                        let model =
+                            SparseModel::compile(&params, &policy).map_err(|e| e.to_string())?;
+                        let fused = decode::forward_logits(&model, &tokens, bt, l)
+                            .map_err(|e| e.to_string())?;
+                        let reference = decode::forward_logits_unfused(&model, &tokens, bt, l)
+                            .map_err(|e| e.to_string())?;
+                        for (i, (u, v)) in fused.iter().zip(&reference).enumerate() {
+                            if !close(*u, *v) {
+                                return Err(format!(
+                                    "{fmt:?}/{dtype:?}/{kernel:?} @{sparsity}: logit {i} {u} vs {v}"
+                                ));
+                            }
+                        }
+                    }
+                }
             }
         }
         Ok(())
@@ -447,8 +490,10 @@ fn prop_pack_save_load_bit_exact() {
                             "{fmt:?}/{dtype:?} @{sparsity}: planes drifted through save/load"
                         ));
                     }
-                    let want = decode::forward_logits(&model, &tokens, bt, l);
-                    let got = decode::forward_logits(&loaded, &tokens, bt, l);
+                    let want = decode::forward_logits(&model, &tokens, bt, l)
+                        .map_err(|e| e.to_string())?;
+                    let got = decode::forward_logits(&loaded, &tokens, bt, l)
+                        .map_err(|e| e.to_string())?;
                     if want != got {
                         return Err(format!(
                             "{fmt:?}/{dtype:?} @{sparsity}: reloaded decode differs"

@@ -38,5 +38,12 @@ step "kernel smoke (release SIMD-vs-scalar equivalence props)"
 cargo test --release -q --test prop_sparse prop_kernel
 cargo test --release -q --test prop_sparse prop_matmul_equals_repeated_matvec
 
+# Scan-side smoke: SIMD-vs-scalar selective scan and fused-vs-unfused
+# layer forward, also in release mode (DESIGN.md §13).
+step "scan smoke (release scan + fused-forward equivalence props)"
+cargo test --release -q --test prop_scan prop_scan_simd_matches_scalar
+cargo test --release -q --test prop_scan prop_scan_chunked_state_handoff_exact
+cargo test --release -q --test prop_sparse prop_fused_forward_matches_unfused
+
 echo
 echo "verify OK"
