@@ -18,11 +18,11 @@ use anyhow::{bail, Result};
 
 /// All experiment ids: the paper's tables/figures in paper order, plus
 /// repo-native serving experiments (`sparse_speed`, `serve_engine`,
-/// `quant_speed`, `kernel_speed`, `scan_speed`).
-pub const ALL_IDS: [&str; 20] = [
+/// `quant_speed`, `kernel_speed`, `scan_speed`, `serve_telemetry`).
+pub const ALL_IDS: [&str; 21] = [
     "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "table9",
     "table10", "table11", "table12", "fig2", "fig3", "fig4", "sparse_speed", "serve_engine",
-    "quant_speed", "kernel_speed", "scan_speed",
+    "quant_speed", "kernel_speed", "scan_speed", "serve_telemetry",
 ];
 
 pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
@@ -48,6 +48,7 @@ pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
         "quant_speed" => quant_speed(pipe)?,
         "kernel_speed" => kernel_speed(pipe)?,
         "scan_speed" => scan_speed(pipe)?,
+        "serve_telemetry" => serve_telemetry(pipe)?,
         other => bail!("unknown experiment id '{other}' (known: {:?})", ALL_IDS),
     };
     rep.note(&format!(
@@ -119,10 +120,8 @@ fn table_ssm(pipe: &Pipeline, id: &str, sparsity: f64) -> Result<Report> {
             let mut p = params.clone();
             pipe.prune_ssm(&mut p, method, sparsity, &stats)?;
             let row = eval_row(pipe, cfg, method.name(), &p)?;
-            crate::util::log_line(
-                "exp",
-                &format!("{id} {cfg} {} ssm-sparsity {:.3}", method.name(), p.ssm_sparsity()),
-            );
+            let sp = p.ssm_sparsity();
+            crate::log_info!("exp", "{id} {cfg} {} ssm-sparsity {sp:.3}", method.name());
             rep.push_metrics(&[cfg], &row);
         }
     }
@@ -677,6 +676,159 @@ fn scan_speed(pipe: &Pipeline) -> Result<Report> {
     rep.note(
         "acceptance bar: simd ≥1.5x scalar on both the prefill and step-batch shapes \
          (the scalar walk pays a libm exp per (d, n) element per token)",
+    );
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// serve_telemetry — engine telemetry: latency percentiles + stage times
+// ---------------------------------------------------------------------
+
+/// Render a `serving` telemetry snapshot section (the schema of
+/// [`crate::telemetry::validate_serving_snapshot`]) as a human-readable
+/// report.  Shared by the `serve_telemetry` experiment and the CLI
+/// `sparse-bench --telemetry` / `generate --telemetry` paths.
+pub fn serve_telemetry_report(section: &crate::util::json::Json) -> Result<Report> {
+    use crate::telemetry::{Phase, Stage};
+    let mut rep = Report::new(
+        "serve_telemetry",
+        "serving telemetry: latency percentiles, batch occupancy, per-stage time breakdown",
+        &["Section", "Metric", "p50 / value", "p95", "p99"],
+    );
+    let wall_ms = section.get("wall_ms")?.as_f64()?;
+    let tok_s = section.get("decode_tok_s")?.as_f64()?;
+    rep.push_row(vec![
+        "throughput".into(),
+        "decode tok/s (telemetry on)".into(),
+        fmt_metric(tok_s),
+        "-".into(),
+        "-".into(),
+    ]);
+    if let Some(ov) = section.opt("overhead") {
+        rep.push_row(vec![
+            "throughput".into(),
+            "decode tok/s (telemetry off)".into(),
+            fmt_metric(ov.get("tok_s_disabled")?.as_f64()?),
+            "-".into(),
+            "-".into(),
+        ]);
+        rep.push_row(vec![
+            "throughput".into(),
+            "telemetry slowdown %".into(),
+            format!("{:.2}", ov.get("slowdown_pct")?.as_f64()?),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    let lat = section.get("latency_us")?;
+    for (label, key) in [
+        ("ttft (µs)", "ttft"),
+        ("inter-token (µs)", "inter_token"),
+        ("queue-wait (µs)", "queue_wait"),
+    ] {
+        let h = lat.get(key)?;
+        rep.push_row(vec![
+            "latency".into(),
+            label.into(),
+            fmt_metric(h.get("p50")?.as_f64()?),
+            fmt_metric(h.get("p95")?.as_f64()?),
+            fmt_metric(h.get("p99")?.as_f64()?),
+        ]);
+    }
+    let batch = section.get("batch")?;
+    for (label, key) in [
+        ("occupancy", "occupancy"),
+        ("admits/tick", "admits_per_tick"),
+        ("retires/tick", "retires_per_tick"),
+    ] {
+        let h = batch.get(key)?;
+        rep.push_row(vec![
+            "batch".into(),
+            label.into(),
+            fmt_metric(h.get("p50")?.as_f64()?),
+            fmt_metric(h.get("p95")?.as_f64()?),
+            fmt_metric(h.get("p99")?.as_f64()?),
+        ]);
+    }
+    let stages = section.get("stages")?;
+    let mut covered_ms = 0.0f64;
+    for phase in Phase::ALL {
+        let ph = stages.get(phase.name())?;
+        for st in Stage::ALL {
+            let e = ph.get(st.name())?;
+            let ms = e.get("ms")?.as_f64()?;
+            let calls = e.get("calls")?.as_f64()? as u64;
+            covered_ms += ms;
+            if calls == 0 {
+                continue;
+            }
+            rep.push_row(vec![
+                format!("stage {}", phase.name()),
+                format!("{} ({calls} calls)", st.name()),
+                format!("{ms:.2} ms ({:.1}% wall)", ms / wall_ms * 100.0),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
+    }
+    let cnt = section.get("counters")?;
+    rep.note(&format!(
+        "wall {wall_ms:.1} ms; instrumented stages cover {:.1}% of wall time",
+        covered_ms / wall_ms * 100.0
+    ));
+    rep.note(&format!(
+        "counters: ticks {} · engine_steps {} · decoded {} · prefill {} · admitted {} · finished {}",
+        cnt.get("ticks")?.as_usize()?,
+        cnt.get("engine_steps")?.as_usize()?,
+        cnt.get("decoded_tokens")?.as_usize()?,
+        cnt.get("prefill_tokens")?.as_usize()?,
+        cnt.get("admitted")?.as_usize()?,
+        cnt.get("finished")?.as_usize()?,
+    ));
+    Ok(rep)
+}
+
+fn serve_telemetry(pipe: &Pipeline) -> Result<Report> {
+    // Host-only like serve_engine: telemetry measures where wall time
+    // goes, which depends on shapes and formats, not trained values.
+    let mut params = crate::sparse::decode::m370_bench_params();
+    crate::sparse::compile::magnitude_prune_all(&mut params, 0.5)?;
+    let model =
+        crate::sparse::SparseModel::compile(&params, &crate::sparse::compile::PackPolicy::auto())?;
+    let o = if pipe.fast {
+        engine::bench::ServeTelemetryOpts {
+            requests: 8,
+            batch: 4,
+            prompt_len: 16,
+            new_tokens: 12,
+            sampling: engine::Sampling::Greedy,
+            seed: 7,
+        }
+    } else {
+        engine::bench::ServeTelemetryOpts {
+            requests: 16,
+            batch: 4,
+            prompt_len: 48,
+            new_tokens: 48,
+            sampling: engine::Sampling::Greedy,
+            seed: 7,
+        }
+    };
+    let run = engine::bench::serve_telemetry_run(&model, &o);
+    crate::telemetry::validate_serving_snapshot(&run.section)?;
+    let mut rep = serve_telemetry_report(&run.section)?;
+    // Best-effort, as in kernel_speed: never discard a measured report
+    // over a perf-log write failure.
+    let log = engine::bench::bench_serving_json_path();
+    match engine::bench::update_bench_serving_json(&log, "serving", run.section.clone()) {
+        Ok(()) => {
+            rep.note(&format!("snapshot folded into {} (serving section)", log.display()));
+        }
+        Err(e) => rep.note(&format!("[warn] serving perf log not updated: {e:#}")),
+    }
+    rep.note(
+        "acceptance bar: telemetry-enabled decode tok/s within 2% of disabled; per-stage \
+         times sum to ≤ wall time (laps are measured strictly inside the serving loop)",
     );
     Ok(rep)
 }

@@ -176,7 +176,7 @@ impl Pipeline {
         } else {
             default_train_steps(cfg)
         };
-        crate::util::log_line("coord", &format!("training {cfg} for {steps} steps"));
+        crate::log_info!("coord", "training {cfg} for {steps} steps");
         let corpus = self.train_corpus();
         let opts = TrainOptions { steps, ..Default::default() };
         let (params, rep) = train::train(&self.rt, &layout, &corpus, &opts)?;

@@ -30,6 +30,7 @@ use crate::sparse::decode::{
 };
 use crate::sparse::{Kernel, PARALLEL_MIN_WORK, SparseLayer, SparseModel};
 use crate::ssm::kernels::{scan_update, ScanStep};
+use crate::telemetry::{LapTimer, Phase, Stage};
 use crate::threadx;
 
 /// Per-session slices one layer's scan + gate consumes (all post-
@@ -213,23 +214,32 @@ fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<
     state.scratch.ensure(meta);
     let s = &mut state.scratch;
 
+    // Step-phase stage attribution (DESIGN.md §14): one clock read per
+    // boundary when telemetry is on, a no-op `Option` branch when off —
+    // the disabled step path stays allocation-free.
+    let mut lt = LapTimer::start(Phase::Step);
     s.x.copy_from_slice(model.embed_row(v));
+    lt.lap(Stage::Embed);
     for (layer, lst) in model.layers.iter().zip(&mut state.layers) {
         rmsnorm_into(&s.x, &layer.norm, dm, &mut s.xn);
         layer.in_proj.matvec_into_k(&s.xn, &mut s.xr, kernel); // [2di] = [x_in | res]
         let (x_in, res) = s.xr.split_at(di);
+        lt.lap(Stage::InProj);
 
         // Causal conv over packed taps + ring buffer (shared helper).
         conv_ring_step(layer, lst, t_pos, x_in, &mut s.u);
+        lt.lap(Stage::Conv);
 
         layer.x_proj.matvec_into_k(&s.u, &mut s.xdbc, kernel); // [dr + 2ds] = [δ_r | B | C]
         let (delta_r, bc) = s.xdbc.split_at(dr);
         let (bv, cv) = bc.split_at(ds);
+        lt.lap(Stage::XProj);
 
         layer.dt_proj.matvec_into_k(delta_r, &mut s.delta, kernel); // [di]
         for (dv, &bb) in s.delta.iter_mut().zip(&layer.dt_b) {
             *dv = softplus(*dv + bb);
         }
+        lt.lap(Stage::DtProj);
 
         // One scan + gate step through the shared helper (and the
         // shared scan microkernel, with the layer's structured-d_state
@@ -242,15 +252,19 @@ fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<
             &mut s.y,
             &mut s.escan,
         );
+        lt.lap(Stage::Scan);
         layer.out_proj.matvec_into_k(&s.y, &mut s.out, kernel);
         for (xv, &ov) in s.x.iter_mut().zip(&s.out) {
             *xv += ov;
         }
+        lt.lap(Stage::OutProj);
     }
 
     rmsnorm_into(&s.x, &model.norm_f, dm, &mut s.xn);
     state.seq_len = t_pos + 1;
-    model.head.matvec_k(&s.xn, kernel)
+    let logits = model.head.matvec_k(&s.xn, kernel);
+    lt.lap(Stage::Head);
+    logits
 }
 
 /// Whole-prompt prefill on the packed model: the fused layer forward
@@ -269,9 +283,12 @@ fn sparse_prefill(model: &SparseModel, tokens: &[i32], last_only: bool) -> (Vec<
 
     // Prompts are validated at the serving boundary (Scheduler::submit);
     // inside the engine a bad token is a caller bug, not a request error.
+    let mut lt = LapTimer::start(Phase::Prefill);
     let mut x = embed_tokens(model, tokens).expect("prefill tokens validated by the caller");
+    lt.lap(Stage::Embed);
 
     for (layer, lst) in model.layers.iter().zip(&mut state.layers) {
+        // The layer body attributes its own stages internally.
         fused_layer_forward(
             layer,
             meta,
@@ -284,13 +301,16 @@ fn sparse_prefill(model: &SparseModel, tokens: &[i32], last_only: bool) -> (Vec<
     }
 
     state.seq_len = l;
-    if last_only {
+    lt.skip(); // layer time was charged inside fused_layer_forward
+    let logits = if last_only {
         let xn = rmsnorm(&x[(l - 1) * dm..], &model.norm_f, dm);
-        (model.head.matvec_k(&xn, kernel), state)
+        model.head.matvec_k(&xn, kernel)
     } else {
         let xn = rmsnorm(&x, &model.norm_f, dm);
-        (model.head.matmul_k(&xn, l, kernel), state)
-    }
+        model.head.matmul_k(&xn, l, kernel)
+    };
+    lt.lap(Stage::Head);
+    (logits, state)
 }
 
 /// Batch-major fused step (the tentpole of the step-decode path): lay
@@ -319,9 +339,14 @@ fn sparse_step_batch(model: &SparseModel, states: &mut [EngineState], tokens: &[
     }
 
     debug_assert!(states.iter().all(|st| st.layers.len() == model.layers.len()));
+    // Stage attribution happens on this orchestrating thread only: the
+    // striped conv/scan blocks are charged as a whole (wall time of the
+    // block), so per-stage times always sum to ≤ the caller's wall time.
+    let mut lt = LapTimer::start(Phase::Step);
     // One embed row per session — validated at the serving boundary,
     // like the prefill path.
     let mut x = embed_tokens(model, tokens).expect("step tokens validated by the caller");
+    lt.lap(Stage::Embed);
 
     // Batch working buffers, `[session, feature]` row-major — one
     // allocation per buffer per batched step, amortized over sessions.
@@ -344,6 +369,7 @@ fn sparse_step_batch(model: &SparseModel, states: &mut [EngineState], tokens: &[
         rmsnorm_into(&x, &layer.norm, dm, &mut xn);
         layer.in_proj.matmul_rows_into_k(&xn, s_n, 0, di, &mut x_in, kernel);
         layer.in_proj.matmul_rows_into_k(&xn, s_n, di, 2 * di, &mut res, kernel);
+        lt.lap(Stage::InProj);
 
         // Causal conv per session (ring positions differ), striped only
         // once the batch carries enough work to amortize thread spawns.
@@ -371,10 +397,12 @@ fn sparse_step_batch(model: &SparseModel, states: &mut [EngineState], tokens: &[
                 }
             }
         }
+        lt.lap(Stage::Conv);
 
         layer.x_proj.matmul_rows_into_k(&u, s_n, 0, dr, &mut delta_r, kernel);
         layer.x_proj.matmul_rows_into_k(&u, s_n, dr, dr + ds, &mut bmat, kernel);
         layer.x_proj.matmul_rows_into_k(&u, s_n, dr + ds, dr + 2 * ds, &mut cmat, kernel);
+        lt.lap(Stage::XProj);
 
         layer.dt_proj.matmul_into_k(&delta_r, s_n, &mut delta, kernel);
         for row in delta.chunks_exact_mut(di) {
@@ -382,6 +410,7 @@ fn sparse_step_batch(model: &SparseModel, states: &mut [EngineState], tokens: &[
                 *dv = softplus(*dv + bb);
             }
         }
+        lt.lap(Stage::DtProj);
 
         // Scan + gate per session, striped under the same work gate;
         // each session's h advances in place through the same
@@ -416,18 +445,22 @@ fn sparse_step_batch(model: &SparseModel, states: &mut [EngineState], tokens: &[
                 }
             }
         }
+        lt.lap(Stage::Scan);
 
         layer.out_proj.matmul_into_k(&y, s_n, &mut out, kernel);
         for (xv, &ov) in x.iter_mut().zip(&out) {
             *xv += ov;
         }
+        lt.lap(Stage::OutProj);
     }
 
     rmsnorm_into(&x, &model.norm_f, dm, &mut xn);
     for st in states.iter_mut() {
         st.seq_len += 1;
     }
-    model.head.matmul_k(&xn, s_n, kernel) // [s_n, vocab]
+    let logits = model.head.matmul_k(&xn, s_n, kernel); // [s_n, vocab]
+    lt.lap(Stage::Head);
+    logits
 }
 
 impl Backend for FlatParams {

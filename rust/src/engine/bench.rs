@@ -1,12 +1,14 @@
 //! Serving measurements for the stateful engine: steady-state step
 //! decode (O(1) per token) against the full-recompute baseline (O(L) per
-//! generated token via `sparse::decode::forward_logits`).
+//! generated token via `sparse::decode::forward_logits`), plus the
+//! serving-telemetry workload driver ([`serve_telemetry_run`]) whose
+//! snapshots fold into `BENCH_serving.json`.
 //!
-//! Shared by the CLI `sparse-bench --mode step`, the `serve_engine`
-//! experiment and the `engine_*` cargo-bench groups, so every surface
-//! reports the same numbers.
+//! Shared by the CLI `sparse-bench --mode step` / `--telemetry`, the
+//! `serve_engine` / `serve_telemetry` experiments and the `engine_*`
+//! cargo-bench groups, so every surface reports the same numbers.
 
-use super::{Backend, EngineState};
+use super::{Backend, EngineState, Sampling, Scheduler, SchedulerStats};
 use crate::benchx::{self, BenchResult};
 use crate::model::FlatParams;
 use crate::rngx::Pcg;
@@ -14,7 +16,11 @@ use crate::sparse::decode;
 use crate::sparse::Dtype;
 use crate::sparse::Kernel;
 use crate::sparse::SparseModel;
+use crate::telemetry;
+use crate::util::json::{self, Json};
+use crate::util::Stopwatch;
 use anyhow::Result;
+use std::path::Path;
 
 /// Steady-state batched step decode: prefill `bt` sessions with random
 /// length-`l` prompts (untimed), then time batched single-token steps.
@@ -102,6 +108,137 @@ pub fn step_vs_full_sweep(
         });
     }
     Ok(rows)
+}
+
+/// File name of the machine-readable serving-telemetry perf log.
+pub const BENCH_SERVING_JSON: &str = "BENCH_serving.json";
+
+/// Canonical location of the serving perf log: next to the crate
+/// manifest, like `sparse::decode::bench_kernels_json_path`, so every
+/// surface folds its sections into one file.
+pub fn bench_serving_json_path() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(BENCH_SERVING_JSON)
+}
+
+/// Merge one section into the serving perf log (shared section-merging
+/// writer; preserves other sections, refuses to overwrite corrupt logs).
+pub fn update_bench_serving_json(path: &Path, section: &str, rows: Json) -> Result<()> {
+    json::update_json_section(path, section, rows)
+}
+
+/// A continuous-batching workload for telemetry measurement: `requests`
+/// random prompts of `prompt_len` tokens, `new_tokens` decode budget
+/// each, served through a batch-`batch` [`Scheduler`].
+#[derive(Debug, Clone)]
+pub struct ServeTelemetryOpts {
+    pub requests: usize,
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub new_tokens: usize,
+    pub sampling: Sampling,
+    pub seed: u64,
+}
+
+impl ServeTelemetryOpts {
+    fn workload_json(&self) -> Json {
+        json::obj(vec![
+            ("requests", json::num(self.requests as f64)),
+            ("batch", json::num(self.batch as f64)),
+            ("prompt_len", json::num(self.prompt_len as f64)),
+            ("new_tokens", json::num(self.new_tokens as f64)),
+            ("seed", json::num(self.seed as f64)),
+        ])
+    }
+}
+
+/// One leg of the telemetry A/B: submit the whole workload, run to
+/// idle, return `(wall_ms, stats)`.
+fn run_serve_workload<B: Backend>(backend: &B, o: &ServeTelemetryOpts) -> (f64, SchedulerStats) {
+    let vocab = backend.meta().vocab;
+    let mut rng = Pcg::seeded(o.seed);
+    let mut sched = Scheduler::new(backend, o.batch, o.sampling, o.seed);
+    for _ in 0..o.requests {
+        let prompt: Vec<i32> = (0..o.prompt_len).map(|_| rng.below(vocab) as i32).collect();
+        sched.submit(prompt, o.new_tokens).expect("generated prompts are in-vocab");
+    }
+    let sw = Stopwatch::new();
+    let _ = sched.run_until_idle();
+    (sw.millis(), sched.stats().clone())
+}
+
+fn tok_s(decoded: usize, wall_ms: f64) -> f64 {
+    decoded as f64 / (wall_ms / 1e3).max(1e-9)
+}
+
+/// Assemble a `serving` snapshot section from the current telemetry
+/// registry plus run-level context: the registry snapshot (`counters`,
+/// `latency_us`, `batch`, `stages`) extended with `workload`, `wall_ms`,
+/// `decode_tok_s` and (for A/B runs) `overhead`.  This is the schema
+/// [`telemetry::validate_serving_snapshot`] checks.
+pub fn serving_section_json(
+    wall_ms: f64,
+    stats: &SchedulerStats,
+    workload: Json,
+    overhead: Option<(f64, f64)>,
+) -> Json {
+    let mut m = match telemetry::snapshot_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!("snapshot_json returns an object"),
+    };
+    m.insert("workload".into(), workload);
+    m.insert("wall_ms".into(), json::num(wall_ms));
+    m.insert("decode_tok_s".into(), json::num(tok_s(stats.decoded_tokens, wall_ms)));
+    m.insert("peak_batch".into(), json::num(stats.peak_batch as f64));
+    if let Some((tok_s_disabled, tok_s_enabled)) = overhead {
+        let slowdown_pct = (tok_s_disabled - tok_s_enabled) / tok_s_disabled.max(1e-9) * 100.0;
+        m.insert(
+            "overhead".into(),
+            json::obj(vec![
+                ("tok_s_disabled", json::num(tok_s_disabled)),
+                ("tok_s_enabled", json::num(tok_s_enabled)),
+                ("slowdown_pct", json::num(slowdown_pct)),
+            ]),
+        );
+    }
+    Json::Obj(m)
+}
+
+/// Result of one telemetry A/B measurement ([`serve_telemetry_run`]).
+pub struct ServeTelemetryRun {
+    /// Wall time of the telemetry-enabled leg, ms.
+    pub wall_ms: f64,
+    /// Decode throughput with telemetry enabled.
+    pub decode_tok_s: f64,
+    /// Decode throughput of the identical workload with telemetry off.
+    pub disabled_tok_s: f64,
+    pub stats: SchedulerStats,
+    /// The full `serving` snapshot section (validated schema).
+    pub section: Json,
+}
+
+/// Run the workload twice — telemetry disabled (baseline throughput),
+/// then enabled after a registry reset (metrics + overhead figure) —
+/// and assemble the `serving` snapshot section.  Leaves telemetry
+/// disabled on return.  Tokens are bit-identical across the two legs
+/// (telemetry never touches data; pinned by `tests/prop_telemetry.rs`).
+pub fn serve_telemetry_run<B: Backend>(backend: &B, o: &ServeTelemetryOpts) -> ServeTelemetryRun {
+    telemetry::set_enabled(false);
+    let (wall_off, stats_off) = run_serve_workload(backend, o);
+    let disabled_tok_s = tok_s(stats_off.decoded_tokens, wall_off);
+
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    let (wall_ms, stats) = run_serve_workload(backend, o);
+    telemetry::set_enabled(false);
+    let decode_tok_s = tok_s(stats.decoded_tokens, wall_ms);
+
+    let section = serving_section_json(
+        wall_ms,
+        &stats,
+        o.workload_json(),
+        Some((disabled_tok_s, decode_tok_s)),
+    );
+    ServeTelemetryRun { wall_ms, decode_tok_s, disabled_tok_s, stats, section }
 }
 
 #[cfg(test)]

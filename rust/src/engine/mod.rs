@@ -23,7 +23,13 @@
 //!                   requests join the running batch as others finish.
 //! * [`bench`]     — step-decode vs full-recompute throughput rows
 //!                   shared by the CLI, the `serve_engine` experiment
-//!                   and `cargo bench`.
+//!                   and `cargo bench`; plus the serving-telemetry
+//!                   workload driver behind `--telemetry` and the
+//!                   `serve_telemetry` experiment (BENCH_serving.json).
+//!
+//! The hot path (backend step/prefill, scheduler tick) is instrumented
+//! with [`crate::telemetry`] span timers and latency histograms
+//! (DESIGN.md §14) — off by default, zero-cost when disabled.
 //!
 //! `sparse::decode::forward_logits` survives as the reference oracle:
 //! `tests/prop_engine.rs` pins prefill+N×step logits against it for

@@ -21,8 +21,11 @@
 //! identical to its solo run regardless of batch composition.
 
 use super::{Backend, EngineState, Sampling, Session};
+use crate::telemetry::{self, LapTimer, Phase, Stage};
 use anyhow::{ensure, Result};
 use std::collections::VecDeque;
+use std::sync::atomic::Ordering::Relaxed;
+use std::time::Instant;
 
 /// A queued generation request.
 #[derive(Debug, Clone)]
@@ -30,19 +33,34 @@ pub struct Request {
     pub id: usize,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    /// Submit time for queue-wait/TTFT telemetry (`None` while
+    /// telemetry is disabled — no clock read on the default path).
+    pub queued_at: Option<Instant>,
 }
 
-/// A finished request's output.
+/// A finished request's output, with its tick-level timing: the
+/// invariant `tick_finished − tick_admitted == tokens.len() − 1` holds
+/// for every request regardless of batch composition (continuous
+/// batching never stalls an admitted request), and the unit tests pin
+/// batched == solo tick-for-tick.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Generation {
     pub id: usize,
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
+    /// Scheduler tick (1-based) that admitted + prefilled this request.
+    pub tick_admitted: usize,
+    /// Scheduler tick on which the last token was sampled.
+    pub tick_finished: usize,
+    /// Ticks the prefill spanned (1 today; explicit for future chunking).
+    pub prefill_ticks: usize,
 }
 
 /// Aggregate counters over a scheduler's lifetime.
 #[derive(Debug, Clone, Default)]
 pub struct SchedulerStats {
+    /// Ticks taken, idle ones included (1-based inside `tick`).
+    pub ticks: usize,
     pub admitted: usize,
     pub finished: usize,
     /// Batched step-kernel invocations (ticks that stepped ≥1 session).
@@ -102,7 +120,8 @@ impl<'a, B: Backend> Scheduler<'a, B> {
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back(Request { id, prompt, max_new_tokens });
+        let queued_at = telemetry::enabled().then(Instant::now);
+        self.queue.push_back(Request { id, prompt, max_new_tokens, queued_at });
         Ok(id)
     }
 
@@ -124,10 +143,22 @@ impl<'a, B: Backend> Scheduler<'a, B> {
 
     /// One engine iteration (admit → sample → retire → step).  Returns
     /// the requests that finished during this tick.
+    ///
+    /// Tick-level timing (integers) is recorded unconditionally;
+    /// everything that reads a clock or touches the telemetry registry
+    /// is gated on [`telemetry::enabled`], so the disabled path does no
+    /// extra work and allocates nothing beyond the baseline.
     pub fn tick(&mut self) -> Vec<Generation> {
+        self.stats.ticks += 1;
+        let tele = telemetry::enabled();
+        let mut admits = 0u64;
+        let mut admitted_prompt_tokens = 0usize;
         while self.running.len() < self.max_batch {
             let Some(req) = self.queue.pop_front() else { break };
-            let sess = Session::start(
+            if let Some(q) = req.queued_at {
+                telemetry::registry().queue_wait_us.record(q.elapsed().as_micros() as u64);
+            }
+            let mut sess = Session::start(
                 self.backend,
                 req.id,
                 &req.prompt,
@@ -135,17 +166,48 @@ impl<'a, B: Backend> Scheduler<'a, B> {
                 self.sampling,
                 session_seed(self.seed, req.id),
             );
+            sess.tick_admitted = self.stats.ticks;
+            sess.submitted_at = req.queued_at;
+            admits += 1;
+            admitted_prompt_tokens += req.prompt.len();
             self.stats.admitted += 1;
             self.stats.prefill_tokens += req.prompt.len();
             self.running.push(sess);
         }
         self.stats.peak_batch = self.stats.peak_batch.max(self.running.len());
         if self.running.is_empty() {
+            if tele {
+                telemetry::registry().ticks.fetch_add(1, Relaxed);
+            }
             return Vec::new();
         }
 
+        let mut lt = LapTimer::start(Phase::Step);
         let tokens: Vec<i32> = self.running.iter_mut().map(Session::sample_next).collect();
+        lt.lap(Stage::Sample);
         self.stats.decoded_tokens += tokens.len();
+        if tele {
+            let reg = telemetry::registry();
+            reg.ticks.fetch_add(1, Relaxed);
+            reg.admitted.fetch_add(admits, Relaxed);
+            reg.prefill_tokens.fetch_add(admitted_prompt_tokens as u64, Relaxed);
+            reg.batch_occupancy.record(self.running.len() as u64);
+            reg.admits_per_tick.record(admits);
+            reg.decoded_tokens.fetch_add(tokens.len() as u64, Relaxed);
+            // TTFT for first tokens, inter-token gap for the rest — one
+            // clock read covers the whole batch.
+            let now = Instant::now();
+            for sess in self.running.iter_mut() {
+                if sess.generated.len() == 1 {
+                    if let Some(t0) = sess.submitted_at {
+                        reg.ttft_us.record(now.duration_since(t0).as_micros() as u64);
+                    }
+                } else if let Some(prev) = sess.last_sampled_at {
+                    reg.inter_token_us.record(now.duration_since(prev).as_micros() as u64);
+                }
+                sess.last_sampled_at = Some(now);
+            }
+        }
 
         let mut finished = Vec::new();
         let mut keep: Vec<Session> = Vec::with_capacity(self.running.len());
@@ -156,12 +218,20 @@ impl<'a, B: Backend> Scheduler<'a, B> {
                 finished.push(Generation {
                     id: sess.id,
                     prompt_len: sess.prompt_len,
+                    tick_admitted: sess.tick_admitted,
+                    tick_finished: self.stats.ticks,
+                    prefill_ticks: sess.prefill_ticks,
                     tokens: sess.generated,
                 });
             } else {
                 keep.push(sess);
                 step_tokens.push(tok);
             }
+        }
+        if tele {
+            let reg = telemetry::registry();
+            reg.retires_per_tick.record(finished.len() as u64);
+            reg.finished.fetch_add(finished.len() as u64, Relaxed);
         }
 
         if !keep.is_empty() {
@@ -176,6 +246,9 @@ impl<'a, B: Backend> Scheduler<'a, B> {
                 sess.apply_logits(chunk.to_vec());
             }
             self.stats.engine_steps += 1;
+            if tele {
+                telemetry::registry().engine_steps.fetch_add(1, Relaxed);
+            }
         }
         self.running = keep;
         finished
@@ -277,5 +350,55 @@ mod tests {
         assert!(sched.tick().is_empty());
         assert!(sched.is_idle());
         assert_eq!(sched.stats().engine_steps, 0);
+        assert_eq!(sched.stats().ticks, 1, "idle ticks still count");
+    }
+
+    #[test]
+    fn batched_tick_timing_matches_solo_tick_for_tick() {
+        let model = toy_model(5);
+        let budgets = [3usize, 1, 4, 2, 5, 2];
+
+        // Mixed batch at capacity 3: admissions interleave with retires.
+        let mut sched = Scheduler::new(&model, 3, Sampling::Greedy, 0);
+        for (i, &n) in budgets.iter().enumerate() {
+            sched.submit(vec![(i % 16) as i32, ((i + 5) % 16) as i32], n).unwrap();
+        }
+        let mut gens = sched.run_until_idle();
+        gens.sort_by_key(|g| g.id);
+        assert_eq!(gens.len(), budgets.len());
+
+        for g in &gens {
+            // Continuous batching admits, then samples every tick until
+            // the budget is spent: an admitted request is never stalled,
+            // whatever the batch composition around it.
+            assert_eq!(g.prefill_ticks, 1, "request {}", g.id);
+            assert!(g.tick_admitted >= 1, "request {}", g.id);
+            assert_eq!(
+                g.tick_finished - g.tick_admitted,
+                budgets[g.id] - 1,
+                "request {} span",
+                g.id
+            );
+        }
+        // Capacity 3 admits ids 0..3 on tick 1; later ids wait for slots.
+        assert_eq!(gens[0].tick_admitted, 1);
+        assert_eq!(gens[1].tick_admitted, 1);
+        assert_eq!(gens[2].tick_admitted, 1);
+        assert!(gens[3].tick_admitted > 1);
+
+        // Solo runs (dedicated scheduler per request): identical
+        // admit→finish spans, tick for tick.
+        for (i, &n) in budgets.iter().enumerate() {
+            let mut solo = Scheduler::new(&model, 1, Sampling::Greedy, 0);
+            solo.submit(vec![(i % 16) as i32, ((i + 5) % 16) as i32], n).unwrap();
+            let sg = solo.run_until_idle();
+            assert_eq!(sg.len(), 1);
+            assert_eq!(sg[0].tick_admitted, 1);
+            assert_eq!(
+                sg[0].tick_finished - sg[0].tick_admitted,
+                gens[i].tick_finished - gens[i].tick_admitted,
+                "request {i}: batched and solo spans must match"
+            );
+        }
     }
 }

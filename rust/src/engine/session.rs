@@ -7,6 +7,7 @@
 //! [`Backend::step_batch`].
 
 use super::{Backend, EngineState, Sampler, Sampling};
+use std::time::Instant;
 
 /// One request being decoded.
 #[derive(Debug, Clone)]
@@ -20,6 +21,17 @@ pub struct Session {
     pub state: EngineState,
     /// Logits for the next position, refreshed by every prefill/step.
     pub last_logits: Vec<f32>,
+    /// Scheduler tick this session was admitted on (1-based; 0 = not
+    /// scheduler-run).  Recorded unconditionally — integers are cheap.
+    pub tick_admitted: usize,
+    /// Ticks the admission prefill spanned (1 today; kept explicit for a
+    /// future chunked prefill).
+    pub prefill_ticks: usize,
+    /// When the request entered the queue (telemetry only; `None` while
+    /// telemetry is disabled or outside the scheduler).
+    pub(crate) submitted_at: Option<Instant>,
+    /// When this session's previous token was sampled (telemetry only).
+    pub(crate) last_sampled_at: Option<Instant>,
     sampler: Sampler,
 }
 
@@ -44,6 +56,10 @@ impl Session {
             generated: Vec::with_capacity(max_new_tokens),
             state,
             last_logits,
+            tick_admitted: 0,
+            prefill_ticks: 1,
+            submitted_at: None,
+            last_sampled_at: None,
             sampler: Sampler::new(sampling, seed),
         }
     }

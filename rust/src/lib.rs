@@ -29,7 +29,10 @@
 //! so mask sparsity turns into realized tokens/sec.  The [`engine`]
 //! module (DESIGN.md §10) is the stateful serving API on top: prefill a
 //! prompt once, then decode each token in O(1) via per-session recurrent
-//! state, with continuous batching across requests.
+//! state, with continuous batching across requests.  The [`telemetry`]
+//! module (DESIGN.md §14) is the observability layer over all of it:
+//! hot-path span profiling, latency histograms and serving metrics
+//! export, off by default and zero-cost when disabled.
 
 pub mod benchx;
 pub mod coordinator;
@@ -44,6 +47,7 @@ pub mod runtime;
 pub mod sparse;
 pub mod ssm;
 pub mod tasks;
+pub mod telemetry;
 pub mod tensor;
 pub mod threadx;
 pub mod train;

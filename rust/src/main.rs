@@ -48,6 +48,12 @@ SUBCOMMANDS:
       --load PATH            load a packed checkpoint (no re-packing) and
                              bench its decode throughput
       --sparsity 0.5         magnitude-prune level for --save
+      --telemetry            serve a continuous-batching workload with the
+                             telemetry layer on: per-stage time breakdown,
+                             TTFT / inter-token / queue-wait percentiles,
+                             batch occupancy, and an A/B overhead figure;
+                             snapshot folds into BENCH_serving.json
+                             (--requests/--batch/--prompt-len/--new/--seed)
   generate                   continuous-batching generation on the stateful
                              engine (host-only: random weights, byte vocab)
       --requests 8           queued requests
@@ -59,13 +65,18 @@ SUBCOMMANDS:
       --dtype f32            packed value dtype: f32 | f16 | i8
       --kernel simd          row + scan kernels: simd | scalar
       --seed 7               RNG seed (prompts + sampling)
+      --telemetry            record serving metrics during the run and print
+                             the latency/stage breakdown (BENCH_serving.json,
+                             'generate' section)
   help                       this text
 
 GLOBAL FLAGS:
   --artifacts DIR            AOT artifact dir (default: artifacts)
   --runs DIR                 checkpoint/run dir (default: runs)
   --reports DIR              experiment report dir (default: reports)
-  --fast                     reduced scales/samples for CI";
+  --fast                     reduced scales/samples for CI
+  --log-level info           library log verbosity: error|warn|info|debug
+                             (env: SPARSESSM_LOG; SPARSESSM_QUIET → error)";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -76,7 +87,13 @@ fn main() {
 }
 
 fn real_main(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["fast", "all"])?;
+    let args = Args::parse(argv, &["fast", "all", "telemetry"])?;
+    if let Some(lv) = args.get("log-level") {
+        let level = sparsessm::telemetry::log::Level::parse(lv).ok_or_else(|| {
+            anyhow::anyhow!("unknown --log-level '{lv}' (try: error, warn, info, debug)")
+        })?;
+        sparsessm::telemetry::log::set_level(level);
+    }
     let artifacts = args.get_or("artifacts", "artifacts").to_string();
     let runs = args.get_or("runs", "runs").to_string();
     let reports = args.get_or("reports", "reports").to_string();
@@ -208,6 +225,37 @@ fn sparse_bench(args: &Args) -> Result<()> {
     let kernel = Kernel::parse(kernel_name)
         .ok_or_else(|| anyhow::anyhow!("unknown --kernel '{kernel_name}' (try: simd, scalar)"))?;
 
+    if args.has("telemetry") {
+        // Serving-telemetry A/B: baseline leg with telemetry off, then the
+        // same workload instrumented.  A write failure here is a hard error
+        // (verify.sh smoke relies on the snapshot landing on disk).
+        use sparsessm::engine::bench;
+        let fast = args.has("fast");
+        let sparsity = args.get_f64("sparsity", 0.5)?;
+        let mut params = decode::m370_bench_params();
+        if sparsity > 0.0 {
+            magnitude_prune_all(&mut params, sparsity)?;
+        }
+        let policy = PackPolicy::auto().with_dtype(dtype).with_kernel(kernel);
+        let model = SparseModel::compile(&params, &policy)?;
+        let o = bench::ServeTelemetryOpts {
+            requests: args.get_usize("requests", if fast { 8 } else { 16 })?.max(1),
+            batch: bt,
+            prompt_len: args.get_usize("prompt-len", if fast { 16 } else { 48 })?.max(1),
+            new_tokens: args.get_usize("new", if fast { 12 } else { 48 })?.max(1),
+            sampling: sparsessm::engine::Sampling::Greedy,
+            seed: args.get_usize("seed", 7)? as u64,
+        };
+        let run = bench::serve_telemetry_run(&model, &o);
+        sparsessm::telemetry::validate_serving_snapshot(&run.section)?;
+        let rep = experiments::serve_telemetry_report(&run.section)?;
+        rep.print();
+        let log = bench::bench_serving_json_path();
+        bench::update_bench_serving_json(&log, "serving", run.section)?;
+        println!("serving snapshot written to {} (serving section)", log.display());
+        return Ok(());
+    }
+
     if let Some(path) = args.get("load") {
         let mut model = SparseModel::load(path)?;
         model.kernel = kernel;
@@ -322,6 +370,11 @@ fn generate(args: &Args) -> Result<()> {
         }
     );
 
+    let telemetry_on = args.has("telemetry");
+    if telemetry_on {
+        sparsessm::telemetry::reset();
+        sparsessm::telemetry::set_enabled(true);
+    }
     let mut sched = Scheduler::new(&model, batch, sampling, seed);
     let mut rng = Pcg::seeded(seed);
     let vocab = model.meta.vocab;
@@ -360,6 +413,24 @@ fn generate(args: &Args) -> Result<()> {
         st.peak_batch,
         st.prefill_tokens
     );
+    if telemetry_on {
+        use sparsessm::engine::bench;
+        use sparsessm::util::json;
+        sparsessm::telemetry::set_enabled(false);
+        let workload = json::obj(vec![
+            ("requests", json::num(requests as f64)),
+            ("batch", json::num(batch as f64)),
+            ("prompt_len", json::num(prompt_len as f64)),
+            ("new_tokens", json::num(new as f64)),
+            ("seed", json::num(seed as f64)),
+        ]);
+        let section = bench::serving_section_json(secs * 1e3, st, workload, None);
+        sparsessm::telemetry::validate_serving_snapshot(&section)?;
+        experiments::serve_telemetry_report(&section)?.print();
+        let log = bench::bench_serving_json_path();
+        bench::update_bench_serving_json(&log, "generate", section)?;
+        println!("serving snapshot written to {} (generate section)", log.display());
+    }
     Ok(())
 }
 

@@ -36,8 +36,9 @@ use crate::model::{FlatParams, ModelMeta};
 use crate::pruning::magnitude;
 use crate::rngx::Pcg;
 use crate::ssm::{selective_scan_k, selective_scan_with_state_plan, SsmInputs};
+use crate::telemetry::{LapTimer, Phase, Stage};
 use crate::util::json::{self, Json};
-use anyhow::{ensure, Context, Result};
+use anyhow::{ensure, Result};
 use std::path::Path;
 
 /// The shared host-only bench model: random weights at real m370 widths,
@@ -182,11 +183,15 @@ pub(crate) fn fused_layer_forward(
     let t = bt * l;
     debug_assert_eq!(x.len(), t * dm);
 
+    // Prefill-phase stage attribution (telemetry off → zero-cost no-op);
+    // norm/gate/residual glue is charged to its adjacent projection.
+    let mut lt = LapTimer::start(Phase::Prefill);
     let xn = rmsnorm(x, &layer.norm, dm);
     let mut x_in = vec![0.0f32; t * di];
     let mut res = vec![0.0f32; t * di];
     layer.in_proj.matmul_rows_into_k(&xn, t, 0, di, &mut x_in, kernel);
     layer.in_proj.matmul_rows_into_k(&xn, t, di, 2 * di, &mut res, kernel);
+    lt.lap(Stage::InProj);
 
     // Stash the conv window tail before the conv consumes x_in:
     // positions l−(K−1)..l−1 land in their ring slots so the first
@@ -203,6 +208,7 @@ pub(crate) fn fused_layer_forward(
     }
 
     let u = conv1d_causal_silu(&layer.conv_w, &layer.conv_b, &x_in, bt, l, di);
+    lt.lap(Stage::Conv);
 
     let mut delta_r = vec![0.0f32; t * dr];
     let mut bmat = vec![0.0f32; t * ds];
@@ -210,6 +216,7 @@ pub(crate) fn fused_layer_forward(
     layer.x_proj.matmul_rows_into_k(&u, t, 0, dr, &mut delta_r, kernel);
     layer.x_proj.matmul_rows_into_k(&u, t, dr, dr + ds, &mut bmat, kernel);
     layer.x_proj.matmul_rows_into_k(&u, t, dr + ds, dr + 2 * ds, &mut cmat, kernel);
+    lt.lap(Stage::XProj);
 
     let mut delta = layer.dt_proj.matmul_k(&delta_r, t, kernel); // [t, di]
     for row in delta.chunks_exact_mut(di) {
@@ -217,6 +224,7 @@ pub(crate) fn fused_layer_forward(
             *dv = softplus(*dv + bv);
         }
     }
+    lt.lap(Stage::DtProj);
 
     let (y, h_final) = selective_scan_with_state_plan(
         &SsmInputs {
@@ -235,6 +243,7 @@ pub(crate) fn fused_layer_forward(
     if let Some(h) = handoff {
         *h.h = h_final; // [1·di·ds]
     }
+    lt.lap(Stage::Scan);
 
     let mut gated = y;
     for (g, &rv) in gated.iter_mut().zip(&res) {
@@ -245,6 +254,7 @@ pub(crate) fn fused_layer_forward(
     for (xv, &ov) in x.iter_mut().zip(&out) {
         *xv += ov;
     }
+    lt.lap(Stage::OutProj);
 }
 
 /// Full forward over `tokens[bt, l]`, returning logits `[bt, l, vocab]`.
@@ -704,36 +714,12 @@ pub fn bench_kernels_json_path() -> std::path::PathBuf {
 }
 
 /// Merge one sweep's rows into the JSON perf log at `path` (an object
-/// keyed by sweep name), preserving every other section so
-/// `kernel_speed` and `quant_speed` runs accumulate into one file and
-/// the perf trajectory stays diffable across PRs.  Only a genuinely
-/// absent file starts a fresh log; an existing file that cannot be read
-/// or is not a JSON object is an error, not an overwrite — a corrupt
-/// log must never silently destroy the other sections' history.
+/// keyed by sweep name).  Thin wrapper over the shared section-merging
+/// writer [`json::update_json_section`], which `BENCH_serving.json`
+/// (`engine::bench`) uses too: preserves other sections, refuses to
+/// overwrite a corrupt or non-object log.
 pub fn update_bench_kernels_json(path: &Path, section: &str, rows: Json) -> Result<()> {
-    let mut root = match std::fs::read_to_string(path) {
-        Ok(text) => {
-            let parsed = Json::parse(&text).with_context(|| {
-                format!("existing {} is not valid JSON (refusing to overwrite)", path.display())
-            })?;
-            anyhow::ensure!(
-                matches!(parsed, Json::Obj(_)),
-                "existing {} is not a JSON object (refusing to overwrite)",
-                path.display()
-            );
-            parsed
-        }
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => json::obj(vec![]),
-        Err(e) => {
-            return Err(e).with_context(|| format!("reading {}", path.display()));
-        }
-    };
-    if let Json::Obj(m) = &mut root {
-        m.insert(section.to_string(), rows);
-    }
-    std::fs::write(path, root.to_string())
-        .with_context(|| format!("writing {}", path.display()))?;
-    Ok(())
+    json::update_json_section(path, section, rows)
 }
 
 /// `kernel_speed` rows as JSON (tokens/sec per format × dtype × kernel).

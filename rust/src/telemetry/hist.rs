@@ -1,0 +1,203 @@
+//! Log-bucketed latency histogram (HdrHistogram-lite, no deps).
+//!
+//! Values are binned into octaves subdivided into `2^LINEAR_BITS = 8`
+//! linear sub-buckets, so every bucket spans at most 12.5% of its lower
+//! bound — quantiles come back with exact *counts* (ranks are never
+//! approximated) and bounded *value* error.  All cells are atomics:
+//! recording is lock-free and safe from any thread, which is what the
+//! engine hot path and the scheduler need.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Sub-bucket resolution: 8 linear buckets per octave.
+pub const LINEAR_BITS: u32 = 3;
+const SUB: usize = 1 << LINEAR_BITS;
+/// Total bucket count covering the full `u64` range (top index 495).
+pub const N_BUCKETS: usize = (64 - LINEAR_BITS as usize + 1) * SUB;
+
+/// Bucket index for a value.  Values below `SUB` get exact unit buckets;
+/// above that, the high bit selects the octave and the next
+/// `LINEAR_BITS` bits select the sub-bucket.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let h = 63 - v.leading_zeros();
+    let shift = h - LINEAR_BITS;
+    (((h - LINEAR_BITS + 1) as usize) << LINEAR_BITS) + ((v >> shift) as usize & (SUB - 1))
+}
+
+/// Inclusive `[lower, upper]` value range mapped to bucket `i`.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    let base = i >> LINEAR_BITS;
+    let sub = (i & (SUB - 1)) as u64;
+    if base == 0 {
+        return (i as u64, i as u64);
+    }
+    let shift = (base - 1) as u32;
+    let lower = (SUB as u64 + sub) << shift;
+    // Written as lower + (2^shift - 1): the top bucket's upper bound is
+    // u64::MAX and the naive `lower + 2^shift - 1` order would overflow.
+    (lower, lower + ((1u64 << shift) - 1))
+}
+
+/// Thread-safe log-bucketed histogram with exact-count quantiles.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+        self.min.fetch_min(v, Relaxed);
+        self.max.fetch_max(v, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count() == 0 {
+            0
+        } else {
+            self.min.load(Relaxed)
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Value at quantile `q` in `[0, 1]`: the upper bound of the bucket
+    /// holding the sample of rank `floor(q * (n - 1))` — the same rank
+    /// convention as `benchx::summarize` — clamped to the observed max,
+    /// so a one-sample histogram reports that sample exactly.  Returns 0
+    /// when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((n - 1) as f64 * q.clamp(0.0, 1.0)) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Relaxed);
+            if seen > rank {
+                return bucket_bounds(i).1.min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    pub fn clear(&self) {
+        for b in &self.buckets {
+            b.store(0, Relaxed);
+        }
+        self.count.store(0, Relaxed);
+        self.sum.store(0, Relaxed);
+        self.min.store(u64::MAX, Relaxed);
+        self.max.store(0, Relaxed);
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_roundtrip_bounds_every_value() {
+        let probes = [
+            0u64,
+            1,
+            7,
+            8,
+            9,
+            15,
+            16,
+            100,
+            1_000,
+            65_535,
+            65_536,
+            1 << 40,
+            (1 << 40) + 12_345,
+            u64::MAX / 2,
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        for &v in &probes {
+            let i = bucket_index(v);
+            assert!(i < N_BUCKETS, "index {i} out of range for {v}");
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && v <= hi, "v={v} not in bucket {i} [{lo}, {hi}]");
+            // Relative width bound: (hi - lo) <= lo / 8 for log buckets.
+            if v >= SUB as u64 {
+                assert!(hi - lo <= lo / SUB as u64, "bucket {i} too wide: [{lo}, {hi}]");
+            }
+        }
+    }
+
+    #[test]
+    fn buckets_are_contiguous_and_ordered() {
+        let mut prev_hi = None;
+        for i in 0..N_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= hi);
+            if let Some(p) = prev_hi {
+                assert_eq!(lo, p + 1u64, "gap/overlap between buckets {} and {i}", i - 1);
+            }
+            prev_hi = Some(hi);
+        }
+        assert_eq!(prev_hi, Some(u64::MAX));
+    }
+
+    #[test]
+    fn mean_min_max_track_samples() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), 10);
+        assert_eq!(h.max(), 30);
+        assert!((h.mean() - 20.0).abs() < 1e-12);
+        h.clear();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Leveled stderr logging for library code (no env_logger in the
+//! offline vendor set).
+//!
+//! Library modules must not print unconditionally: report/table output
+//! belongs on stdout (CLI-facing), everything else goes through the
+//! `log_error!`/`log_warn!`/`log_info!`/`log_debug!` macros, which
+//! check the active level *before* formatting — a suppressed line costs
+//! one relaxed atomic load and allocates nothing.
+//!
+//! Level resolution, most specific wins: explicit `set_level` (the CLI
+//! `--log-level` flag) > `SPARSESSM_LOG=error|warn|info|debug` >
+//! `SPARSESSM_QUIET` set (→ `Error`, preserving the old quiet switch) >
+//! default `Info`.
+
+use std::sync::atomic::{AtomicU8, Ordering::Relaxed};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Cached active level; `UNSET` defers to the environment on first use.
+const UNSET: u8 = u8::MAX;
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+fn level_from_env() -> Level {
+    if let Ok(v) = std::env::var("SPARSESSM_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            return l;
+        }
+    }
+    if std::env::var_os("SPARSESSM_QUIET").is_some() {
+        return Level::Error;
+    }
+    Level::Info
+}
+
+/// Override the level explicitly (CLI `--log-level`); wins over env.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Relaxed);
+}
+
+/// True when a message at `l` would be emitted.
+#[inline]
+pub fn enabled_at(l: Level) -> bool {
+    let mut cur = LEVEL.load(Relaxed);
+    if cur == UNSET {
+        cur = level_from_env() as u8;
+        LEVEL.store(cur, Relaxed);
+    }
+    (l as u8) <= cur
+}
+
+/// Emit one line on stderr.  Callers go through the macros, which gate
+/// on `enabled_at` first.
+pub fn emit(l: Level, tag: &str, msg: &str) {
+    eprintln!("[{}:{tag}] {msg}", l.name());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($tag:expr, $($arg:tt)*) => {
+        if $crate::telemetry::log::enabled_at($crate::telemetry::log::Level::Error) {
+            $crate::telemetry::log::emit(
+                $crate::telemetry::log::Level::Error,
+                $tag,
+                &format!($($arg)*),
+            );
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($tag:expr, $($arg:tt)*) => {
+        if $crate::telemetry::log::enabled_at($crate::telemetry::log::Level::Warn) {
+            $crate::telemetry::log::emit(
+                $crate::telemetry::log::Level::Warn,
+                $tag,
+                &format!($($arg)*),
+            );
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($tag:expr, $($arg:tt)*) => {
+        if $crate::telemetry::log::enabled_at($crate::telemetry::log::Level::Info) {
+            $crate::telemetry::log::emit(
+                $crate::telemetry::log::Level::Info,
+                $tag,
+                &format!($($arg)*),
+            );
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($tag:expr, $($arg:tt)*) => {
+        if $crate::telemetry::log::enabled_at($crate::telemetry::log::Level::Debug) {
+            $crate::telemetry::log::emit(
+                $crate::telemetry::log::Level::Debug,
+                $tag,
+                &format!($($arg)*),
+            );
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert_eq!(Level::parse(Level::Debug.name()), Some(Level::Debug));
+    }
+
+    #[test]
+    fn set_level_gates_enabled_at() {
+        // Single test mutates the global level (tests share a process);
+        // it restores the env-derived level on exit.
+        let prev = level_from_env();
+        set_level(Level::Warn);
+        assert!(enabled_at(Level::Error));
+        assert!(enabled_at(Level::Warn));
+        assert!(!enabled_at(Level::Info));
+        assert!(!enabled_at(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled_at(Level::Debug));
+        set_level(prev);
+    }
+}

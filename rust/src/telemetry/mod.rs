@@ -1,0 +1,309 @@
+//! In-process observability: metrics registry, hot-path span timing,
+//! leveled logging, and a JSON snapshot surface (DESIGN.md §14).
+//!
+//! Everything is dependency-free and lock-free on the record path.  The
+//! layer is **off by default**: `enabled()` is one relaxed atomic load,
+//! `LapTimer` holds `None` and reads no clock, and the scheduler gates
+//! every histogram/counter touch on that flag — so the disabled step
+//! hot path does no telemetry work and allocates nothing.  Enabling
+//! (`--telemetry`) costs one clock read per stage boundary
+//! (`span::LapTimer`) plus a handful of atomic adds per tick.
+//!
+//! The registry is process-global: serving snapshots are taken after a
+//! workload completes (`snapshot_json`), and A/B overhead runs bracket
+//! each leg with `reset`/`set_enabled` (`engine::bench`).
+
+pub mod hist;
+pub mod log;
+pub mod span;
+
+pub use hist::Histogram;
+pub use span::{LapTimer, Phase, Stage};
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::OnceLock;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// True when telemetry recording is on (relaxed load — hot-path safe).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Relaxed);
+}
+
+/// One stage×phase accumulator cell.
+pub struct StageCell {
+    ns: AtomicU64,
+    calls: AtomicU64,
+}
+
+/// Process-global metrics: serving latency histograms, scheduler
+/// counters, and the per-phase × per-stage time accumulators fed by
+/// `LapTimer`.
+pub struct Registry {
+    /// Submit → first sampled token, µs.
+    pub ttft_us: Histogram,
+    /// Gap between consecutive sampled tokens of one session, µs.
+    pub inter_token_us: Histogram,
+    /// Submit → admission into the running batch, µs.
+    pub queue_wait_us: Histogram,
+    /// Running sessions per non-idle scheduler tick.
+    pub batch_occupancy: Histogram,
+    /// Admissions per non-idle tick.
+    pub admits_per_tick: Histogram,
+    /// Retirements per non-idle tick.
+    pub retires_per_tick: Histogram,
+
+    pub ticks: AtomicU64,
+    pub engine_steps: AtomicU64,
+    pub decoded_tokens: AtomicU64,
+    pub prefill_tokens: AtomicU64,
+    pub admitted: AtomicU64,
+    pub finished: AtomicU64,
+
+    stages: Vec<StageCell>,
+}
+
+impl Registry {
+    fn new() -> Registry {
+        Registry {
+            ttft_us: Histogram::new(),
+            inter_token_us: Histogram::new(),
+            queue_wait_us: Histogram::new(),
+            batch_occupancy: Histogram::new(),
+            admits_per_tick: Histogram::new(),
+            retires_per_tick: Histogram::new(),
+            ticks: AtomicU64::new(0),
+            engine_steps: AtomicU64::new(0),
+            decoded_tokens: AtomicU64::new(0),
+            prefill_tokens: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            finished: AtomicU64::new(0),
+            stages: (0..Phase::ALL.len() * Stage::ALL.len())
+                .map(|_| StageCell { ns: AtomicU64::new(0), calls: AtomicU64::new(0) })
+                .collect(),
+        }
+    }
+
+    #[inline]
+    fn cell(&self, phase: Phase, stage: Stage) -> &StageCell {
+        &self.stages[phase.idx() * Stage::ALL.len() + stage.idx()]
+    }
+
+    #[inline]
+    pub fn record_stage(&self, phase: Phase, stage: Stage, ns: u64) {
+        let c = self.cell(phase, stage);
+        c.ns.fetch_add(ns, Relaxed);
+        c.calls.fetch_add(1, Relaxed);
+    }
+
+    /// `(total ns, call count)` accumulated for one stage of one phase.
+    pub fn stage(&self, phase: Phase, stage: Stage) -> (u64, u64) {
+        let c = self.cell(phase, stage);
+        (c.ns.load(Relaxed), c.calls.load(Relaxed))
+    }
+
+    pub fn reset(&self) {
+        for h in [
+            &self.ttft_us,
+            &self.inter_token_us,
+            &self.queue_wait_us,
+            &self.batch_occupancy,
+            &self.admits_per_tick,
+            &self.retires_per_tick,
+        ] {
+            h.clear();
+        }
+        for c in [
+            &self.ticks,
+            &self.engine_steps,
+            &self.decoded_tokens,
+            &self.prefill_tokens,
+            &self.admitted,
+            &self.finished,
+        ] {
+            c.store(0, Relaxed);
+        }
+        for c in &self.stages {
+            c.ns.store(0, Relaxed);
+            c.calls.store(0, Relaxed);
+        }
+    }
+}
+
+pub fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::new)
+}
+
+/// Clear all recorded metrics (the enabled flag is left as-is).
+pub fn reset() {
+    registry().reset();
+}
+
+fn hist_json(h: &Histogram) -> Json {
+    json::obj(vec![
+        ("count", json::num(h.count() as f64)),
+        ("mean", json::num(h.mean())),
+        ("min", json::num(h.min() as f64)),
+        ("max", json::num(h.max() as f64)),
+        ("p50", json::num(h.quantile(0.50) as f64)),
+        ("p95", json::num(h.quantile(0.95) as f64)),
+        ("p99", json::num(h.quantile(0.99) as f64)),
+    ])
+}
+
+fn stages_json(phase: Phase) -> Json {
+    let reg = registry();
+    json::obj(
+        Stage::ALL
+            .iter()
+            .map(|&st| {
+                let (ns, calls) = reg.stage(phase, st);
+                (
+                    st.name(),
+                    json::obj(vec![
+                        ("ms", json::num(ns as f64 / 1e6)),
+                        ("calls", json::num(calls as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// Current registry contents as a JSON object: `counters`, `latency_us`
+/// (ttft / inter_token / queue_wait), `batch` (occupancy / admits / retires
+/// per tick), and `stages` (per phase, per stage `{ms, calls}`).
+pub fn snapshot_json() -> Json {
+    let reg = registry();
+    json::obj(vec![
+        (
+            "counters",
+            json::obj(vec![
+                ("ticks", json::num(reg.ticks.load(Relaxed) as f64)),
+                ("engine_steps", json::num(reg.engine_steps.load(Relaxed) as f64)),
+                ("decoded_tokens", json::num(reg.decoded_tokens.load(Relaxed) as f64)),
+                ("prefill_tokens", json::num(reg.prefill_tokens.load(Relaxed) as f64)),
+                ("admitted", json::num(reg.admitted.load(Relaxed) as f64)),
+                ("finished", json::num(reg.finished.load(Relaxed) as f64)),
+            ]),
+        ),
+        (
+            "latency_us",
+            json::obj(vec![
+                ("ttft", hist_json(&reg.ttft_us)),
+                ("inter_token", hist_json(&reg.inter_token_us)),
+                ("queue_wait", hist_json(&reg.queue_wait_us)),
+            ]),
+        ),
+        (
+            "batch",
+            json::obj(vec![
+                ("occupancy", hist_json(&reg.batch_occupancy)),
+                ("admits_per_tick", hist_json(&reg.admits_per_tick)),
+                ("retires_per_tick", hist_json(&reg.retires_per_tick)),
+            ]),
+        ),
+        (
+            "stages",
+            json::obj(vec![
+                ("prefill", stages_json(Phase::Prefill)),
+                ("step", stages_json(Phase::Step)),
+            ]),
+        ),
+    ])
+}
+
+fn check_hist(h: &Json, what: &str) -> Result<()> {
+    for key in ["count", "mean", "min", "max", "p50", "p95", "p99"] {
+        h.get(key).with_context(|| format!("{what}: missing '{key}'"))?;
+    }
+    let p50 = h.get("p50")?.as_f64()?;
+    let p95 = h.get("p95")?.as_f64()?;
+    let p99 = h.get("p99")?.as_f64()?;
+    if !(p50 <= p95 && p95 <= p99) {
+        bail!("{what}: percentiles not monotone (p50={p50}, p95={p95}, p99={p99})");
+    }
+    Ok(())
+}
+
+/// Validate a `serving` snapshot section (the schema the verify.sh smoke
+/// step checks): required keys present, p50 ≤ p95 ≤ p99 in every
+/// histogram, at least one decoded token, and per-stage times summing to
+/// no more than measured wall time (small slack for clock granularity).
+pub fn validate_serving_snapshot(s: &Json) -> Result<()> {
+    let wall_ms = s.get("wall_ms")?.as_f64()?;
+    if !wall_ms.is_finite() || wall_ms <= 0.0 {
+        bail!("wall_ms must be positive, got {wall_ms}");
+    }
+    s.get("decode_tok_s")?.as_f64()?;
+    let counters = s.get("counters")?;
+    for key in ["ticks", "engine_steps", "decoded_tokens", "prefill_tokens", "admitted", "finished"]
+    {
+        counters.get(key).with_context(|| format!("counters: missing '{key}'"))?;
+    }
+    if counters.get("decoded_tokens")?.as_f64()? < 1.0 {
+        bail!("snapshot decoded no tokens");
+    }
+    let lat = s.get("latency_us")?;
+    for key in ["ttft", "inter_token", "queue_wait"] {
+        check_hist(lat.get(key)?, &format!("latency_us.{key}"))?;
+    }
+    let batch = s.get("batch")?;
+    for key in ["occupancy", "admits_per_tick", "retires_per_tick"] {
+        check_hist(batch.get(key)?, &format!("batch.{key}"))?;
+    }
+    let stages = s.get("stages")?;
+    let mut stage_ms = 0.0;
+    for phase in Phase::ALL {
+        let ph = stages.get(phase.name())?;
+        for st in Stage::ALL {
+            let e = ph
+                .get(st.name())
+                .with_context(|| format!("stages.{}: missing '{}'", phase.name(), st.name()))?;
+            stage_ms += e.get("ms")?.as_f64()?;
+            e.get("calls")?.as_f64()?;
+        }
+    }
+    if stage_ms > wall_ms * 1.05 {
+        bail!("stage times sum to {stage_ms:.3} ms > wall {wall_ms:.3} ms");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_cells_accumulate_independently() {
+        // Registry is process-global; use distinct cells and deltas so
+        // this test is robust to other tests recording concurrently.
+        let reg = registry();
+        let (ns0, c0) = reg.stage(Phase::Prefill, Stage::Conv);
+        reg.record_stage(Phase::Prefill, Stage::Conv, 1_000);
+        reg.record_stage(Phase::Prefill, Stage::Conv, 500);
+        let (ns1, c1) = reg.stage(Phase::Prefill, Stage::Conv);
+        assert_eq!(ns1 - ns0, 1_500);
+        assert_eq!(c1 - c0, 2);
+    }
+
+    #[test]
+    fn snapshot_has_schema_shape() {
+        let snap = snapshot_json();
+        assert!(snap.get("counters").is_ok());
+        assert!(snap.get("latency_us").unwrap().get("ttft").is_ok());
+        assert!(snap.get("batch").unwrap().get("occupancy").is_ok());
+        let st = snap.get("stages").unwrap().get("step").unwrap();
+        for stage in Stage::ALL {
+            assert!(st.get(stage.name()).is_ok(), "missing stage {}", stage.name());
+        }
+    }
+}

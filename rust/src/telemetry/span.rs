@@ -1,0 +1,125 @@
+//! Hot-path span timing: engine phases, pipeline stages, and the
+//! `LapTimer` that attributes wall time to them.
+//!
+//! A `LapTimer` reads the clock **once per stage boundary** instead of
+//! twice per scoped guard: `start` takes the phase and an initial
+//! timestamp, each `lap(stage)` charges the time since the previous
+//! boundary to that stage's registry cell and rolls the baseline
+//! forward.  At ~40 boundaries per decoded token that is ~1µs/token of
+//! instrumentation — well under the 2% overhead budget.  When telemetry
+//! is disabled the baseline is `None`, so every call is a branch on an
+//! `Option` and nothing else: no clock read, no allocation.
+
+use std::time::Instant;
+
+/// Engine phase a stage measurement belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Whole-prompt forward (fused layer pass).
+    Prefill,
+    /// Single-token decode (solo or batch-major).
+    Step,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 2] = [Phase::Prefill, Phase::Step];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Step => "step",
+        }
+    }
+
+    #[inline]
+    pub(crate) fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Pipeline stage of the token hot path.  `Embed`..`Head` mirror the
+/// layer body in execution order; `Sample` is the scheduler's logits →
+/// token draw.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Embed,
+    InProj,
+    Conv,
+    XProj,
+    DtProj,
+    Scan,
+    OutProj,
+    Head,
+    Sample,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 9] = [
+        Stage::Embed,
+        Stage::InProj,
+        Stage::Conv,
+        Stage::XProj,
+        Stage::DtProj,
+        Stage::Scan,
+        Stage::OutProj,
+        Stage::Head,
+        Stage::Sample,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Embed => "embed",
+            Stage::InProj => "in_proj",
+            Stage::Conv => "conv",
+            Stage::XProj => "x_proj",
+            Stage::DtProj => "dt_proj",
+            Stage::Scan => "scan",
+            Stage::OutProj => "out_proj",
+            Stage::Head => "head",
+            Stage::Sample => "sample",
+        }
+    }
+
+    #[inline]
+    pub(crate) fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Stage-boundary timer for one phase.  Zero-cost no-op while telemetry
+/// is disabled (`last` stays `None`).
+pub struct LapTimer {
+    phase: Phase,
+    last: Option<Instant>,
+}
+
+impl LapTimer {
+    #[inline]
+    pub fn start(phase: Phase) -> LapTimer {
+        LapTimer { phase, last: crate::telemetry::enabled().then(Instant::now) }
+    }
+
+    /// Charge the time since the last boundary to `stage` and roll the
+    /// baseline forward.
+    #[inline]
+    pub fn lap(&mut self, stage: Stage) {
+        if let Some(prev) = self.last {
+            let now = Instant::now();
+            crate::telemetry::registry().record_stage(
+                self.phase,
+                stage,
+                now.duration_since(prev).as_nanos() as u64,
+            );
+            self.last = Some(now);
+        }
+    }
+
+    /// Roll the baseline forward without charging anyone — used to
+    /// exclude work that is not part of the instrumented pipeline.
+    #[inline]
+    pub fn skip(&mut self) {
+        if self.last.is_some() {
+            self.last = Some(Instant::now());
+        }
+    }
+}

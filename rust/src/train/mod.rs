@@ -112,9 +112,11 @@ pub fn train(
         last_loss = loss;
         if step % opts.log_every == 0 || step == 1 || step == opts.steps {
             losses.push((step, loss));
-            crate::util::log_line(
+            crate::log_info!(
                 "train",
-                &format!("{} step {step}/{} loss {loss:.4} lr {lr:.2e}", meta.name, opts.steps),
+                "{} step {step}/{} loss {loss:.4} lr {lr:.2e}",
+                meta.name,
+                opts.steps
             );
         }
     }

@@ -312,6 +312,37 @@ pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// Merge one named section into a JSON log file (an object at top
+/// level), preserving every other section so independent runs accumulate
+/// into one file and the perf trajectory stays diffable across PRs.
+/// Only a genuinely absent file starts a fresh log; an existing file
+/// that cannot be read or is not a JSON object is an error, not an
+/// overwrite — a corrupt log must never silently destroy the other
+/// sections' history.  Shared by `BENCH_kernels.json` (`sparse::decode`)
+/// and `BENCH_serving.json` (`engine::bench`).
+pub fn update_json_section(path: &std::path::Path, section: &str, rows: Json) -> Result<()> {
+    use anyhow::Context as _;
+    let mut top = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let parsed = Json::parse(&text).with_context(|| {
+                format!("existing {} is not valid JSON (refusing to overwrite)", path.display())
+            })?;
+            match parsed {
+                Json::Obj(m) => m,
+                _ => bail!(
+                    "existing {} is not a JSON object (refusing to overwrite)",
+                    path.display()
+                ),
+            }
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => BTreeMap::new(),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    top.insert(section.to_string(), rows);
+    std::fs::write(path, Json::Obj(top).to_string())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

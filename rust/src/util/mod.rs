@@ -45,17 +45,9 @@ pub fn fmt_metric(v: f64) -> String {
     }
 }
 
-/// Simple leveled logger (no env_logger offline); honors `SPARSESSM_QUIET`.
-pub fn log_line(tag: &str, msg: &str) {
-    if std::env::var_os("SPARSESSM_QUIET").is_none() {
-        eprintln!("[{tag}] {msg}");
-    }
-}
-
-#[macro_export]
-macro_rules! logi {
-    ($($arg:tt)*) => { $crate::util::log_line("info", &format!($($arg)*)) };
-}
+// Leveled logging lives in `crate::telemetry::log` (the `log_error!` /
+// `log_warn!` / `log_info!` / `log_debug!` macros); the old
+// unconditional `log_line` helper is gone.
 
 #[cfg(test)]
 mod tests {

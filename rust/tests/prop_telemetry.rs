@@ -1,0 +1,172 @@
+//! Telemetry acceptance tests (same in-repo property-test substitute as
+//! prop_engine.rs).
+//!
+//! The telemetry contract:
+//!
+//! * histogram quantiles match a sorted-vector oracle to within the
+//!   documented bucket resolution (≤12.5% + 1), including the empty /
+//!   one-sample / `u64::MAX` edge cases, and percentiles are monotone;
+//! * enabling telemetry never changes generated tokens — the serving
+//!   output is bit-identical with the layer on or off, for every packed
+//!   format × row kernel;
+//! * a serving snapshot produced by the A/B driver passes the schema
+//!   validator (`telemetry::validate_serving_snapshot`) that verify.sh
+//!   relies on.
+//!
+//! The registry and enabled flag are process-global, so every test that
+//! touches them serializes on one mutex (`tele_lock`); the harness runs
+//! integration tests in one process with concurrent threads.
+
+use sparsessm::engine::bench::{serve_telemetry_run, ServeTelemetryOpts};
+use sparsessm::engine::{Sampling, Scheduler};
+use sparsessm::model::toy::toy_flat_params_random;
+use sparsessm::rngx::Pcg;
+use sparsessm::sparse::compile::{magnitude_prune_all, PackPolicy};
+use sparsessm::sparse::{Format, Kernel, SparseModel};
+use sparsessm::telemetry::{self, Histogram};
+use std::sync::Mutex;
+
+/// Serializes tests that touch the process-global registry/enabled flag.
+fn tele_lock() -> &'static Mutex<()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    &LOCK
+}
+
+/// The histogram's value-error contract: `quantile` returns the upper
+/// bound of the bucket holding the rank-`⌊q·(n−1)⌋` sample (clamped to
+/// the true max), and buckets are ≤12.5% wide — so the reported value is
+/// never below the oracle and overshoots by at most `oracle/8 + 1`.
+fn assert_close_to_oracle(got: u64, oracle: u64, what: &str) {
+    assert!(
+        got >= oracle && got <= oracle + oracle / 8 + 1,
+        "{what}: histogram {got} vs oracle {oracle}"
+    );
+}
+
+#[test]
+fn histogram_quantiles_match_sorted_oracle() {
+    for case in 0u64..6 {
+        let mut rng = Pcg::seeded(0x7E1E ^ case);
+        let n = 50 + rng.below(2000);
+        // Mix scales so samples span many octaves, like real latencies.
+        let samples: Vec<u64> = (0..n)
+            .map(|_| {
+                let shift = rng.below(24) as u64;
+                (rng.below(1000) as u64) << shift
+            })
+            .collect();
+        let h = Histogram::new();
+        for &v in &samples {
+            h.record(v);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for q in [0.0, 0.25, 0.50, 0.90, 0.95, 0.99, 1.0] {
+            let rank = ((n - 1) as f64 * q) as usize;
+            assert_close_to_oracle(h.quantile(q), sorted[rank], &format!("case {case} q={q}"));
+        }
+        // Monotone percentiles, and exact count/min/max.
+        assert!(h.quantile(0.50) <= h.quantile(0.95));
+        assert!(h.quantile(0.95) <= h.quantile(0.99));
+        assert_eq!(h.count(), n as u64);
+        assert_eq!(h.min(), sorted[0]);
+        assert_eq!(h.max(), sorted[n - 1]);
+    }
+}
+
+#[test]
+fn histogram_edge_cases() {
+    // Empty: everything reads as zero.
+    let h = Histogram::new();
+    assert_eq!(h.count(), 0);
+    assert_eq!(h.min(), 0);
+    assert_eq!(h.max(), 0);
+    assert_eq!(h.quantile(0.5), 0);
+    assert_eq!(h.mean(), 0.0);
+
+    // One sample: the max clamp makes every quantile exact.
+    h.record(12_345);
+    for q in [0.0, 0.5, 0.99, 1.0] {
+        assert_eq!(h.quantile(q), 12_345, "one-sample q={q}");
+    }
+
+    // Overflow bucket: u64::MAX lands in the top bucket without wrapping.
+    let h = Histogram::new();
+    h.record(u64::MAX);
+    h.record(1);
+    assert_eq!(h.max(), u64::MAX);
+    assert_eq!(h.quantile(1.0), u64::MAX);
+    assert_eq!(h.quantile(0.0), 1);
+}
+
+/// One serving workload: submit `n` two-token prompts with mixed
+/// budgets, run to idle, return each request's tokens sorted by id.
+fn run_workload(model: &SparseModel, n: usize) -> Vec<Vec<i32>> {
+    let mut sched = Scheduler::new(model, 3, Sampling::Temperature(0.8), 42);
+    for i in 0..n {
+        let prompt = vec![(i % 16) as i32, ((i + 7) % 16) as i32];
+        sched.submit(prompt, 2 + i % 4).unwrap();
+    }
+    let mut gens = sched.run_until_idle();
+    gens.sort_by_key(|g| g.id);
+    gens.into_iter().map(|g| g.tokens).collect()
+}
+
+#[test]
+fn telemetry_never_changes_tokens() {
+    let _g = tele_lock().lock().unwrap_or_else(|e| e.into_inner());
+    for fmt in [Format::Dense, Format::Bitmask, Format::Csr, Format::Bcsr] {
+        for kernel in Kernel::ALL {
+            let mut params = toy_flat_params_random(4, 11);
+            magnitude_prune_all(&mut params, 0.5).unwrap();
+            let policy = PackPolicy::of(fmt).with_kernel(kernel);
+            let model = SparseModel::compile(&params, &policy).unwrap();
+
+            telemetry::set_enabled(false);
+            let baseline = run_workload(&model, 6);
+
+            telemetry::reset();
+            telemetry::set_enabled(true);
+            let instrumented = run_workload(&model, 6);
+            telemetry::set_enabled(false);
+
+            assert_eq!(
+                baseline, instrumented,
+                "{fmt:?}/{kernel:?}: telemetry changed generated tokens"
+            );
+            // The instrumented leg actually recorded serving activity.
+            let reg = telemetry::registry();
+            assert!(reg.ttft_us.count() >= 6, "{fmt:?}/{kernel:?}: no TTFT samples");
+            assert!(reg.batch_occupancy.count() > 0);
+        }
+    }
+}
+
+#[test]
+fn serving_snapshot_passes_schema_validation() {
+    let _g = tele_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let mut params = toy_flat_params_random(4, 23);
+    magnitude_prune_all(&mut params, 0.5).unwrap();
+    let model = SparseModel::compile(&params, &PackPolicy::auto()).unwrap();
+    let opts = ServeTelemetryOpts {
+        requests: 6,
+        batch: 3,
+        prompt_len: 4,
+        new_tokens: 5,
+        sampling: Sampling::Greedy,
+        seed: 9,
+    };
+    let run = serve_telemetry_run(&model, &opts);
+    telemetry::validate_serving_snapshot(&run.section)
+        .expect("A/B driver must emit a schema-valid snapshot");
+    assert!(run.wall_ms > 0.0);
+    assert!(run.decode_tok_s > 0.0 && run.disabled_tok_s > 0.0);
+    assert_eq!(run.stats.decoded_tokens, 6 * 5);
+    // Stage accounting: the step phase saw scan work and sample draws.
+    let section = &run.section;
+    let step = section.get("stages").unwrap().get("step").unwrap();
+    for stage in ["scan", "sample", "head"] {
+        let calls = step.get(stage).unwrap().get("calls").unwrap().as_f64().unwrap();
+        assert!(calls > 0.0, "step stage '{stage}' never recorded");
+    }
+}

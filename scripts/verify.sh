@@ -45,5 +45,15 @@ cargo test --release -q --test prop_scan prop_scan_simd_matches_scalar
 cargo test --release -q --test prop_scan prop_scan_chunked_state_handoff_exact
 cargo test --release -q --test prop_sparse prop_fused_forward_matches_unfused
 
+# Telemetry smoke (DESIGN.md §14): the release-mode serving A/B run must
+# produce a schema-valid snapshot (required keys, monotone percentiles,
+# stage times summing to ≤ wall) — the CLI hard-errors otherwise — and
+# the telemetry properties (histogram-vs-oracle, tokens bit-identical
+# with the layer on) must hold under release codegen too.
+step "telemetry smoke (release serving snapshot + telemetry props)"
+cargo test --release -q --test prop_telemetry
+cargo run --release --quiet -- sparse-bench --telemetry --fast
+test -s "$(dirname "$(cargo locate-project --message-format plain)")/BENCH_serving.json"
+
 echo
 echo "verify OK"
