@@ -18,11 +18,12 @@ use anyhow::{bail, Result};
 
 /// All experiment ids: the paper's tables/figures in paper order, plus
 /// repo-native serving experiments (`sparse_speed`, `serve_engine`,
-/// `quant_speed`, `kernel_speed`, `scan_speed`, `serve_telemetry`).
-pub const ALL_IDS: [&str; 21] = [
+/// `quant_speed`, `kernel_speed`, `scan_speed`, `serve_telemetry`,
+/// `prefix_cache`).
+pub const ALL_IDS: [&str; 22] = [
     "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "table9",
     "table10", "table11", "table12", "fig2", "fig3", "fig4", "sparse_speed", "serve_engine",
-    "quant_speed", "kernel_speed", "scan_speed", "serve_telemetry",
+    "quant_speed", "kernel_speed", "scan_speed", "serve_telemetry", "prefix_cache",
 ];
 
 pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
@@ -49,6 +50,7 @@ pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
         "kernel_speed" => kernel_speed(pipe)?,
         "scan_speed" => scan_speed(pipe)?,
         "serve_telemetry" => serve_telemetry(pipe)?,
+        "prefix_cache" => prefix_cache(pipe)?,
         other => bail!("unknown experiment id '{other}' (known: {:?})", ALL_IDS),
     };
     rep.note(&format!(
@@ -829,6 +831,120 @@ fn serve_telemetry(pipe: &Pipeline) -> Result<Report> {
     rep.note(
         "acceptance bar: telemetry-enabled decode tok/s within 2% of disabled; per-stage \
          times sum to ≤ wall time (laps are measured strictly inside the serving loop)",
+    );
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// prefix_cache — shared-prefix TTFT/prefill A/B with the state cache
+// ---------------------------------------------------------------------
+
+/// Render a `prefix_cache` A/B section as a human-readable report.
+/// Shared by the `prefix_cache` experiment and the CLI
+/// `sparse-bench --prefix-cache` path.
+pub fn prefix_cache_report(run: &engine::bench::PrefixCacheRun) -> Result<Report> {
+    let mut rep = Report::new(
+        "prefix_cache",
+        "prefix-state cache: shared-system-prompt TTFT and prefill throughput, cache off vs on",
+        &["Metric", "cache off", "cache on", "ratio"],
+    );
+    let ratio = |off: f64, on: f64| {
+        if on > 0.0 {
+            format!("{:.2}x", off / on)
+        } else {
+            "-".into()
+        }
+    };
+    rep.push_row(vec![
+        "ttft p50 (µs)".into(),
+        fmt_metric(run.ttft_p50_off_us),
+        fmt_metric(run.ttft_p50_on_us),
+        ratio(run.ttft_p50_off_us, run.ttft_p50_on_us),
+    ]);
+    rep.push_row(vec![
+        "ttft p95 (µs)".into(),
+        fmt_metric(run.ttft_p95_off_us),
+        fmt_metric(run.ttft_p95_on_us),
+        ratio(run.ttft_p95_off_us, run.ttft_p95_on_us),
+    ]);
+    rep.push_row(vec![
+        "prefill tok/s (scanned)".into(),
+        fmt_metric(run.prefill_tok_s_off),
+        fmt_metric(run.prefill_tok_s_on),
+        "-".into(),
+    ]);
+    rep.push_row(vec![
+        "prompt tokens scanned".into(),
+        run.scanned_off.to_string(),
+        run.scanned_on.to_string(),
+        ratio(run.scanned_off as f64, run.scanned_on as f64),
+    ]);
+    rep.push_row(vec![
+        "cache-hit tokens".into(),
+        "0".into(),
+        run.hit_tokens.to_string(),
+        "-".into(),
+    ]);
+    let sm = run.section.get("summary")?.get("cache")?;
+    rep.note(&format!(
+        "cache: hits {} · misses {} · insertions {} · evictions {} · {} entries · {} bytes",
+        sm.get("hits")?.as_usize()?,
+        sm.get("misses")?.as_usize()?,
+        sm.get("insertions")?.as_usize()?,
+        sm.get("evictions")?.as_usize()?,
+        sm.get("entries")?.as_usize()?,
+        sm.get("bytes")?.as_usize()?,
+    ));
+    rep.note("tokens are bit-identical across the two legs (cache resume is exact, ensure!d)");
+    Ok(rep)
+}
+
+fn prefix_cache(pipe: &Pipeline) -> Result<Report> {
+    // Host-only like serve_telemetry: TTFT and prefill cost depend on
+    // shapes and formats, not trained values.
+    let mut params = crate::sparse::decode::m370_bench_params();
+    crate::sparse::compile::magnitude_prune_all(&mut params, 0.5)?;
+    let model =
+        crate::sparse::SparseModel::compile(&params, &crate::sparse::compile::PackPolicy::auto())?;
+    let o = if pipe.fast {
+        engine::bench::PrefixCacheOpts {
+            requests: 8,
+            batch: 4,
+            shared_len: 48,
+            tail_len: 4,
+            new_tokens: 8,
+            chunk_tokens: 16,
+            budget_mb: 64,
+            sampling: engine::Sampling::Greedy,
+            seed: 13,
+        }
+    } else {
+        engine::bench::PrefixCacheOpts {
+            requests: 16,
+            batch: 4,
+            shared_len: 192,
+            tail_len: 8,
+            new_tokens: 24,
+            chunk_tokens: 32,
+            budget_mb: 64,
+            sampling: engine::Sampling::Greedy,
+            seed: 13,
+        }
+    };
+    let run = engine::bench::prefix_cache_run(&model, &o)?;
+    let mut rep = prefix_cache_report(&run)?;
+    // Best-effort, as in serve_telemetry: never discard a measured
+    // report over a perf-log write failure.
+    let log = engine::bench::bench_serving_json_path();
+    match engine::bench::update_bench_serving_json(&log, "prefix_cache", run.section.clone()) {
+        Ok(()) => {
+            rep.note(&format!("snapshot folded into {} (prefix_cache section)", log.display()));
+        }
+        Err(e) => rep.note(&format!("[warn] serving perf log not updated: {e:#}")),
+    }
+    rep.note(
+        "acceptance bar: with N requests sharing one prefix, the cache leg scans the shared \
+         prefix once (scanned ≈ shared + N·tail) and TTFT drops for every hit",
     );
     Ok(rep)
 }

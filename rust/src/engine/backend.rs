@@ -32,6 +32,19 @@ use crate::sparse::{Kernel, PARALLEL_MIN_WORK, SparseLayer, SparseModel};
 use crate::ssm::kernels::{scan_update, ScanStep};
 use crate::telemetry::{LapTimer, Phase, Stage};
 use crate::threadx;
+use anyhow::{ensure, Result};
+
+/// Shared prompt validation for the `Result`-returning prefill entry
+/// points (and [`super::Scheduler::submit`]): non-empty, every token in
+/// vocab.  Inside the engine a bad token is a caller bug (`step`
+/// asserts); at these library boundaries it is an error.
+pub(crate) fn validate_prompt(meta: &ModelMeta, tokens: &[i32]) -> Result<()> {
+    ensure!(!tokens.is_empty(), "prefill needs at least one token");
+    if let Some(&bad) = tokens.iter().find(|&&t| t < 0 || t as usize >= meta.vocab) {
+        anyhow::bail!("prompt token {bad} out of vocab {}", meta.vocab);
+    }
+    Ok(())
+}
 
 /// Per-session slices one layer's scan + gate consumes (all post-
 /// projection): δ, the conv output `u`, the token's B/C rows, and the
@@ -124,25 +137,51 @@ pub trait Backend {
 
     /// Consume a whole prompt, returning per-position logits
     /// `[len, vocab]` plus the recurrent state positioned after the last
-    /// token.  The default runs `step` sequentially; backends may
-    /// override with a batched implementation.
-    fn prefill(&self, tokens: &[i32]) -> (Vec<f32>, EngineState) {
-        assert!(!tokens.is_empty(), "prefill needs at least one token");
+    /// token.  Empty or out-of-vocab prompts are errors, not panics —
+    /// these are library entry points, like [`super::Scheduler::submit`].
+    /// The default runs `step` sequentially; backends may override with
+    /// a batched implementation.
+    fn prefill(&self, tokens: &[i32]) -> Result<(Vec<f32>, EngineState)> {
+        validate_prompt(self.meta(), tokens)?;
         let mut state = EngineState::new(self.meta());
         let mut logits = Vec::with_capacity(tokens.len() * self.meta().vocab);
         for &t in tokens {
             logits.extend(self.step(&mut state, t));
         }
-        (logits, state)
+        Ok((logits, state))
     }
 
     /// [`Backend::prefill`] returning only the final position's logits
     /// `[vocab]` — all the generation loop needs.  Backends can override
     /// to skip the head projection for earlier positions.
-    fn prefill_last(&self, tokens: &[i32]) -> (Vec<f32>, EngineState) {
+    fn prefill_last(&self, tokens: &[i32]) -> Result<(Vec<f32>, EngineState)> {
         let vocab = self.meta().vocab;
-        let (logits, state) = self.prefill(tokens);
-        (logits[(tokens.len() - 1) * vocab..].to_vec(), state)
+        let (logits, state) = self.prefill(tokens)?;
+        Ok((logits[(tokens.len() - 1) * vocab..].to_vec(), state))
+    }
+
+    /// Continue a prefill from wherever `state` already sits: consume
+    /// `tokens` starting at position `state.seq_len`, advancing the
+    /// state in place.  Returns the final position's logits when
+    /// `want_logits` (the chunk completes a prompt), `None` otherwise
+    /// (an intermediate chunk — the head projection is skipped
+    /// entirely).  Resuming is **bit-exact**: a prompt prefilled in any
+    /// chunking, from a fresh state or a cached snapshot, yields the
+    /// same logits and state as one whole-prompt [`Backend::prefill`]
+    /// (pinned by `tests/prop_engine.rs`).  The default is a sequential
+    /// `step` loop; backends may override with a batched implementation.
+    fn prefill_resume(
+        &self,
+        state: &mut EngineState,
+        tokens: &[i32],
+        want_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        validate_prompt(self.meta(), tokens)?;
+        let mut last = None;
+        for &t in tokens {
+            last = Some(self.step(state, t));
+        }
+        Ok(want_logits.then(|| last.expect("tokens validated non-empty")))
     }
 
     /// Advance many independent sessions one token each, returning
@@ -172,15 +211,34 @@ impl Backend for SparseModel {
     /// Batched prefill: whole-prompt packed matmuls and one striped scan
     /// per layer (same kernels as the full-recompute path), capturing the
     /// conv tail and the scan's final hidden state for the handoff.
-    fn prefill(&self, tokens: &[i32]) -> (Vec<f32>, EngineState) {
-        sparse_prefill(self, tokens, false)
+    fn prefill(&self, tokens: &[i32]) -> Result<(Vec<f32>, EngineState)> {
+        let mut state = EngineState::new(&self.meta);
+        let logits = sparse_prefill_from(self, &mut state, tokens, Head::All)?
+            .expect("Head::All always returns logits");
+        Ok((logits, state))
     }
 
     /// Batched prefill that runs the tied head only for the prompt's
     /// final position — admission cost stays O(prompt) in the layers but
     /// O(1) in the head/vocab.
-    fn prefill_last(&self, tokens: &[i32]) -> (Vec<f32>, EngineState) {
-        sparse_prefill(self, tokens, true)
+    fn prefill_last(&self, tokens: &[i32]) -> Result<(Vec<f32>, EngineState)> {
+        let mut state = EngineState::new(&self.meta);
+        let logits = sparse_prefill_from(self, &mut state, tokens, Head::Last)?
+            .expect("Head::Last always returns logits");
+        Ok((logits, state))
+    }
+
+    /// Batched chunk resume: the same fused layer pass as a cold
+    /// prefill, seeded from `state`'s scan hidden states and conv rings
+    /// (`ScanHandoff::pos > 0`) instead of zeros — what the scheduler's
+    /// chunked prefill and the prefix cache's exact resume run on.
+    fn prefill_resume(
+        &self,
+        state: &mut EngineState,
+        tokens: &[i32],
+        want_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        sparse_prefill_from(self, state, tokens, if want_logits { Head::Last } else { Head::None })
     }
 
     /// Batch-major fused step for many sessions: one multi-token matmul
@@ -267,24 +325,42 @@ fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<
     logits
 }
 
-/// Whole-prompt prefill on the packed model: the fused layer forward
-/// with bt=1 ([`fused_layer_forward`] — the exact op sequence of the
-/// `forward_logits` oracle), with state capture (conv tail into the
-/// ring, scan final state) threaded through its [`ScanHandoff`].  With
-/// `last_only`, the final rmsnorm + tied head run on the last position
-/// alone.
-fn sparse_prefill(model: &SparseModel, tokens: &[i32], last_only: bool) -> (Vec<f32>, EngineState) {
-    assert!(!tokens.is_empty(), "prefill needs at least one token");
+/// What the tied head computes after a prefill chunk: nothing (an
+/// intermediate chunk), the final position (serving admission), or
+/// every position (the logits-for-all `prefill` contract).
+enum Head {
+    None,
+    Last,
+    All,
+}
+
+/// Prompt-chunk prefill on the packed model, from wherever `state`
+/// sits: the fused layer forward with bt=1 ([`fused_layer_forward`] —
+/// the exact op sequence of the `forward_logits` oracle), with state
+/// capture and resume (conv ring, scan hidden state, chunk position)
+/// threaded through its [`ScanHandoff`].  A fresh state runs the cold
+/// path literally; `state.seq_len > 0` resumes bit-exactly — the scan
+/// seeds from the stored `h`, the conv reads its left context from the
+/// ring.  Every prefill surface (`prefill`, `prefill_last`,
+/// `prefill_resume`) funnels through this one function, which is what
+/// makes chunked == whole-prompt an identity rather than a theorem
+/// about two code paths.
+fn sparse_prefill_from(
+    model: &SparseModel,
+    state: &mut EngineState,
+    tokens: &[i32],
+    head: Head,
+) -> Result<Option<Vec<f32>>> {
+    ensure!(!tokens.is_empty(), "prefill needs at least one token");
     let meta = &model.meta;
     let dm = meta.d_model;
     let kernel = model.kernel;
     let l = tokens.len();
-    let mut state = EngineState::new(meta);
+    let pos = state.seq_len;
+    debug_assert_eq!(state.layers.len(), model.layers.len());
 
-    // Prompts are validated at the serving boundary (Scheduler::submit);
-    // inside the engine a bad token is a caller bug, not a request error.
     let mut lt = LapTimer::start(Phase::Prefill);
-    let mut x = embed_tokens(model, tokens).expect("prefill tokens validated by the caller");
+    let mut x = embed_tokens(model, tokens)?;
     lt.lap(Stage::Embed);
 
     for (layer, lst) in model.layers.iter().zip(&mut state.layers) {
@@ -296,21 +372,27 @@ fn sparse_prefill(model: &SparseModel, tokens: &[i32], last_only: bool) -> (Vec<
             &mut x,
             1,
             l,
-            Some(ScanHandoff { h: &mut lst.h, conv: &mut lst.conv }),
+            Some(ScanHandoff { h: &mut lst.h, conv: &mut lst.conv, pos }),
         );
     }
 
-    state.seq_len = l;
+    state.seq_len = pos + l;
     lt.skip(); // layer time was charged inside fused_layer_forward
-    let logits = if last_only {
-        let xn = rmsnorm(&x[(l - 1) * dm..], &model.norm_f, dm);
-        model.head.matvec_k(&xn, kernel)
-    } else {
-        let xn = rmsnorm(&x, &model.norm_f, dm);
-        model.head.matmul_k(&xn, l, kernel)
+    let logits = match head {
+        Head::None => None,
+        Head::Last => {
+            let xn = rmsnorm(&x[(l - 1) * dm..], &model.norm_f, dm);
+            Some(model.head.matvec_k(&xn, kernel))
+        }
+        Head::All => {
+            let xn = rmsnorm(&x, &model.norm_f, dm);
+            Some(model.head.matmul_k(&xn, l, kernel))
+        }
     };
-    lt.lap(Stage::Head);
-    (logits, state)
+    if logits.is_some() {
+        lt.lap(Stage::Head);
+    }
+    Ok(logits)
 }
 
 /// Batch-major fused step (the tentpole of the step-decode path): lay
@@ -627,7 +709,7 @@ mod tests {
         let p = toy_flat_params_random(4, 1);
         let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
         let tokens = [1i32, 2, 3, 4, 5];
-        let (logits, state) = model.prefill(&tokens);
+        let (logits, state) = model.prefill(&tokens).unwrap();
         assert_eq!(logits.len(), tokens.len() * 16);
         assert_eq!(state.seq_len, tokens.len());
         assert!(logits.iter().all(|v| v.is_finite()));
@@ -640,7 +722,7 @@ mod tests {
         let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
         let tokens = [3i32, 1, 4, 1, 5, 9, 2, 6];
         let want = forward_logits(&model, &tokens, 1, tokens.len()).unwrap();
-        let (mut got, mut state) = model.prefill(&tokens[..3]);
+        let (mut got, mut state) = model.prefill(&tokens[..3]).unwrap();
         for &t in &tokens[3..] {
             got.extend(model.step(&mut state, t));
         }
@@ -657,8 +739,8 @@ mod tests {
         magnitude_prune_all(&mut p, 0.5).unwrap();
         let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
         let tokens = [2i32, 7, 1, 8, 2, 8];
-        let (full, fs) = model.prefill(&tokens);
-        let (last, ls) = model.prefill_last(&tokens);
+        let (full, fs) = model.prefill(&tokens).unwrap();
+        let (last, ls) = model.prefill_last(&tokens).unwrap();
         assert_eq!(last.len(), 16);
         assert_eq!(&last[..], &full[(tokens.len() - 1) * 16..]);
         assert_eq!(fs, ls);
@@ -669,8 +751,8 @@ mod tests {
         let p = toy_flat_params_random(4, 3);
         let model = SparseModel::compile(&p, &PackPolicy::dense()).unwrap();
         let tokens = [7i32, 0, 15, 2, 9];
-        let (want, ws) = model.prefill(&tokens);
-        let (got, gs) = Backend::prefill(&p, &tokens);
+        let (want, ws) = model.prefill(&tokens).unwrap();
+        let (got, gs) = Backend::prefill(&p, &tokens).unwrap();
         assert_eq!(ws.seq_len, gs.seq_len);
         for (i, (u, v)) in got.iter().zip(&want).enumerate() {
             assert!((u - v).abs() < 1e-4, "logit {i}: {u} vs {v}");
@@ -684,7 +766,7 @@ mod tests {
         let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
         let prompts: [&[i32]; 3] = [&[1, 2, 3], &[4, 5], &[6, 7, 8, 9]];
         let mut states: Vec<EngineState> =
-            prompts.iter().map(|pr| model.prefill(pr).1).collect();
+            prompts.iter().map(|pr| model.prefill(pr).unwrap().1).collect();
         let mut solo = states.clone();
         let tokens = [10i32, 11, 12];
         let batched = model.step_batch(&mut states, &tokens);

@@ -1,13 +1,16 @@
 //! Serving measurements for the stateful engine: steady-state step
 //! decode (O(1) per token) against the full-recompute baseline (O(L) per
 //! generated token via `sparse::decode::forward_logits`), plus the
-//! serving-telemetry workload driver ([`serve_telemetry_run`]) whose
+//! serving-telemetry workload driver ([`serve_telemetry_run`]) and the
+//! shared-prefix prefix-cache A/B ([`prefix_cache_run`]) whose
 //! snapshots fold into `BENCH_serving.json`.
 //!
-//! Shared by the CLI `sparse-bench --mode step` / `--telemetry`, the
-//! `serve_engine` / `serve_telemetry` experiments and the `engine_*`
-//! cargo-bench groups, so every surface reports the same numbers.
+//! Shared by the CLI `sparse-bench --mode step` / `--telemetry` /
+//! `--prefix-cache`, the `serve_engine` / `serve_telemetry` /
+//! `prefix_cache` experiments and the `engine_*` cargo-bench groups, so
+//! every surface reports the same numbers.
 
+use super::prefix_cache::{PrefixCache, PrefixCacheConfig};
 use super::{Backend, EngineState, Sampling, Scheduler, SchedulerStats};
 use crate::benchx::{self, BenchResult};
 use crate::model::FlatParams;
@@ -16,10 +19,10 @@ use crate::sparse::decode;
 use crate::sparse::Dtype;
 use crate::sparse::Kernel;
 use crate::sparse::SparseModel;
-use crate::telemetry;
+use crate::telemetry::{self, Phase, Stage};
 use crate::util::json::{self, Json};
 use crate::util::Stopwatch;
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use std::path::Path;
 
 /// Steady-state batched step decode: prefill `bt` sessions with random
@@ -40,7 +43,7 @@ pub fn step_decode_throughput<B: Backend>(
     let mut states: Vec<EngineState> = (0..bt)
         .map(|_| {
             let prompt: Vec<i32> = (0..l).map(|_| rng.below(vocab) as i32).collect();
-            backend.prefill(&prompt).1
+            backend.prefill(&prompt).expect("bench prompts are in-vocab").1
         })
         .collect();
     let r = benchx::bench_for(name, budget_ms, || {
@@ -241,6 +244,175 @@ pub fn serve_telemetry_run<B: Backend>(backend: &B, o: &ServeTelemetryOpts) -> S
     ServeTelemetryRun { wall_ms, decode_tok_s, disabled_tok_s, stats, section }
 }
 
+/// A shared-prefix continuous-batching workload for the prefix-cache
+/// A/B: every prompt is one common `shared_len`-token system prefix
+/// followed by a unique `tail_len`-token suffix — the traffic shape the
+/// cache targets (N requests paying one shared prefill).
+#[derive(Debug, Clone)]
+pub struct PrefixCacheOpts {
+    pub requests: usize,
+    pub batch: usize,
+    /// Tokens in the prefix every prompt shares.
+    pub shared_len: usize,
+    /// Unique per-request suffix tokens.
+    pub tail_len: usize,
+    pub new_tokens: usize,
+    /// Cache snapshot stride *and* per-tick prefill chunk, tokens.
+    pub chunk_tokens: usize,
+    /// Cache byte budget, MiB.
+    pub budget_mb: usize,
+    pub sampling: Sampling,
+    pub seed: u64,
+}
+
+impl PrefixCacheOpts {
+    fn workload_json(&self) -> Json {
+        json::obj(vec![
+            ("requests", json::num(self.requests as f64)),
+            ("batch", json::num(self.batch as f64)),
+            ("shared_len", json::num(self.shared_len as f64)),
+            ("tail_len", json::num(self.tail_len as f64)),
+            ("new_tokens", json::num(self.new_tokens as f64)),
+            ("chunk_tokens", json::num(self.chunk_tokens as f64)),
+            ("budget_mb", json::num(self.budget_mb as f64)),
+            ("seed", json::num(self.seed as f64)),
+        ])
+    }
+
+    fn prompts(&self, vocab: usize) -> Vec<Vec<i32>> {
+        let mut rng = Pcg::seeded(self.seed ^ 0x50F1_CACE);
+        let shared: Vec<i32> = (0..self.shared_len).map(|_| rng.below(vocab) as i32).collect();
+        (0..self.requests)
+            .map(|_| {
+                let mut p = shared.clone();
+                p.extend((0..self.tail_len).map(|_| rng.below(vocab) as i32));
+                p
+            })
+            .collect()
+    }
+}
+
+/// One measured leg of the prefix-cache A/B.
+struct PrefixLeg {
+    section: Json,
+    tokens: Vec<Vec<i32>>,
+    ttft_p50_us: f64,
+    ttft_p95_us: f64,
+    prefill_tok_s: f64,
+    scanned: usize,
+    hit_tokens: usize,
+    cache_stats: Option<Json>,
+}
+
+fn run_prefix_leg<B: Backend>(
+    backend: &B,
+    o: &PrefixCacheOpts,
+    prompts: &[Vec<i32>],
+    with_cache: bool,
+) -> Result<PrefixLeg> {
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    let mut sched =
+        Scheduler::new(backend, o.batch, o.sampling, o.seed).with_prefill_chunk(o.chunk_tokens);
+    if with_cache {
+        sched = sched.with_prefix_cache(PrefixCache::new(PrefixCacheConfig {
+            chunk_tokens: o.chunk_tokens.max(1),
+            budget_bytes: o.budget_mb.max(1) << 20,
+        }));
+    }
+    for p in prompts {
+        sched.submit(p.clone(), o.new_tokens)?;
+    }
+    let sw = Stopwatch::new();
+    let mut gens = sched.run_until_idle();
+    let wall_ms = sw.millis();
+    telemetry::set_enabled(false);
+    gens.sort_by_key(|g| g.id);
+    let tokens: Vec<Vec<i32>> = gens.into_iter().map(|g| g.tokens).collect();
+    let stats = sched.stats().clone();
+
+    let reg = telemetry::registry();
+    let prefill_ms =
+        Stage::ALL.iter().map(|&st| reg.stage(Phase::Prefill, st).0).sum::<u64>() as f64 / 1e6;
+    let leg = PrefixLeg {
+        ttft_p50_us: reg.ttft_us.quantile(0.50) as f64,
+        ttft_p95_us: reg.ttft_us.quantile(0.95) as f64,
+        prefill_tok_s: stats.prefill_scanned_tokens as f64 / (prefill_ms / 1e3).max(1e-9),
+        scanned: stats.prefill_scanned_tokens,
+        hit_tokens: stats.cache_hit_tokens,
+        cache_stats: sched.prefix_cache().map(|c| c.stats_json()),
+        tokens,
+        section: serving_section_json(wall_ms, &stats, o.workload_json(), None),
+    };
+    Ok(leg)
+}
+
+/// Result of one prefix-cache A/B measurement ([`prefix_cache_run`]).
+pub struct PrefixCacheRun {
+    pub ttft_p50_off_us: f64,
+    pub ttft_p50_on_us: f64,
+    pub ttft_p95_off_us: f64,
+    pub ttft_p95_on_us: f64,
+    pub prefill_tok_s_off: f64,
+    pub prefill_tok_s_on: f64,
+    /// Prompt tokens scanned without / with the cache.
+    pub scanned_off: usize,
+    pub scanned_on: usize,
+    /// Prompt tokens the cache leg skipped via snapshot hits.
+    pub hit_tokens: usize,
+    /// The full `prefix_cache` section: `workload`, `off`/`on` legs
+    /// (each a validated serving snapshot), `summary`.
+    pub section: Json,
+}
+
+/// Run the shared-prefix workload twice — chunked prefill without the
+/// cache, then with it — both telemetry-enabled, and assemble the
+/// `prefix_cache` perf-log section.  Generated tokens must be
+/// bit-identical across the legs (cache resume is exact); this is
+/// `ensure!`d, never assumed.  Leaves telemetry disabled on return.
+pub fn prefix_cache_run<B: Backend>(backend: &B, o: &PrefixCacheOpts) -> Result<PrefixCacheRun> {
+    ensure!(o.requests > 0 && o.shared_len > 0 && o.new_tokens > 0, "empty prefix-cache workload");
+    ensure!(o.tail_len > 0, "tails must be non-empty so the full prompt is never fully cached");
+    let prompts = o.prompts(backend.meta().vocab);
+
+    let off = run_prefix_leg(backend, o, &prompts, false)?;
+    let on = run_prefix_leg(backend, o, &prompts, true)?;
+    ensure!(off.tokens == on.tokens, "prefix cache changed generated tokens");
+    telemetry::validate_serving_snapshot(&off.section)?;
+    telemetry::validate_serving_snapshot(&on.section)?;
+
+    let summary = json::obj(vec![
+        ("ttft_p50_off_us", json::num(off.ttft_p50_us)),
+        ("ttft_p50_on_us", json::num(on.ttft_p50_us)),
+        ("ttft_p95_off_us", json::num(off.ttft_p95_us)),
+        ("ttft_p95_on_us", json::num(on.ttft_p95_us)),
+        ("prefill_tok_s_off", json::num(off.prefill_tok_s)),
+        ("prefill_tok_s_on", json::num(on.prefill_tok_s)),
+        ("scanned_tokens_off", json::num(off.scanned as f64)),
+        ("scanned_tokens_on", json::num(on.scanned as f64)),
+        ("cache_hit_tokens", json::num(on.hit_tokens as f64)),
+        ("cache", on.cache_stats.clone().unwrap_or_else(|| json::obj(vec![]))),
+    ]);
+    let section = json::obj(vec![
+        ("workload", o.workload_json()),
+        ("off", off.section),
+        ("on", on.section),
+        ("summary", summary),
+    ]);
+    Ok(PrefixCacheRun {
+        ttft_p50_off_us: off.ttft_p50_us,
+        ttft_p50_on_us: on.ttft_p50_us,
+        ttft_p95_off_us: off.ttft_p95_us,
+        ttft_p95_on_us: on.ttft_p95_us,
+        prefill_tok_s_off: off.prefill_tok_s,
+        prefill_tok_s_on: on.prefill_tok_s,
+        scanned_off: off.scanned,
+        scanned_on: on.scanned,
+        hit_tokens: on.hit_tokens,
+        section,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,6 +426,31 @@ mod tests {
         let (r, tps) = step_decode_throughput(&model, "toy step", 2, 4, 1.0, 5);
         assert!(tps > 0.0);
         assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn prefix_workload_shares_prefix_with_unique_tails() {
+        let o = PrefixCacheOpts {
+            requests: 3,
+            batch: 2,
+            shared_len: 8,
+            tail_len: 2,
+            new_tokens: 4,
+            chunk_tokens: 4,
+            budget_mb: 1,
+            sampling: Sampling::Greedy,
+            seed: 11,
+        };
+        let prompts = o.prompts(16);
+        assert_eq!(prompts.len(), 3);
+        for p in &prompts {
+            assert_eq!(p.len(), 10);
+            assert_eq!(p[..8], prompts[0][..8], "shared system prefix");
+            assert!(p.iter().all(|&t| (0..16).contains(&t)));
+        }
+        // prefix_cache_run itself (which resets the global telemetry
+        // registry) is exercised under the telemetry lock in
+        // tests/prop_telemetry.rs, not here.
     }
 
     #[test]

@@ -21,6 +21,14 @@
 //! * [`sampler`]   — greedy / temperature [`Sampler`].
 //! * [`scheduler`] — [`Scheduler`]: continuous batching; queued
 //!                   requests join the running batch as others finish.
+//!                   Prefill is optionally *chunked* (long prompts
+//!                   spread across ticks instead of stalling the batch)
+//!                   and optionally served from a [`PrefixCache`].
+//! * [`prefix_cache`] — content-addressed store of prompt-prefix →
+//!                   [`EngineState`] snapshots (DESIGN.md §15): Mamba's
+//!                   O(1) recurrent state makes a cached prefix of any
+//!                   length cost a few hundred KB, so shared system
+//!                   prompts prefill once; resume is bit-exact.
 //! * [`bench`]     — step-decode vs full-recompute throughput rows
 //!                   shared by the CLI, the `serve_engine` experiment
 //!                   and `cargo bench`; plus the serving-telemetry
@@ -38,12 +46,14 @@
 
 pub mod backend;
 pub mod bench;
+pub mod prefix_cache;
 pub mod sampler;
 pub mod scheduler;
 pub mod session;
 pub mod state;
 
 pub use backend::Backend;
+pub use prefix_cache::{CacheStats, PrefixCache, PrefixCacheConfig};
 pub use sampler::{Sampler, Sampling};
 pub use scheduler::{session_seed, Generation, Request, Scheduler, SchedulerStats};
 pub use session::Session;

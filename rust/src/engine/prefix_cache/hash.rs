@@ -1,0 +1,87 @@
+//! Rolling content hash over token streams.
+//!
+//! FNV-1a over each token's little-endian bytes: cheap, dependency-free
+//! and *incremental* — extending a prefix by one token is four byte
+//! folds, so the scheduler can address every chunk boundary of a prompt
+//! in one left-to-right pass.  Hash quality only affects lookup cost,
+//! never correctness: the store compares the stored token prefix on
+//! every hit, so a colliding hash can at worst miss, not lie.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a hasher over a token stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixHasher {
+    state: u64,
+}
+
+impl Default for PrefixHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PrefixHasher {
+    pub fn new() -> PrefixHasher {
+        PrefixHasher { state: FNV_OFFSET }
+    }
+
+    /// Fold one token into the running hash.
+    #[inline]
+    pub fn push(&mut self, token: i32) {
+        let mut h = self.state;
+        for byte in token.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.state = h;
+    }
+
+    /// Hash of everything pushed so far.
+    #[inline]
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// Hash of a whole token slice (one-shot convenience over
+/// [`PrefixHasher`]).
+pub fn prefix_hash(tokens: &[i32]) -> u64 {
+    let mut h = PrefixHasher::new();
+    for &t in tokens {
+        h.push(t);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn incremental_matches_one_shot() {
+        let tokens = [3i32, 1, 4, 1, 5, 9, 2, 6];
+        let mut h = PrefixHasher::new();
+        for (i, &t) in tokens.iter().enumerate() {
+            h.push(t);
+            assert_eq!(h.finish(), prefix_hash(&tokens[..=i]), "prefix {}", i + 1);
+        }
+    }
+
+    #[test]
+    fn distinguishes_order_and_length() {
+        assert_ne!(prefix_hash(&[1, 2]), prefix_hash(&[2, 1]));
+        assert_ne!(prefix_hash(&[1]), prefix_hash(&[1, 0]));
+        assert_ne!(prefix_hash(&[]), prefix_hash(&[0]));
+        assert_eq!(prefix_hash(&[7, 8, 9]), prefix_hash(&[7, 8, 9]));
+    }
+
+    #[test]
+    fn negative_tokens_hash_distinctly() {
+        // The store rejects negatives at submit, but the hash itself must
+        // not alias them onto small positives.
+        assert_ne!(prefix_hash(&[-1]), prefix_hash(&[1]));
+        assert_ne!(prefix_hash(&[-1]), prefix_hash(&[u16::MAX as i32]));
+    }
+}

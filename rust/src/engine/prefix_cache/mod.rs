@@ -1,0 +1,38 @@
+//! Prefix-state cache: content-addressed snapshots of [`EngineState`]
+//! keyed by prompt-token prefixes (DESIGN.md §15).
+//!
+//! A Mamba layer carries its entire history in a fixed-size recurrent
+//! state (SSM hidden `h` plus the conv ring), so a cached prompt prefix
+//! costs O(1) bytes regardless of prefix length — unlike a transformer
+//! KV cache, which grows linearly.  That makes prefix caching the
+//! architecture's signature serving win: N sessions sharing a system
+//! prompt pay its prefill once, and every later request resumes from
+//! the snapshot and scans only its uncached suffix.
+//!
+//! * [`hash`]  — incremental FNV-1a over token streams; the content
+//!              address for a prefix of any length.
+//! * [`store`] — [`PrefixCache`]: hash → snapshot map with stored-token
+//!              verification on lookup (hash collisions can never serve
+//!              a wrong state), LRU eviction under a byte budget
+//!              measured by [`EngineState::memory_bytes`], and always-on
+//!              [`CacheStats`].
+//!
+//! Exactness: a resume from a cached snapshot is **bit-identical** to a
+//! cold full prefill (not merely close).  The scan accepts an initial
+//! state and chunk handoff is exact (`prop_scan_chunked_state_handoff`),
+//! the projections are per-token independent, and the conv ring stores
+//! bit-exact input copies under a global slot mapping — pinned across
+//! formats × dtypes × kernels by `tests/prop_engine.rs`.
+//!
+//! Snapshots are only meaningful for the backend that produced them;
+//! the [`crate::engine::Scheduler`] owns its cache for exactly one
+//! backend, so states can never cross models.
+
+pub mod hash;
+pub mod store;
+
+pub use hash::{prefix_hash, PrefixHasher};
+pub use store::{CacheStats, PrefixCache, PrefixCacheConfig};
+
+#[allow(unused_imports)]
+use super::EngineState;

@@ -1,0 +1,383 @@
+//! The content-addressed snapshot store behind the prefix cache.
+//!
+//! Maps `(prefix length, prefix hash)` → a snapshotted [`EngineState`]
+//! positioned after that prefix.  Lookups walk candidate lengths from
+//! the longest cacheable prefix down in `chunk_tokens` strides (inserts
+//! only ever happen at chunk multiples, so those are the only lengths
+//! that can exist) and verify the stored tokens on every candidate —
+//! a hash collision can only cost a miss, never a wrong resume.
+//!
+//! Eviction is LRU under a byte budget: every entry is costed as its
+//! state's [`EngineState::memory_bytes`] plus its verification tokens,
+//! and inserts evict least-recently-used entries until the store fits.
+//! The LRU scan is O(entries); with O(1)-size Mamba states a realistic
+//! budget holds thousands of entries, for which a linear sweep per
+//! eviction is far cheaper than maintaining an intrusive list.
+
+use super::super::EngineState;
+use super::hash::prefix_hash;
+use crate::telemetry;
+use crate::util::json::{self, Json};
+use std::collections::HashMap;
+use std::sync::atomic::Ordering::Relaxed;
+
+/// Estimated per-entry bookkeeping bytes (map slot, key, `Entry`
+/// header) charged against the budget on top of the payload.
+const ENTRY_OVERHEAD: usize = 96;
+
+/// Prefix-cache tuning knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixCacheConfig {
+    /// Snapshot stride: states are published (and looked up) only at
+    /// prefix lengths that are multiples of this.
+    pub chunk_tokens: usize,
+    /// Total byte budget across all resident snapshots.
+    pub budget_bytes: usize,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        PrefixCacheConfig { chunk_tokens: 64, budget_bytes: 64 << 20 }
+    }
+}
+
+/// Always-on cache counters (cold-path only — no gating needed).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that resumed from a snapshot.
+    pub hits: u64,
+    /// Lookups that found no usable prefix.
+    pub misses: u64,
+    /// Prompt tokens whose prefill was skipped by hits.
+    pub hit_tokens: u64,
+    /// Snapshots stored (a re-publish of a resident prefix refreshes
+    /// its LRU stamp instead and counts here as a refresh).
+    pub insertions: u64,
+    pub refreshes: u64,
+    /// Entries dropped to stay within the byte budget.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn json(&self) -> Json {
+        json::obj(vec![
+            ("hits", json::num(self.hits as f64)),
+            ("misses", json::num(self.misses as f64)),
+            ("hit_tokens", json::num(self.hit_tokens as f64)),
+            ("insertions", json::num(self.insertions as f64)),
+            ("refreshes", json::num(self.refreshes as f64)),
+            ("evictions", json::num(self.evictions as f64)),
+        ])
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Key {
+    len: usize,
+    hash: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    /// The exact prefix this snapshot stands for — compared on lookup
+    /// so hash collisions can never serve a foreign state.
+    tokens: Vec<i32>,
+    state: EngineState,
+    bytes: usize,
+    /// Monotone touch stamp; smallest = least recently used.
+    last_used: u64,
+}
+
+/// Content-addressed `prefix → EngineState` store with LRU eviction
+/// under a byte budget.  Owned by one scheduler over one backend —
+/// snapshots never cross models.
+#[derive(Debug)]
+pub struct PrefixCache {
+    cfg: PrefixCacheConfig,
+    map: HashMap<Key, Entry>,
+    bytes: usize,
+    clock: u64,
+    stats: CacheStats,
+}
+
+impl PrefixCache {
+    pub fn new(cfg: PrefixCacheConfig) -> PrefixCache {
+        assert!(cfg.chunk_tokens > 0, "prefix cache needs a positive chunk stride");
+        assert!(cfg.budget_bytes > 0, "prefix cache needs a positive byte budget");
+        PrefixCache { cfg, map: HashMap::new(), bytes: 0, clock: 0, stats: CacheStats::default() }
+    }
+
+    /// Convenience constructor: default chunk stride, `mb` megabyte
+    /// budget (what `generate --prefix-cache-mb` passes through).
+    pub fn with_budget_mb(mb: usize) -> PrefixCache {
+        PrefixCache::new(PrefixCacheConfig {
+            budget_bytes: mb.max(1) << 20,
+            ..PrefixCacheConfig::default()
+        })
+    }
+
+    pub fn chunk_tokens(&self) -> usize {
+        self.cfg.chunk_tokens
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.cfg.budget_bytes
+    }
+
+    /// Resident snapshot count.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Resident payload bytes (states + verification tokens + entry
+    /// overhead).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    fn touch(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Longest cached prefix usable for `prompt`: candidate lengths are
+    /// the chunk multiples `≤ prompt.len() − 1`, walked longest-first
+    /// (at least one uncached token must remain — the resume scan has
+    /// to produce the prompt's final logits).  Returns a cloned
+    /// snapshot positioned after the prefix, plus the prefix length.
+    pub fn lookup(&mut self, prompt: &[i32]) -> Option<(EngineState, usize)> {
+        let c = self.cfg.chunk_tokens;
+        let longest = prompt.len().saturating_sub(1) / c * c;
+        let mut found: Option<usize> = None;
+        let mut n = longest;
+        while n >= c {
+            let key = Key { len: n, hash: prefix_hash(&prompt[..n]) };
+            if let Some(e) = self.map.get(&key) {
+                if e.tokens == prompt[..n] {
+                    found = Some(n);
+                    break;
+                }
+            }
+            n -= c;
+        }
+        let reg_on = telemetry::enabled();
+        match found {
+            Some(n) => {
+                let stamp = self.touch();
+                let key = Key { len: n, hash: prefix_hash(&prompt[..n]) };
+                let e = self.map.get_mut(&key).expect("entry just found");
+                e.last_used = stamp;
+                self.stats.hits += 1;
+                self.stats.hit_tokens += n as u64;
+                if reg_on {
+                    let reg = telemetry::registry();
+                    reg.prefix_hits.fetch_add(1, Relaxed);
+                    reg.prefix_hit_tokens.fetch_add(n as u64, Relaxed);
+                }
+                debug_assert_eq!(e.state.seq_len, n, "snapshot position mismatch");
+                Some((e.state.clone(), n))
+            }
+            None => {
+                self.stats.misses += 1;
+                if reg_on {
+                    telemetry::registry().prefix_misses.fetch_add(1, Relaxed);
+                }
+                None
+            }
+        }
+    }
+
+    /// Publish a snapshot of `state` for the prefix `tokens`.  The
+    /// caller guarantees `state` is positioned exactly after `tokens`
+    /// (`state.seq_len == tokens.len()`); the scheduler only calls this
+    /// at chunk-multiple boundaries.  A prefix already resident is
+    /// refreshed (LRU stamp) rather than re-stored — same backend, same
+    /// tokens ⇒ bit-identical state, so re-cloning buys nothing.
+    pub fn insert(&mut self, tokens: &[i32], state: &EngineState) {
+        debug_assert_eq!(state.seq_len, tokens.len(), "snapshot must sit after its prefix");
+        debug_assert!(
+            tokens.len() % self.cfg.chunk_tokens == 0 && !tokens.is_empty(),
+            "snapshots are published at chunk multiples"
+        );
+        let stamp = self.touch();
+        let key = Key { len: tokens.len(), hash: prefix_hash(tokens) };
+        if let Some(e) = self.map.get_mut(&key) {
+            if e.tokens == tokens {
+                e.last_used = stamp;
+                self.stats.refreshes += 1;
+                return;
+            }
+            // Hash collision between different prefixes of equal
+            // length: keep the newer one (drop the old entry's bytes).
+            self.bytes -= e.bytes;
+            self.map.remove(&key);
+        }
+        let entry = Entry {
+            tokens: tokens.to_vec(),
+            state: state.snapshot(),
+            bytes: state.memory_bytes() + tokens.len() * 4 + ENTRY_OVERHEAD,
+            last_used: stamp,
+        };
+        self.bytes += entry.bytes;
+        self.map.insert(key, entry);
+        self.stats.insertions += 1;
+        while self.bytes > self.cfg.budget_bytes && !self.map.is_empty() {
+            self.evict_lru();
+        }
+        if telemetry::enabled() {
+            let reg = telemetry::registry();
+            reg.prefix_insertions.fetch_add(1, Relaxed);
+            reg.prefix_bytes.store(self.bytes as u64, Relaxed);
+        }
+    }
+
+    fn evict_lru(&mut self) {
+        let victim = self
+            .map
+            .iter()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| *k)
+            .expect("evict on non-empty map");
+        let e = self.map.remove(&victim).expect("victim resident");
+        self.bytes -= e.bytes;
+        self.stats.evictions += 1;
+        if telemetry::enabled() {
+            let reg = telemetry::registry();
+            reg.prefix_evictions.fetch_add(1, Relaxed);
+            reg.prefix_bytes.store(self.bytes as u64, Relaxed);
+        }
+    }
+
+    /// Stats + occupancy as a JSON object (the `prefix_cache` section
+    /// keys `BENCH_serving.json` carries).
+    pub fn stats_json(&self) -> Json {
+        let Json::Obj(mut m) = self.stats.json() else { unreachable!("stats json is an object") };
+        m.insert("entries".into(), json::num(self.map.len() as f64));
+        m.insert("bytes".into(), json::num(self.bytes as f64));
+        m.insert("budget_bytes".into(), json::num(self.cfg.budget_bytes as f64));
+        m.insert("chunk_tokens".into(), json::num(self.cfg.chunk_tokens as f64));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::toy::m370_dims_meta;
+
+    fn state_at(len: usize) -> EngineState {
+        let mut st = EngineState::new(&m370_dims_meta());
+        st.seq_len = len;
+        st
+    }
+
+    fn cache(chunk: usize, budget: usize) -> PrefixCache {
+        PrefixCache::new(PrefixCacheConfig { chunk_tokens: chunk, budget_bytes: budget })
+    }
+
+    #[test]
+    fn lookup_returns_longest_cached_prefix() {
+        let mut c = cache(4, 1 << 30);
+        let prompt: Vec<i32> = (0..20).collect();
+        c.insert(&prompt[..4], &state_at(4));
+        c.insert(&prompt[..12], &state_at(12));
+        let (st, n) = c.lookup(&prompt).expect("hit");
+        assert_eq!(n, 12);
+        assert_eq!(st.seq_len, 12);
+        assert_eq!(c.stats().hits, 1);
+        assert_eq!(c.stats().hit_tokens, 12);
+    }
+
+    #[test]
+    fn full_prompt_snapshot_is_not_used_for_itself() {
+        // A prefix equal to the whole prompt can't serve that prompt
+        // (≥1 token must remain to produce the final logits), but does
+        // serve longer prompts sharing it.
+        let mut c = cache(4, 1 << 30);
+        let prompt: Vec<i32> = (0..8).collect();
+        c.insert(&prompt[..4], &state_at(4));
+        c.insert(&prompt, &state_at(8));
+        let (_, n) = c.lookup(&prompt).expect("shorter prefix hit");
+        assert_eq!(n, 4, "whole-prompt snapshot skipped for the prompt itself");
+        let longer: Vec<i32> = (0..12).collect();
+        let (_, n) = c.lookup(&longer).expect("whole-prefix hit");
+        assert_eq!(n, 8, "the 8-prefix serves longer prompts");
+    }
+
+    #[test]
+    fn miss_on_diverging_tokens() {
+        let mut c = cache(4, 1 << 30);
+        c.insert(&[1, 2, 3, 4], &state_at(4));
+        assert!(c.lookup(&[1, 2, 3, 5, 6]).is_none(), "prefix differs at position 3");
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_recency() {
+        let per_entry = state_at(4).memory_bytes() + 4 * 4 + ENTRY_OVERHEAD;
+        let mut c = cache(4, 2 * per_entry);
+        let a: Vec<i32> = vec![1; 4];
+        let b: Vec<i32> = vec![2; 4];
+        let d: Vec<i32> = vec![3; 4];
+        c.insert(&a, &state_at(4));
+        c.insert(&b, &state_at(4));
+        assert_eq!(c.len(), 2);
+        // Touch `a` so `b` is the LRU victim when `d` arrives.
+        let mut probe = a.clone();
+        probe.push(9);
+        assert!(c.lookup(&probe).is_some());
+        c.insert(&d, &state_at(4));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.bytes() <= c.budget_bytes());
+        let mut probe_b = b.clone();
+        probe_b.push(9);
+        assert!(c.lookup(&probe_b).is_none(), "b was evicted");
+        let mut probe_d = d.clone();
+        probe_d.push(9);
+        assert!(c.lookup(&probe_d).is_some(), "d is resident");
+    }
+
+    #[test]
+    fn reinsert_refreshes_instead_of_duplicating() {
+        let mut c = cache(4, 1 << 30);
+        let a: Vec<i32> = vec![1; 4];
+        c.insert(&a, &state_at(4));
+        let bytes = c.bytes();
+        c.insert(&a, &state_at(4));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), bytes);
+        assert_eq!(c.stats().insertions, 1);
+        assert_eq!(c.stats().refreshes, 1);
+    }
+
+    #[test]
+    fn snapshot_drops_scratch() {
+        let mut st = state_at(4);
+        st.scratch.x = vec![1.0; 64];
+        let mut c = cache(4, 1 << 30);
+        c.insert(&[1, 2, 3, 4], &st);
+        let (got, _) = c.lookup(&[1, 2, 3, 4, 5]).expect("hit");
+        assert!(got.scratch.x.is_empty(), "snapshots carry no scratch");
+        assert_eq!(got, st, "state equality ignores scratch");
+    }
+
+    #[test]
+    fn stats_json_has_section_keys() {
+        let c = cache(4, 1 << 20);
+        let j = c.stats_json();
+        for key in
+            ["hits", "misses", "hit_tokens", "insertions", "evictions", "entries", "bytes"]
+        {
+            assert!(j.get(key).is_ok(), "missing key {key}");
+        }
+    }
+}

@@ -5,21 +5,32 @@
 //! One [`Scheduler::tick`] is one engine iteration:
 //!
 //! 1. **admit** — while the running batch has room, pop a queued
-//!    request and prefill it into a [`Session`];
-//! 2. **sample** — every running session samples its next token from
-//!    its current logits;
-//! 3. **retire** — sessions that just hit their generation budget leave
+//!    request into a pending [`Session`]; a prefix-cache hit seeds its
+//!    state from the longest cached snapshot (no engine work yet);
+//! 2. **prefill** — every pending prompt advances by up to
+//!    `prefill_chunk` tokens through [`Backend::prefill_resume`]
+//!    (the whole remainder when unchunked), split at cache-stride
+//!    boundaries so each completed chunk publishes its snapshot;
+//! 3. **sample** — every *ready* session (prompt fully consumed)
+//!    samples its next token from its current logits;
+//! 4. **retire** — sessions that just hit their generation budget leave
 //!    the batch (their final token needs no further logits);
-//! 4. **step** — the survivors advance one token through
+//! 5. **step** — the ready survivors advance one token through
 //!    [`Backend::step_batch`] (striped across threads on the packed
 //!    backend).
 //!
-//! Requests of different prompt lengths and budgets therefore flow
-//! through one shared batch with no head-of-line blocking: a finishing
-//! request's slot is refilled on the very next tick.  Per-request
-//! sampler seeding (see [`session_seed`]) keeps each request's output
-//! identical to its solo run regardless of batch composition.
+//! Chunked prefill bounds how long one admission can stall the batch: a
+//! long prompt spreads its scan across ticks while other sessions keep
+//! decoding, instead of the whole batch waiting out one O(prompt)
+//! prefill.  The prefix cache ([`PrefixCache`]) makes N sessions
+//! sharing a system prompt pay its prefill once — resumes are
+//! bit-exact, so caching and chunking never change tokens (pinned by
+//! `tests/prop_engine.rs`).  Per-request sampler seeding (see
+//! [`session_seed`]) keeps each request's output identical to its solo
+//! run regardless of batch composition.
 
+use super::backend::validate_prompt;
+use super::prefix_cache::PrefixCache;
 use super::{Backend, EngineState, Sampling, Session};
 use crate::telemetry::{self, LapTimer, Phase, Stage};
 use anyhow::{ensure, Result};
@@ -39,20 +50,23 @@ pub struct Request {
 }
 
 /// A finished request's output, with its tick-level timing: the
-/// invariant `tick_finished − tick_admitted == tokens.len() − 1` holds
-/// for every request regardless of batch composition (continuous
-/// batching never stalls an admitted request), and the unit tests pin
-/// batched == solo tick-for-tick.
+/// invariant `tick_finished − tick_admitted == (tokens.len() − 1) +
+/// (prefill_ticks − 1)` holds for every request regardless of batch
+/// composition — continuous batching never stalls an admitted request;
+/// chunked prefill spends `prefill_ticks` ticks consuming the prompt,
+/// then one token samples per tick.  With unchunked prefill (the
+/// default) `prefill_ticks == 1` and the span is `tokens.len() − 1`,
+/// and the unit tests pin batched == solo tick-for-tick.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Generation {
     pub id: usize,
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
-    /// Scheduler tick (1-based) that admitted + prefilled this request.
+    /// Scheduler tick (1-based) that admitted this request.
     pub tick_admitted: usize,
     /// Scheduler tick on which the last token was sampled.
     pub tick_finished: usize,
-    /// Ticks the prefill spanned (1 today; explicit for future chunking).
+    /// Ticks that did prefill work for this request (1 when unchunked).
     pub prefill_ticks: usize,
 }
 
@@ -67,8 +81,16 @@ pub struct SchedulerStats {
     pub engine_steps: usize,
     /// Tokens sampled across all requests.
     pub decoded_tokens: usize,
-    /// Prompt tokens consumed by prefill.
+    /// Prompt tokens submitted across admitted requests.  Always equals
+    /// `prefill_scanned_tokens + cache_hit_tokens`.
     pub prefill_tokens: usize,
+    /// Prompt tokens actually scanned by prefill (cache hits skip the
+    /// rest).
+    pub prefill_scanned_tokens: usize,
+    /// Prefill chunk invocations ([`Backend::prefill_resume`] calls).
+    pub prefill_chunks: usize,
+    /// Prompt tokens skipped by resuming from prefix-cache snapshots.
+    pub cache_hit_tokens: usize,
     /// Largest running batch observed.
     pub peak_batch: usize,
 }
@@ -85,6 +107,10 @@ pub struct Scheduler<'a, B: Backend> {
     max_batch: usize,
     sampling: Sampling,
     seed: u64,
+    /// Max prompt tokens one session prefills per tick; 0 = unchunked
+    /// (the whole remaining prompt on its admission tick).
+    prefill_chunk: usize,
+    cache: Option<PrefixCache>,
     queue: VecDeque<Request>,
     running: Vec<Session>,
     next_id: usize,
@@ -99,11 +125,35 @@ impl<'a, B: Backend> Scheduler<'a, B> {
             max_batch,
             sampling,
             seed,
+            prefill_chunk: 0,
+            cache: None,
             queue: VecDeque::new(),
             running: Vec::new(),
             next_id: 0,
             stats: SchedulerStats::default(),
         }
+    }
+
+    /// Split prefill into chunks of at most `chunk_tokens` per session
+    /// per tick (0 restores the unchunked default).  Tokens are
+    /// unaffected — chunked prefill is bit-exact — only tick pacing
+    /// changes.
+    pub fn with_prefill_chunk(mut self, chunk_tokens: usize) -> Self {
+        self.prefill_chunk = chunk_tokens;
+        self
+    }
+
+    /// Attach a prefix-state cache: admissions resume from the longest
+    /// cached prompt prefix, and prefill publishes a snapshot at every
+    /// cache-stride boundary.
+    pub fn with_prefix_cache(mut self, cache: PrefixCache) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// The attached prefix cache, if any (stats/occupancy access).
+    pub fn prefix_cache(&self) -> Option<&PrefixCache> {
+        self.cache.as_ref()
     }
 
     /// Enqueue a request; returns its id.  Malformed requests — empty
@@ -112,12 +162,8 @@ impl<'a, B: Backend> Scheduler<'a, B> {
     /// request can never reach the engine's internal asserts and take
     /// the process down.
     pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> Result<usize> {
-        ensure!(!prompt.is_empty(), "request needs a non-empty prompt");
         ensure!(max_new_tokens > 0, "request must generate at least one token");
-        let vocab = self.backend.meta().vocab;
-        if let Some(&bad) = prompt.iter().find(|&&t| t < 0 || t as usize >= vocab) {
-            anyhow::bail!("prompt token {bad} out of vocab {vocab}");
-        }
+        validate_prompt(self.backend.meta(), &prompt)?;
         let id = self.next_id;
         self.next_id += 1;
         let queued_at = telemetry::enabled().then(Instant::now);
@@ -141,8 +187,8 @@ impl<'a, B: Backend> Scheduler<'a, B> {
         &self.stats
     }
 
-    /// One engine iteration (admit → sample → retire → step).  Returns
-    /// the requests that finished during this tick.
+    /// One engine iteration (admit → prefill → sample → retire → step).
+    /// Returns the requests that finished during this tick.
     ///
     /// Tick-level timing (integers) is recorded unconditionally;
     /// everything that reads a clock or touches the telemetry registry
@@ -151,6 +197,11 @@ impl<'a, B: Backend> Scheduler<'a, B> {
     pub fn tick(&mut self) -> Vec<Generation> {
         self.stats.ticks += 1;
         let tele = telemetry::enabled();
+
+        // 1. admit — pop queued requests into free batch slots.  No
+        //    engine work yet: the prompt stays pending on the session; a
+        //    prefix-cache hit seeds its state from the longest cached
+        //    snapshot so prefill scans only the uncached suffix.
         let mut admits = 0u64;
         let mut admitted_prompt_tokens = 0usize;
         while self.running.len() < self.max_batch {
@@ -158,20 +209,27 @@ impl<'a, B: Backend> Scheduler<'a, B> {
             if let Some(q) = req.queued_at {
                 telemetry::registry().queue_wait_us.record(q.elapsed().as_micros() as u64);
             }
-            let mut sess = Session::start(
-                self.backend,
+            let state = match self.cache.as_mut().and_then(|c| c.lookup(&req.prompt)) {
+                Some((snap, hit_len)) => {
+                    self.stats.cache_hit_tokens += hit_len;
+                    snap
+                }
+                None => EngineState::new(self.backend.meta()),
+            };
+            let mut sess = Session::queued(
                 req.id,
-                &req.prompt,
+                req.prompt,
                 req.max_new_tokens,
+                state,
                 self.sampling,
                 session_seed(self.seed, req.id),
             );
             sess.tick_admitted = self.stats.ticks;
             sess.submitted_at = req.queued_at;
             admits += 1;
-            admitted_prompt_tokens += req.prompt.len();
+            admitted_prompt_tokens += sess.prompt_len;
             self.stats.admitted += 1;
-            self.stats.prefill_tokens += req.prompt.len();
+            self.stats.prefill_tokens += sess.prompt_len;
             self.running.push(sess);
         }
         self.stats.peak_batch = self.stats.peak_batch.max(self.running.len());
@@ -182,10 +240,68 @@ impl<'a, B: Backend> Scheduler<'a, B> {
             return Vec::new();
         }
 
+        // 2. prefill — each pending prompt advances by up to
+        //    `prefill_chunk` tokens (the whole remainder when 0), split
+        //    at cache-stride boundaries so every completed chunk can
+        //    publish its snapshot.  The head projection runs only on a
+        //    prompt's final piece; intermediate chunks skip it entirely.
+        let prefill_t0 = tele.then(Instant::now);
+        let mut scanned_this_tick = 0usize;
+        {
+            let Scheduler { backend, running, cache, stats, prefill_chunk, .. } = &mut *self;
+            for sess in running.iter_mut().filter(|s| s.needs_prefill()) {
+                let mut budget = if *prefill_chunk == 0 { usize::MAX } else { *prefill_chunk };
+                while budget > 0 && sess.needs_prefill() {
+                    let remaining = sess.prompt.len() - sess.prefill_pos;
+                    let mut take = remaining.min(budget);
+                    if let Some(c) = cache.as_ref() {
+                        let stride = c.chunk_tokens();
+                        take = take.min(stride - sess.prefill_pos % stride);
+                    }
+                    let end = sess.prefill_pos + take;
+                    let is_final = end == sess.prompt.len();
+                    let logits = backend
+                        .prefill_resume(
+                            &mut sess.state,
+                            &sess.prompt[sess.prefill_pos..end],
+                            is_final,
+                        )
+                        .expect("prompt validated at submit");
+                    sess.prefill_pos = end;
+                    stats.prefill_scanned_tokens += take;
+                    stats.prefill_chunks += 1;
+                    scanned_this_tick += take;
+                    if tele {
+                        telemetry::registry().prefill_chunk_tokens.record(take as u64);
+                    }
+                    if let Some(c) = cache.as_mut() {
+                        if end % c.chunk_tokens() == 0 {
+                            c.insert(&sess.prompt[..end], &sess.state);
+                        }
+                    }
+                    if let Some(l) = logits {
+                        sess.apply_logits(l);
+                        sess.prompt = Vec::new(); // consumed; free the copy
+                    }
+                    budget -= take;
+                }
+                sess.prefill_ticks += 1;
+            }
+        }
+        if let Some(t0) = prefill_t0 {
+            if scanned_this_tick > 0 {
+                telemetry::registry().prefill_stall_us.record(t0.elapsed().as_micros() as u64);
+            }
+        }
+
+        // 3. sample — ready sessions only; mid-prefill sessions hold
+        //    their batch slot but produce nothing this tick.
         let mut lt = LapTimer::start(Phase::Step);
-        let tokens: Vec<i32> = self.running.iter_mut().map(Session::sample_next).collect();
+        let samples: Vec<Option<i32>> =
+            self.running.iter_mut().map(|s| s.ready().then(|| s.sample_next())).collect();
         lt.lap(Stage::Sample);
-        self.stats.decoded_tokens += tokens.len();
+        let sampled = samples.iter().flatten().count();
+        self.stats.decoded_tokens += sampled;
         if tele {
             let reg = telemetry::registry();
             reg.ticks.fetch_add(1, Relaxed);
@@ -193,11 +309,22 @@ impl<'a, B: Backend> Scheduler<'a, B> {
             reg.prefill_tokens.fetch_add(admitted_prompt_tokens as u64, Relaxed);
             reg.batch_occupancy.record(self.running.len() as u64);
             reg.admits_per_tick.record(admits);
-            reg.decoded_tokens.fetch_add(tokens.len() as u64, Relaxed);
+            reg.decoded_tokens.fetch_add(sampled as u64, Relaxed);
+            // Resident recurrent-state bytes this tick (constant per
+            // session — EngineState::memory_bytes — so this tracks
+            // occupancy, not sequence growth).
+            let bytes: usize = self.running.iter().map(|s| s.state.memory_bytes()).sum();
+            reg.state_bytes.record(bytes as u64);
+            if let Some(c) = self.cache.as_ref() {
+                reg.prefix_bytes.store(c.bytes() as u64, Relaxed);
+            }
             // TTFT for first tokens, inter-token gap for the rest — one
             // clock read covers the whole batch.
             let now = Instant::now();
-            for sess in self.running.iter_mut() {
+            for (sess, tok) in self.running.iter_mut().zip(&samples) {
+                if tok.is_none() {
+                    continue;
+                }
                 if sess.generated.len() == 1 {
                     if let Some(t0) = sess.submitted_at {
                         reg.ttft_us.record(now.duration_since(t0).as_micros() as u64);
@@ -209,10 +336,13 @@ impl<'a, B: Backend> Scheduler<'a, B> {
             }
         }
 
+        // 4. retire — budget-exhausted sessions leave; everyone else
+        //    keeps their slot (ready sessions carry a token to step).
         let mut finished = Vec::new();
         let mut keep: Vec<Session> = Vec::with_capacity(self.running.len());
-        let mut step_tokens: Vec<i32> = Vec::with_capacity(tokens.len());
-        for (sess, tok) in self.running.drain(..).zip(tokens) {
+        let mut step_idx: Vec<usize> = Vec::with_capacity(sampled);
+        let mut step_tokens: Vec<i32> = Vec::with_capacity(sampled);
+        for (sess, tok) in self.running.drain(..).zip(samples) {
             if sess.done() {
                 self.stats.finished += 1;
                 finished.push(Generation {
@@ -224,8 +354,11 @@ impl<'a, B: Backend> Scheduler<'a, B> {
                     tokens: sess.generated,
                 });
             } else {
+                if let Some(t) = tok {
+                    step_idx.push(keep.len());
+                    step_tokens.push(t);
+                }
                 keep.push(sess);
-                step_tokens.push(tok);
             }
         }
         if tele {
@@ -234,16 +367,17 @@ impl<'a, B: Backend> Scheduler<'a, B> {
             reg.finished.fetch_add(finished.len() as u64, Relaxed);
         }
 
-        if !keep.is_empty() {
+        // 5. step — ready survivors advance one token together.
+        if !step_tokens.is_empty() {
             let vocab = self.backend.meta().vocab;
             let mut states: Vec<EngineState> =
-                keep.iter_mut().map(|s| std::mem::take(&mut s.state)).collect();
+                step_idx.iter().map(|&i| std::mem::take(&mut keep[i].state)).collect();
             let logits = self.backend.step_batch(&mut states, &step_tokens);
-            for ((sess, state), chunk) in
-                keep.iter_mut().zip(states).zip(logits.chunks_exact(vocab))
+            for ((&i, state), chunk) in
+                step_idx.iter().zip(states).zip(logits.chunks_exact(vocab))
             {
-                sess.state = state;
-                sess.apply_logits(chunk.to_vec());
+                keep[i].state = state;
+                keep[i].apply_logits(chunk.to_vec());
             }
             self.stats.engine_steps += 1;
             if tele {
@@ -267,6 +401,7 @@ impl<'a, B: Backend> Scheduler<'a, B> {
 
 #[cfg(test)]
 mod tests {
+    use super::super::prefix_cache::PrefixCacheConfig;
     use super::*;
     use crate::model::toy::toy_flat_params_random;
     use crate::sparse::compile::{magnitude_prune_all, PackPolicy};
@@ -298,6 +433,8 @@ mod tests {
         assert!(st.peak_batch <= 2);
         assert_eq!(st.decoded_tokens, budgets.iter().sum::<usize>());
         assert_eq!(st.prefill_tokens, 2 * budgets.len());
+        assert_eq!(st.prefill_scanned_tokens, 2 * budgets.len(), "no cache: all scanned");
+        assert_eq!(st.cache_hit_tokens, 0);
     }
 
     #[test]
@@ -400,5 +537,81 @@ mod tests {
                 "request {i}: batched and solo spans must match"
             );
         }
+    }
+
+    #[test]
+    fn chunked_prefill_changes_pacing_not_tokens() {
+        let model = toy_model(6);
+        let prompts: Vec<Vec<i32>> =
+            (0..4).map(|i| (0..7).map(|t| ((i * 3 + t) % 16) as i32).collect()).collect();
+
+        let mut plain = Scheduler::new(&model, 2, Sampling::Temperature(0.8), 9);
+        let mut chunked =
+            Scheduler::new(&model, 2, Sampling::Temperature(0.8), 9).with_prefill_chunk(2);
+        for p in &prompts {
+            plain.submit(p.clone(), 4).unwrap();
+            chunked.submit(p.clone(), 4).unwrap();
+        }
+        let mut a = plain.run_until_idle();
+        let mut b = chunked.run_until_idle();
+        a.sort_by_key(|g| g.id);
+        b.sort_by_key(|g| g.id);
+        for (ga, gb) in a.iter().zip(&b) {
+            assert_eq!(ga.tokens, gb.tokens, "request {}: chunking changed tokens", ga.id);
+            // 7 prompt tokens at chunk 2 → 4 prefill ticks, then one
+            // sample per tick: the generalized span invariant.
+            assert_eq!(gb.prefill_ticks, 4, "request {}", gb.id);
+            assert_eq!(
+                gb.tick_finished - gb.tick_admitted,
+                (gb.tokens.len() - 1) + (gb.prefill_ticks - 1),
+                "request {} span",
+                gb.id
+            );
+        }
+        assert_eq!(chunked.stats().prefill_scanned_tokens, 4 * 7);
+        assert!(chunked.stats().prefill_chunks >= 4 * 4);
+    }
+
+    #[test]
+    fn prefix_cache_skips_shared_prefix_and_keeps_tokens() {
+        let model = toy_model(7);
+        // Shared 8-token system prefix + unique 2-token tails.
+        let shared: Vec<i32> = (0..8).map(|t| (t % 16) as i32).collect();
+        let prompts: Vec<Vec<i32>> = (0..4)
+            .map(|i| {
+                let mut p = shared.clone();
+                p.extend([(i + 3) as i32, (i + 7) as i32]);
+                p
+            })
+            .collect();
+
+        let mut off = Scheduler::new(&model, 2, Sampling::Greedy, 1);
+        let mut on = Scheduler::new(&model, 2, Sampling::Greedy, 1).with_prefix_cache(
+            PrefixCache::new(PrefixCacheConfig { chunk_tokens: 4, budget_bytes: 1 << 20 }),
+        );
+        for p in &prompts {
+            off.submit(p.clone(), 3).unwrap();
+            on.submit(p.clone(), 3).unwrap();
+        }
+        let mut a = off.run_until_idle();
+        let mut b = on.run_until_idle();
+        a.sort_by_key(|g| g.id);
+        b.sort_by_key(|g| g.id);
+        for (ga, gb) in a.iter().zip(&b) {
+            assert_eq!(ga.tokens, gb.tokens, "request {}: cache changed tokens", ga.id);
+        }
+        let cache = on.prefix_cache().expect("cache attached");
+        assert!(cache.stats().hits >= 1, "later requests must hit the shared prefix");
+        assert!(cache.stats().insertions >= 2, "chunk boundaries must publish");
+        assert!(on.stats().cache_hit_tokens >= 8, "≥1 request skipped the shared prefix");
+        assert_eq!(
+            on.stats().prefill_tokens,
+            on.stats().prefill_scanned_tokens + on.stats().cache_hit_tokens,
+            "token accounting must balance"
+        );
+        assert!(
+            on.stats().prefill_scanned_tokens < off.stats().prefill_scanned_tokens,
+            "cache must reduce scanned prefill work"
+        );
     }
 }

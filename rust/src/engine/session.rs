@@ -5,8 +5,16 @@
 //! Many sessions share one immutable backend; the
 //! [`crate::engine::Scheduler`] advances them together through
 //! [`Backend::step_batch`].
+//!
+//! Two ways in: [`Session::start`] prefills the whole prompt eagerly
+//! (the one-shot API), while the scheduler admits sessions through
+//! [`Session::queued`] with the prompt *pending* — its chunked-prefill
+//! phase then consumes the prompt across ticks (optionally resuming
+//! from a prefix-cache snapshot) before the session joins the
+//! sample/step loop.
 
 use super::{Backend, EngineState, Sampler, Sampling};
+use anyhow::{ensure, Result};
 use std::time::Instant;
 
 /// One request being decoded.
@@ -19,14 +27,21 @@ pub struct Session {
     pub generated: Vec<i32>,
     /// Recurrent state positioned after the last consumed token.
     pub state: EngineState,
-    /// Logits for the next position, refreshed by every prefill/step.
+    /// Logits for the next position — empty until the prompt's final
+    /// chunk prefills, refreshed by every step afterwards.
     pub last_logits: Vec<f32>,
     /// Scheduler tick this session was admitted on (1-based; 0 = not
     /// scheduler-run).  Recorded unconditionally — integers are cheap.
     pub tick_admitted: usize,
-    /// Ticks the admission prefill spanned (1 today; kept explicit for a
-    /// future chunked prefill).
+    /// Ticks that did prefill work for this session (1 for an eager
+    /// [`Session::start`]; ≥1 under the scheduler's chunked prefill).
     pub prefill_ticks: usize,
+    /// The not-yet-consumed prompt (scheduler-admitted sessions only;
+    /// empty once prefill completes or for eagerly-started sessions).
+    pub(crate) prompt: Vec<i32>,
+    /// Prompt tokens already consumed into `state` (prefix-cache hits
+    /// start this beyond zero).
+    pub(crate) prefill_pos: usize,
     /// When the request entered the queue (telemetry only; `None` while
     /// telemetry is disabled or outside the scheduler).
     pub(crate) submitted_at: Option<Instant>,
@@ -37,7 +52,8 @@ pub struct Session {
 
 impl Session {
     /// Prefill `prompt` on `backend` and return a session ready to
-    /// sample its first token.
+    /// sample its first token.  Empty prompts, zero budgets and
+    /// out-of-vocab tokens are errors — this is a library entry point.
     pub fn start<B: Backend>(
         backend: &B,
         id: usize,
@@ -45,11 +61,10 @@ impl Session {
         max_new_tokens: usize,
         sampling: Sampling,
         seed: u64,
-    ) -> Session {
-        assert!(!prompt.is_empty(), "session needs a non-empty prompt");
-        assert!(max_new_tokens > 0, "session must generate at least one token");
-        let (last_logits, state) = backend.prefill_last(prompt);
-        Session {
+    ) -> Result<Session> {
+        ensure!(max_new_tokens > 0, "session must generate at least one token");
+        let (last_logits, state) = backend.prefill_last(prompt)?;
+        Ok(Session {
             id,
             prompt_len: prompt.len(),
             max_new_tokens,
@@ -58,14 +73,62 @@ impl Session {
             last_logits,
             tick_admitted: 0,
             prefill_ticks: 1,
+            prompt: Vec::new(),
+            prefill_pos: 0,
+            submitted_at: None,
+            last_sampled_at: None,
+            sampler: Sampler::new(sampling, seed),
+        })
+    }
+
+    /// A session whose prompt is still pending: `state` starts where
+    /// `prefill_pos` says (0 for a fresh state, a chunk boundary when
+    /// seeded from a prefix-cache snapshot) and the scheduler's prefill
+    /// phase consumes the rest.  The caller validated the prompt at
+    /// submit.
+    pub(crate) fn queued(
+        id: usize,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        state: EngineState,
+        sampling: Sampling,
+        seed: u64,
+    ) -> Session {
+        debug_assert!(!prompt.is_empty() && max_new_tokens > 0, "validated at submit");
+        debug_assert!(state.seq_len < prompt.len(), "≥1 prompt token must remain to prefill");
+        let prefill_pos = state.seq_len;
+        Session {
+            id,
+            prompt_len: prompt.len(),
+            max_new_tokens,
+            generated: Vec::with_capacity(max_new_tokens),
+            state,
+            last_logits: Vec::new(),
+            tick_admitted: 0,
+            prefill_ticks: 0,
+            prompt,
+            prefill_pos,
             submitted_at: None,
             last_sampled_at: None,
             sampler: Sampler::new(sampling, seed),
         }
     }
 
+    /// True while prompt tokens remain to prefill (the session cannot
+    /// sample or step yet).
+    pub(crate) fn needs_prefill(&self) -> bool {
+        self.prefill_pos < self.prompt.len()
+    }
+
+    /// True once the prompt is fully consumed and next-token logits are
+    /// available — the session participates in sample/step ticks.
+    pub fn ready(&self) -> bool {
+        !self.needs_prefill()
+    }
+
     /// Sample the next token from the current logits and record it.
     pub fn sample_next(&mut self) -> i32 {
+        debug_assert!(self.ready(), "sampling mid-prefill");
         debug_assert!(!self.done(), "sampling a finished session");
         let t = self.sampler.sample(&self.last_logits);
         self.generated.push(t);
@@ -75,7 +138,7 @@ impl Session {
     /// Install the logits produced by stepping this session's last
     /// sampled token.
     pub fn apply_logits(&mut self, logits: Vec<f32>) {
-        debug_assert_eq!(logits.len(), self.last_logits.len());
+        debug_assert!(self.last_logits.is_empty() || logits.len() == self.last_logits.len());
         self.last_logits = logits;
     }
 
@@ -94,12 +157,12 @@ impl Session {
         max_new_tokens: usize,
         sampling: Sampling,
         seed: u64,
-    ) -> Vec<i32> {
-        let mut s = Session::start(backend, id, prompt, max_new_tokens, sampling, seed);
+    ) -> Result<Vec<i32>> {
+        let mut s = Session::start(backend, id, prompt, max_new_tokens, sampling, seed)?;
         loop {
             let t = s.sample_next();
             if s.done() {
-                return s.generated;
+                return Ok(s.generated);
             }
             let logits = backend.step(&mut s.state, t);
             s.apply_logits(logits);
@@ -118,18 +181,40 @@ mod tests {
     fn start_positions_after_prompt() {
         let p = toy_flat_params_random(4, 1);
         let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
-        let s = Session::start(&model, 0, &[1, 2, 3], 4, Sampling::Greedy, 0);
+        let s = Session::start(&model, 0, &[1, 2, 3], 4, Sampling::Greedy, 0).unwrap();
         assert_eq!(s.state.seq_len, 3);
         assert_eq!(s.last_logits.len(), 16);
+        assert!(s.ready());
         assert!(!s.done());
+    }
+
+    #[test]
+    fn start_rejects_bad_requests() {
+        let p = toy_flat_params_random(4, 1);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        assert!(Session::start(&model, 0, &[], 4, Sampling::Greedy, 0).is_err());
+        assert!(Session::start(&model, 0, &[1], 0, Sampling::Greedy, 0).is_err());
+        assert!(Session::start(&model, 0, &[99], 4, Sampling::Greedy, 0).is_err());
+    }
+
+    #[test]
+    fn queued_session_waits_for_prefill() {
+        let p = toy_flat_params_random(4, 1);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let st = super::super::EngineState::new(&model.meta);
+        let s = Session::queued(0, vec![1, 2, 3], 4, st, Sampling::Greedy, 0);
+        assert!(s.needs_prefill());
+        assert!(!s.ready());
+        assert_eq!(s.prefill_pos, 0);
+        assert_eq!(s.prompt_len, 3);
     }
 
     #[test]
     fn run_solo_respects_budget_and_is_deterministic() {
         let p = toy_flat_params_random(4, 2);
         let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
-        let a = Session::run_solo(&model, 0, &[5, 9], 6, Sampling::Greedy, 0);
-        let b = Session::run_solo(&model, 0, &[5, 9], 6, Sampling::Greedy, 0);
+        let a = Session::run_solo(&model, 0, &[5, 9], 6, Sampling::Greedy, 0).unwrap();
+        let b = Session::run_solo(&model, 0, &[5, 9], 6, Sampling::Greedy, 0).unwrap();
         assert_eq!(a.len(), 6);
         assert_eq!(a, b);
         assert!(a.iter().all(|&t| (0..16).contains(&t)));
@@ -139,8 +224,8 @@ mod tests {
     fn temperature_solo_is_seed_deterministic() {
         let p = toy_flat_params_random(4, 3);
         let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
-        let a = Session::run_solo(&model, 7, &[1], 5, Sampling::Temperature(1.0), 11);
-        let b = Session::run_solo(&model, 7, &[1], 5, Sampling::Temperature(1.0), 11);
+        let a = Session::run_solo(&model, 7, &[1], 5, Sampling::Temperature(1.0), 11).unwrap();
+        let b = Session::run_solo(&model, 7, &[1], 5, Sampling::Temperature(1.0), 11).unwrap();
         assert_eq!(a, b);
     }
 }

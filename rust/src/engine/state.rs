@@ -121,6 +121,17 @@ impl EngineState {
         self.layers.iter().map(|l| (l.h.len() + l.conv.len()) * 4).sum::<usize>()
             + std::mem::size_of::<usize>()
     }
+
+    /// Clone the recurrent content only, with fresh (empty) scratch —
+    /// what the prefix cache stores.  Matches the `PartialEq` scope:
+    /// `state.snapshot() == state`.
+    pub fn snapshot(&self) -> EngineState {
+        EngineState {
+            seq_len: self.seq_len,
+            layers: self.layers.clone(),
+            scratch: StepScratch::default(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +162,19 @@ mod tests {
         a.seq_len = 5;
         assert_eq!(b.layers[0].h[0], 0.0);
         assert_eq!(b.seq_len, 0);
+    }
+
+    #[test]
+    fn snapshot_equals_source_without_scratch() {
+        let meta = m370_dims_meta();
+        let mut st = EngineState::new(&meta);
+        st.seq_len = 7;
+        st.layers[0].h[0] = 2.5;
+        st.scratch.ensure(&meta);
+        let snap = st.snapshot();
+        assert_eq!(snap, st, "recurrent content matches");
+        assert!(snap.scratch.x.is_empty(), "scratch is not snapshotted");
+        assert_eq!(snap.memory_bytes(), st.memory_bytes());
     }
 
     #[test]

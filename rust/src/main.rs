@@ -54,6 +54,13 @@ SUBCOMMANDS:
                              batch occupancy, and an A/B overhead figure;
                              snapshot folds into BENCH_serving.json
                              (--requests/--batch/--prompt-len/--new/--seed)
+      --prefix-cache         shared-system-prompt A/B: serve the workload with
+                             chunked prefill, cache off vs on, report TTFT +
+                             prefill tok/s + hit/miss/eviction counters;
+                             tokens are checked bit-identical across legs;
+                             snapshot folds into BENCH_serving.json
+                             (--requests/--batch/--shared-len/--tail-len/
+                             --new/--chunk/--prefix-cache-mb/--seed)
   generate                   continuous-batching generation on the stateful
                              engine (host-only: random weights, byte vocab)
       --requests 8           queued requests
@@ -68,6 +75,11 @@ SUBCOMMANDS:
       --telemetry            record serving metrics during the run and print
                              the latency/stage breakdown (BENCH_serving.json,
                              'generate' section)
+      --prefill-chunk N      chunked prefill: at most N prompt tokens per
+                             session per tick (0 = whole prompt at once);
+                             bit-exact, changes pacing only
+      --prefix-cache-mb N    attach a prefix-state cache with an N MiB budget
+                             (0 = off); repeated shared prefixes prefill once
   help                       this text
 
 GLOBAL FLAGS:
@@ -87,7 +99,7 @@ fn main() {
 }
 
 fn real_main(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["fast", "all", "telemetry"])?;
+    let args = Args::parse(argv, &["fast", "all", "telemetry", "prefix-cache"])?;
     if let Some(lv) = args.get("log-level") {
         let level = sparsessm::telemetry::log::Level::parse(lv).ok_or_else(|| {
             anyhow::anyhow!("unknown --log-level '{lv}' (try: error, warn, info, debug)")
@@ -256,6 +268,38 @@ fn sparse_bench(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    if args.has("prefix-cache") {
+        // Shared-prefix A/B: chunked prefill with the prefix-state cache
+        // off, then on.  A write failure is a hard error (verify.sh
+        // smoke relies on the snapshot landing on disk).
+        use sparsessm::engine::bench;
+        let fast = args.has("fast");
+        let sparsity = args.get_f64("sparsity", 0.5)?;
+        let mut params = decode::m370_bench_params();
+        if sparsity > 0.0 {
+            magnitude_prune_all(&mut params, sparsity)?;
+        }
+        let policy = PackPolicy::auto().with_dtype(dtype).with_kernel(kernel);
+        let model = SparseModel::compile(&params, &policy)?;
+        let o = bench::PrefixCacheOpts {
+            requests: args.get_usize("requests", if fast { 8 } else { 16 })?.max(1),
+            batch: bt,
+            shared_len: args.get_usize("shared-len", if fast { 48 } else { 192 })?.max(1),
+            tail_len: args.get_usize("tail-len", if fast { 4 } else { 8 })?.max(1),
+            new_tokens: args.get_usize("new", if fast { 8 } else { 24 })?.max(1),
+            chunk_tokens: args.get_usize("chunk", if fast { 16 } else { 32 })?.max(1),
+            budget_mb: args.get_usize("prefix-cache-mb", 64)?.max(1),
+            sampling: sparsessm::engine::Sampling::Greedy,
+            seed: args.get_usize("seed", 13)? as u64,
+        };
+        let run = bench::prefix_cache_run(&model, &o)?;
+        experiments::prefix_cache_report(&run)?.print();
+        let log = bench::bench_serving_json_path();
+        bench::update_bench_serving_json(&log, "prefix_cache", run.section)?;
+        println!("prefix-cache snapshot written to {} (prefix_cache section)", log.display());
+        return Ok(());
+    }
+
     if let Some(path) = args.get("load") {
         let mut model = SparseModel::load(path)?;
         model.kernel = kernel;
@@ -335,7 +379,7 @@ fn sparse_bench(args: &Args) -> Result<()> {
 /// Continuous-batching generation demo on the stateful engine — random
 /// weights at m370 dims (host-only), byte-level vocab.
 fn generate(args: &Args) -> Result<()> {
-    use sparsessm::engine::{Sampling, Scheduler};
+    use sparsessm::engine::{PrefixCache, Sampling, Scheduler};
     use sparsessm::rngx::Pcg;
     use sparsessm::sparse::compile::{magnitude_prune_all, PackPolicy};
     use sparsessm::sparse::{Dtype, Kernel, SparseModel};
@@ -344,6 +388,8 @@ fn generate(args: &Args) -> Result<()> {
     let batch = args.get_usize("batch", 4)?.max(1);
     let prompt_len = args.get_usize("prompt-len", 32)?.max(1);
     let new = args.get_usize("new", 64)?.max(1);
+    let prefill_chunk = args.get_usize("prefill-chunk", 0)?;
+    let cache_mb = args.get_usize("prefix-cache-mb", 0)?;
     let temp = args.get_f64("temp", 0.0)?;
     let sparsity = args.get_f64("sparsity", 0.5)?;
     let dtype_name = args.get_or("dtype", "f32");
@@ -375,7 +421,11 @@ fn generate(args: &Args) -> Result<()> {
         sparsessm::telemetry::reset();
         sparsessm::telemetry::set_enabled(true);
     }
-    let mut sched = Scheduler::new(&model, batch, sampling, seed);
+    let mut sched =
+        Scheduler::new(&model, batch, sampling, seed).with_prefill_chunk(prefill_chunk);
+    if cache_mb > 0 {
+        sched = sched.with_prefix_cache(PrefixCache::with_budget_mb(cache_mb));
+    }
     let mut rng = Pcg::seeded(seed);
     let vocab = model.meta.vocab;
     for _ in 0..requests {
@@ -406,13 +456,28 @@ fn generate(args: &Args) -> Result<()> {
     let st = sched.stats();
     println!(
         "decoded {} tokens in {secs:.2}s ({:.0} tok/s) | {} engine steps, peak batch {}, \
-         prefill {} tokens",
+         prefill {} tokens ({} scanned, {} cache-hit)",
         st.decoded_tokens,
         st.decoded_tokens as f64 / secs.max(1e-9),
         st.engine_steps,
         st.peak_batch,
-        st.prefill_tokens
+        st.prefill_tokens,
+        st.prefill_scanned_tokens,
+        st.cache_hit_tokens
     );
+    if let Some(c) = sched.prefix_cache() {
+        let cs = c.stats();
+        println!(
+            "prefix cache: {} hits / {} misses, {} insertions, {} evictions, {} entries, \
+             {:.2} MB resident",
+            cs.hits,
+            cs.misses,
+            cs.insertions,
+            cs.evictions,
+            c.len(),
+            c.bytes() as f64 / (1 << 20) as f64
+        );
+    }
     if telemetry_on {
         use sparsessm::engine::bench;
         use sparsessm::util::json;

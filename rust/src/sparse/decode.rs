@@ -128,12 +128,67 @@ pub(crate) fn conv1d_causal_silu(
 /// stateful prefill (`bt` must be 1): the engine hands its per-session
 /// state buffers in here so [`fused_layer_forward`] fills them without
 /// `decode` depending on engine types.
+///
+/// With `pos == 0` this is a cold prefill: the buffers are zeroed
+/// destinations.  With `pos > 0` it is an exact **resume**: `h` seeds
+/// the scan's initial state and `conv` supplies the left context the
+/// chunk's causal conv would otherwise zero-pad — both are then
+/// overwritten with the post-chunk state.  Chunked == cold is
+/// bit-exact (see DESIGN.md §15; pinned by `tests/prop_engine.rs`).
 pub(crate) struct ScanHandoff<'a> {
-    /// Receives the scan's final hidden state `[d_inner · d_state]`.
+    /// Scan hidden state `[d_inner · d_state]`: read as `h0` when
+    /// resuming, receives the final state either way.
     pub h: &'a mut Vec<f32>,
     /// Conv ring buffer `[(d_conv − 1) · d_inner]`; the slot for
     /// sequence position `p` is `p % (d_conv − 1)`.
     pub conv: &'a mut [f32],
+    /// Global position of the chunk's first token (`state.seq_len` at
+    /// entry); 0 means a fresh sequence.
+    pub pos: usize,
+}
+
+/// [`conv1d_causal_silu`] for a resumed chunk starting at global
+/// position `pos > 0`: tap `kk` of chunk position `t` reads global
+/// position `g = pos + t + kk − (K−1)` — from the chunk itself when
+/// `g ≥ pos`, from the session's conv ring (slot `g % (K−1)`) when it
+/// falls in the previous chunk, and as implicit zero padding when
+/// `g < 0` (only reachable while `pos < K−1`).  Tap iteration order and
+/// accumulation match the cold path exactly, so a chunked conv is
+/// bit-identical to one whole-prompt pass.
+pub(crate) fn conv1d_causal_silu_resume(
+    w: &CsrMatrix,
+    bias: &[f32],
+    x: &[f32],
+    l: usize,
+    di: usize,
+    pos: usize,
+    ring: &[f32],
+) -> Vec<f32> {
+    let k = w.cols;
+    debug_assert_eq!(w.rows, di);
+    debug_assert_eq!(x.len(), l * di);
+    debug_assert!(pos > 0, "cold prefill goes through conv1d_causal_silu");
+    let taps = w.vals.as_f32().expect("conv taps are always packed f32");
+    let mut out = vec![0.0f32; l * di];
+    for t in 0..l {
+        let gt = pos + t;
+        let o = t * di;
+        for d in 0..di {
+            let (lo, hi) = (w.row_ptr[d] as usize, w.row_ptr[d + 1] as usize);
+            let mut acc = bias[d];
+            for p in lo..hi {
+                let kk = w.col_idx[p] as usize;
+                if gt + kk >= k - 1 {
+                    let g = gt + kk - (k - 1);
+                    let xv =
+                        if g >= pos { x[(g - pos) * di + d] } else { ring[(g % (k - 1)) * di + d] };
+                    acc += taps[p] * xv;
+                }
+            }
+            out[o + d] = silu(acc);
+        }
+    }
+    out
 }
 
 /// Materialize the embedding rows for `tokens` into a fresh residual
@@ -193,21 +248,35 @@ pub(crate) fn fused_layer_forward(
     layer.in_proj.matmul_rows_into_k(&xn, t, di, 2 * di, &mut res, kernel);
     lt.lap(Stage::InProj);
 
-    // Stash the conv window tail before the conv consumes x_in:
-    // positions l−(K−1)..l−1 land in their ring slots so the first
-    // engine step sees them.
+    // Causal conv: a fresh sequence sees implicit zero left-padding; a
+    // resumed chunk (handoff.pos > 0) reads its left context from the
+    // session's conv ring instead.
+    let u = match handoff.as_ref().filter(|h| h.pos > 0) {
+        Some(h) => {
+            debug_assert_eq!(bt, 1, "resume is single-sequence");
+            conv1d_causal_silu_resume(&layer.conv_w, &layer.conv_b, &x_in, l, di, h.pos, &*h.conv)
+        }
+        None => conv1d_causal_silu(&layer.conv_w, &layer.conv_b, &x_in, bt, l, di),
+    };
+
+    // Record the chunk's tail in the ring — global positions
+    // pos+l−(K−1)..pos+l land in slot `p % (K−1)` so the next chunk or
+    // engine step sees them (write-after-read: the conv above consumed
+    // the old ring first).  A short chunk (l < K−1) keeps the prior
+    // chunk's older slots, which is exactly what a whole-prompt pass
+    // leaves behind for those positions.
     if let Some(h) = handoff.as_mut() {
         debug_assert_eq!(bt, 1, "state capture is single-sequence");
         let k = layer.conv_w.cols;
         if k > 1 {
-            for tt in l.saturating_sub(k - 1)..l {
-                h.conv[(tt % (k - 1)) * di..][..di]
+            let total = h.pos + l;
+            for p in total.saturating_sub(k - 1).max(h.pos)..total {
+                let tt = p - h.pos;
+                h.conv[(p % (k - 1)) * di..][..di]
                     .copy_from_slice(&x_in[tt * di..(tt + 1) * di]);
             }
         }
     }
-
-    let u = conv1d_causal_silu(&layer.conv_w, &layer.conv_b, &x_in, bt, l, di);
     lt.lap(Stage::Conv);
 
     let mut delta_r = vec![0.0f32; t * dr];
@@ -226,6 +295,13 @@ pub(crate) fn fused_layer_forward(
     }
     lt.lap(Stage::DtProj);
 
+    // A resume seeds the scan from the session's hidden state; a cold
+    // pass starts from zeros (`h0 = None`).  Structured-d_state plans
+    // stay exact under resume: inactive columns pass h0 through
+    // untouched, and every engine-produced state is zero there by
+    // induction from `EngineState::new`.
+    let h0: Option<&[f32]> =
+        handoff.as_ref().filter(|h| h.pos > 0).map(|h| h.h.as_slice());
     let (y, h_final) = selective_scan_with_state_plan(
         &SsmInputs {
             a: &layer.a,
@@ -236,7 +312,7 @@ pub(crate) fn fused_layer_forward(
             dp: &layer.d,
             dims: (bt, l, di, ds),
         },
-        None,
+        h0,
         kernel,
         layer.scan_plan(),
     );

@@ -80,8 +80,10 @@ pub fn selective_scan_with_state_k(
 /// to visit (sorted, in `[0, N)`); the rest — structurally-pruned
 /// `d_state` columns whose B/C rows are identically zero — are skipped
 /// outright and their `h` slots pass from `h0` to the final state
-/// untouched (exactly `h0`'s value, which is zero everywhere the engine
-/// uses plans, since prefill seeds from zeros).
+/// untouched (exactly `h0`'s value — zero everywhere the engine uses
+/// plans: cold prefill seeds from zeros, and a chunked/cache resume's
+/// `h0` came from the same model's ops, which by induction never write
+/// an inactive column).
 pub fn selective_scan_with_state_plan(
     inp: &SsmInputs<'_>,
     h0: Option<&[f32]>,

@@ -59,6 +59,14 @@ pub struct Registry {
     pub admits_per_tick: Histogram,
     /// Retirements per non-idle tick.
     pub retires_per_tick: Histogram,
+    /// Prompt tokens scanned per prefill chunk call.
+    pub prefill_chunk_tokens: Histogram,
+    /// Wall time of the scheduler's prefill phase per tick that did
+    /// prefill work, µs — how long decode waited on prompt scanning.
+    pub prefill_stall_us: Histogram,
+    /// Resident recurrent-state bytes across the running batch, sampled
+    /// per non-idle tick (`EngineState::memory_bytes` × occupancy).
+    pub state_bytes: Histogram,
 
     pub ticks: AtomicU64,
     pub engine_steps: AtomicU64,
@@ -66,6 +74,20 @@ pub struct Registry {
     pub prefill_tokens: AtomicU64,
     pub admitted: AtomicU64,
     pub finished: AtomicU64,
+
+    /// Prefix-cache lookups that resumed from a snapshot.
+    pub prefix_hits: AtomicU64,
+    /// Prefix-cache lookups that found no usable prefix.
+    pub prefix_misses: AtomicU64,
+    /// Prompt tokens skipped by prefix-cache hits.
+    pub prefix_hit_tokens: AtomicU64,
+    /// Snapshots published into the prefix cache.
+    pub prefix_insertions: AtomicU64,
+    /// Snapshots evicted under the cache's byte budget.
+    pub prefix_evictions: AtomicU64,
+    /// Current prefix-cache residency in bytes (gauge — `store`d, not
+    /// accumulated).
+    pub prefix_bytes: AtomicU64,
 
     stages: Vec<StageCell>,
 }
@@ -79,12 +101,21 @@ impl Registry {
             batch_occupancy: Histogram::new(),
             admits_per_tick: Histogram::new(),
             retires_per_tick: Histogram::new(),
+            prefill_chunk_tokens: Histogram::new(),
+            prefill_stall_us: Histogram::new(),
+            state_bytes: Histogram::new(),
             ticks: AtomicU64::new(0),
             engine_steps: AtomicU64::new(0),
             decoded_tokens: AtomicU64::new(0),
             prefill_tokens: AtomicU64::new(0),
             admitted: AtomicU64::new(0),
             finished: AtomicU64::new(0),
+            prefix_hits: AtomicU64::new(0),
+            prefix_misses: AtomicU64::new(0),
+            prefix_hit_tokens: AtomicU64::new(0),
+            prefix_insertions: AtomicU64::new(0),
+            prefix_evictions: AtomicU64::new(0),
+            prefix_bytes: AtomicU64::new(0),
             stages: (0..Phase::ALL.len() * Stage::ALL.len())
                 .map(|_| StageCell { ns: AtomicU64::new(0), calls: AtomicU64::new(0) })
                 .collect(),
@@ -117,6 +148,9 @@ impl Registry {
             &self.batch_occupancy,
             &self.admits_per_tick,
             &self.retires_per_tick,
+            &self.prefill_chunk_tokens,
+            &self.prefill_stall_us,
+            &self.state_bytes,
         ] {
             h.clear();
         }
@@ -127,6 +161,12 @@ impl Registry {
             &self.prefill_tokens,
             &self.admitted,
             &self.finished,
+            &self.prefix_hits,
+            &self.prefix_misses,
+            &self.prefix_hit_tokens,
+            &self.prefix_insertions,
+            &self.prefix_evictions,
+            &self.prefix_bytes,
         ] {
             c.store(0, Relaxed);
         }
@@ -179,8 +219,11 @@ fn stages_json(phase: Phase) -> Json {
 }
 
 /// Current registry contents as a JSON object: `counters`, `latency_us`
-/// (ttft / inter_token / queue_wait), `batch` (occupancy / admits / retires
-/// per tick), and `stages` (per phase, per stage `{ms, calls}`).
+/// (ttft / inter_token / queue_wait / prefill_stall), `batch`
+/// (occupancy / admits / retires per tick / prefill_chunk_tokens /
+/// state_bytes), `prefix_cache` (hit/miss/insert/evict counters plus
+/// the residency gauge), and `stages` (per phase, per stage
+/// `{ms, calls}`).
 pub fn snapshot_json() -> Json {
     let reg = registry();
     json::obj(vec![
@@ -201,6 +244,7 @@ pub fn snapshot_json() -> Json {
                 ("ttft", hist_json(&reg.ttft_us)),
                 ("inter_token", hist_json(&reg.inter_token_us)),
                 ("queue_wait", hist_json(&reg.queue_wait_us)),
+                ("prefill_stall", hist_json(&reg.prefill_stall_us)),
             ]),
         ),
         (
@@ -209,6 +253,19 @@ pub fn snapshot_json() -> Json {
                 ("occupancy", hist_json(&reg.batch_occupancy)),
                 ("admits_per_tick", hist_json(&reg.admits_per_tick)),
                 ("retires_per_tick", hist_json(&reg.retires_per_tick)),
+                ("prefill_chunk_tokens", hist_json(&reg.prefill_chunk_tokens)),
+                ("state_bytes", hist_json(&reg.state_bytes)),
+            ]),
+        ),
+        (
+            "prefix_cache",
+            json::obj(vec![
+                ("hits", json::num(reg.prefix_hits.load(Relaxed) as f64)),
+                ("misses", json::num(reg.prefix_misses.load(Relaxed) as f64)),
+                ("hit_tokens", json::num(reg.prefix_hit_tokens.load(Relaxed) as f64)),
+                ("insertions", json::num(reg.prefix_insertions.load(Relaxed) as f64)),
+                ("evictions", json::num(reg.prefix_evictions.load(Relaxed) as f64)),
+                ("bytes", json::num(reg.prefix_bytes.load(Relaxed) as f64)),
             ]),
         ),
         (
@@ -253,12 +310,18 @@ pub fn validate_serving_snapshot(s: &Json) -> Result<()> {
         bail!("snapshot decoded no tokens");
     }
     let lat = s.get("latency_us")?;
-    for key in ["ttft", "inter_token", "queue_wait"] {
+    for key in ["ttft", "inter_token", "queue_wait", "prefill_stall"] {
         check_hist(lat.get(key)?, &format!("latency_us.{key}"))?;
     }
     let batch = s.get("batch")?;
-    for key in ["occupancy", "admits_per_tick", "retires_per_tick"] {
+    for key in
+        ["occupancy", "admits_per_tick", "retires_per_tick", "prefill_chunk_tokens", "state_bytes"]
+    {
         check_hist(batch.get(key)?, &format!("batch.{key}"))?;
+    }
+    let pc = s.get("prefix_cache")?;
+    for key in ["hits", "misses", "hit_tokens", "insertions", "evictions", "bytes"] {
+        pc.get(key).with_context(|| format!("prefix_cache: missing '{key}'"))?;
     }
     let stages = s.get("stages")?;
     let mut stage_ms = 0.0;
@@ -300,7 +363,13 @@ mod tests {
         let snap = snapshot_json();
         assert!(snap.get("counters").is_ok());
         assert!(snap.get("latency_us").unwrap().get("ttft").is_ok());
+        assert!(snap.get("latency_us").unwrap().get("prefill_stall").is_ok());
         assert!(snap.get("batch").unwrap().get("occupancy").is_ok());
+        assert!(snap.get("batch").unwrap().get("state_bytes").is_ok());
+        let pc = snap.get("prefix_cache").unwrap();
+        for key in ["hits", "misses", "hit_tokens", "insertions", "evictions", "bytes"] {
+            assert!(pc.get(key).is_ok(), "missing prefix_cache.{key}");
+        }
         let st = snap.get("stages").unwrap().get("step").unwrap();
         for stage in Stage::ALL {
             assert!(st.get(stage.name()).is_ok(), "missing stage {}", stage.name());

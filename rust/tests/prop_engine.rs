@@ -12,9 +12,16 @@
 //! * interleaved sessions in one batched step match their solo runs
 //!   **exactly** (batching never changes per-session arithmetic);
 //! * the continuous-batching scheduler reproduces solo generation
-//!   per request, for greedy and seeded temperature sampling.
+//!   per request, for greedy and seeded temperature sampling;
+//! * chunked prefill (`prefill_resume`) and prefix-cache-hit resume
+//!   are **bit-identical** to one cold whole-prompt prefill — `==` on
+//!   logits and state, across formats × dtypes × kernels × chunk
+//!   sizes, including the eviction-fallback path.
 
-use sparsessm::engine::{session_seed, Backend, Sampling, Scheduler, Session};
+use sparsessm::engine::{
+    session_seed, Backend, EngineState, PrefixCache, PrefixCacheConfig, Sampling, Scheduler,
+    Session,
+};
 use sparsessm::model::toy::toy_flat_params_random;
 use sparsessm::model::FlatParams;
 use sparsessm::rngx::Pcg;
@@ -35,7 +42,8 @@ fn check<F: Fn(&mut Pcg) -> Result<(), String>>(name: &str, cases: u64, f: F) {
 /// Engine pass over one model: prefill the first `split` tokens, then
 /// step through the rest, returning logits for every position.
 fn prefill_then_steps<B: Backend>(backend: &B, tokens: &[i32], split: usize) -> Vec<f32> {
-    let (mut logits, mut state) = backend.prefill(&tokens[..split]);
+    let (mut logits, mut state) =
+        backend.prefill(&tokens[..split]).expect("test prompts are in-vocab");
     for &t in &tokens[split..] {
         logits.extend(backend.step(&mut state, t));
     }
@@ -189,7 +197,7 @@ fn prop_interleaved_batch_matches_solo_exactly() {
         let mut solo_states = Vec::new();
         let mut solo_logits: Vec<Vec<f32>> = Vec::new();
         for (prompt, stream) in prompts.iter().zip(&streams) {
-            let (_, mut st) = model.prefill(prompt);
+            let (_, mut st) = model.prefill(prompt).expect("test prompts are in-vocab");
             let mut log = Vec::new();
             for &t in stream {
                 log.extend(model.step(&mut st, t));
@@ -199,7 +207,10 @@ fn prop_interleaved_batch_matches_solo_exactly() {
         }
 
         // Batched: all sessions advanced together, one token per tick.
-        let mut states: Vec<_> = prompts.iter().map(|p| model.prefill(p).1).collect();
+        let mut states: Vec<_> = prompts
+            .iter()
+            .map(|p| model.prefill(p).expect("test prompts are in-vocab").1)
+            .collect();
         let mut batch_logits: Vec<Vec<f32>> = vec![Vec::new(); n_sessions];
         for step in 0..n_steps {
             let tokens: Vec<i32> = streams.iter().map(|s| s[step]).collect();
@@ -258,7 +269,8 @@ fn prop_scheduler_matches_solo_generation() {
                     *max_new,
                     sampling,
                     session_seed(base_seed, id),
-                );
+                )
+                .map_err(|e| e.to_string())?;
                 if gens[id].tokens != want {
                     return Err(format!(
                         "{sampling:?} request {id}: scheduler {:?} vs solo {want:?}",
@@ -377,13 +389,150 @@ fn prop_quantized_engine_close_to_f32_oracle() {
     });
 }
 
+/// Chunked prefill is **bit-exact**: consuming the prompt in chunks
+/// through `prefill_resume` must produce the same logits and state as
+/// one cold whole-prompt prefill, compared with `==` (not a tolerance)
+/// — across formats × dtypes × kernels × chunk sizes (1, a prime that
+/// straddles the conv window, the cache default 64, and > prompt).
+/// This is the property the prefix cache's correctness rests on.
+#[test]
+fn prop_chunked_prefill_is_bit_exact() {
+    check("chunked-prefill-exact", 3, |rng| {
+        let seed = rng.next_u64();
+        let l = 8 + rng.below(8);
+        let tokens: Vec<i32> = (0..l).map(|_| rng.below(16) as i32).collect();
+        let mut params = toy_flat_params_random(4, seed);
+        magnitude_prune_all(&mut params, 0.5).map_err(|e| e.to_string())?;
+        for fmt in [Format::Dense, Format::Bitmask, Format::Csr, Format::Bcsr] {
+            for dtype in Dtype::ALL {
+                for kernel in Kernel::ALL {
+                    let policy = PackPolicy::of(fmt).with_dtype(dtype).with_kernel(kernel);
+                    let model =
+                        SparseModel::compile(&params, &policy).map_err(|e| e.to_string())?;
+                    chunked_matches_cold(&model, &tokens, &format!("{fmt:?}/{dtype:?}/{kernel:?}"))?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Same bit-exactness for the 2:4 layout.
+#[test]
+fn prop_chunked_prefill_is_bit_exact_2_4() {
+    check("chunked-prefill-exact-2:4", 3, |rng| {
+        let seed = rng.next_u64();
+        let l = 8 + rng.below(6);
+        let tokens: Vec<i32> = (0..l).map(|_| rng.below(16) as i32).collect();
+        let mut params = toy_flat_params_random(4, seed);
+        apply_nm_along_input(&mut params, 2, 4).map_err(|e| e.to_string())?;
+        let model = SparseModel::compile(&params, &PackPolicy::of(Format::Nm))
+            .map_err(|e| e.to_string())?;
+        chunked_matches_cold(&model, &tokens, "2:4")
+    });
+}
+
+/// Replay `tokens` through `prefill_resume` at several chunk sizes and
+/// demand `==` with the cold whole-prompt prefill.
+fn chunked_matches_cold<B: Backend>(
+    backend: &B,
+    tokens: &[i32],
+    label: &str,
+) -> Result<(), String> {
+    let l = tokens.len();
+    let (want_logits, want_state) = backend.prefill_last(tokens).map_err(|e| e.to_string())?;
+    for chunk in [1usize, 7, 64, l + 5] {
+        let mut state = EngineState::new(backend.meta());
+        let mut got_logits: Option<Vec<f32>> = None;
+        let mut pos = 0;
+        while pos < l {
+            let end = (pos + chunk).min(l);
+            let out = backend
+                .prefill_resume(&mut state, &tokens[pos..end], end == l)
+                .map_err(|e| e.to_string())?;
+            if end == l {
+                got_logits = out;
+            }
+            pos = end;
+        }
+        if got_logits.as_deref() != Some(&want_logits[..]) {
+            return Err(format!("{label} chunk {chunk}: final logits not bit-identical"));
+        }
+        if state != want_state {
+            return Err(format!("{label} chunk {chunk}: resumed state not bit-identical"));
+        }
+    }
+    Ok(())
+}
+
+/// Cache-hit resume at the serving level: a scheduler with chunked
+/// prefill and a prefix cache generates exactly what solo sessions
+/// generate — both with a budget large enough to hit, and with a
+/// 1-byte budget that evicts every snapshot immediately (the eviction
+/// fallback: every lookup misses, the cold chunked path runs, tokens
+/// are still identical).
+#[test]
+fn prop_cache_hit_resume_matches_solo() {
+    check("cache-resume-vs-solo", 3, |rng| {
+        let seed = rng.next_u64();
+        let mut params = toy_flat_params_random(4, seed);
+        magnitude_prune_all(&mut params, 0.5).map_err(|e| e.to_string())?;
+        let model =
+            SparseModel::compile(&params, &PackPolicy::auto()).map_err(|e| e.to_string())?;
+        let base_seed = rng.next_u64();
+        let chunk = 4usize;
+        // Shared two-chunk prefix so later requests hit cached snapshots.
+        let shared: Vec<i32> = (0..2 * chunk).map(|_| rng.below(16) as i32).collect();
+        let requests: Vec<(Vec<i32>, usize)> = (0..4)
+            .map(|_| {
+                let mut p = shared.clone();
+                p.extend((0..1 + rng.below(4)).map(|_| rng.below(16) as i32));
+                (p, 1 + rng.below(5))
+            })
+            .collect();
+        for budget_bytes in [1usize, 1 << 20] {
+            let cache =
+                PrefixCache::new(PrefixCacheConfig { chunk_tokens: chunk, budget_bytes });
+            let mut sched = Scheduler::new(&model, 2, Sampling::Temperature(0.9), base_seed)
+                .with_prefill_chunk(3)
+                .with_prefix_cache(cache);
+            for (prompt, max_new) in &requests {
+                sched.submit(prompt.clone(), *max_new).map_err(|e| e.to_string())?;
+            }
+            let mut gens = sched.run_until_idle();
+            gens.sort_by_key(|g| g.id);
+            if budget_bytes > 1 && sched.prefix_cache().map_or(0, |c| c.stats().hits) == 0 {
+                return Err("shared prefix never hit the cache".into());
+            }
+            for (id, (prompt, max_new)) in requests.iter().enumerate() {
+                let want = Session::run_solo(
+                    &model,
+                    id,
+                    prompt,
+                    *max_new,
+                    Sampling::Temperature(0.9),
+                    session_seed(base_seed, id),
+                )
+                .map_err(|e| e.to_string())?;
+                if gens[id].tokens != want {
+                    return Err(format!(
+                        "budget {budget_bytes} request {id}: cached scheduler {:?} vs solo {want:?}",
+                        gens[id].tokens
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Session state stays constant-size while the sequence grows — the
 /// O(1)-per-token memory contract.
 #[test]
 fn state_is_constant_size_across_steps() {
     let params: FlatParams = toy_flat_params_random(4, 99);
     let model = SparseModel::compile(&params, &PackPolicy::auto()).unwrap();
-    let (_, mut state) = model.prefill(&[1, 2, 3]);
+    let (_, mut state) = model.prefill(&[1, 2, 3]).unwrap();
     let bytes = state.memory_bytes();
     for t in 0..50usize {
         model.step(&mut state, (t % 16) as i32);

@@ -283,7 +283,8 @@ fn prop_structured_dstate_plan_end_to_end() {
                             ));
                         }
                     }
-                    let (mut got, mut state) = model.prefill(&tokens[..split]);
+                    let (mut got, mut state) =
+                        model.prefill(&tokens[..split]).map_err(|e| e.to_string())?;
                     for &t in &tokens[split..] {
                         got.extend(model.step(&mut state, t));
                     }

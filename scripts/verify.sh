@@ -55,5 +55,18 @@ cargo test --release -q --test prop_telemetry
 cargo run --release --quiet -- sparse-bench --telemetry --fast
 test -s "$(dirname "$(cargo locate-project --message-format plain)")/BENCH_serving.json"
 
+# Prefix-cache smoke (DESIGN.md §15): the release-mode shared-prefix A/B
+# must succeed (token equality between the cache-off and cache-on legs
+# is ensure!d inside the driver, and both leg snapshots are
+# schema-validated) and fold its section into BENCH_serving.json; the
+# chunked-prefill bit-exactness properties must hold under release
+# codegen too.
+step "prefix-cache smoke (release shared-prefix A/B + exact-resume props)"
+cargo test --release -q --test prop_engine prop_chunked_prefill
+cargo test --release -q --test prop_engine prop_cache_hit_resume
+cargo run --release --quiet -- sparse-bench --prefix-cache --fast
+grep -q '"prefix_cache"' \
+    "$(dirname "$(cargo locate-project --message-format plain)")/BENCH_serving.json"
+
 echo
 echo "verify OK"
