@@ -19,11 +19,11 @@ use anyhow::{bail, Result};
 /// All experiment ids: the paper's tables/figures in paper order, plus
 /// repo-native serving experiments (`sparse_speed`, `serve_engine`,
 /// `quant_speed`, `kernel_speed`, `scan_speed`, `serve_telemetry`,
-/// `prefix_cache`).
-pub const ALL_IDS: [&str; 22] = [
+/// `prefix_cache`, `speculate`).
+pub const ALL_IDS: [&str; 23] = [
     "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "table9",
     "table10", "table11", "table12", "fig2", "fig3", "fig4", "sparse_speed", "serve_engine",
-    "quant_speed", "kernel_speed", "scan_speed", "serve_telemetry", "prefix_cache",
+    "quant_speed", "kernel_speed", "scan_speed", "serve_telemetry", "prefix_cache", "speculate",
 ];
 
 pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
@@ -51,6 +51,7 @@ pub fn run(pipe: &Pipeline, id: &str) -> Result<Report> {
         "scan_speed" => scan_speed(pipe)?,
         "serve_telemetry" => serve_telemetry(pipe)?,
         "prefix_cache" => prefix_cache(pipe)?,
+        "speculate" => speculate(pipe)?,
         other => bail!("unknown experiment id '{other}' (known: {:?})", ALL_IDS),
     };
     rep.note(&format!(
@@ -945,6 +946,96 @@ fn prefix_cache(pipe: &Pipeline) -> Result<Report> {
     rep.note(
         "acceptance bar: with N requests sharing one prefix, the cache leg scans the shared \
          prefix once (scanned ≈ shared + N·tail) and TTFT drops for every hit",
+    );
+    Ok(rep)
+}
+
+/// Render the speculative-vs-vanilla A/B as a report — shared by the
+/// `speculate` experiment and `sparse-bench --speculate`.
+pub fn speculate_report(run: &engine::bench::SpeculateRun) -> Result<Report> {
+    let mut rep = Report::new(
+        "speculate",
+        "self-speculative greedy decode: high-sparsity draft + fused verify, vs vanilla",
+        &["Metric", "vanilla", "speculative", "ratio"],
+    );
+    rep.push_row(vec![
+        "wall (ms)".into(),
+        fmt_metric(run.vanilla_wall_ms),
+        fmt_metric(run.spec_wall_ms),
+        format!("{:.2}x", run.vanilla_wall_ms / run.spec_wall_ms.max(1e-9)),
+    ]);
+    rep.push_row(vec![
+        "decode tok/s".into(),
+        fmt_metric(run.vanilla_tok_s),
+        fmt_metric(run.spec_tok_s),
+        format!("{:.2}x", run.speedup),
+    ]);
+    let s = &run.stats;
+    rep.push_row(vec![
+        "draft tokens accepted".into(),
+        "-".into(),
+        format!("{}/{}", s.accepted, s.proposed),
+        format!("{:.0}%", s.accept_rate() * 100.0),
+    ]);
+    rep.push_row(vec![
+        "rounds (rejected)".into(),
+        "-".into(),
+        format!("{} ({})", s.rounds, s.rejected_rounds),
+        "-".into(),
+    ]);
+    rep.push_row(vec![
+        "replayed tokens".into(),
+        "-".into(),
+        s.replayed_tokens.to_string(),
+        "-".into(),
+    ]);
+    rep.note("tokens are bit-identical across all legs (greedy speculation is exact, ensure!d)");
+    Ok(rep)
+}
+
+fn speculate(pipe: &Pipeline) -> Result<Report> {
+    // Host-only like prefix_cache: speculation economics depend on
+    // shapes, sparsity levels and kernels, not trained values.
+    let params = crate::sparse::decode::m370_bench_params();
+    let (target, draft) = crate::sparse::SparseModel::compile_speculative_pair(
+        &params,
+        0.5,
+        0.875,
+        &crate::sparse::compile::PackPolicy::auto(),
+    )?;
+    let o = if pipe.fast {
+        engine::bench::SpeculateOpts {
+            streams: 4,
+            prompt_len: 16,
+            new_tokens: 24,
+            k: 4,
+            adaptive: true,
+            seed: 11,
+        }
+    } else {
+        engine::bench::SpeculateOpts {
+            streams: 8,
+            prompt_len: 48,
+            new_tokens: 96,
+            k: 4,
+            adaptive: true,
+            seed: 11,
+        }
+    };
+    let run = engine::bench::speculate_run(&target, &draft, &o)?;
+    let mut rep = speculate_report(&run)?;
+    // Best-effort, as in serve_telemetry: never discard a measured
+    // report over a perf-log write failure.
+    let log = engine::bench::bench_serving_json_path();
+    match engine::bench::update_bench_serving_json(&log, "speculation", run.section.clone()) {
+        Ok(()) => {
+            rep.note(&format!("snapshot folded into {} (speculation section)", log.display()));
+        }
+        Err(e) => rep.note(&format!("[warn] serving perf log not updated: {e:#}")),
+    }
+    rep.note(
+        "acceptance bar: greedy output bit-identical to vanilla decode (ensure!d in the \
+         driver); speedup requires the draft's accept rate to outpace its per-token cost",
     );
     Ok(rep)
 }

@@ -184,6 +184,24 @@ pub trait Backend {
         Ok(want_logits.then(|| last.expect("tokens validated non-empty")))
     }
 
+    /// Speculative verification: consume `tokens` starting at position
+    /// `state.seq_len` and return logits for **every** position,
+    /// `[tokens.len(), vocab]` (row `i` = logits after consuming
+    /// `tokens[..=i]`), advancing `state` in place.  This is what lets a
+    /// target model check a k-token draft in one multi-token pass:
+    /// row `i` tells it what it *would* have decoded at that position.
+    /// Bit-exact with stepping the same tokens one at a time — the
+    /// default *is* that step loop; backends may override with a batched
+    /// implementation that preserves the equivalence.
+    fn verify(&self, state: &mut EngineState, tokens: &[i32]) -> Result<Vec<f32>> {
+        validate_prompt(self.meta(), tokens)?;
+        let mut logits = Vec::with_capacity(tokens.len() * self.meta().vocab);
+        for &t in tokens {
+            logits.extend(self.step(state, t));
+        }
+        Ok(logits)
+    }
+
     /// Advance many independent sessions one token each, returning
     /// logits `[sessions, vocab]`.  The default is a serial loop;
     /// backends may override with a parallel implementation.  Each
@@ -239,6 +257,20 @@ impl Backend for SparseModel {
         want_logits: bool,
     ) -> Result<Option<Vec<f32>>> {
         sparse_prefill_from(self, state, tokens, if want_logits { Head::Last } else { Head::None })
+    }
+
+    /// Fused multi-token verify: the same resumed fused prefill pass as
+    /// [`Backend::prefill_resume`], but running the tied head for
+    /// *every* position (`Head::All`) so the caller gets the would-be
+    /// greedy token at each draft position from one batched matmul.
+    /// Bit-exact with the sequential step loop because every stage
+    /// (conv ring, scan seed, row kernels) funnels through the same
+    /// code — pinned by `tests/prop_engine.rs`.
+    fn verify(&self, state: &mut EngineState, tokens: &[i32]) -> Result<Vec<f32>> {
+        validate_prompt(&self.meta, tokens)?;
+        let logits = sparse_prefill_from(self, state, tokens, Head::All)?
+            .expect("Head::All always returns logits");
+        Ok(logits)
     }
 
     /// Batch-major fused step for many sessions: one multi-token matmul
@@ -757,6 +789,26 @@ mod tests {
         for (i, (u, v)) in got.iter().zip(&want).enumerate() {
             assert!((u - v).abs() < 1e-4, "logit {i}: {u} vs {v}");
         }
+    }
+
+    #[test]
+    fn verify_matches_sequential_steps_bitwise() {
+        let mut p = toy_flat_params_random(4, 3);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let prompt = [2i32, 9, 4];
+        let draft = [7i32, 1, 13, 5];
+
+        let (_, mut fused) = model.prefill_last(&prompt).unwrap();
+        let mut stepped = fused.snapshot();
+        let got = model.verify(&mut fused, &draft).unwrap();
+        let mut want = Vec::new();
+        for &t in &draft {
+            want.extend(model.step(&mut stepped, t));
+        }
+        assert_eq!(got, want, "fused verify rows == stepped logits, bitwise");
+        assert_eq!(fused, stepped, "states agree after verify");
+        assert_eq!(fused.seq_len, prompt.len() + draft.len());
     }
 
     #[test]

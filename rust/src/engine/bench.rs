@@ -1,16 +1,20 @@
 //! Serving measurements for the stateful engine: steady-state step
 //! decode (O(1) per token) against the full-recompute baseline (O(L) per
 //! generated token via `sparse::decode::forward_logits`), plus the
-//! serving-telemetry workload driver ([`serve_telemetry_run`]) and the
-//! shared-prefix prefix-cache A/B ([`prefix_cache_run`]) whose
+//! serving-telemetry workload driver ([`serve_telemetry_run`]), the
+//! shared-prefix prefix-cache A/B ([`prefix_cache_run`]) and the
+//! speculative-vs-vanilla greedy A/B ([`speculate_run`]) whose
 //! snapshots fold into `BENCH_serving.json`.
 //!
 //! Shared by the CLI `sparse-bench --mode step` / `--telemetry` /
-//! `--prefix-cache`, the `serve_engine` / `serve_telemetry` /
-//! `prefix_cache` experiments and the `engine_*` cargo-bench groups, so
-//! every surface reports the same numbers.
+//! `--prefix-cache` / `--speculate`, the `serve_engine` /
+//! `serve_telemetry` / `prefix_cache` / `speculate` experiments and the
+//! `engine_*` cargo-bench groups, so every surface reports the same
+//! numbers.
 
 use super::prefix_cache::{PrefixCache, PrefixCacheConfig};
+use super::sampler::argmax;
+use super::speculative::{DraftPolicy, SpecConfig, SpecDecoder, SpecStats};
 use super::{Backend, EngineState, Sampling, Scheduler, SchedulerStats};
 use crate::benchx::{self, BenchResult};
 use crate::model::FlatParams;
@@ -413,6 +417,170 @@ pub fn prefix_cache_run<B: Backend>(backend: &B, o: &PrefixCacheOpts) -> Result<
     })
 }
 
+/// A speculative-vs-vanilla A/B workload: `streams` independent greedy
+/// generations of `new_tokens` each from random `prompt_len`-token
+/// prompts, decoded once vanilla (prefill + step loop on the target)
+/// and once speculatively (draft + fused verify).
+#[derive(Debug, Clone)]
+pub struct SpeculateOpts {
+    pub streams: usize,
+    pub prompt_len: usize,
+    pub new_tokens: usize,
+    /// Maximum draft tokens per round ([`SpecConfig::k`]).
+    pub k: usize,
+    /// Adaptive window (additive-increase/halve-on-reject) vs fixed k.
+    pub adaptive: bool,
+    pub seed: u64,
+}
+
+impl SpeculateOpts {
+    fn workload_json(&self) -> Json {
+        json::obj(vec![
+            ("streams", json::num(self.streams as f64)),
+            ("prompt_len", json::num(self.prompt_len as f64)),
+            ("new_tokens", json::num(self.new_tokens as f64)),
+            ("k", json::num(self.k as f64)),
+            ("adaptive", Json::Bool(self.adaptive)),
+            ("seed", json::num(self.seed as f64)),
+        ])
+    }
+
+    fn spec_config(&self) -> SpecConfig {
+        SpecConfig {
+            k: self.k,
+            policy: if self.adaptive { DraftPolicy::Adaptive } else { DraftPolicy::Fixed },
+        }
+    }
+
+    fn prompts(&self, vocab: usize) -> Vec<Vec<i32>> {
+        let mut rng = Pcg::seeded(self.seed ^ 0x5bec);
+        (0..self.streams)
+            .map(|_| (0..self.prompt_len).map(|_| rng.below(vocab) as i32).collect())
+            .collect()
+    }
+}
+
+/// Vanilla greedy decode on the serving step path: prefill once, then
+/// O(1) steps — the baseline leg the speculative decode must match
+/// token-for-token and beat on wall clock.
+fn greedy_decode_solo<B: Backend>(backend: &B, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+    let (mut logits, mut state) = backend.prefill_last(prompt)?;
+    let mut out = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        let t = argmax(&logits);
+        out.push(t);
+        logits = backend.step(&mut state, t);
+    }
+    Ok(out)
+}
+
+/// Result of one speculative-vs-vanilla A/B ([`speculate_run`]).
+pub struct SpeculateRun {
+    pub vanilla_wall_ms: f64,
+    pub spec_wall_ms: f64,
+    pub vanilla_tok_s: f64,
+    pub spec_tok_s: f64,
+    /// `spec_tok_s / vanilla_tok_s` — > 1 means speculation won.
+    pub speedup: f64,
+    /// Counters from the timed speculative leg.
+    pub stats: SpecStats,
+    /// The full `speculation` perf-log section: `workload`,
+    /// `vanilla`/`speculative` legs, telemetry group, `summary`.
+    pub section: Json,
+}
+
+/// Run the greedy workload three times — vanilla (timed), speculative
+/// (timed), and speculative again with telemetry enabled (untimed, so
+/// the timed legs stay clock-read-free) — and assemble the
+/// `speculation` perf-log section.  The token streams of all three runs
+/// must be **bit-identical** (greedy speculation is exact); this is
+/// `ensure!`d, never assumed.  Leaves telemetry disabled on return.
+pub fn speculate_run<T: Backend, D: Backend>(
+    target: &T,
+    draft: &D,
+    o: &SpeculateOpts,
+) -> Result<SpeculateRun> {
+    ensure!(o.streams > 0 && o.prompt_len > 0 && o.new_tokens > 0, "empty speculate workload");
+    let prompts = o.prompts(target.meta().vocab);
+    telemetry::set_enabled(false);
+
+    let sw = Stopwatch::new();
+    let mut vanilla = Vec::with_capacity(o.streams);
+    for p in &prompts {
+        vanilla.push(greedy_decode_solo(target, p, o.new_tokens)?);
+    }
+    let vanilla_wall_ms = sw.millis();
+
+    let mut dec = SpecDecoder::new(target, draft, o.spec_config())?;
+    let sw = Stopwatch::new();
+    let mut spec = Vec::with_capacity(o.streams);
+    for p in &prompts {
+        spec.push(dec.generate(p, o.new_tokens)?);
+    }
+    let spec_wall_ms = sw.millis();
+    ensure!(vanilla == spec, "speculative greedy decode diverged from vanilla greedy decode");
+    let stats = dec.stats;
+
+    // Metrics pass: identical workload with telemetry on, so the
+    // speculation histograms/counters land in the registry snapshot.
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    let mut dec_t = SpecDecoder::new(target, draft, o.spec_config())?;
+    for (p, want) in prompts.iter().zip(&spec) {
+        let got = dec_t.generate(p, o.new_tokens)?;
+        ensure!(&got == want, "telemetry-enabled speculative leg diverged");
+    }
+    telemetry::set_enabled(false);
+    let telem = telemetry::snapshot_json().get("speculation")?.clone();
+    telemetry::validate_speculation_group(&telem)?;
+    ensure!(telem.get("rounds")?.as_f64()? >= 1.0, "speculation ran no rounds");
+
+    let decoded = o.streams * o.new_tokens;
+    let vanilla_tok_s = tok_s(decoded, vanilla_wall_ms);
+    let spec_tok_s = tok_s(decoded, spec_wall_ms);
+    let speedup = spec_tok_s / vanilla_tok_s.max(1e-9);
+    let summary = json::obj(vec![
+        ("speedup", json::num(speedup)),
+        ("accept_rate", json::num(stats.accept_rate())),
+        ("rounds", json::num(stats.rounds as f64)),
+        ("proposed", json::num(stats.proposed as f64)),
+        ("accepted", json::num(stats.accepted as f64)),
+        ("rejected_rounds", json::num(stats.rejected_rounds as f64)),
+        ("replayed_tokens", json::num(stats.replayed_tokens as f64)),
+        ("draft_steps", json::num(stats.draft_steps as f64)),
+        ("verify_tokens", json::num(stats.verify_tokens as f64)),
+        ("tokens_equal", Json::Bool(true)),
+    ]);
+    let section = json::obj(vec![
+        ("workload", o.workload_json()),
+        (
+            "vanilla",
+            json::obj(vec![
+                ("wall_ms", json::num(vanilla_wall_ms)),
+                ("tok_s", json::num(vanilla_tok_s)),
+            ]),
+        ),
+        (
+            "speculative",
+            json::obj(vec![
+                ("wall_ms", json::num(spec_wall_ms)),
+                ("tok_s", json::num(spec_tok_s)),
+                ("telemetry", telem),
+            ]),
+        ),
+        ("summary", summary),
+    ]);
+    Ok(SpeculateRun {
+        vanilla_wall_ms,
+        spec_wall_ms,
+        vanilla_tok_s,
+        spec_tok_s,
+        speedup,
+        stats,
+        section,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -451,6 +619,29 @@ mod tests {
         // prefix_cache_run itself (which resets the global telemetry
         // registry) is exercised under the telemetry lock in
         // tests/prop_telemetry.rs, not here.
+    }
+
+    #[test]
+    fn speculate_workload_is_seeded_and_in_vocab() {
+        let o = SpeculateOpts {
+            streams: 3,
+            prompt_len: 5,
+            new_tokens: 4,
+            k: 4,
+            adaptive: true,
+            seed: 9,
+        };
+        let a = o.prompts(16);
+        assert_eq!(a, o.prompts(16), "prompt generation is seed-deterministic");
+        assert_eq!(a.len(), 3);
+        for p in &a {
+            assert_eq!(p.len(), 5);
+            assert!(p.iter().all(|&t| (0..16).contains(&t)));
+        }
+        assert_eq!(o.spec_config().policy, DraftPolicy::Adaptive);
+        // speculate_run itself (which resets the global telemetry
+        // registry) is exercised under the telemetry lock in
+        // tests/prop_telemetry.rs and by the CLI smoke.
     }
 
     #[test]

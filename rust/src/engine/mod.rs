@@ -29,6 +29,13 @@
 //!                   O(1) recurrent state makes a cached prefix of any
 //!                   length cost a few hundred KB, so shared system
 //!                   prompts prefill once; resume is bit-exact.
+//! * [`speculative`] — self-speculative greedy decode (DESIGN.md §16):
+//!                   a high-sparsity draft compiled from the *same*
+//!                   checkpoint proposes k tokens, the target verifies
+//!                   them in one fused multi-token pass
+//!                   ([`Backend::verify`]), rollback via
+//!                   [`EngineState::restore`]; greedy output stays
+//!                   bit-identical to vanilla decode.
 //! * [`bench`]     — step-decode vs full-recompute throughput rows
 //!                   shared by the CLI, the `serve_engine` experiment
 //!                   and `cargo bench`; plus the serving-telemetry
@@ -50,6 +57,7 @@ pub mod prefix_cache;
 pub mod sampler;
 pub mod scheduler;
 pub mod session;
+pub mod speculative;
 pub mod state;
 
 pub use backend::Backend;
@@ -57,4 +65,5 @@ pub use prefix_cache::{CacheStats, PrefixCache, PrefixCacheConfig};
 pub use sampler::{Sampler, Sampling};
 pub use scheduler::{session_seed, Generation, Request, Scheduler, SchedulerStats};
 pub use session::Session;
+pub use speculative::{DraftPolicy, SpecConfig, SpecDecoder, SpecStats};
 pub use state::{EngineState, LayerState, StepScratch};

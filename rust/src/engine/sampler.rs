@@ -47,7 +47,11 @@ impl Sampler {
     }
 }
 
-fn argmax(logits: &[f32]) -> i32 {
+/// Deterministic argmax over logits (first index wins ties) — the shared
+/// greedy rule for [`Sampler`] and the speculative accept test, so
+/// "draft token == target greedy token" compares exactly what a greedy
+/// vanilla decode would have emitted.
+pub fn argmax(logits: &[f32]) -> i32 {
     let mut best = 0usize;
     let mut best_v = logits[0];
     for (i, &v) in logits.iter().enumerate().skip(1) {

@@ -1,0 +1,354 @@
+//! Self-speculative greedy decode: a cheap high-sparsity **draft** model
+//! proposes k tokens one step at a time, then the 50% **target** model
+//! verifies all k in a single fused multi-token pass
+//! ([`Backend::verify`]), accepting the longest matching prefix
+//! (DESIGN.md §16).
+//!
+//! Both models come from *one* checkpoint
+//! ([`crate::sparse::SparseModel::compile_speculative_pair`]): the paper
+//! shows 50% SSM sparsity is lossless while 80–90% masks stay
+//! directionally correct — exactly the quality a draft needs.  Unlike
+//! transformer speculative decoding, rollback here is trivial: Mamba's
+//! recurrent [`EngineState`] is small and fixed-size, so a mis-
+//! speculated round costs two memcpys per layer
+//! ([`EngineState::restore`]) plus replaying the few committed tokens.
+//!
+//! **Correctness contract:** greedy speculative output is bit-identical
+//! to vanilla greedy decode.  Every emitted token is the *target's*
+//! greedy choice — accepted draft tokens are accepted precisely because
+//! they equal the target's argmax at that position, and the first
+//! mismatch emits the target's token instead.  The verify pass and the
+//! step path agree bitwise per kernel (pinned by `tests/prop_engine.rs`),
+//! so acceptance is plain `==` on token ids, not a tolerance.
+
+use super::sampler::argmax;
+use super::{Backend, EngineState};
+use crate::telemetry;
+use anyhow::{ensure, Result};
+use std::sync::atomic::Ordering::Relaxed;
+use std::time::Instant;
+
+/// How the draft window `k` evolves across rounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DraftPolicy {
+    /// Always propose `SpecConfig::k` tokens.
+    Fixed,
+    /// Additive-increase / halve-on-reject between 1 and
+    /// [`SpecConfig::k`]: a round that verifies fully grows the window
+    /// by one, a mismatch halves it — so a bad draft degrades
+    /// gracefully toward k=1 (≈ vanilla decode plus one cheap draft
+    /// step) instead of wasting long verify passes.
+    Adaptive,
+}
+
+/// Speculative decode configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// Maximum draft tokens proposed per round (the adaptive ceiling).
+    pub k: usize,
+    pub policy: DraftPolicy,
+}
+
+impl Default for SpecConfig {
+    fn default() -> SpecConfig {
+        SpecConfig { k: 4, policy: DraftPolicy::Adaptive }
+    }
+}
+
+/// Per-generation speculation counters (always collected — they are a
+/// handful of integer adds; the telemetry registry mirrors them
+/// process-wide when enabled).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Rounds run (one draft loop + one verify pass each).
+    pub rounds: u64,
+    /// Draft tokens proposed.
+    pub proposed: u64,
+    /// Draft tokens accepted by verification.
+    pub accepted: u64,
+    /// Rounds that ended in a mismatch rollback.
+    pub rejected_rounds: u64,
+    /// Tokens replayed through both models after rollbacks.
+    pub replayed_tokens: u64,
+    /// Single-token draft steps taken (k+1 per round: the last proposal
+    /// is stepped eagerly so a full accept needs no extra work).
+    pub draft_steps: u64,
+    /// Tokens pushed through the target's fused verify pass.
+    pub verify_tokens: u64,
+}
+
+impl SpecStats {
+    /// Fraction of proposed draft tokens the target accepted.
+    pub fn accept_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+}
+
+/// Paired draft+target greedy decoder.  One decoder owns one generation
+/// stream's adaptive window; reuse across calls keeps the learned `k`.
+pub struct SpecDecoder<'a, T: Backend + ?Sized, D: Backend + ?Sized> {
+    target: &'a T,
+    draft: &'a D,
+    cfg: SpecConfig,
+    cur_k: usize,
+    pub stats: SpecStats,
+}
+
+impl<'a, T: Backend + ?Sized, D: Backend + ?Sized> SpecDecoder<'a, T, D> {
+    pub fn new(target: &'a T, draft: &'a D, cfg: SpecConfig) -> Result<SpecDecoder<'a, T, D>> {
+        ensure!(cfg.k >= 1, "speculative window k must be >= 1, got {}", cfg.k);
+        ensure!(
+            target.meta().vocab == draft.meta().vocab,
+            "draft vocab {} disagrees with target vocab {}",
+            draft.meta().vocab,
+            target.meta().vocab
+        );
+        Ok(SpecDecoder { target, draft, cfg, cur_k: cfg.k, stats: SpecStats::default() })
+    }
+
+    /// The window the next round will propose (tests the adaptive policy).
+    pub fn current_k(&self) -> usize {
+        self.cur_k
+    }
+
+    /// Greedy-decode `max_new` tokens after `prompt`, speculatively.
+    ///
+    /// Returns the emitted tokens — bit-identical to what a vanilla
+    /// greedy decode of the target would emit.  On return both models'
+    /// internal states (rebuilt per call) sat exactly after
+    /// `prompt + emitted`, which is what makes the final-state property
+    /// test (`speculative == cold prefill of prompt+emitted`) exact.
+    pub fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        let (tokens, _, _) = self.generate_with_states(prompt, max_new)?;
+        Ok(tokens)
+    }
+
+    /// [`SpecDecoder::generate`] also returning the final
+    /// (target, draft) states — the property tests assert they equal a
+    /// cold prefill of `prompt + emitted`.
+    pub fn generate_with_states(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Result<(Vec<i32>, EngineState, EngineState)> {
+        let vocab = self.target.meta().vocab;
+        let mut t_state = EngineState::new(self.target.meta());
+        let mut t_logits = self
+            .target
+            .prefill_resume(&mut t_state, prompt, true)?
+            .expect("want_logits=true always yields logits");
+        let mut d_state = EngineState::new(self.draft.meta());
+        self.draft.prefill_resume(&mut d_state, prompt, false)?;
+
+        let mut out = Vec::with_capacity(max_new);
+        while out.len() < max_new {
+            // Round invariant: both states sit after prompt + out, and
+            // t_logits holds the target's logits at that position.
+            let t0 = argmax(&t_logits);
+            out.push(t0);
+            if out.len() == max_new {
+                // Budget exhausted before any speculation: commit t0 so
+                // the exit states cover every emitted token.
+                self.target.prefill_resume(&mut t_state, &[t0], false)?;
+                self.draft.prefill_resume(&mut d_state, &[t0], false)?;
+                break;
+            }
+            let k = self.cur_k.min(max_new - out.len());
+
+            // Draft proposes k tokens one step at a time.  The last
+            // proposal is stepped eagerly too (k+1 steps): a full accept
+            // then leaves the draft state already advanced, and a
+            // mismatch rolls the whole thing back anyway.
+            let telem = telemetry::enabled();
+            let d_snap = d_state.snapshot();
+            let draft_t0 = telem.then(Instant::now);
+            let mut tokens = Vec::with_capacity(k + 1);
+            tokens.push(t0);
+            let mut dl = self.draft.step(&mut d_state, t0);
+            for _ in 0..k {
+                let q = argmax(&dl);
+                tokens.push(q);
+                dl = self.draft.step(&mut d_state, q);
+            }
+            let draft_us = draft_t0.map(|t| t.elapsed().as_micros() as u64);
+
+            // Target verifies all k+1 positions in one fused pass.
+            let t_snap = t_state.snapshot();
+            let verify_t0 = telem.then(Instant::now);
+            let rows = self.target.verify(&mut t_state, &tokens)?;
+            let verify_us = verify_t0.map(|t| t.elapsed().as_micros() as u64);
+
+            // Accept the longest prefix where the draft matched the
+            // target's greedy choice; the first mismatch emits the
+            // target's token instead (it is the correct continuation —
+            // a vanilla decode would have emitted exactly it).
+            let mut m = 0usize;
+            let mut mismatch = None;
+            while m < k {
+                let g = argmax(&rows[m * vocab..(m + 1) * vocab]);
+                out.push(g);
+                if g == tokens[m + 1] {
+                    m += 1;
+                } else {
+                    mismatch = Some(g);
+                    break;
+                }
+            }
+
+            let replayed = if let Some(g) = mismatch {
+                // Roll both models back to the round start and replay
+                // the committed tokens: the accepted prefix plus the
+                // correction.  Replay is bit-exact with having stepped
+                // them (chunked == whole prefill is an identity).
+                t_state.restore(&t_snap);
+                d_state.restore(&d_snap);
+                let committed: Vec<i32> =
+                    tokens[..=m].iter().copied().chain(std::iter::once(g)).collect();
+                t_logits = self
+                    .target
+                    .prefill_resume(&mut t_state, &committed, true)?
+                    .expect("want_logits=true always yields logits");
+                self.draft.prefill_resume(&mut d_state, &committed, false)?;
+                committed.len() as u64
+            } else {
+                // Full accept: both states already sit after every
+                // emitted token, and the verify pass's last row is the
+                // next position's logits for free.
+                t_logits = rows[k * vocab..].to_vec();
+                0
+            };
+
+            self.stats.rounds += 1;
+            self.stats.proposed += k as u64;
+            self.stats.accepted += m as u64;
+            self.stats.draft_steps += (k + 1) as u64;
+            self.stats.verify_tokens += (k + 1) as u64;
+            if mismatch.is_some() {
+                self.stats.rejected_rounds += 1;
+                self.stats.replayed_tokens += replayed;
+            }
+            if telem {
+                let reg = telemetry::registry();
+                reg.spec_rounds.fetch_add(1, Relaxed);
+                reg.spec_proposed.fetch_add(k as u64, Relaxed);
+                reg.spec_accepted.fetch_add(m as u64, Relaxed);
+                if mismatch.is_some() {
+                    reg.spec_rejected_rounds.fetch_add(1, Relaxed);
+                    reg.spec_replayed_tokens.fetch_add(replayed, Relaxed);
+                }
+                reg.spec_accept_len.record(m as u64);
+                if let Some(us) = draft_us {
+                    reg.spec_draft_us.record(us);
+                }
+                if let Some(us) = verify_us {
+                    reg.spec_verify_us.record(us);
+                }
+            }
+
+            if self.cfg.policy == DraftPolicy::Adaptive {
+                self.cur_k = if mismatch.is_some() {
+                    (self.cur_k / 2).max(1)
+                } else {
+                    (self.cur_k + 1).min(self.cfg.k)
+                };
+            }
+        }
+        Ok((out, t_state, d_state))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::toy::toy_flat_params_random;
+    use crate::sparse::compile::PackPolicy;
+    use crate::sparse::SparseModel;
+
+    fn greedy_vanilla<B: Backend>(model: &B, prompt: &[i32], max_new: usize) -> Vec<i32> {
+        let (mut logits, mut state) = model.prefill_last(prompt).unwrap();
+        let mut out = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            let t = argmax(&logits);
+            out.push(t);
+            logits = model.step(&mut state, t);
+        }
+        out
+    }
+
+    #[test]
+    fn speculative_greedy_equals_vanilla_greedy() {
+        let p = toy_flat_params_random(4, 20);
+        let (target, draft) =
+            SparseModel::compile_speculative_pair(&p, 0.5, 0.85, &PackPolicy::auto()).unwrap();
+        let prompt = [3i32, 14, 1, 5];
+        let want = greedy_vanilla(&target, &prompt, 24);
+        for k in [1usize, 2, 4, 8] {
+            for policy in [DraftPolicy::Fixed, DraftPolicy::Adaptive] {
+                let mut dec =
+                    SpecDecoder::new(&target, &draft, SpecConfig { k, policy }).unwrap();
+                let got = dec.generate(&prompt, 24).unwrap();
+                assert_eq!(got, want, "k={k} policy={policy:?}");
+                assert!(dec.stats.rounds > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn final_states_sit_after_all_emitted_tokens() {
+        let p = toy_flat_params_random(4, 21);
+        let (target, draft) =
+            SparseModel::compile_speculative_pair(&p, 0.5, 0.9, &PackPolicy::auto()).unwrap();
+        let prompt = [2i32, 7, 9];
+        let mut dec = SpecDecoder::new(&target, &draft, SpecConfig::default()).unwrap();
+        let (out, t_state, d_state) = dec.generate_with_states(&prompt, 10).unwrap();
+        assert_eq!(out.len(), 10);
+        let full: Vec<i32> = prompt.iter().chain(&out).copied().collect();
+        let (_, want_t) = target.prefill_last(&full).unwrap();
+        let (_, want_d) = draft.prefill_last(&full).unwrap();
+        assert_eq!(t_state, want_t, "target state == cold prefill of prompt+emitted");
+        assert_eq!(d_state, want_d, "draft state == cold prefill of prompt+emitted");
+    }
+
+    #[test]
+    fn self_draft_accepts_everything() {
+        // Target drafting for itself must accept every proposal.
+        let p = toy_flat_params_random(4, 22);
+        let (target, _) =
+            SparseModel::compile_speculative_pair(&p, 0.5, 0.9, &PackPolicy::auto()).unwrap();
+        let cfg = SpecConfig { k: 4, policy: DraftPolicy::Fixed };
+        let mut dec = SpecDecoder::new(&target, &target, cfg).unwrap();
+        let out = dec.generate(&[1i32, 2, 3], 12).unwrap();
+        assert_eq!(out.len(), 12);
+        assert_eq!(dec.stats.rejected_rounds, 0);
+        assert_eq!(dec.stats.accepted, dec.stats.proposed);
+        assert_eq!(dec.stats.accept_rate(), 1.0);
+    }
+
+    #[test]
+    fn adaptive_window_shrinks_and_regrows() {
+        let p = toy_flat_params_random(4, 23);
+        let (target, _) =
+            SparseModel::compile_speculative_pair(&p, 0.5, 0.9, &PackPolicy::auto()).unwrap();
+        // Self-draft: every round verifies fully, so the window climbs
+        // back to the ceiling from a shrunken start.
+        let cfg = SpecConfig { k: 8, policy: DraftPolicy::Adaptive };
+        let mut dec = SpecDecoder::new(&target, &target, cfg).unwrap();
+        dec.cur_k = 1;
+        dec.generate(&[5i32, 6], 30).unwrap();
+        assert!(dec.current_k() > 1, "window regrew from 1, got {}", dec.current_k());
+        assert!(dec.current_k() <= 8);
+    }
+
+    #[test]
+    fn bad_config_is_rejected() {
+        let p = toy_flat_params_random(4, 24);
+        let (target, draft) =
+            SparseModel::compile_speculative_pair(&p, 0.5, 0.9, &PackPolicy::auto()).unwrap();
+        let cfg = SpecConfig { k: 0, policy: DraftPolicy::Fixed };
+        assert!(SpecDecoder::new(&target, &draft, cfg).is_err());
+    }
+}

@@ -132,6 +132,22 @@ impl EngineState {
             scratch: StepScratch::default(),
         }
     }
+
+    /// Roll this state back to a previously taken [`snapshot`] in place:
+    /// copies the recurrent content (`seq_len` + per-layer `h`/`conv`)
+    /// without touching scratch, so a speculative-decode rollback costs
+    /// two memcpys per layer and zero allocations.  The snapshot must
+    /// come from the same model (identical layer shapes).
+    ///
+    /// [`snapshot`]: EngineState::snapshot
+    pub fn restore(&mut self, snap: &EngineState) {
+        debug_assert_eq!(self.layers.len(), snap.layers.len());
+        self.seq_len = snap.seq_len;
+        for (dst, src) in self.layers.iter_mut().zip(&snap.layers) {
+            dst.h.copy_from_slice(&src.h);
+            dst.conv.copy_from_slice(&src.conv);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -175,6 +191,29 @@ mod tests {
         assert_eq!(snap, st, "recurrent content matches");
         assert!(snap.scratch.x.is_empty(), "scratch is not snapshotted");
         assert_eq!(snap.memory_bytes(), st.memory_bytes());
+    }
+
+    #[test]
+    fn restore_rolls_back_in_place_preserving_scratch() {
+        let meta = m370_dims_meta();
+        let mut st = EngineState::new(&meta);
+        st.seq_len = 3;
+        st.layers[0].h[0] = 1.5;
+        st.layers[0].conv[0] = -0.5;
+        let snap = st.snapshot();
+        assert_eq!(snap.memory_bytes(), st.memory_bytes(), "snapshot skips scratch");
+
+        // Advance past the snapshot, populate scratch, then roll back.
+        st.seq_len = 9;
+        st.layers[0].h[0] = 42.0;
+        st.layers[0].conv[0] = 7.0;
+        st.scratch.ensure(&meta);
+        let scratch_cap = st.scratch.x.capacity();
+        st.restore(&snap);
+
+        assert_eq!(st, snap, "recurrent content rolled back");
+        assert_eq!(st.scratch.x.capacity(), scratch_cap, "live scratch kept, no realloc");
+        assert_eq!(st.memory_bytes(), snap.memory_bytes());
     }
 
     #[test]

@@ -61,6 +61,15 @@ SUBCOMMANDS:
                              snapshot folds into BENCH_serving.json
                              (--requests/--batch/--shared-len/--tail-len/
                              --new/--chunk/--prefix-cache-mb/--seed)
+      --speculate            self-speculative greedy A/B: compile a 50%
+                             target + a high-sparsity draft from one
+                             checkpoint, decode the same prompts vanilla
+                             vs speculatively (tokens checked
+                             bit-identical across legs), report tok/s
+                             both legs + accept rate; snapshot folds
+                             into BENCH_serving.json
+                             (--requests/--prompt-len/--new/--k/
+                             --draft-sparsity/--seed)
   generate                   continuous-batching generation on the stateful
                              engine (host-only: random weights, byte vocab)
       --requests 8           queued requests
@@ -99,7 +108,7 @@ fn main() {
 }
 
 fn real_main(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["fast", "all", "telemetry", "prefix-cache"])?;
+    let args = Args::parse(argv, &["fast", "all", "telemetry", "prefix-cache", "speculate"])?;
     if let Some(lv) = args.get("log-level") {
         let level = sparsessm::telemetry::log::Level::parse(lv).ok_or_else(|| {
             anyhow::anyhow!("unknown --log-level '{lv}' (try: error, warn, info, debug)")
@@ -297,6 +306,41 @@ fn sparse_bench(args: &Args) -> Result<()> {
         let log = bench::bench_serving_json_path();
         bench::update_bench_serving_json(&log, "prefix_cache", run.section)?;
         println!("prefix-cache snapshot written to {} (prefix_cache section)", log.display());
+        return Ok(());
+    }
+
+    if args.has("speculate") {
+        // Speculative-vs-vanilla greedy A/B: a 50% target and a
+        // high-sparsity draft compiled from the same random checkpoint
+        // (shared head plane) decode the same prompts; token equality
+        // across legs is ensure!d inside the driver.  A write failure
+        // is a hard error (verify.sh smoke relies on the snapshot
+        // landing on disk).
+        use sparsessm::engine::bench;
+        let fast = args.has("fast");
+        let params = decode::m370_bench_params();
+        let target_sparsity = args.get_f64("sparsity", 0.5)?;
+        let draft_sparsity = args.get_f64("draft-sparsity", 0.875)?;
+        let policy = PackPolicy::auto().with_dtype(dtype).with_kernel(kernel);
+        let (target, draft) = SparseModel::compile_speculative_pair(
+            &params,
+            target_sparsity,
+            draft_sparsity,
+            &policy,
+        )?;
+        let o = bench::SpeculateOpts {
+            streams: args.get_usize("requests", if fast { 4 } else { 8 })?.max(1),
+            prompt_len: args.get_usize("prompt-len", if fast { 16 } else { 48 })?.max(1),
+            new_tokens: args.get_usize("new", if fast { 24 } else { 96 })?.max(1),
+            k: args.get_usize("k", 4)?.max(1),
+            adaptive: true,
+            seed: args.get_usize("seed", 11)? as u64,
+        };
+        let run = bench::speculate_run(&target, &draft, &o)?;
+        experiments::speculate_report(&run)?.print();
+        let log = bench::bench_serving_json_path();
+        bench::update_bench_serving_json(&log, "speculation", run.section)?;
+        println!("speculation snapshot written to {} (speculation section)", log.display());
         return Ok(());
     }
 

@@ -449,7 +449,13 @@ impl SparseModel {
         }
         ensure!(r.pos == bytes.len(), "trailing bytes in checkpoint");
         // The kernel choice is a serving-time preference, not model data.
-        Ok(SparseModel { meta, head, layers, norm_f, kernel: Kernel::default() })
+        Ok(SparseModel {
+            meta,
+            head: std::sync::Arc::new(head),
+            layers,
+            norm_f,
+            kernel: Kernel::default(),
+        })
     }
 }
 

@@ -30,8 +30,9 @@ use super::{CsrMatrix, DenseMatrix, Dtype, Format, Kernel, Packed};
 use crate::coordinator::transpose;
 use crate::model::{FlatParams, ModelMeta, FFN_MODULES};
 use crate::pruning::{magnitude, Mask};
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// How to pack each prunable tensor: structure plane × value dtype ×
 /// row kernel.
@@ -171,7 +172,12 @@ pub struct SparseModel {
     /// Tied embedding/LM head, stored once: row-major `[vocab, d_model]`
     /// serves both the token gather ([`SparseModel::embed_row`]) and the
     /// head matmul (it is already kernel orientation).  Always dense f32.
-    pub head: Packed,
+    /// Behind an `Arc` because the head is never pruned, so models
+    /// compiled from the same checkpoint at different sparsities (e.g. a
+    /// speculative draft/target pair,
+    /// [`SparseModel::compile_speculative_pair`]) can share the single
+    /// largest plane instead of duplicating `vocab × d_model` floats.
+    pub head: Arc<Packed>,
     pub layers: Vec<SparseLayer>,
     pub norm_f: Vec<f32>,
     /// Row-kernel implementation the decode/engine paths run (from
@@ -198,7 +204,11 @@ impl SparseModel {
         let meta = params.layout.meta.clone();
         let (dm, di, ds, dr, dc) =
             (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank, meta.d_conv);
-        let head = Packed::Dense(DenseMatrix::from_dense(params.view("embedding")?, meta.vocab, dm));
+        let head = Arc::new(Packed::Dense(DenseMatrix::from_dense(
+            params.view("embedding")?,
+            meta.vocab,
+            dm,
+        )));
         let mut layers = Vec::with_capacity(meta.n_layer);
         for l in 0..meta.n_layer {
             let v = |m: &str| params.view(&format!("layers.{l}.{m}"));
@@ -234,7 +244,7 @@ impl SparseModel {
     #[inline]
     pub fn embed_row(&self, v: usize) -> &[f32] {
         let dm = self.meta.d_model;
-        match &self.head {
+        match &*self.head {
             // compile always builds a dense f32 head (unpruned + tied).
             Packed::Dense(m) => {
                 let vals = m.vals.as_f32().expect("tied head is always f32");
@@ -257,6 +267,41 @@ impl SparseModel {
             mask.apply(p.view_mut(name)?);
         }
         SparseModel::compile(&p, policy)
+    }
+
+    /// Compile a speculative **target/draft pair** from one checkpoint:
+    /// the target at `target_sparsity` (the paper's lossless operating
+    /// point) and a cheaper draft at `draft_sparsity` (the degraded-but-
+    /// directionally-correct 80–90% band), without duplicating the
+    /// planes the two models share.
+    ///
+    /// The checkpoint is cloned **once**; the draft is produced by
+    /// pruning the *same copy* further, so the draft's zero set is a
+    /// superset of the target's by construction (magnitude pruning at a
+    /// higher sparsity always prunes everything a lower sparsity pruned
+    /// — zeros have the smallest magnitude).  The tied embedding/head —
+    /// the single largest plane, never pruned — is shared between the
+    /// two models via [`Arc`], so the pair costs one head plus two sets
+    /// of (packed, mostly-empty) projections.
+    pub fn compile_speculative_pair(
+        params: &FlatParams,
+        target_sparsity: f64,
+        draft_sparsity: f64,
+        policy: &PackPolicy,
+    ) -> Result<(SparseModel, SparseModel)> {
+        ensure!(
+            draft_sparsity > target_sparsity,
+            "draft sparsity {draft_sparsity} must exceed target sparsity {target_sparsity}"
+        );
+        let mut p = params.clone();
+        magnitude_prune_all(&mut p, target_sparsity)?;
+        let target = SparseModel::compile(&p, policy)?;
+        magnitude_prune_all(&mut p, draft_sparsity)?;
+        let mut draft = SparseModel::compile(&p, policy)?;
+        // Both compiles packed the identical unpruned embedding — drop
+        // the draft's copy and share the target's allocation.
+        draft.head = Arc::clone(&target.head);
+        Ok((target, draft))
     }
 
     /// Serving footprint of all stored weights (packed + dense vectors).
@@ -475,6 +520,45 @@ mod tests {
         }
         let mq = SparseModel::compile(&q, &PackPolicy::auto()).unwrap();
         assert_eq!(mq.layers[0].scan_plan(), None);
+    }
+
+    #[test]
+    fn speculative_pair_shares_head_and_nests_masks() {
+        let p = toy_flat_params_random(4, 12);
+        let (target, draft) =
+            SparseModel::compile_speculative_pair(&p, 0.5, 0.9, &PackPolicy::auto()).unwrap();
+        // One physical head plane for the pair.
+        assert!(Arc::ptr_eq(&target.head, &draft.head), "tied head is shared, not cloned");
+        // The draft really is the sparser model.
+        assert!(
+            draft.weight_density() < target.weight_density(),
+            "draft density {} vs target {}",
+            draft.weight_density(),
+            target.weight_density()
+        );
+        // Masks nest: every zero in a target projection is zero in the
+        // draft's too (both pruned from the same in-place copy).
+        for (lt, ld) in target.layers.iter().zip(&draft.layers) {
+            for (pt, pd) in [
+                (&lt.in_proj, &ld.in_proj),
+                (&lt.x_proj, &ld.x_proj),
+                (&lt.dt_proj, &ld.dt_proj),
+                (&lt.out_proj, &ld.out_proj),
+            ] {
+                let (dt, dd) = (pt.to_dense(), pd.to_dense());
+                for (i, (&tv, &dv)) in dt.iter().zip(&dd).enumerate() {
+                    if tv == 0.0 {
+                        assert_eq!(dv, 0.0, "weight {i}: target zero not nested in draft");
+                    }
+                }
+            }
+        }
+        // Sharing shows up in the pair's combined footprint.
+        let head_bytes = target.head.memory_bytes();
+        assert!(head_bytes > 0);
+        // A draft at equal-or-lower sparsity than the target is a
+        // misconfiguration, not a pair.
+        assert!(SparseModel::compile_speculative_pair(&p, 0.5, 0.5, &PackPolicy::auto()).is_err());
     }
 
     #[test]

@@ -89,6 +89,28 @@ pub struct Registry {
     /// accumulated).
     pub prefix_bytes: AtomicU64,
 
+    /// Accepted draft tokens per speculative round (0..=k).  Dedicated
+    /// histograms rather than new `Phase`/`Stage` variants: the draft
+    /// and verify passes internally charge the ordinary Step/Prefill
+    /// stage grid, so a wrapping stage span would double-count wall
+    /// time and break the stage-sum ≤ wall validator check.
+    pub spec_accept_len: Histogram,
+    /// Wall time of one round's draft proposal loop, µs.
+    pub spec_draft_us: Histogram,
+    /// Wall time of one round's multi-token target verify pass, µs.
+    pub spec_verify_us: Histogram,
+
+    /// Speculative rounds run (one draft loop + one verify pass each).
+    pub spec_rounds: AtomicU64,
+    /// Draft tokens proposed across all rounds.
+    pub spec_proposed: AtomicU64,
+    /// Draft tokens accepted by target verification.
+    pub spec_accepted: AtomicU64,
+    /// Rounds that ended in a mismatch rollback.
+    pub spec_rejected_rounds: AtomicU64,
+    /// Tokens replayed through both models after a rollback.
+    pub spec_replayed_tokens: AtomicU64,
+
     stages: Vec<StageCell>,
 }
 
@@ -116,6 +138,14 @@ impl Registry {
             prefix_insertions: AtomicU64::new(0),
             prefix_evictions: AtomicU64::new(0),
             prefix_bytes: AtomicU64::new(0),
+            spec_accept_len: Histogram::new(),
+            spec_draft_us: Histogram::new(),
+            spec_verify_us: Histogram::new(),
+            spec_rounds: AtomicU64::new(0),
+            spec_proposed: AtomicU64::new(0),
+            spec_accepted: AtomicU64::new(0),
+            spec_rejected_rounds: AtomicU64::new(0),
+            spec_replayed_tokens: AtomicU64::new(0),
             stages: (0..Phase::ALL.len() * Stage::ALL.len())
                 .map(|_| StageCell { ns: AtomicU64::new(0), calls: AtomicU64::new(0) })
                 .collect(),
@@ -151,6 +181,9 @@ impl Registry {
             &self.prefill_chunk_tokens,
             &self.prefill_stall_us,
             &self.state_bytes,
+            &self.spec_accept_len,
+            &self.spec_draft_us,
+            &self.spec_verify_us,
         ] {
             h.clear();
         }
@@ -167,6 +200,11 @@ impl Registry {
             &self.prefix_insertions,
             &self.prefix_evictions,
             &self.prefix_bytes,
+            &self.spec_rounds,
+            &self.spec_proposed,
+            &self.spec_accepted,
+            &self.spec_rejected_rounds,
+            &self.spec_replayed_tokens,
         ] {
             c.store(0, Relaxed);
         }
@@ -222,8 +260,9 @@ fn stages_json(phase: Phase) -> Json {
 /// (ttft / inter_token / queue_wait / prefill_stall), `batch`
 /// (occupancy / admits / retires per tick / prefill_chunk_tokens /
 /// state_bytes), `prefix_cache` (hit/miss/insert/evict counters plus
-/// the residency gauge), and `stages` (per phase, per stage
-/// `{ms, calls}`).
+/// the residency gauge), `speculation` (round/accept counters, the
+/// derived accept rate, and accept-length + draft/verify timing
+/// histograms), and `stages` (per phase, per stage `{ms, calls}`).
 pub fn snapshot_json() -> Json {
     let reg = registry();
     json::obj(vec![
@@ -269,6 +308,24 @@ pub fn snapshot_json() -> Json {
             ]),
         ),
         (
+            "speculation",
+            json::obj(vec![
+                ("rounds", json::num(reg.spec_rounds.load(Relaxed) as f64)),
+                ("proposed", json::num(reg.spec_proposed.load(Relaxed) as f64)),
+                ("accepted", json::num(reg.spec_accepted.load(Relaxed) as f64)),
+                ("rejected_rounds", json::num(reg.spec_rejected_rounds.load(Relaxed) as f64)),
+                ("replayed_tokens", json::num(reg.spec_replayed_tokens.load(Relaxed) as f64)),
+                ("accept_rate", {
+                    let prop = reg.spec_proposed.load(Relaxed) as f64;
+                    let acc = reg.spec_accepted.load(Relaxed) as f64;
+                    json::num(if prop > 0.0 { acc / prop } else { 0.0 })
+                }),
+                ("accept_len", hist_json(&reg.spec_accept_len)),
+                ("draft_us", hist_json(&reg.spec_draft_us)),
+                ("verify_us", hist_json(&reg.spec_verify_us)),
+            ]),
+        ),
+        (
             "stages",
             json::obj(vec![
                 ("prefill", stages_json(Phase::Prefill)),
@@ -287,6 +344,24 @@ fn check_hist(h: &Json, what: &str) -> Result<()> {
     let p99 = h.get("p99")?.as_f64()?;
     if !(p50 <= p95 && p95 <= p99) {
         bail!("{what}: percentiles not monotone (p50={p50}, p95={p95}, p99={p99})");
+    }
+    Ok(())
+}
+
+/// Validate a `speculation` telemetry group (the object `snapshot_json`
+/// emits under that key, also embedded by the speculate A/B section):
+/// counters present, accept rate inside [0, 1], and well-formed
+/// accept-length / draft / verify histograms.
+pub fn validate_speculation_group(spec: &Json) -> Result<()> {
+    for key in ["rounds", "proposed", "accepted", "rejected_rounds", "replayed_tokens"] {
+        spec.get(key).with_context(|| format!("speculation: missing '{key}'"))?;
+    }
+    let rate = spec.get("accept_rate")?.as_f64()?;
+    if !(0.0..=1.0).contains(&rate) {
+        bail!("speculation.accept_rate {rate} outside [0, 1]");
+    }
+    for key in ["accept_len", "draft_us", "verify_us"] {
+        check_hist(spec.get(key)?, &format!("speculation.{key}"))?;
     }
     Ok(())
 }
@@ -323,6 +398,7 @@ pub fn validate_serving_snapshot(s: &Json) -> Result<()> {
     for key in ["hits", "misses", "hit_tokens", "insertions", "evictions", "bytes"] {
         pc.get(key).with_context(|| format!("prefix_cache: missing '{key}'"))?;
     }
+    validate_speculation_group(s.get("speculation")?)?;
     let stages = s.get("stages")?;
     let mut stage_ms = 0.0;
     for phase in Phase::ALL {
@@ -373,6 +449,15 @@ mod tests {
         let st = snap.get("stages").unwrap().get("step").unwrap();
         for stage in Stage::ALL {
             assert!(st.get(stage.name()).is_ok(), "missing stage {}", stage.name());
+        }
+        let spec = snap.get("speculation").unwrap();
+        for key in
+            ["rounds", "proposed", "accepted", "rejected_rounds", "replayed_tokens", "accept_rate"]
+        {
+            assert!(spec.get(key).is_ok(), "missing speculation.{key}");
+        }
+        for key in ["accept_len", "draft_us", "verify_us"] {
+            assert!(spec.get(key).unwrap().get("p99").is_ok(), "missing speculation.{key}.p99");
         }
     }
 }

@@ -16,14 +16,21 @@
 //! * chunked prefill (`prefill_resume`) and prefix-cache-hit resume
 //!   are **bit-identical** to one cold whole-prompt prefill — `==` on
 //!   logits and state, across formats × dtypes × kernels × chunk
-//!   sizes, including the eviction-fallback path.
+//!   sizes, including the eviction-fallback path;
+//! * speculative greedy decode (draft proposes, target fused-verifies,
+//!   snapshot/restore rollback) equals vanilla greedy decode
+//!   token-for-token and final-state-**exact**, across formats ×
+//!   dtypes × kernels × k ∈ {1, 2, 4, 8} — including against an
+//!   adversarial random-logit draft that forces rollback on nearly
+//!   every round.
 
+use sparsessm::engine::sampler::argmax;
 use sparsessm::engine::{
-    session_seed, Backend, EngineState, PrefixCache, PrefixCacheConfig, Sampling, Scheduler,
-    Session,
+    session_seed, Backend, DraftPolicy, EngineState, PrefixCache, PrefixCacheConfig, Sampling,
+    Scheduler, Session, SpecConfig, SpecDecoder,
 };
 use sparsessm::model::toy::toy_flat_params_random;
-use sparsessm::model::FlatParams;
+use sparsessm::model::{FlatParams, ModelMeta};
 use sparsessm::rngx::Pcg;
 use sparsessm::sparse::compile::{apply_nm_along_input, magnitude_prune_all, PackPolicy};
 use sparsessm::sparse::{decode, Dtype, Format, Kernel, SparseModel};
@@ -521,6 +528,139 @@ fn prop_cache_hit_resume_matches_solo() {
                     ));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+/// Vanilla greedy reference: prefill the prompt, then argmax + step.
+fn greedy_reference<B: Backend + ?Sized>(
+    backend: &B,
+    prompt: &[i32],
+    max_new: usize,
+) -> Result<Vec<i32>, String> {
+    let (mut logits, mut state) = backend.prefill_last(prompt).map_err(|e| e.to_string())?;
+    let mut out = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        let t = argmax(&logits);
+        out.push(t);
+        logits = backend.step(&mut state, t);
+    }
+    Ok(out)
+}
+
+/// Speculative greedy decode is **bit-identical** to vanilla greedy
+/// decode — token-for-token, and the exit states equal a cold prefill
+/// of prompt+emitted compared with `==` — across formats × dtypes ×
+/// kernels × k ∈ {1, 2, 4, 8} × both draft policies.  The draft is the
+/// 85%-pruned sibling compiled from the same checkpoint, so rounds mix
+/// real agreement with real mismatch rollbacks.
+#[test]
+fn prop_speculative_greedy_is_bit_identical() {
+    check("speculative-greedy-exact", 2, |rng| {
+        let seed = rng.next_u64();
+        let l = 3 + rng.below(4);
+        let prompt: Vec<i32> = (0..l).map(|_| rng.below(16) as i32).collect();
+        let max_new = 8 + rng.below(8);
+        let params = toy_flat_params_random(4, seed);
+        for fmt in [Format::Dense, Format::Bitmask, Format::Csr, Format::Bcsr] {
+            for dtype in Dtype::ALL {
+                for kernel in Kernel::ALL {
+                    let policy = PackPolicy::of(fmt).with_dtype(dtype).with_kernel(kernel);
+                    let (target, draft) =
+                        SparseModel::compile_speculative_pair(&params, 0.5, 0.85, &policy)
+                            .map_err(|e| e.to_string())?;
+                    let want = greedy_reference(&target, &prompt, max_new)?;
+                    let full: Vec<i32> = prompt.iter().chain(&want).copied().collect();
+                    let (_, want_t) = target.prefill_last(&full).map_err(|e| e.to_string())?;
+                    let (_, want_d) = draft.prefill_last(&full).map_err(|e| e.to_string())?;
+                    for k in [1usize, 2, 4, 8] {
+                        for dp in [DraftPolicy::Fixed, DraftPolicy::Adaptive] {
+                            let cfg = SpecConfig { k, policy: dp };
+                            let mut dec =
+                                SpecDecoder::new(&target, &draft, cfg).map_err(|e| e.to_string())?;
+                            let (got, t_state, d_state) = dec
+                                .generate_with_states(&prompt, max_new)
+                                .map_err(|e| e.to_string())?;
+                            if got != want {
+                                return Err(format!(
+                                    "{fmt:?}/{dtype:?}/{kernel:?} k={k} {dp:?}: \
+                                     speculative tokens diverged from vanilla greedy"
+                                ));
+                            }
+                            if t_state != want_t || d_state != want_d {
+                                return Err(format!(
+                                    "{fmt:?}/{dtype:?}/{kernel:?} k={k} {dp:?}: exit state \
+                                     not bit-identical to cold prefill of prompt+emitted"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic junk-logits draft: just enough of [`Backend`] to
+/// propose tokens (its state is only the position counter), with logits
+/// keyed on (salt, position, token) so restore+replay reproduces them.
+/// Against a real target nearly every round mismatches, which drives
+/// the rollback path hard.
+struct RandomDraft {
+    meta: ModelMeta,
+    salt: u64,
+}
+
+impl Backend for RandomDraft {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn step(&self, state: &mut EngineState, token: i32) -> Vec<f32> {
+        state.seq_len += 1;
+        let mut rng = Pcg::seeded(self.salt ^ ((state.seq_len as u64) << 32) ^ token as u64);
+        (0..self.meta.vocab).map(|_| rng.below(1 << 16) as f32).collect()
+    }
+}
+
+/// Forced-mismatch rollback leg: with a random-logit stub as the draft,
+/// almost every round rejects and the decoder lives on the
+/// restore+replay path — yet greedy output and the target's exit state
+/// must still be bit-identical to vanilla decode of the target alone.
+#[test]
+fn prop_speculative_rollback_survives_adversarial_draft() {
+    check("speculative-adversarial-draft", 3, |rng| {
+        let seed = rng.next_u64();
+        let prompt: Vec<i32> = (0..3 + rng.below(3)).map(|_| rng.below(16) as i32).collect();
+        let max_new = 10 + rng.below(6);
+        let mut params = toy_flat_params_random(4, seed);
+        magnitude_prune_all(&mut params, 0.5).map_err(|e| e.to_string())?;
+        let target =
+            SparseModel::compile(&params, &PackPolicy::auto()).map_err(|e| e.to_string())?;
+        let draft = RandomDraft { meta: target.meta.clone(), salt: rng.next_u64() };
+        let want = greedy_reference(&target, &prompt, max_new)?;
+        let full: Vec<i32> = prompt.iter().chain(&want).copied().collect();
+        let (_, want_t) = target.prefill_last(&full).map_err(|e| e.to_string())?;
+        let mut rejected = 0u64;
+        for k in [1usize, 2, 4, 8] {
+            for dp in [DraftPolicy::Fixed, DraftPolicy::Adaptive] {
+                let cfg = SpecConfig { k, policy: dp };
+                let mut dec = SpecDecoder::new(&target, &draft, cfg).map_err(|e| e.to_string())?;
+                let (got, t_state, _) =
+                    dec.generate_with_states(&prompt, max_new).map_err(|e| e.to_string())?;
+                if got != want {
+                    return Err(format!("k={k} {dp:?}: adversarial draft changed greedy output"));
+                }
+                if t_state != want_t {
+                    return Err(format!("k={k} {dp:?}: rollback left the target state wrong"));
+                }
+                rejected += dec.stats.rejected_rounds;
+            }
+        }
+        if rejected == 0 {
+            return Err("random-logit draft never forced a rollback".into());
         }
         Ok(())
     });

@@ -15,13 +15,19 @@
 //! * the prefix-cache A/B driver emits schema-valid `off`/`on` legs,
 //!   records hits, and scans strictly fewer prompt tokens with the
 //!   cache on (token equality across legs is `ensure!`d inside the
-//!   driver itself).
+//!   driver itself);
+//! * the speculative-vs-vanilla A/B driver emits a schema-valid
+//!   `speculation` section with live round/accept counters (token
+//!   equality across all three legs is `ensure!`d inside the driver).
 //!
 //! The registry and enabled flag are process-global, so every test that
 //! touches them serializes on one mutex (`tele_lock`); the harness runs
 //! integration tests in one process with concurrent threads.
 
-use sparsessm::engine::bench::{prefix_cache_run, serve_telemetry_run, PrefixCacheOpts, ServeTelemetryOpts};
+use sparsessm::engine::bench::{
+    prefix_cache_run, serve_telemetry_run, speculate_run, PrefixCacheOpts, ServeTelemetryOpts,
+    SpeculateOpts,
+};
 use sparsessm::engine::{Sampling, Scheduler};
 use sparsessm::model::toy::toy_flat_params_random;
 use sparsessm::rngx::Pcg;
@@ -216,4 +222,37 @@ fn prefix_cache_ab_emits_valid_section_and_skips_work() {
     for key in ["ttft_p50_off_us", "ttft_p50_on_us", "prefill_tok_s_on", "cache"] {
         assert!(summary.get(key).is_ok(), "summary missing '{key}'");
     }
+}
+
+#[test]
+fn speculate_ab_emits_valid_section_with_live_counters() {
+    let _g = tele_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let params = toy_flat_params_random(4, 37);
+    let (target, draft) =
+        SparseModel::compile_speculative_pair(&params, 0.5, 0.85, &PackPolicy::auto()).unwrap();
+    let opts = SpeculateOpts {
+        streams: 3,
+        prompt_len: 4,
+        new_tokens: 12,
+        k: 4,
+        adaptive: true,
+        seed: 21,
+    };
+    // Greedy token equality between the vanilla and both speculative
+    // legs is ensure!d inside the driver, as is the speculation-group
+    // schema check — reaching Ok proves all of it.
+    let run = speculate_run(&target, &draft, &opts).expect("speculate A/B must succeed");
+    assert!(run.vanilla_wall_ms > 0.0 && run.spec_wall_ms > 0.0);
+    assert!(run.vanilla_tok_s > 0.0 && run.spec_tok_s > 0.0);
+    assert!(run.stats.rounds >= 1, "no speculation rounds ran");
+    assert!(run.stats.accepted <= run.stats.proposed);
+    let telem = run.section.get("speculative").unwrap().get("telemetry").unwrap();
+    assert!(telem.get("rounds").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(telem.get("accept_len").unwrap().get("count").unwrap().as_f64().unwrap() >= 1.0);
+    let summary = run.section.get("summary").unwrap();
+    for key in ["speedup", "accept_rate", "rounds", "tokens_equal"] {
+        assert!(summary.get(key).is_ok(), "summary missing '{key}'");
+    }
+    let rate = summary.get("accept_rate").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&rate));
 }

@@ -68,5 +68,16 @@ cargo run --release --quiet -- sparse-bench --prefix-cache --fast
 grep -q '"prefix_cache"' \
     "$(dirname "$(cargo locate-project --message-format plain)")/BENCH_serving.json"
 
+# Speculative-decode smoke (DESIGN.md §16): the release-mode
+# speculative-vs-vanilla A/B must succeed (greedy token equality across
+# all legs and the speculation-group schema are ensure!d inside the
+# driver) and fold its section into BENCH_serving.json; the speculative
+# bit-identity properties must hold under release codegen too.
+step "speculative smoke (release spec-vs-vanilla A/B + bit-identity props)"
+cargo test --release -q --test prop_engine prop_speculative
+cargo run --release --quiet -- sparse-bench --speculate --fast
+grep -q '"speculation"' \
+    "$(dirname "$(cargo locate-project --message-format plain)")/BENCH_serving.json"
+
 echo
 echo "verify OK"
