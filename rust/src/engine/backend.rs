@@ -36,8 +36,8 @@ use anyhow::{ensure, Result};
 
 /// Shared prompt validation for the `Result`-returning prefill entry
 /// points (and [`super::Scheduler::submit`]): non-empty, every token in
-/// vocab.  Inside the engine a bad token is a caller bug (`step`
-/// asserts); at these library boundaries it is an error.
+/// vocab.  The step entry points re-check and return `Err` too — the
+/// serving path must never panic on hostile input (DESIGN.md §17).
 pub(crate) fn validate_prompt(meta: &ModelMeta, tokens: &[i32]) -> Result<()> {
     ensure!(!tokens.is_empty(), "prefill needs at least one token");
     if let Some(&bad) = tokens.iter().find(|&&t| t < 0 || t as usize >= meta.vocab) {
@@ -128,12 +128,21 @@ fn scan_gate_step(
 
 /// Stateful inference over one model: prefill a prompt once, then decode
 /// each further token in O(1) work (independent of the sequence length).
+///
+/// **Failure contract** (DESIGN.md §17): every entry point returns
+/// `Err` instead of panicking on bad input, and an `Err` from `step` /
+/// `step_batch` leaves the session state(s) logically unchanged —
+/// implementations must detect the failure *before* mutating any
+/// recurrent state.  That is what lets [`super::Scheduler::tick`]
+/// isolate a failing session out of a batch and keep the survivors
+/// bit-identical to their solo runs.
 pub trait Backend {
     fn meta(&self) -> &ModelMeta;
 
     /// Consume one token at position `state.seq_len`, returning the
     /// next-token logits `[vocab]` and advancing `state` in place.
-    fn step(&self, state: &mut EngineState, token: i32) -> Vec<f32>;
+    /// On `Err`, `state` is unchanged.
+    fn step(&self, state: &mut EngineState, token: i32) -> Result<Vec<f32>>;
 
     /// Consume a whole prompt, returning per-position logits
     /// `[len, vocab]` plus the recurrent state positioned after the last
@@ -146,7 +155,7 @@ pub trait Backend {
         let mut state = EngineState::new(self.meta());
         let mut logits = Vec::with_capacity(tokens.len() * self.meta().vocab);
         for &t in tokens {
-            logits.extend(self.step(&mut state, t));
+            logits.extend(self.step(&mut state, t)?);
         }
         Ok((logits, state))
     }
@@ -179,7 +188,7 @@ pub trait Backend {
         validate_prompt(self.meta(), tokens)?;
         let mut last = None;
         for &t in tokens {
-            last = Some(self.step(state, t));
+            last = Some(self.step(state, t)?);
         }
         Ok(want_logits.then(|| last.expect("tokens validated non-empty")))
     }
@@ -197,7 +206,7 @@ pub trait Backend {
         validate_prompt(self.meta(), tokens)?;
         let mut logits = Vec::with_capacity(tokens.len() * self.meta().vocab);
         for &t in tokens {
-            logits.extend(self.step(state, t));
+            logits.extend(self.step(state, t)?);
         }
         Ok(logits)
     }
@@ -206,14 +215,64 @@ pub trait Backend {
     /// logits `[sessions, vocab]`.  The default is a serial loop;
     /// backends may override with a parallel implementation.  Each
     /// session's arithmetic is identical to a solo [`Backend::step`],
-    /// so batching never changes results.
-    fn step_batch(&self, states: &mut [EngineState], tokens: &[i32]) -> Vec<f32> {
-        assert_eq!(states.len(), tokens.len());
+    /// so batching never changes results.  On `Err`, **no** session's
+    /// state has advanced (the default pre-validates every token before
+    /// stepping any session; overrides must uphold the same
+    /// all-or-nothing contract).
+    fn step_batch(&self, states: &mut [EngineState], tokens: &[i32]) -> Result<Vec<f32>> {
+        ensure!(
+            states.len() == tokens.len(),
+            "step_batch: {} states vs {} tokens",
+            states.len(),
+            tokens.len()
+        );
+        for &t in tokens {
+            ensure!((t as usize) < self.meta().vocab, "step token {t} out of vocab");
+        }
         let mut out = Vec::with_capacity(states.len() * self.meta().vocab);
         for (st, &t) in states.iter_mut().zip(tokens) {
-            out.extend(self.step(st, t));
+            out.extend(self.step(st, t)?);
         }
-        out
+        Ok(out)
+    }
+}
+
+/// Every `&B` is itself a backend, forwarding to `B`.  This is what
+/// lets adapters that wrap a backend **by value** — e.g.
+/// [`super::faultx::FaultyBackend`] — wrap a borrowed model without
+/// cloning the weights: `FaultyBackend::new(&model, plan)`.
+impl<B: Backend + ?Sized> Backend for &B {
+    fn meta(&self) -> &ModelMeta {
+        (**self).meta()
+    }
+
+    fn step(&self, state: &mut EngineState, token: i32) -> Result<Vec<f32>> {
+        (**self).step(state, token)
+    }
+
+    fn prefill(&self, tokens: &[i32]) -> Result<(Vec<f32>, EngineState)> {
+        (**self).prefill(tokens)
+    }
+
+    fn prefill_last(&self, tokens: &[i32]) -> Result<(Vec<f32>, EngineState)> {
+        (**self).prefill_last(tokens)
+    }
+
+    fn prefill_resume(
+        &self,
+        state: &mut EngineState,
+        tokens: &[i32],
+        want_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        (**self).prefill_resume(state, tokens, want_logits)
+    }
+
+    fn verify(&self, state: &mut EngineState, tokens: &[i32]) -> Result<Vec<f32>> {
+        (**self).verify(state, tokens)
+    }
+
+    fn step_batch(&self, states: &mut [EngineState], tokens: &[i32]) -> Result<Vec<f32>> {
+        (**self).step_batch(states, tokens)
     }
 }
 
@@ -222,7 +281,7 @@ impl Backend for SparseModel {
         &self.meta
     }
 
-    fn step(&self, state: &mut EngineState, token: i32) -> Vec<f32> {
+    fn step(&self, state: &mut EngineState, token: i32) -> Result<Vec<f32>> {
         sparse_step(self, state, token)
     }
 
@@ -282,7 +341,7 @@ impl Backend for SparseModel {
     /// independent and both paths funnel the recurrence through
     /// `ssm::kernels::scan_update` — so batching never changes results
     /// (pinned bit-exactly by `tests/prop_engine.rs`).
-    fn step_batch(&self, states: &mut [EngineState], tokens: &[i32]) -> Vec<f32> {
+    fn step_batch(&self, states: &mut [EngineState], tokens: &[i32]) -> Result<Vec<f32>> {
         sparse_step_batch(self, states, tokens)
     }
 }
@@ -292,13 +351,14 @@ impl Backend for SparseModel {
 /// `decode::forward_logits` restricted to one position.  All working
 /// buffers come from the session's [`super::StepScratch`] and every
 /// projection runs its `_into` kernel, so the only allocation per token
-/// is the returned logits vector.
-fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<f32> {
+/// is the returned logits vector.  An out-of-vocab token is an `Err`
+/// before any state is touched (the `Backend::step` contract).
+fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Result<Vec<f32>> {
     let meta = &model.meta;
     let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
     let kernel = model.kernel;
     let v = token as usize;
-    assert!(v < meta.vocab, "token {token} out of vocab {}", meta.vocab);
+    ensure!(v < meta.vocab, "step token {token} out of vocab {}", meta.vocab);
     debug_assert_eq!(state.layers.len(), model.layers.len());
     let t_pos = state.seq_len;
     state.scratch.ensure(meta);
@@ -354,7 +414,7 @@ fn sparse_step(model: &SparseModel, state: &mut EngineState, token: i32) -> Vec<
     state.seq_len = t_pos + 1;
     let logits = model.head.matvec_k(&s.xn, kernel);
     lt.lap(Stage::Head);
-    logits
+    Ok(logits)
 }
 
 /// What the tied head computes after a prefill chunk: nothing (an
@@ -436,14 +496,27 @@ fn sparse_prefill_from(
 /// state in place; the scan goes through the same
 /// `ssm::kernels::scan_update` (with the layer's structured-d_state
 /// plan) as a solo step, which keeps batched == solo bit-exact.
-fn sparse_step_batch(model: &SparseModel, states: &mut [EngineState], tokens: &[i32]) -> Vec<f32> {
-    assert_eq!(states.len(), tokens.len());
+///
+/// The only fallible operation (token → embed-row lookup) runs before
+/// any session state mutates, so an `Err` upholds the `step_batch`
+/// all-or-nothing contract for free.
+fn sparse_step_batch(
+    model: &SparseModel,
+    states: &mut [EngineState],
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    ensure!(
+        states.len() == tokens.len(),
+        "step_batch: {} states vs {} tokens",
+        states.len(),
+        tokens.len()
+    );
     let meta = &model.meta;
     let (dm, di, ds, dr) = (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank);
     let kernel = model.kernel;
     let s_n = states.len();
     if s_n == 0 {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     if s_n == 1 {
         // A one-session batch has nothing to amortize — the solo step
@@ -457,9 +530,9 @@ fn sparse_step_batch(model: &SparseModel, states: &mut [EngineState], tokens: &[
     // striped conv/scan blocks are charged as a whole (wall time of the
     // block), so per-stage times always sum to ≤ the caller's wall time.
     let mut lt = LapTimer::start(Phase::Step);
-    // One embed row per session — validated at the serving boundary,
-    // like the prefill path.
-    let mut x = embed_tokens(model, tokens).expect("step tokens validated by the caller");
+    // One embed row per session — the lookup validates every token and
+    // errors before any session state below is touched.
+    let mut x = embed_tokens(model, tokens)?;
     lt.lap(Stage::Embed);
 
     // Batch working buffers, `[session, feature]` row-major — one
@@ -574,7 +647,7 @@ fn sparse_step_batch(model: &SparseModel, states: &mut [EngineState], tokens: &[
     }
     let logits = model.head.matmul_k(&xn, s_n, kernel); // [s_n, vocab]
     lt.lap(Stage::Head);
-    logits
+    Ok(logits)
 }
 
 impl Backend for FlatParams {
@@ -582,7 +655,7 @@ impl Backend for FlatParams {
         &self.layout.meta
     }
 
-    fn step(&self, state: &mut EngineState, token: i32) -> Vec<f32> {
+    fn step(&self, state: &mut EngineState, token: i32) -> Result<Vec<f32>> {
         dense_step(self, state, token)
     }
 }
@@ -591,12 +664,12 @@ impl Backend for FlatParams {
 /// `x @ W` storage orientation of `layout.json` (no transposes, no
 /// packing) — the independent implementation the property tests pit
 /// against the packed path.
-fn dense_step(params: &FlatParams, state: &mut EngineState, token: i32) -> Vec<f32> {
+fn dense_step(params: &FlatParams, state: &mut EngineState, token: i32) -> Result<Vec<f32>> {
     let meta = &params.layout.meta;
     let (dm, di, ds, dr, dc) =
         (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank, meta.d_conv);
     let v = token as usize;
-    assert!(v < meta.vocab, "token {token} out of vocab {}", meta.vocab);
+    ensure!(v < meta.vocab, "step token {token} out of vocab {}", meta.vocab);
     debug_assert_eq!(state.layers.len(), meta.n_layer);
     let t_pos = state.seq_len;
     let embed = params.view("embedding").expect("layout embedding");
@@ -726,7 +799,7 @@ fn dense_step(params: &FlatParams, state: &mut EngineState, token: i32) -> Vec<f
         *lo = acc;
     }
     state.seq_len = t_pos + 1;
-    logits
+    Ok(logits)
 }
 
 #[cfg(test)]
@@ -756,7 +829,7 @@ mod tests {
         let want = forward_logits(&model, &tokens, 1, tokens.len()).unwrap();
         let (mut got, mut state) = model.prefill(&tokens[..3]).unwrap();
         for &t in &tokens[3..] {
-            got.extend(model.step(&mut state, t));
+            got.extend(model.step(&mut state, t).unwrap());
         }
         assert_eq!(state.seq_len, tokens.len());
         assert_eq!(got.len(), want.len());
@@ -804,7 +877,7 @@ mod tests {
         let got = model.verify(&mut fused, &draft).unwrap();
         let mut want = Vec::new();
         for &t in &draft {
-            want.extend(model.step(&mut stepped, t));
+            want.extend(model.step(&mut stepped, t).unwrap());
         }
         assert_eq!(got, want, "fused verify rows == stepped logits, bitwise");
         assert_eq!(fused, stepped, "states agree after verify");
@@ -821,11 +894,40 @@ mod tests {
             prompts.iter().map(|pr| model.prefill(pr).unwrap().1).collect();
         let mut solo = states.clone();
         let tokens = [10i32, 11, 12];
-        let batched = model.step_batch(&mut states, &tokens);
+        let batched = model.step_batch(&mut states, &tokens).unwrap();
         for (i, st) in solo.iter_mut().enumerate() {
-            let want = model.step(st, tokens[i]);
+            let want = model.step(st, tokens[i]).unwrap();
             assert_eq!(&batched[i * 16..(i + 1) * 16], &want[..], "session {i}");
         }
         assert_eq!(states, solo);
+    }
+
+    #[test]
+    fn bad_step_token_errors_without_touching_state() {
+        let mut p = toy_flat_params_random(4, 8);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let (_, mut state) = model.prefill(&[1i32, 2, 3]).unwrap();
+        let before = state.snapshot();
+        assert!(model.step(&mut state, 99).is_err(), "out-of-vocab token must error");
+        assert!(model.step(&mut state, -1).is_err(), "negative token must error");
+        assert_eq!(state, before, "failed step must leave the state unchanged");
+        // Dense reference backend: same contract.
+        let (_, mut dstate) = Backend::prefill(&p, &[1i32, 2, 3]).unwrap();
+        assert!(p.step(&mut dstate, 99).is_err());
+    }
+
+    #[test]
+    fn bad_batch_token_advances_no_session() {
+        let mut p = toy_flat_params_random(4, 9);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let prompts: [&[i32]; 3] = [&[1, 2], &[3, 4], &[5, 6]];
+        let mut states: Vec<EngineState> =
+            prompts.iter().map(|pr| model.prefill(pr).unwrap().1).collect();
+        let before = states.clone();
+        // One bad token in the middle: the whole batch must refuse.
+        assert!(model.step_batch(&mut states, &[7, 999, 8]).is_err());
+        assert_eq!(states, before, "no session state may advance on a batch error");
     }
 }

@@ -14,6 +14,8 @@
 
 use super::prefix_cache::{PrefixCache, PrefixCacheConfig};
 use super::sampler::argmax;
+use super::scheduler::{Deadline, FinishReason};
+use super::serve::{ServeConfig, ServeHandle};
 use super::speculative::{DraftPolicy, SpecConfig, SpecDecoder, SpecStats};
 use super::{Backend, EngineState, Sampling, Scheduler, SchedulerStats};
 use crate::benchx::{self, BenchResult};
@@ -26,7 +28,7 @@ use crate::sparse::SparseModel;
 use crate::telemetry::{self, Phase, Stage};
 use crate::util::json::{self, Json};
 use crate::util::Stopwatch;
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 use std::path::Path;
 
 /// Steady-state batched step decode: prefill `bt` sessions with random
@@ -52,7 +54,7 @@ pub fn step_decode_throughput<B: Backend>(
         .collect();
     let r = benchx::bench_for(name, budget_ms, || {
         let tokens: Vec<i32> = (0..bt).map(|_| rng.below(vocab) as i32).collect();
-        benchx::black_box(backend.step_batch(&mut states, &tokens));
+        benchx::black_box(backend.step_batch(&mut states, &tokens).expect("bench tokens in vocab"));
     });
     let tps = bt as f64 / (r.p50_ms / 1e3);
     (r, tps)
@@ -417,6 +419,190 @@ pub fn prefix_cache_run<B: Backend>(backend: &B, o: &PrefixCacheOpts) -> Result<
     })
 }
 
+/// An overload workload for the robustness smoke: burst `requests`
+/// submissions at a scheduler bounded to `queue_limit`, with deadlines
+/// mixed in, and check that every overload outcome is *reported* —
+/// typed queue-full rejections, loud `Shed`/`DeadlineExceeded`
+/// retirements — never a panic or a silent drop (DESIGN.md §17).
+#[derive(Debug, Clone)]
+pub struct ServeOverloadOpts {
+    /// Burst size for the deterministic scheduler-level phase.
+    pub requests: usize,
+    pub batch: usize,
+    /// Submission-queue bound (must be < `requests` to force sheds).
+    pub queue_limit: usize,
+    pub prompt_len: usize,
+    pub new_tokens: usize,
+    /// Tick deadline carried by the first request (< `new_tokens`, so
+    /// it deterministically expires mid-decode).
+    pub deadline_ticks: usize,
+    /// Requests pushed through the async `ServeHandle` phase.
+    pub stream_requests: usize,
+    pub seed: u64,
+}
+
+impl ServeOverloadOpts {
+    fn workload_json(&self) -> Json {
+        json::obj(vec![
+            ("requests", json::num(self.requests as f64)),
+            ("batch", json::num(self.batch as f64)),
+            ("queue_limit", json::num(self.queue_limit as f64)),
+            ("prompt_len", json::num(self.prompt_len as f64)),
+            ("new_tokens", json::num(self.new_tokens as f64)),
+            ("deadline_ticks", json::num(self.deadline_ticks as f64)),
+            ("stream_requests", json::num(self.stream_requests as f64)),
+            ("seed", json::num(self.seed as f64)),
+        ])
+    }
+}
+
+/// Result of one overload smoke ([`serve_overload_run`]).
+pub struct ServeOverloadRun {
+    /// Typed [`super::scheduler::SubmitError::QueueFull`] rejections.
+    pub edge_rejected: usize,
+    /// Loud shutdown-drain sheds.
+    pub shed: usize,
+    pub deadline_exceeded: usize,
+    pub completed: usize,
+    /// Requests served end-to-end through the async `ServeHandle`.
+    pub streamed: usize,
+    /// The full `serve_overload` perf-log section (a validated serving
+    /// snapshot extended with the `overload` summary).
+    pub section: Json,
+}
+
+/// The bounded-queue overload smoke behind `sparse-bench --serve`.
+///
+/// Phase 1 is single-threaded and fully deterministic: burst
+/// `requests` at a queue bounded to `queue_limit` — exactly
+/// `requests − queue_limit` must come back as typed `QueueFull`
+/// rejections; one deadline request must expire mid-decode; a shutdown
+/// drain after the first tick must shed the still-queued remainder
+/// loudly.  Phase 2 pushes `stream_requests` through the async
+/// [`ServeHandle`] with backpressure and requires exactly one terminal
+/// event per accepted stream.  Every imbalance is an `Err`, never a
+/// panic — the whole point of the smoke.  Leaves telemetry disabled on
+/// return.
+pub fn serve_overload_run<B>(
+    backend: std::sync::Arc<B>,
+    o: &ServeOverloadOpts,
+) -> Result<ServeOverloadRun>
+where
+    B: Backend + Send + Sync + 'static,
+{
+    ensure!(o.requests > o.queue_limit && o.queue_limit > o.batch, "burst must overflow queue");
+    ensure!(o.deadline_ticks > 0 && o.deadline_ticks < o.new_tokens, "deadline must bite");
+    ensure!(o.prompt_len > 0 && o.stream_requests > 0, "empty overload workload");
+    let vocab = backend.meta().vocab;
+    let mut rng = Pcg::seeded(o.seed ^ 0x0E41_0AD);
+    let mut prompt =
+        || -> Vec<i32> { (0..o.prompt_len).map(|_| rng.below(vocab) as i32).collect() };
+
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    let sw = Stopwatch::new();
+
+    // Phase 1: deterministic scheduler-level overload.  No concurrent
+    // drain happens between submits, so the ledger is exact.
+    let mut sched = Scheduler::new(backend.as_ref(), o.batch, Sampling::Greedy, o.seed)
+        .with_queue_limit(o.queue_limit);
+    let mut edge_rejected = 0usize;
+    for i in 0..o.requests {
+        let deadline = (i == 0).then_some(Deadline::Ticks(o.deadline_ticks));
+        match sched.submit_request(prompt(), o.new_tokens, deadline) {
+            Ok(_) => {}
+            Err(super::scheduler::SubmitError::QueueFull { .. }) => edge_rejected += 1,
+            Err(e) => return Err(anyhow::Error::new(e)),
+        }
+    }
+    ensure!(
+        edge_rejected == o.requests - o.queue_limit,
+        "expected {} typed queue-full rejections, got {edge_rejected}",
+        o.requests - o.queue_limit
+    );
+    let mut gens = sched.tick();
+    gens.extend(sched.shed_queued()); // shutdown drain: loud, typed
+    while !sched.is_idle() {
+        gens.extend(sched.tick());
+    }
+    ensure!(
+        gens.len() + edge_rejected == o.requests,
+        "ledger imbalance: {} retirements + {edge_rejected} rejections != {}",
+        gens.len(),
+        o.requests
+    );
+    let mut shed = 0usize;
+    let mut deadline_exceeded = 0usize;
+    let mut completed = 0usize;
+    for g in &gens {
+        match g.finish {
+            FinishReason::Shed => shed += 1,
+            FinishReason::DeadlineExceeded => deadline_exceeded += 1,
+            FinishReason::Completed => completed += 1,
+            ref other => anyhow::bail!("unexpected retirement {other:?} for id {}", g.id),
+        }
+    }
+    ensure!(shed >= 1, "shutdown drain shed nothing despite an over-full queue");
+    ensure!(deadline_exceeded >= 1, "tick deadline failed to expire");
+    let sched_stats = sched.stats().clone();
+
+    // Phase 2: the same pressure through the async front end.  Blocking
+    // submits exercise intake backpressure; every stream must deliver
+    // exactly one terminal Done.
+    let handle = ServeHandle::spawn(
+        backend,
+        ServeConfig {
+            max_batch: o.batch,
+            sampling: Sampling::Greedy,
+            seed: o.seed,
+            queue_limit: o.queue_limit,
+            ..ServeConfig::default()
+        },
+    )?;
+    let mut streams = Vec::with_capacity(o.stream_requests);
+    for _ in 0..o.stream_requests {
+        streams.push(
+            handle.submit(prompt(), o.new_tokens, None).map_err(anyhow::Error::new)?,
+        );
+    }
+    let mut streamed = 0usize;
+    for s in streams {
+        let g = s.wait().context("stream ended without a terminal Done event")?;
+        ensure!(
+            g.finish == FinishReason::Completed && g.tokens.len() == o.new_tokens,
+            "stream {} retired {:?} with {} tokens",
+            g.id,
+            g.finish,
+            g.tokens.len()
+        );
+        streamed += 1;
+    }
+    let serve_stats = handle.shutdown()?;
+    ensure!(
+        serve_stats.submitted == o.stream_requests as u64
+            && serve_stats.completed == serve_stats.submitted,
+        "serve worker lost requests: {serve_stats:?}"
+    );
+
+    let wall_ms = sw.millis();
+    telemetry::set_enabled(false);
+    let mut section = serving_section_json(wall_ms, &sched_stats, o.workload_json(), None);
+    if let Json::Obj(m) = &mut section {
+        m.insert(
+            "overload".into(),
+            json::obj(vec![
+                ("edge_rejected", json::num(edge_rejected as f64)),
+                ("shed", json::num(shed as f64)),
+                ("deadline_exceeded", json::num(deadline_exceeded as f64)),
+                ("completed", json::num(completed as f64)),
+                ("streamed", json::num(streamed as f64)),
+            ]),
+        );
+    }
+    telemetry::validate_serving_snapshot(&section)?;
+    Ok(ServeOverloadRun { edge_rejected, shed, deadline_exceeded, completed, streamed, section })
+}
+
 /// A speculative-vs-vanilla A/B workload: `streams` independent greedy
 /// generations of `new_tokens` each from random `prompt_len`-token
 /// prompts, decoded once vanilla (prefill + step loop on the target)
@@ -469,7 +655,7 @@ fn greedy_decode_solo<B: Backend>(backend: &B, prompt: &[i32], max_new: usize) -
     for _ in 0..max_new {
         let t = argmax(&logits);
         out.push(t);
-        logits = backend.step(&mut state, t);
+        logits = backend.step(&mut state, t)?;
     }
     Ok(out)
 }

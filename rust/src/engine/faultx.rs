@@ -1,0 +1,261 @@
+//! Deterministic fault injection (DESIGN.md §17).
+//!
+//! A [`FaultPlan`] is a seeded set of failpoints: each [`Site`] fails a
+//! configurable fraction of its invocations, decided by a stateless
+//! hash of `(seed, site, invocation-counter)` — so the k-th call at a
+//! site fails identically on every run with the same seed and rates,
+//! regardless of how calls at *other* sites interleave.  That
+//! determinism is what lets the chaos soak test
+//! (`tests/prop_chaos.rs`) replay a failure schedule and assert exact
+//! outcomes instead of probabilistic ones.
+//!
+//! [`FaultyBackend`] wraps any [`Backend`] and consults the plan at the
+//! entry of every fallible method, **before** delegating — injected
+//! errors therefore honor the backend failure contract (no state
+//! mutated on `Err`) by construction, and exercise exactly the paths a
+//! real backend fault would take through the scheduler.
+//! [`Site::CheckpointRead`] hooks the checkpoint loader
+//! ([`crate::sparse::SparseModel::load_bytes_with_faults`]) the same
+//! way.
+
+use super::{Backend, EngineState};
+use crate::model::ModelMeta;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Arc;
+
+/// Failpoint sites a [`FaultPlan`] can arm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// [`Backend::step`] — one session's single-token decode.
+    Step,
+    /// [`Backend::step_batch`] — the whole batch's fused step.
+    StepBatch,
+    /// [`Backend::prefill`] / [`Backend::prefill_last`] /
+    /// [`Backend::prefill_resume`] — prompt scans, chunked or whole.
+    Prefill,
+    /// [`Backend::verify`] — the speculative multi-token pass.
+    Verify,
+    /// Checkpoint deserialization reads.
+    CheckpointRead,
+}
+
+impl Site {
+    pub const ALL: [Site; 5] =
+        [Site::Step, Site::StepBatch, Site::Prefill, Site::Verify, Site::CheckpointRead];
+
+    fn index(self) -> usize {
+        match self {
+            Site::Step => 0,
+            Site::StepBatch => 1,
+            Site::Prefill => 2,
+            Site::Verify => 3,
+            Site::CheckpointRead => 4,
+        }
+    }
+}
+
+const N_SITES: usize = Site::ALL.len();
+
+/// SplitMix64 finalizer: a few multiply/xor rounds turn the structured
+/// `(seed, site, counter)` input into decision bits.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Seeded failpoint schedule.  Thread-safe: per-site invocation
+/// counters are atomics, and the fail/pass decision depends only on a
+/// site's own counter value, never on cross-site ordering.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Per-site failure rate in units of 2^-16: 0 never fires,
+    /// `RATE_ALWAYS` fires every invocation.
+    rates: [u32; N_SITES],
+    /// Invocations seen per site (fail decisions consume one each).
+    counters: [AtomicU64; N_SITES],
+    /// Faults actually fired per site.
+    fired: [AtomicU64; N_SITES],
+}
+
+impl FaultPlan {
+    /// Rate value that makes a site fail every invocation.
+    pub const RATE_ALWAYS: u32 = 1 << 16;
+
+    /// A plan with every site disarmed (never fails).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rates: [0; N_SITES],
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            fired: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Arm `site` to fail `rate_per_64k` out of every 2^16 invocations
+    /// (clamped to [`FaultPlan::RATE_ALWAYS`]).
+    pub fn with_rate(mut self, site: Site, rate_per_64k: u32) -> FaultPlan {
+        self.rates[site.index()] = rate_per_64k.min(FaultPlan::RATE_ALWAYS);
+        self
+    }
+
+    /// Consume one invocation at `site` and decide whether it fails.
+    /// Deterministic in (seed, site, per-site invocation index).
+    pub fn should_fail(&self, site: Site) -> bool {
+        let i = site.index();
+        let rate = self.rates[i];
+        if rate == 0 {
+            return false;
+        }
+        let k = self.counters[i].fetch_add(1, Relaxed);
+        let h = mix(self.seed ^ mix(((i as u64) << 32) | k));
+        let fail = (h & 0xFFFF) < rate as u64;
+        if fail {
+            self.fired[i].fetch_add(1, Relaxed);
+        }
+        fail
+    }
+
+    /// Invocations seen at `site` so far.
+    pub fn invocations(&self, site: Site) -> u64 {
+        self.counters[site.index()].load(Relaxed)
+    }
+
+    /// Faults fired at `site` so far.
+    pub fn fired(&self, site: Site) -> u64 {
+        self.fired[site.index()].load(Relaxed)
+    }
+
+    /// Faults fired across all sites.
+    pub fn total_fired(&self) -> u64 {
+        self.fired.iter().map(|c| c.load(Relaxed)).sum()
+    }
+}
+
+/// A [`Backend`] adapter that injects the plan's faults at the entry of
+/// every fallible method, then delegates.  Wrap a borrowed model —
+/// `FaultyBackend::new(&model, plan)` — thanks to the blanket
+/// `impl Backend for &B`.
+pub struct FaultyBackend<B: Backend> {
+    inner: B,
+    plan: Arc<FaultPlan>,
+}
+
+impl<B: Backend> FaultyBackend<B> {
+    pub fn new(inner: B, plan: Arc<FaultPlan>) -> FaultyBackend<B> {
+        FaultyBackend { inner, plan }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    fn trip(&self, site: Site, what: &str) -> Result<()> {
+        if self.plan.should_fail(site) {
+            bail!("faultx: injected {what} fault");
+        }
+        Ok(())
+    }
+}
+
+impl<B: Backend> Backend for FaultyBackend<B> {
+    fn meta(&self) -> &ModelMeta {
+        self.inner.meta()
+    }
+
+    fn step(&self, state: &mut EngineState, token: i32) -> Result<Vec<f32>> {
+        self.trip(Site::Step, "step")?;
+        self.inner.step(state, token)
+    }
+
+    fn prefill(&self, tokens: &[i32]) -> Result<(Vec<f32>, EngineState)> {
+        self.trip(Site::Prefill, "prefill")?;
+        self.inner.prefill(tokens)
+    }
+
+    fn prefill_last(&self, tokens: &[i32]) -> Result<(Vec<f32>, EngineState)> {
+        self.trip(Site::Prefill, "prefill")?;
+        self.inner.prefill_last(tokens)
+    }
+
+    fn prefill_resume(
+        &self,
+        state: &mut EngineState,
+        tokens: &[i32],
+        want_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        self.trip(Site::Prefill, "prefill")?;
+        self.inner.prefill_resume(state, tokens, want_logits)
+    }
+
+    fn verify(&self, state: &mut EngineState, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.trip(Site::Verify, "verify")?;
+        self.inner.verify(state, tokens)
+    }
+
+    fn step_batch(&self, states: &mut [EngineState], tokens: &[i32]) -> Result<Vec<f32>> {
+        self.trip(Site::StepBatch, "step_batch")?;
+        self.inner.step_batch(states, tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::toy::toy_flat_params_random;
+    use crate::sparse::compile::PackPolicy;
+    use crate::sparse::SparseModel;
+
+    #[test]
+    fn decisions_are_deterministic_and_rate_shaped() {
+        let schedule = |seed: u64, rate: u32| -> Vec<bool> {
+            let plan = FaultPlan::new(seed).with_rate(Site::Step, rate);
+            (0..512).map(|_| plan.should_fail(Site::Step)).collect()
+        };
+        // Same seed → same schedule; different seed → (almost surely)
+        // different; rate 0 and RATE_ALWAYS are exact.
+        assert_eq!(schedule(7, 1 << 12), schedule(7, 1 << 12));
+        assert_ne!(schedule(7, 1 << 12), schedule(8, 1 << 12));
+        assert!(schedule(7, 0).iter().all(|f| !f));
+        assert!(schedule(7, FaultPlan::RATE_ALWAYS).iter().all(|f| *f));
+        // A 1/16 rate fires roughly 1/16 of the time.
+        let fires = schedule(21, 1 << 12).iter().filter(|f| **f).count();
+        assert!((8..=64).contains(&fires), "1/16 rate fired {fires}/512 times");
+    }
+
+    #[test]
+    fn sites_are_independent() {
+        let plan = FaultPlan::new(3).with_rate(Site::Step, FaultPlan::RATE_ALWAYS);
+        assert!(plan.should_fail(Site::Step));
+        assert!(!plan.should_fail(Site::Prefill), "disarmed site never fires");
+        assert_eq!(plan.invocations(Site::Step), 1);
+        assert_eq!(plan.fired(Site::Step), 1);
+        assert_eq!(plan.invocations(Site::Prefill), 0, "disarmed sites don't count");
+        assert_eq!(plan.total_fired(), 1);
+    }
+
+    #[test]
+    fn faulty_backend_injects_without_touching_state() {
+        let p = toy_flat_params_random(4, 40);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let plan = Arc::new(FaultPlan::new(1).with_rate(Site::Step, FaultPlan::RATE_ALWAYS));
+        let faulty = FaultyBackend::new(&model, plan);
+        let (_, mut state) = faulty.prefill_last(&[1i32, 2]).unwrap();
+        let before = state.snapshot();
+        assert!(faulty.step(&mut state, 3).is_err());
+        assert_eq!(state, before, "injected fault must not advance state");
+        // Disarmed plan: transparent passthrough, bit-identical.
+        let clean = FaultyBackend::new(&model, Arc::new(FaultPlan::new(1)));
+        let got = clean.step(&mut state, 3).unwrap();
+        let mut solo = before.snapshot();
+        let want = model.step(&mut solo, 3).unwrap();
+        assert_eq!(got, want);
+    }
+}

@@ -41,6 +41,17 @@
 //!                   and `cargo bench`; plus the serving-telemetry
 //!                   workload driver behind `--telemetry` and the
 //!                   `serve_telemetry` experiment (BENCH_serving.json).
+//! * [`serve`]     — robustness-first serving front end (DESIGN.md
+//!                   §17): bounded async intake drained by a worker
+//!                   thread, per-token streaming over channels, typed
+//!                   admission control / load shed, per-request
+//!                   deadlines + cooperative cancellation, graceful
+//!                   degradation under overload.
+//! * [`faultx`]    — deterministic fault injection: seeded failpoints
+//!                   wrapped around any [`Backend`]
+//!                   ([`FaultyBackend`]) so the chaos tests can prove
+//!                   the scheduler never loses, duplicates, or
+//!                   corrupts a request under induced failure.
 //!
 //! The hot path (backend step/prefill, scheduler tick) is instrumented
 //! with [`crate::telemetry`] span timers and latency histograms
@@ -53,17 +64,24 @@
 
 pub mod backend;
 pub mod bench;
+pub mod faultx;
 pub mod prefix_cache;
 pub mod sampler;
 pub mod scheduler;
+pub mod serve;
 pub mod session;
 pub mod speculative;
 pub mod state;
 
 pub use backend::Backend;
+pub use faultx::{FaultPlan, FaultyBackend, Site};
 pub use prefix_cache::{CacheStats, PrefixCache, PrefixCacheConfig};
 pub use sampler::{Sampler, Sampling};
-pub use scheduler::{session_seed, Generation, Request, Scheduler, SchedulerStats};
+pub use scheduler::{
+    session_seed, Deadline, FinishReason, Generation, Request, Scheduler, SchedulerStats,
+    SubmitError,
+};
+pub use serve::{ResponseStream, ServeConfig, ServeEvent, ServeHandle, ServeStats};
 pub use session::Session;
 pub use speculative::{DraftPolicy, SpecConfig, SpecDecoder, SpecStats};
 pub use state::{EngineState, LayerState, StepScratch};

@@ -4,9 +4,15 @@
 //!
 //! One [`Scheduler::tick`] is one engine iteration:
 //!
-//! 1. **admit** — while the running batch has room, pop a queued
-//!    request into a pending [`Session`]; a prefix-cache hit seeds its
-//!    state from the longest cached snapshot (no engine work yet);
+//! 0. **sweep** — cancelled and deadline-expired requests retire first
+//!    (queued or mid-decode) with their partial output tagged
+//!    [`FinishReason::Cancelled`] / [`FinishReason::DeadlineExceeded`];
+//!    Mamba's fixed-size recurrent state makes mid-flight eviction a
+//!    free drop, not a cache compaction;
+//! 1. **admit** — while the running batch has room *and* the resident
+//!    state-byte budget allows, pop a queued request into a pending
+//!    [`Session`]; a prefix-cache hit seeds its state from the longest
+//!    cached snapshot (no engine work yet);
 //! 2. **prefill** — every pending prompt advances by up to
 //!    `prefill_chunk` tokens through [`Backend::prefill_resume`]
 //!    (the whole remainder when unchunked), split at cache-stride
@@ -28,15 +34,98 @@
 //! `tests/prop_engine.rs`).  Per-request sampler seeding (see
 //! [`session_seed`]) keeps each request's output identical to its solo
 //! run regardless of batch composition.
+//!
+//! **Robustness contract** (DESIGN.md §17): every accepted request
+//! retires *exactly once* with a [`FinishReason`]; bad input and
+//! backend failures surface as typed errors or `Failed` retirements,
+//! never panics; a failing session is isolated out of its batch via
+//! per-session solo retries (sound because [`Backend::step_batch`]
+//! advances no state on `Err`), so the survivors' tokens stay
+//! bit-identical to their solo runs — pinned by `tests/prop_chaos.rs`.
 
 use super::backend::validate_prompt;
 use super::prefix_cache::PrefixCache;
 use super::{Backend, EngineState, Sampling, Session};
 use crate::telemetry::{self, LapTimer, Phase, Stage};
-use anyhow::{ensure, Result};
-use std::collections::VecDeque;
+use anyhow::Result;
+use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::Ordering::Relaxed;
 use std::time::Instant;
+
+/// Why a request left the scheduler.  Every submitted id retires with
+/// exactly one of these; `tokens` in the [`Generation`] is the full
+/// output only for `Completed` — the others carry whatever prefix was
+/// decoded before the retire (always a prefix of the solo run).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generation budget reached — the normal path.
+    Completed,
+    /// The request's [`Deadline`] passed mid-decode (or while queued).
+    DeadlineExceeded,
+    /// [`Scheduler::cancel`] retired the request cooperatively.
+    Cancelled,
+    /// Load-shed: dropped from the queue without decoding (shutdown
+    /// drain or an explicit shed) — never silent, always reported.
+    Shed,
+    /// The backend errored for this session; the message says why.
+    /// Other sessions in the same batch are unaffected.
+    Failed(String),
+}
+
+impl FinishReason {
+    pub fn is_completed(&self) -> bool {
+        matches!(self, FinishReason::Completed)
+    }
+}
+
+/// Per-request retire-by deadline, swept at every tick start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Deadline {
+    /// Expire once this many ticks have elapsed since admission — fully
+    /// deterministic, what the chaos tests schedule against.  Checked
+    /// at tick start, so a session always gets its admission tick of
+    /// work before it can expire.
+    Ticks(usize),
+    /// Wall-clock expiry for real serving; also sweeps requests still
+    /// in the queue.
+    Wall(Instant),
+}
+
+/// Typed admission errors from [`Scheduler::submit_request`] — the
+/// load-shed half of the admission → degrade → shed ladder.  These are
+/// *edge* rejections: the request was never accepted, so no
+/// [`Generation`] is owed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Malformed request: empty prompt, zero budget, out-of-vocab token.
+    Invalid(String),
+    /// The bounded submission queue is full — shed at the edge, retry
+    /// with backoff.
+    QueueFull { depth: usize, limit: usize },
+    /// One session's recurrent state alone exceeds the configured
+    /// resident-byte budget: the request can *never* be admitted.
+    StateOverBudget { need: usize, budget: usize },
+    /// The serving front end behind this submission has shut down
+    /// (`engine::serve` only — the scheduler itself never returns it).
+    Stopped,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Invalid(msg) => write!(f, "invalid request: {msg}"),
+            SubmitError::QueueFull { depth, limit } => {
+                write!(f, "submission queue full ({depth}/{limit})")
+            }
+            SubmitError::StateOverBudget { need, budget } => {
+                write!(f, "session state needs {need} bytes, budget is {budget}")
+            }
+            SubmitError::Stopped => write!(f, "serving front end has shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// A queued generation request.
 #[derive(Debug, Clone)]
@@ -47,6 +136,8 @@ pub struct Request {
     /// Submit time for queue-wait/TTFT telemetry (`None` while
     /// telemetry is disabled — no clock read on the default path).
     pub queued_at: Option<Instant>,
+    /// Retire-by deadline ([`Deadline::Wall`] applies while queued too).
+    pub deadline: Option<Deadline>,
 }
 
 /// A finished request's output, with its tick-level timing: the
@@ -68,6 +159,10 @@ pub struct Generation {
     pub tick_finished: usize,
     /// Ticks that did prefill work for this request (1 when unchunked).
     pub prefill_ticks: usize,
+    /// Why the request retired.  `tokens` is complete only for
+    /// [`FinishReason::Completed`]; the span invariant above applies to
+    /// completed requests only.
+    pub finish: FinishReason,
 }
 
 /// Aggregate counters over a scheduler's lifetime.
@@ -93,6 +188,14 @@ pub struct SchedulerStats {
     pub cache_hit_tokens: usize,
     /// Largest running batch observed.
     pub peak_batch: usize,
+    /// Accepted-then-dropped requests ([`FinishReason::Shed`]).
+    pub shed: usize,
+    /// Requests retired by deadline expiry.
+    pub deadline_expired: usize,
+    /// Requests retired by [`Scheduler::cancel`].
+    pub cancelled: usize,
+    /// Requests retired by a backend failure isolated to their session.
+    pub failed: usize,
 }
 
 /// Deterministic per-request sampler seed, so a request samples the same
@@ -100,6 +203,11 @@ pub struct SchedulerStats {
 pub fn session_seed(base: u64, id: usize) -> u64 {
     base.wrapping_add((id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
+
+/// Prefill chunk imposed by degrade level ≥1 when the scheduler is
+/// otherwise unchunked: long admissions must stop stalling a loaded
+/// batch before the queue sheds.
+const DEGRADE_PREFILL_CHUNK: usize = 16;
 
 /// Continuous-batching scheduler over one shared backend.
 pub struct Scheduler<'a, B: Backend> {
@@ -115,6 +223,24 @@ pub struct Scheduler<'a, B: Backend> {
     running: Vec<Session>,
     next_id: usize,
     stats: SchedulerStats,
+    /// Queue-depth cap for [`Scheduler::submit_request`]; 0 = unbounded.
+    queue_limit: usize,
+    /// Resident recurrent-state byte budget across running sessions;
+    /// 0 = unlimited.  An over-budget admission stays queued
+    /// (backpressure), never drops.
+    state_budget: usize,
+    /// One session's fixed state footprint (cached at
+    /// [`Scheduler::with_state_budget`]; 0 until then).
+    state_bytes_per_session: usize,
+    /// Ids to retire cooperatively at the next tick's sweep.
+    cancel_requested: HashSet<usize>,
+    /// Overload degrade level recomputed each tick: 0 = healthy,
+    /// 1 = chunk prefill harder, 2 = also advise speculation off.
+    degrade: u8,
+    /// When true, every sampled `(id, token)` is buffered for
+    /// [`Scheduler::take_token_events`] (the serve streaming hook).
+    stream_tokens: bool,
+    token_events: Vec<(usize, i32)>,
 }
 
 impl<'a, B: Backend> Scheduler<'a, B> {
@@ -131,6 +257,13 @@ impl<'a, B: Backend> Scheduler<'a, B> {
             running: Vec::new(),
             next_id: 0,
             stats: SchedulerStats::default(),
+            queue_limit: 0,
+            state_budget: 0,
+            state_bytes_per_session: 0,
+            cancel_requested: HashSet::new(),
+            degrade: 0,
+            stream_tokens: false,
+            token_events: Vec::new(),
         }
     }
 
@@ -156,18 +289,143 @@ impl<'a, B: Backend> Scheduler<'a, B> {
         self.cache.as_ref()
     }
 
+    /// Bound the submission queue: [`Scheduler::submit_request`]
+    /// returns [`SubmitError::QueueFull`] once `limit` requests wait
+    /// (0 restores unbounded).  The limit also drives the degrade
+    /// ladder — see [`Scheduler::degrade_level`].
+    pub fn with_queue_limit(mut self, limit: usize) -> Self {
+        self.queue_limit = limit;
+        self
+    }
+
+    /// Cap resident recurrent-state bytes across running sessions.
+    /// Admission waits (backpressure) when one more session would go
+    /// over; a request whose single-session footprint alone exceeds the
+    /// budget is rejected at submit with
+    /// [`SubmitError::StateOverBudget`].
+    pub fn with_state_budget(mut self, bytes: usize) -> Self {
+        self.state_budget = bytes;
+        self.state_bytes_per_session = EngineState::new(self.backend.meta()).memory_bytes();
+        self
+    }
+
+    /// Buffer every sampled `(id, token)` for
+    /// [`Scheduler::take_token_events`] — the per-token streaming hook
+    /// `engine::serve` drains after each tick.
+    pub fn with_token_events(mut self) -> Self {
+        self.stream_tokens = true;
+        self
+    }
+
+    /// Drain the `(id, token)` events sampled since the last call
+    /// (empty unless [`Scheduler::with_token_events`] was set).
+    pub fn take_token_events(&mut self) -> Vec<(usize, i32)> {
+        std::mem::take(&mut self.token_events)
+    }
+
+    /// Current overload degrade level (recomputed each tick from queue
+    /// depth vs the queue limit): 0 = healthy; 1 = prefill chunks are
+    /// halved (or bounded when unchunked) so admissions stall the batch
+    /// less; 2 = additionally advise disabling speculation
+    /// ([`Scheduler::speculation_advised`]).  Degradation changes
+    /// pacing, never tokens — chunked prefill is bit-exact.
+    pub fn degrade_level(&self) -> u8 {
+        self.degrade
+    }
+
+    /// False once the degrade ladder says speculative decoding should
+    /// be switched off (level ≥ 2): under overload, the extra draft
+    /// work costs more batch throughput than acceptance buys.
+    pub fn speculation_advised(&self) -> bool {
+        self.degrade < 2
+    }
+
+    /// Request cooperative cancellation of a queued or running request.
+    /// The next [`Scheduler::tick`] retires it with partial output
+    /// tagged [`FinishReason::Cancelled`].  Returns false (and records
+    /// nothing) when the id is not live — already finished or never
+    /// issued.
+    pub fn cancel(&mut self, id: usize) -> bool {
+        let live = self.queue.iter().any(|r| r.id == id)
+            || self.running.iter().any(|s| s.id == id);
+        if live {
+            self.cancel_requested.insert(id);
+        }
+        live
+    }
+
+    /// Drop every queued (not-yet-admitted) request, retiring each with
+    /// an empty-output [`FinishReason::Shed`] generation — the shutdown
+    /// drain.  Running sessions are untouched.
+    pub fn shed_queued(&mut self) -> Vec<Generation> {
+        let tick = self.stats.ticks;
+        let shed: Vec<Generation> = self
+            .queue
+            .drain(..)
+            .map(|req| Generation {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                tick_admitted: 0,
+                tick_finished: tick,
+                prefill_ticks: 0,
+                finish: FinishReason::Shed,
+            })
+            .collect();
+        self.stats.shed += shed.len();
+        if telemetry::enabled() && !shed.is_empty() {
+            telemetry::registry().requests_shed.fetch_add(shed.len() as u64, Relaxed);
+        }
+        shed
+    }
+
     /// Enqueue a request; returns its id.  Malformed requests — empty
     /// prompt, zero budget, out-of-vocab (or negative) tokens — are
     /// rejected with an error here, at the serving boundary, so a bad
-    /// request can never reach the engine's internal asserts and take
-    /// the process down.
+    /// request can never reach the engine's internal checks and take
+    /// the process down.  Thin wrapper over
+    /// [`Scheduler::submit_request`] with no deadline.
     pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> Result<usize> {
-        ensure!(max_new_tokens > 0, "request must generate at least one token");
-        validate_prompt(self.backend.meta(), &prompt)?;
+        self.submit_request(prompt, max_new_tokens, None).map_err(anyhow::Error::new)
+    }
+
+    /// Enqueue a request with full admission control: typed errors
+    /// distinguish malformed input ([`SubmitError::Invalid`]) from
+    /// load-shed ([`SubmitError::QueueFull`],
+    /// [`SubmitError::StateOverBudget`]) so callers can retry the
+    /// latter with backoff.  Accepted requests are owed exactly one
+    /// [`Generation`].
+    pub fn submit_request(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        deadline: Option<Deadline>,
+    ) -> std::result::Result<usize, SubmitError> {
+        if max_new_tokens == 0 {
+            return Err(SubmitError::Invalid("request must generate at least one token".into()));
+        }
+        if let Err(e) = validate_prompt(self.backend.meta(), &prompt) {
+            return Err(SubmitError::Invalid(e.to_string()));
+        }
+        if self.queue_limit > 0 && self.queue.len() >= self.queue_limit {
+            if telemetry::enabled() {
+                telemetry::registry().requests_shed.fetch_add(1, Relaxed);
+            }
+            return Err(SubmitError::QueueFull {
+                depth: self.queue.len(),
+                limit: self.queue_limit,
+            });
+        }
+        if self.state_budget > 0 && self.state_bytes_per_session > self.state_budget {
+            return Err(SubmitError::StateOverBudget {
+                need: self.state_bytes_per_session,
+                budget: self.state_budget,
+            });
+        }
         let id = self.next_id;
         self.next_id += 1;
         let queued_at = telemetry::enabled().then(Instant::now);
-        self.queue.push_back(Request { id, prompt, max_new_tokens, queued_at });
+        self.queue.push_back(Request { id, prompt, max_new_tokens, queued_at, deadline });
         Ok(id)
     }
 
@@ -197,14 +455,44 @@ impl<'a, B: Backend> Scheduler<'a, B> {
     pub fn tick(&mut self) -> Vec<Generation> {
         self.stats.ticks += 1;
         let tele = telemetry::enabled();
+        let mut finished = Vec::new();
 
-        // 1. admit — pop queued requests into free batch slots.  No
-        //    engine work yet: the prompt stays pending on the session; a
-        //    prefix-cache hit seeds its state from the longest cached
-        //    snapshot so prefill scans only the uncached suffix.
+        // 0. sweep — cancellations and expired deadlines retire before
+        //    any engine work.  One clock read covers every wall
+        //    deadline, and only when one exists.
+        self.sweep_cancelled_and_expired(&mut finished);
+
+        // Recompute the degrade level from queue pressure: ≥¾ of the
+        // limit → 2, ≥½ → 1.  Only meaningful with a bounded queue.
+        self.degrade = if self.queue_limit == 0 {
+            0
+        } else if self.queue.len() * 4 >= self.queue_limit * 3 {
+            2
+        } else if self.queue.len() * 2 >= self.queue_limit {
+            1
+        } else {
+            0
+        };
+        if tele {
+            let reg = telemetry::registry();
+            reg.queue_depth.store(self.queue.len() as u64, Relaxed);
+            reg.degrade_level.store(self.degrade as u64, Relaxed);
+        }
+
+        // 1. admit — pop queued requests into free batch slots, while
+        //    the resident state-byte budget holds (over budget = stay
+        //    queued: backpressure, not loss).  No engine work yet: the
+        //    prompt stays pending on the session; a prefix-cache hit
+        //    seeds its state from the longest cached snapshot so
+        //    prefill scans only the uncached suffix.
         let mut admits = 0u64;
         let mut admitted_prompt_tokens = 0usize;
         while self.running.len() < self.max_batch {
+            if self.state_budget > 0
+                && (self.running.len() + 1) * self.state_bytes_per_session > self.state_budget
+            {
+                break;
+            }
             let Some(req) = self.queue.pop_front() else { break };
             if let Some(q) = req.queued_at {
                 telemetry::registry().queue_wait_us.record(q.elapsed().as_micros() as u64);
@@ -226,6 +514,7 @@ impl<'a, B: Backend> Scheduler<'a, B> {
             );
             sess.tick_admitted = self.stats.ticks;
             sess.submitted_at = req.queued_at;
+            sess.deadline = req.deadline;
             admits += 1;
             admitted_prompt_tokens += sess.prompt_len;
             self.stats.admitted += 1;
@@ -237,7 +526,7 @@ impl<'a, B: Backend> Scheduler<'a, B> {
             if tele {
                 telemetry::registry().ticks.fetch_add(1, Relaxed);
             }
-            return Vec::new();
+            return finished;
         }
 
         // 2. prefill — each pending prompt advances by up to
@@ -247,10 +536,20 @@ impl<'a, B: Backend> Scheduler<'a, B> {
         //    prompt's final piece; intermediate chunks skip it entirely.
         let prefill_t0 = tele.then(Instant::now);
         let mut scanned_this_tick = 0usize;
+        // Degrade level ≥1 tightens the per-tick prefill chunk so one
+        // admission stalls the loaded batch less (tokens are unchanged —
+        // chunked prefill is bit-exact; only pacing shifts).
+        let chunk = match (self.degrade, self.prefill_chunk) {
+            (0, c) => c,
+            (_, 0) => DEGRADE_PREFILL_CHUNK,
+            (1, c) => (c + 1) / 2,
+            (_, c) => (c + 3) / 4,
+        };
+        let mut prefill_failed: Vec<(usize, String)> = Vec::new();
         {
-            let Scheduler { backend, running, cache, stats, prefill_chunk, .. } = &mut *self;
+            let Scheduler { backend, running, cache, stats, .. } = &mut *self;
             for sess in running.iter_mut().filter(|s| s.needs_prefill()) {
-                let mut budget = if *prefill_chunk == 0 { usize::MAX } else { *prefill_chunk };
+                let mut budget = if chunk == 0 { usize::MAX } else { chunk };
                 while budget > 0 && sess.needs_prefill() {
                     let remaining = sess.prompt.len() - sess.prefill_pos;
                     let mut take = remaining.min(budget);
@@ -260,13 +559,21 @@ impl<'a, B: Backend> Scheduler<'a, B> {
                     }
                     let end = sess.prefill_pos + take;
                     let is_final = end == sess.prompt.len();
-                    let logits = backend
-                        .prefill_resume(
-                            &mut sess.state,
-                            &sess.prompt[sess.prefill_pos..end],
-                            is_final,
-                        )
-                        .expect("prompt validated at submit");
+                    let logits = match backend.prefill_resume(
+                        &mut sess.state,
+                        &sess.prompt[sess.prefill_pos..end],
+                        is_final,
+                    ) {
+                        Ok(l) => l,
+                        Err(e) => {
+                            // The prompt was validated at submit, so
+                            // this is a backend fault (or an injected
+                            // one): retire just this session as Failed;
+                            // the rest of the batch is untouched.
+                            prefill_failed.push((sess.id, format!("prefill failed: {e}")));
+                            break;
+                        }
+                    };
                     sess.prefill_pos = end;
                     stats.prefill_scanned_tokens += take;
                     stats.prefill_chunks += 1;
@@ -288,6 +595,15 @@ impl<'a, B: Backend> Scheduler<'a, B> {
                 sess.prefill_ticks += 1;
             }
         }
+        if !prefill_failed.is_empty() {
+            self.retire_failed(prefill_failed, &mut finished);
+            if self.running.is_empty() {
+                if tele {
+                    telemetry::registry().ticks.fetch_add(1, Relaxed);
+                }
+                return finished;
+            }
+        }
         if let Some(t0) = prefill_t0 {
             if scanned_this_tick > 0 {
                 telemetry::registry().prefill_stall_us.record(t0.elapsed().as_micros() as u64);
@@ -302,6 +618,13 @@ impl<'a, B: Backend> Scheduler<'a, B> {
         lt.lap(Stage::Sample);
         let sampled = samples.iter().flatten().count();
         self.stats.decoded_tokens += sampled;
+        if self.stream_tokens {
+            for (sess, tok) in self.running.iter().zip(&samples) {
+                if let Some(t) = tok {
+                    self.token_events.push((sess.id, *t));
+                }
+            }
+        }
         if tele {
             let reg = telemetry::registry();
             reg.ticks.fetch_add(1, Relaxed);
@@ -338,7 +661,7 @@ impl<'a, B: Backend> Scheduler<'a, B> {
 
         // 4. retire — budget-exhausted sessions leave; everyone else
         //    keeps their slot (ready sessions carry a token to step).
-        let mut finished = Vec::new();
+        let retired_before = finished.len();
         let mut keep: Vec<Session> = Vec::with_capacity(self.running.len());
         let mut step_idx: Vec<usize> = Vec::with_capacity(sampled);
         let mut step_tokens: Vec<i32> = Vec::with_capacity(sampled);
@@ -352,6 +675,7 @@ impl<'a, B: Backend> Scheduler<'a, B> {
                     tick_finished: self.stats.ticks,
                     prefill_ticks: sess.prefill_ticks,
                     tokens: sess.generated,
+                    finish: FinishReason::Completed,
                 });
             } else {
                 if let Some(t) = tok {
@@ -363,21 +687,46 @@ impl<'a, B: Backend> Scheduler<'a, B> {
         }
         if tele {
             let reg = telemetry::registry();
-            reg.retires_per_tick.record(finished.len() as u64);
-            reg.finished.fetch_add(finished.len() as u64, Relaxed);
+            reg.retires_per_tick.record((finished.len() - retired_before) as u64);
+            reg.finished.fetch_add((finished.len() - retired_before) as u64, Relaxed);
         }
 
-        // 5. step — ready survivors advance one token together.
+        // 5. step — ready survivors advance one token together.  A
+        //    batch-level failure advances no state (the `step_batch`
+        //    contract), so we can isolate it: retry each session solo
+        //    and retire only the ones that actually fail.  Solo and
+        //    batched steps are bit-exact, so survivors' tokens are
+        //    unchanged by the fallback.
+        let mut step_failed: Vec<(usize, String)> = Vec::new();
         if !step_tokens.is_empty() {
             let vocab = self.backend.meta().vocab;
             let mut states: Vec<EngineState> =
                 step_idx.iter().map(|&i| std::mem::take(&mut keep[i].state)).collect();
-            let logits = self.backend.step_batch(&mut states, &step_tokens);
-            for ((&i, state), chunk) in
-                step_idx.iter().zip(states).zip(logits.chunks_exact(vocab))
-            {
-                keep[i].state = state;
-                keep[i].apply_logits(chunk.to_vec());
+            match self.backend.step_batch(&mut states, &step_tokens) {
+                Ok(logits) => {
+                    for ((&i, state), chunk) in
+                        step_idx.iter().zip(states).zip(logits.chunks_exact(vocab))
+                    {
+                        keep[i].state = state;
+                        keep[i].apply_logits(chunk.to_vec());
+                    }
+                }
+                Err(_) => {
+                    for ((&i, mut state), &t) in
+                        step_idx.iter().zip(states).zip(&step_tokens)
+                    {
+                        match self.backend.step(&mut state, t) {
+                            Ok(l) => {
+                                keep[i].state = state;
+                                keep[i].apply_logits(l);
+                            }
+                            Err(e) => {
+                                keep[i].state = state;
+                                step_failed.push((keep[i].id, format!("step failed: {e}")));
+                            }
+                        }
+                    }
+                }
             }
             self.stats.engine_steps += 1;
             if tele {
@@ -385,7 +734,129 @@ impl<'a, B: Backend> Scheduler<'a, B> {
             }
         }
         self.running = keep;
+        if !step_failed.is_empty() {
+            self.retire_failed(step_failed, &mut finished);
+        }
         finished
+    }
+
+    /// Retire the named sessions with [`FinishReason::Failed`] (partial
+    /// output preserved), leaving every other running session in place.
+    fn retire_failed(&mut self, failures: Vec<(usize, String)>, out: &mut Vec<Generation>) {
+        let tele = telemetry::enabled();
+        for (id, why) in failures {
+            let Some(pos) = self.running.iter().position(|s| s.id == id) else { continue };
+            let sess = self.running.remove(pos);
+            self.stats.failed += 1;
+            if tele {
+                telemetry::registry().requests_failed.fetch_add(1, Relaxed);
+            }
+            out.push(Generation {
+                id: sess.id,
+                prompt_len: sess.prompt_len,
+                tokens: sess.generated,
+                tick_admitted: sess.tick_admitted,
+                tick_finished: self.stats.ticks,
+                prefill_ticks: sess.prefill_ticks,
+                finish: FinishReason::Failed(why),
+            });
+        }
+    }
+
+    /// Tick-start sweep: retire cancelled and deadline-expired requests,
+    /// queued or running, before any engine work.
+    fn sweep_cancelled_and_expired(&mut self, out: &mut Vec<Generation>) {
+        let tick = self.stats.ticks;
+        let tele = telemetry::enabled();
+        // One clock read covers every wall deadline — and none happens
+        // unless a wall deadline exists somewhere.
+        let any_wall = self
+            .queue
+            .iter()
+            .any(|r| matches!(r.deadline, Some(Deadline::Wall(_))))
+            || self
+                .running
+                .iter()
+                .any(|s| matches!(s.deadline, Some(Deadline::Wall(_))));
+        let wall_now = any_wall.then(Instant::now);
+        // `admitted == 0` marks a still-queued request: tick deadlines
+        // count from admission, so only wall deadlines can expire it.
+        let expired = |deadline: &Option<Deadline>, admitted: usize| match deadline {
+            Some(Deadline::Ticks(n)) => admitted > 0 && tick.saturating_sub(admitted) >= *n,
+            Some(Deadline::Wall(at)) => wall_now.map_or(false, |now| now >= *at),
+            None => false,
+        };
+
+        if !self.cancel_requested.is_empty() || any_wall {
+            // Queued requests: cancellation and wall expiry apply while
+            // waiting (tick deadlines count from admission).
+            let mut kept: VecDeque<Request> = VecDeque::with_capacity(self.queue.len());
+            for req in self.queue.drain(..) {
+                let finish = if self.cancel_requested.remove(&req.id) {
+                    self.stats.cancelled += 1;
+                    if tele {
+                        telemetry::registry().requests_cancelled.fetch_add(1, Relaxed);
+                    }
+                    Some(FinishReason::Cancelled)
+                } else if expired(&req.deadline, 0) {
+                    self.stats.deadline_expired += 1;
+                    if tele {
+                        telemetry::registry().requests_deadline_exceeded.fetch_add(1, Relaxed);
+                    }
+                    Some(FinishReason::DeadlineExceeded)
+                } else {
+                    None
+                };
+                match finish {
+                    Some(finish) => out.push(Generation {
+                        id: req.id,
+                        prompt_len: req.prompt.len(),
+                        tokens: Vec::new(),
+                        tick_admitted: 0,
+                        tick_finished: tick,
+                        prefill_ticks: 0,
+                        finish,
+                    }),
+                    None => kept.push_back(req),
+                }
+            }
+            self.queue = kept;
+        }
+
+        let mut i = 0;
+        while i < self.running.len() {
+            let sess = &self.running[i];
+            let finish = if self.cancel_requested.remove(&sess.id) {
+                self.stats.cancelled += 1;
+                if tele {
+                    telemetry::registry().requests_cancelled.fetch_add(1, Relaxed);
+                }
+                Some(FinishReason::Cancelled)
+            } else if expired(&sess.deadline, sess.tick_admitted) {
+                self.stats.deadline_expired += 1;
+                if tele {
+                    telemetry::registry().requests_deadline_exceeded.fetch_add(1, Relaxed);
+                }
+                Some(FinishReason::DeadlineExceeded)
+            } else {
+                None
+            };
+            match finish {
+                Some(finish) => {
+                    let sess = self.running.remove(i);
+                    out.push(Generation {
+                        id: sess.id,
+                        prompt_len: sess.prompt_len,
+                        tokens: sess.generated,
+                        tick_admitted: sess.tick_admitted,
+                        tick_finished: tick,
+                        prefill_ticks: sess.prefill_ticks,
+                        finish,
+                    });
+                }
+                None => i += 1,
+            }
+        }
     }
 
     /// Tick until every submitted request has finished; returns all
@@ -613,5 +1084,167 @@ mod tests {
             on.stats().prefill_scanned_tokens < off.stats().prefill_scanned_tokens,
             "cache must reduce scanned prefill work"
         );
+    }
+
+    #[test]
+    fn completed_requests_are_tagged_completed() {
+        let model = toy_model(8);
+        let mut sched = Scheduler::new(&model, 2, Sampling::Greedy, 0);
+        sched.submit(vec![1, 2], 3).unwrap();
+        let gens = sched.run_until_idle();
+        assert_eq!(gens.len(), 1);
+        assert_eq!(gens[0].finish, FinishReason::Completed);
+        assert!(gens[0].finish.is_completed());
+    }
+
+    #[test]
+    fn tick_deadline_retires_with_prefix_of_solo_run() {
+        let model = toy_model(9);
+        let prompt = vec![3i32, 7, 11];
+        let solo =
+            Session::run_solo(&model, 0, &prompt, 10, Sampling::Greedy, session_seed(5, 0))
+                .unwrap();
+
+        let mut sched = Scheduler::new(&model, 2, Sampling::Greedy, 5);
+        let id = sched
+            .submit_request(prompt.clone(), 10, Some(Deadline::Ticks(2)))
+            .unwrap();
+        let gens = sched.run_until_idle();
+        assert_eq!(gens.len(), 1);
+        let g = &gens[0];
+        assert_eq!(g.id, id);
+        assert_eq!(g.finish, FinishReason::DeadlineExceeded);
+        // Admitted on tick 1 (samples token 1), samples token 2 on tick
+        // 2, expires at the start of tick 3: exactly 2 tokens, and they
+        // are a prefix of the request's solo decode.
+        assert_eq!(g.tokens.len(), 2);
+        assert_eq!(g.tokens[..], solo[..2], "partial output must prefix the solo run");
+        assert_eq!(sched.stats().deadline_expired, 1);
+        assert!(sched.is_idle());
+    }
+
+    #[test]
+    fn cancel_retires_running_and_queued_requests_once() {
+        let model = toy_model(10);
+        let mut sched = Scheduler::new(&model, 1, Sampling::Greedy, 0);
+        let a = sched.submit(vec![1, 2], 10).unwrap();
+        let b = sched.submit(vec![3, 4], 10).unwrap(); // waits for the slot
+        assert!(sched.tick().is_empty());
+        assert!(sched.tick().is_empty());
+        assert!(sched.cancel(a), "running request is live");
+        assert!(sched.cancel(b), "queued request is live");
+        assert!(!sched.cancel(999), "unknown id is not cancellable");
+        let mut gens = Vec::new();
+        while !sched.is_idle() {
+            gens.extend(sched.tick());
+        }
+        gens.sort_by_key(|g| g.id);
+        assert_eq!(gens.len(), 2, "each request retires exactly once");
+        assert_eq!(gens[0].finish, FinishReason::Cancelled);
+        assert_eq!(gens[0].tokens.len(), 2, "two ticks of output before the cancel");
+        assert_eq!(gens[1].finish, FinishReason::Cancelled);
+        assert!(gens[1].tokens.is_empty(), "never admitted: no output");
+        assert_eq!(sched.stats().cancelled, 2);
+        assert!(!sched.cancel(a), "already-retired id is no longer live");
+    }
+
+    #[test]
+    fn bounded_queue_sheds_with_typed_error() {
+        let model = toy_model(11);
+        let mut sched = Scheduler::new(&model, 1, Sampling::Greedy, 0).with_queue_limit(2);
+        sched.submit_request(vec![1], 2, None).unwrap();
+        sched.submit_request(vec![2], 2, None).unwrap();
+        match sched.submit_request(vec![3], 2, None) {
+            Err(SubmitError::QueueFull { depth: 2, limit: 2 }) => {}
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        // Draining the queue reopens admission.
+        sched.tick();
+        sched.submit_request(vec![3], 2, None).unwrap();
+        // Shutdown drain: queued requests shed loudly, with a Generation.
+        let shed = sched.shed_queued();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].finish, FinishReason::Shed);
+        assert_eq!(sched.stats().shed, 1);
+        // Malformed input is Invalid, not QueueFull.
+        assert!(matches!(
+            sched.submit_request(vec![], 2, None),
+            Err(SubmitError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn state_budget_backpressures_admission_without_loss() {
+        let model = toy_model(12);
+        let per = EngineState::new(&model.meta).memory_bytes();
+        // Room for exactly two resident sessions.
+        let mut sched =
+            Scheduler::new(&model, 4, Sampling::Greedy, 0).with_state_budget(2 * per);
+        for i in 0..4i32 {
+            sched.submit(vec![1 + i], 3).unwrap();
+        }
+        let gens = sched.run_until_idle();
+        assert_eq!(gens.len(), 4, "backpressure delays, never drops");
+        assert!(gens.iter().all(|g| g.finish == FinishReason::Completed));
+        assert!(
+            sched.stats().peak_batch <= 2,
+            "state budget must cap concurrency at 2, saw {}",
+            sched.stats().peak_batch
+        );
+        // A budget no single session fits is a typed submit rejection.
+        let mut tiny = Scheduler::new(&model, 4, Sampling::Greedy, 0).with_state_budget(1);
+        assert!(matches!(
+            tiny.submit_request(vec![1], 3, None),
+            Err(SubmitError::StateOverBudget { .. })
+        ));
+    }
+
+    #[test]
+    fn degrade_ladder_tracks_queue_pressure_and_never_changes_tokens() {
+        let model = toy_model(13);
+        let prompts: Vec<Vec<i32>> =
+            (0..4).map(|i| (0..6).map(|t| ((i * 5 + t) % 16) as i32).collect()).collect();
+
+        let mut calm = Scheduler::new(&model, 1, Sampling::Greedy, 3);
+        let mut loaded = Scheduler::new(&model, 1, Sampling::Greedy, 3).with_queue_limit(4);
+        for p in &prompts {
+            calm.submit(p.clone(), 3).unwrap();
+            loaded.submit(p.clone(), 3).unwrap();
+        }
+        assert_eq!(loaded.degrade_level(), 0, "level is recomputed at tick");
+        loaded.tick();
+        assert_eq!(loaded.degrade_level(), 2, "full queue → top degrade level");
+        assert!(!loaded.speculation_advised());
+        let mut a = calm.run_until_idle();
+        let mut b = loaded.run_until_idle();
+        b.extend(loaded.shed_queued()); // nothing left, but harmless
+        a.sort_by_key(|g| g.id);
+        b.sort_by_key(|g| g.id);
+        assert_eq!(a.len(), b.len());
+        for (ga, gb) in a.iter().zip(&b) {
+            assert_eq!(ga.tokens, gb.tokens, "degradation changed tokens");
+        }
+        assert_eq!(loaded.degrade_level(), 0, "pressure released → healthy");
+        assert!(loaded.speculation_advised());
+    }
+
+    #[test]
+    fn token_events_stream_every_sampled_token_in_order() {
+        let model = toy_model(14);
+        let mut sched = Scheduler::new(&model, 2, Sampling::Greedy, 0).with_token_events();
+        let a = sched.submit(vec![1, 2], 3).unwrap();
+        let b = sched.submit(vec![4, 5], 2).unwrap();
+        let mut streamed: std::collections::HashMap<usize, Vec<i32>> =
+            std::collections::HashMap::new();
+        let mut gens = Vec::new();
+        while !sched.is_idle() {
+            gens.extend(sched.tick());
+            for (id, t) in sched.take_token_events() {
+                streamed.entry(id).or_default().push(t);
+            }
+        }
+        gens.sort_by_key(|g| g.id);
+        assert_eq!(streamed[&a], gens[0].tokens, "stream == final output (id {a})");
+        assert_eq!(streamed[&b], gens[1].tokens, "stream == final output (id {b})");
     }
 }

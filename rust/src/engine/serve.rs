@@ -1,0 +1,512 @@
+//! Robustness-first serving front end (DESIGN.md §17): async intake in
+//! front of the continuous-batching [`Scheduler`].
+//!
+//! A [`ServeHandle`] owns a worker thread that drains a **bounded**
+//! submission channel into a scheduler and streams each request's
+//! tokens back over a per-request channel.  The admission → degrade →
+//! shed ladder:
+//!
+//! 1. **admission** — [`ServeHandle::submit`] blocks when the intake
+//!    queue is full (backpressure); [`ServeHandle::try_submit`] returns
+//!    a typed [`SubmitError::QueueFull`] instead.  Malformed requests
+//!    are rejected synchronously, before they consume a queue slot.
+//! 2. **degrade** — under queue pressure the scheduler tightens prefill
+//!    chunks and advises speculation off
+//!    ([`Scheduler::degrade_level`]); pacing changes, tokens never do.
+//! 3. **shed** — a request that cannot be served (scheduler queue full
+//!    behind the channel, or still queued at shutdown) retires loudly
+//!    with [`FinishReason::Shed`] — every accepted request gets exactly
+//!    one [`ServeEvent::Done`], never a silent drop.
+//!
+//! Cancellation is cooperative ([`ServeHandle::cancel`], or simply
+//! dropping a [`ResponseStream`]): the scheduler retires the session at
+//! its next tick with partial output.  Deadlines ride the same sweep.
+//! The worker never panics on request-level failure: backend errors are
+//! isolated per session and surface as [`FinishReason::Failed`].
+
+use super::backend::validate_prompt;
+use super::scheduler::{Deadline, FinishReason, Generation, SchedulerStats, SubmitError};
+use super::{Backend, Sampling, Scheduler};
+use crate::model::ModelMeta;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Scheduler batch capacity.
+    pub max_batch: usize,
+    pub sampling: Sampling,
+    pub seed: u64,
+    /// Bound on the intake channel *and* the scheduler queue behind it
+    /// (each holds up to this many waiting requests).  Must be ≥ 1.
+    pub queue_limit: usize,
+    /// Resident recurrent-state byte budget (0 = unlimited) — see
+    /// [`Scheduler::with_state_budget`].
+    pub state_budget: usize,
+    /// Prefill chunk tokens (0 = unchunked); degradation tightens this
+    /// under load.
+    pub prefill_chunk: usize,
+    /// Wall deadline applied to requests submitted without their own.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            max_batch: 4,
+            sampling: Sampling::Greedy,
+            seed: 0,
+            queue_limit: 64,
+            state_budget: 0,
+            prefill_chunk: 0,
+            default_deadline: None,
+        }
+    }
+}
+
+/// Per-request stream events.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeEvent {
+    /// One decoded token, in order.
+    Token(i32),
+    /// The request retired; `Generation::finish` says how and
+    /// `Generation::tokens` carries the full (possibly partial) output.
+    /// Always the last event on a stream.
+    Done(Generation),
+}
+
+/// Receiving side of one request's event stream.  Dropping it without
+/// draining cancels the request cooperatively at the worker's next
+/// failed token send.
+pub struct ResponseStream {
+    /// The serve-side request id ([`ServeHandle::cancel`] takes this).
+    pub id: u64,
+    rx: mpsc::Receiver<ServeEvent>,
+}
+
+impl ResponseStream {
+    /// Next event, blocking; `None` once the stream is finished (after
+    /// [`ServeEvent::Done`]) or the worker is gone.
+    pub fn recv(&self) -> Option<ServeEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Block until the request retires, discarding token events.
+    /// `None` only if the worker died without delivering `Done` (which
+    /// the chaos tests assert never happens).
+    pub fn wait(self) -> Option<Generation> {
+        loop {
+            match self.rx.recv() {
+                Ok(ServeEvent::Done(g)) => return Some(g),
+                Ok(ServeEvent::Token(_)) => continue,
+                Err(_) => return None,
+            }
+        }
+    }
+}
+
+/// Aggregate serving outcome counters, returned by
+/// [`ServeHandle::shutdown`].  `submitted == completed + shed +
+/// cancelled + deadline_exceeded + failed` — every accepted request
+/// retires exactly once.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Requests accepted by the worker (excludes synchronous edge
+    /// rejections, which never enter the system).
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub cancelled: u64,
+    pub deadline_exceeded: u64,
+    pub failed: u64,
+    /// The underlying scheduler's lifetime counters.
+    pub scheduler: SchedulerStats,
+}
+
+/// One accepted request travelling from handle to worker.
+struct Intake {
+    req_id: u64,
+    prompt: Vec<i32>,
+    max_new_tokens: usize,
+    deadline: Option<Deadline>,
+    tx: mpsc::Sender<ServeEvent>,
+}
+
+enum Ctl {
+    Cancel(u64),
+    Shutdown,
+}
+
+/// Handle to a running serve worker.  Submissions are thread-safe via
+/// internal channels; shut down with [`ServeHandle::shutdown`] to
+/// collect [`ServeStats`] (queued work sheds, running work completes).
+pub struct ServeHandle {
+    meta: ModelMeta,
+    queue_limit: usize,
+    default_deadline: Option<Duration>,
+    next_id: AtomicU64,
+    intake: mpsc::SyncSender<Intake>,
+    ctl: mpsc::Sender<Ctl>,
+    worker: thread::JoinHandle<ServeStats>,
+}
+
+impl ServeHandle {
+    /// Spawn the serving worker around a shared backend.
+    pub fn spawn<B>(backend: Arc<B>, cfg: ServeConfig) -> Result<ServeHandle>
+    where
+        B: Backend + Send + Sync + 'static,
+    {
+        anyhow::ensure!(cfg.max_batch > 0, "serve needs batch capacity");
+        anyhow::ensure!(cfg.queue_limit > 0, "serve needs a bounded queue (≥ 1)");
+        let meta = backend.meta().clone();
+        let (intake_tx, intake_rx) = mpsc::sync_channel::<Intake>(cfg.queue_limit);
+        let (ctl_tx, ctl_rx) = mpsc::channel::<Ctl>();
+        let worker_cfg = cfg.clone();
+        let worker = thread::Builder::new()
+            .name("serve-worker".into())
+            .spawn(move || worker_loop(backend, worker_cfg, intake_rx, ctl_rx))
+            .map_err(|e| anyhow!("spawning serve worker: {e}"))?;
+        Ok(ServeHandle {
+            meta,
+            queue_limit: cfg.queue_limit,
+            default_deadline: cfg.default_deadline,
+            next_id: AtomicU64::new(0),
+            intake: intake_tx,
+            ctl: ctl_tx,
+            worker,
+        })
+    }
+
+    fn make_intake(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        deadline: Option<Deadline>,
+    ) -> std::result::Result<(Intake, ResponseStream), SubmitError> {
+        if max_new_tokens == 0 {
+            return Err(SubmitError::Invalid("request must generate at least one token".into()));
+        }
+        if let Err(e) = validate_prompt(&self.meta, &prompt) {
+            return Err(SubmitError::Invalid(e.to_string()));
+        }
+        let deadline = deadline.or_else(|| {
+            self.default_deadline.map(|d| Deadline::Wall(Instant::now() + d))
+        });
+        let req_id = self.next_id.fetch_add(1, Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let intake = Intake { req_id, prompt, max_new_tokens, deadline, tx };
+        Ok((intake, ResponseStream { id: req_id, rx }))
+    }
+
+    /// Submit a request, blocking while the intake queue is full
+    /// (backpressure).  Malformed input is rejected synchronously.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        deadline: Option<Deadline>,
+    ) -> std::result::Result<ResponseStream, SubmitError> {
+        let (intake, stream) = self.make_intake(prompt, max_new_tokens, deadline)?;
+        self.intake.send(intake).map_err(|_| SubmitError::Stopped)?;
+        Ok(stream)
+    }
+
+    /// Non-blocking submit: a full intake queue is an immediate typed
+    /// [`SubmitError::QueueFull`] — the overload smoke's load-shed path.
+    pub fn try_submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        deadline: Option<Deadline>,
+    ) -> std::result::Result<ResponseStream, SubmitError> {
+        let (intake, stream) = self.make_intake(prompt, max_new_tokens, deadline)?;
+        match self.intake.try_send(intake) {
+            Ok(()) => Ok(stream),
+            Err(mpsc::TrySendError::Full(_)) => Err(SubmitError::QueueFull {
+                depth: self.queue_limit,
+                limit: self.queue_limit,
+            }),
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Stopped),
+        }
+    }
+
+    /// Request cooperative cancellation of an in-flight request (by the
+    /// id on its [`ResponseStream`]).  A no-op for ids already retired.
+    pub fn cancel(&self, id: u64) {
+        let _ = self.ctl.send(Ctl::Cancel(id));
+    }
+
+    /// Graceful shutdown: queued (undecoded) requests shed loudly,
+    /// running sessions finish, then the worker exits and its stats
+    /// come back.
+    pub fn shutdown(self) -> Result<ServeStats> {
+        let _ = self.ctl.send(Ctl::Shutdown);
+        drop(self.intake);
+        self.worker.join().map_err(|_| anyhow!("serve worker panicked"))
+    }
+}
+
+/// The worker: drain control + intake channels, tick the scheduler,
+/// fan events out to per-request streams.  Single-threaded over the
+/// scheduler — all concurrency lives in the channels — so the decode
+/// math is exactly the scheduler's, and batched == solo bit-exactness
+/// carries over to the served streams.
+fn worker_loop<B: Backend + Send + Sync + 'static>(
+    backend: Arc<B>,
+    cfg: ServeConfig,
+    intake_rx: mpsc::Receiver<Intake>,
+    ctl_rx: mpsc::Receiver<Ctl>,
+) -> ServeStats {
+    let mut sched = Scheduler::new(backend.as_ref(), cfg.max_batch, cfg.sampling, cfg.seed)
+        .with_token_events()
+        .with_queue_limit(cfg.queue_limit)
+        .with_prefill_chunk(cfg.prefill_chunk);
+    if cfg.state_budget > 0 {
+        sched = sched.with_state_budget(cfg.state_budget);
+    }
+
+    let mut stats = ServeStats::default();
+    // scheduler id → (serve request id, event stream sender).
+    let mut inflight: HashMap<usize, (u64, mpsc::Sender<ServeEvent>)> = HashMap::new();
+    let mut shutting_down = false;
+
+    let deliver = |stats: &mut ServeStats,
+                   inflight: &mut HashMap<usize, (u64, mpsc::Sender<ServeEvent>)>,
+                   mut g: Generation| {
+        let Some((req_id, tx)) = inflight.remove(&g.id) else { return };
+        match g.finish {
+            FinishReason::Completed => stats.completed += 1,
+            FinishReason::Shed => stats.shed += 1,
+            FinishReason::Cancelled => stats.cancelled += 1,
+            FinishReason::DeadlineExceeded => stats.deadline_exceeded += 1,
+            FinishReason::Failed(_) => stats.failed += 1,
+        }
+        g.id = req_id as usize;
+        let _ = tx.send(ServeEvent::Done(g)); // receiver may be gone; fine
+    };
+
+    loop {
+        // Control first: cancels and shutdown apply before new work.
+        while let Ok(c) = ctl_rx.try_recv() {
+            match c {
+                Ctl::Cancel(req_id) => {
+                    let sid = inflight
+                        .iter()
+                        .find(|(_, (rid, _))| *rid == req_id)
+                        .map(|(sid, _)| *sid);
+                    if let Some(sid) = sid {
+                        sched.cancel(sid);
+                    }
+                }
+                Ctl::Shutdown => shutting_down = true,
+            }
+        }
+
+        // Intake: accept into the scheduler; a scheduler-side queue
+        // overflow sheds loudly (Done(Shed)), never drops silently.
+        let mut disconnected = false;
+        loop {
+            let msg = match intake_rx.try_recv() {
+                Ok(m) => m,
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            };
+            accept(&mut sched, &mut stats, &mut inflight, msg, shutting_down);
+        }
+
+        if shutting_down || disconnected {
+            // Drain whatever still sits in the channel as shed, and
+            // shed the scheduler's queued (not-yet-admitted) requests.
+            while let Ok(msg) = intake_rx.try_recv() {
+                accept(&mut sched, &mut stats, &mut inflight, msg, true);
+            }
+            for g in sched.shed_queued() {
+                deliver(&mut stats, &mut inflight, g);
+            }
+        }
+
+        if sched.is_idle() {
+            if shutting_down || disconnected {
+                break;
+            }
+            // Park until work arrives; short timeout so control
+            // messages stay responsive.
+            match intake_rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(msg) => {
+                    accept(&mut sched, &mut stats, &mut inflight, msg, false);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            continue;
+        }
+
+        // One engine iteration, then fan out this tick's events.
+        let gens = sched.tick();
+        for (sid, tok) in sched.take_token_events() {
+            if let Some((_, tx)) = inflight.get(&sid) {
+                if tx.send(ServeEvent::Token(tok)).is_err() {
+                    // Stream receiver dropped: cancel cooperatively;
+                    // the Cancelled retire next tick cleans up.
+                    sched.cancel(sid);
+                }
+            }
+        }
+        for g in gens {
+            deliver(&mut stats, &mut inflight, g);
+        }
+    }
+
+    stats.scheduler = sched.stats().clone();
+    stats
+}
+
+/// Accept one intake message into the scheduler (or shed it, when the
+/// scheduler queue is full or the worker is shutting down).
+fn accept<B: Backend>(
+    sched: &mut Scheduler<'_, B>,
+    stats: &mut ServeStats,
+    inflight: &mut HashMap<usize, (u64, mpsc::Sender<ServeEvent>)>,
+    msg: Intake,
+    shed_immediately: bool,
+) {
+    stats.submitted += 1;
+    let shed = |stats: &mut ServeStats, msg: &Intake, why: FinishReason| {
+        match &why {
+            FinishReason::Shed => stats.shed += 1,
+            FinishReason::Failed(_) => stats.failed += 1,
+            _ => {}
+        }
+        let _ = msg.tx.send(ServeEvent::Done(Generation {
+            id: msg.req_id as usize,
+            prompt_len: msg.prompt.len(),
+            tokens: Vec::new(),
+            tick_admitted: 0,
+            tick_finished: 0,
+            prefill_ticks: 0,
+            finish: why,
+        }));
+    };
+    if shed_immediately {
+        shed(stats, &msg, FinishReason::Shed);
+        return;
+    }
+    match sched.submit_request(msg.prompt.clone(), msg.max_new_tokens, msg.deadline) {
+        Ok(sid) => {
+            inflight.insert(sid, (msg.req_id, msg.tx));
+        }
+        Err(SubmitError::QueueFull { .. }) | Err(SubmitError::StateOverBudget { .. }) => {
+            shed(stats, &msg, FinishReason::Shed);
+        }
+        Err(e) => {
+            // Validated at the handle, so this is unreachable in
+            // practice — but report, never drop.
+            shed(stats, &msg, FinishReason::Failed(e.to_string()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::scheduler::session_seed;
+    use crate::engine::Session;
+    use crate::model::toy::toy_flat_params_random;
+    use crate::sparse::compile::{magnitude_prune_all, PackPolicy};
+    use crate::sparse::SparseModel;
+
+    fn toy_model(seed: u64) -> SparseModel {
+        let mut p = toy_flat_params_random(4, seed);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        SparseModel::compile(&p, &PackPolicy::auto()).unwrap()
+    }
+
+    #[test]
+    fn spawn_rejects_degenerate_configs() {
+        let model = Arc::new(toy_model(1));
+        let zero_batch = ServeConfig { max_batch: 0, ..ServeConfig::default() };
+        assert!(ServeHandle::spawn(Arc::clone(&model), zero_batch).is_err());
+        let zero_queue = ServeConfig { queue_limit: 0, ..ServeConfig::default() };
+        assert!(ServeHandle::spawn(model, zero_queue).is_err());
+    }
+
+    #[test]
+    fn streams_every_token_in_order_then_done_bit_identical_to_solo() {
+        let model = Arc::new(toy_model(2));
+        let solo =
+            Session::run_solo(model.as_ref(), 0, &[1, 2, 3], 6, Sampling::Greedy, session_seed(0, 0))
+                .unwrap();
+        let handle = ServeHandle::spawn(Arc::clone(&model), ServeConfig::default()).unwrap();
+        let stream = handle.submit(vec![1, 2, 3], 6, None).unwrap();
+        let mut streamed = Vec::new();
+        let done = loop {
+            match stream.recv().expect("stream must end with Done, not disconnect") {
+                ServeEvent::Token(t) => streamed.push(t),
+                ServeEvent::Done(g) => break g,
+            }
+        };
+        assert_eq!(done.finish, FinishReason::Completed);
+        assert_eq!(streamed, done.tokens, "streamed tokens must match the final output");
+        assert_eq!(streamed, solo, "served output must be bit-identical to the solo run");
+        assert!(stream.recv().is_none(), "Done is the last event");
+        let stats = handle.shutdown().unwrap();
+        assert_eq!((stats.submitted, stats.completed), (1, 1));
+    }
+
+    #[test]
+    fn try_submit_sheds_with_typed_queue_full_at_the_edge() {
+        let model = Arc::new(toy_model(3));
+        let cfg = ServeConfig { max_batch: 1, queue_limit: 1, ..ServeConfig::default() };
+        let handle = ServeHandle::spawn(model, cfg).unwrap();
+        // Flood until the bounded intake channel pushes back.  The
+        // worker decodes while we submit, so a handful of attempts is
+        // enough; the bound below is only a liveness backstop.
+        let mut streams = Vec::new();
+        let mut edge_rejected = false;
+        for _ in 0..10_000 {
+            match handle.try_submit(vec![1, 2], 8, None) {
+                Ok(s) => streams.push(s),
+                Err(SubmitError::QueueFull { depth, limit }) => {
+                    assert_eq!((depth, limit), (1, 1));
+                    edge_rejected = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert!(edge_rejected, "a bounded queue must eventually push back");
+        // Every accepted request still retires exactly once.
+        let accepted = streams.len() as u64;
+        for s in streams {
+            s.wait().expect("accepted streams end with Done");
+        }
+        let stats = handle.shutdown().unwrap();
+        assert_eq!(stats.submitted, accepted);
+        assert_eq!(
+            stats.completed + stats.shed + stats.cancelled + stats.deadline_exceeded + stats.failed,
+            accepted
+        );
+    }
+
+    #[test]
+    fn default_wall_deadline_applies_to_requests_without_their_own() {
+        let model = Arc::new(toy_model(4));
+        let cfg =
+            ServeConfig { default_deadline: Some(Duration::from_secs(0)), ..ServeConfig::default() };
+        let handle = ServeHandle::spawn(model, cfg).unwrap();
+        let g = handle.submit(vec![1, 2], 4, None).unwrap().wait().unwrap();
+        assert_eq!(g.finish, FinishReason::DeadlineExceeded);
+        assert!(g.tokens.len() < 4, "an already-expired deadline must cut generation short");
+        let stats = handle.shutdown().unwrap();
+        assert_eq!(stats.deadline_exceeded, 1);
+    }
+}

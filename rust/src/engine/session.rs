@@ -13,6 +13,7 @@
 //! from a prefix-cache snapshot) before the session joins the
 //! sample/step loop.
 
+use super::scheduler::Deadline;
 use super::{Backend, EngineState, Sampler, Sampling};
 use anyhow::{ensure, Result};
 use std::time::Instant;
@@ -47,6 +48,8 @@ pub struct Session {
     pub(crate) submitted_at: Option<Instant>,
     /// When this session's previous token was sampled (telemetry only).
     pub(crate) last_sampled_at: Option<Instant>,
+    /// Retire-by deadline, swept at every tick start (DESIGN.md §17).
+    pub(crate) deadline: Option<Deadline>,
     sampler: Sampler,
 }
 
@@ -77,6 +80,7 @@ impl Session {
             prefill_pos: 0,
             submitted_at: None,
             last_sampled_at: None,
+            deadline: None,
             sampler: Sampler::new(sampling, seed),
         })
     }
@@ -110,6 +114,7 @@ impl Session {
             prefill_pos,
             submitted_at: None,
             last_sampled_at: None,
+            deadline: None,
             sampler: Sampler::new(sampling, seed),
         }
     }
@@ -164,7 +169,7 @@ impl Session {
             if s.done() {
                 return Ok(s.generated);
             }
-            let logits = backend.step(&mut s.state, t);
+            let logits = backend.step(&mut s.state, t)?;
             s.apply_logits(logits);
         }
     }

@@ -168,11 +168,11 @@ impl<'a, T: Backend + ?Sized, D: Backend + ?Sized> SpecDecoder<'a, T, D> {
             let draft_t0 = telem.then(Instant::now);
             let mut tokens = Vec::with_capacity(k + 1);
             tokens.push(t0);
-            let mut dl = self.draft.step(&mut d_state, t0);
+            let mut dl = self.draft.step(&mut d_state, t0)?;
             for _ in 0..k {
                 let q = argmax(&dl);
                 tokens.push(q);
-                dl = self.draft.step(&mut d_state, q);
+                dl = self.draft.step(&mut d_state, q)?;
             }
             let draft_us = draft_t0.map(|t| t.elapsed().as_micros() as u64);
 
@@ -274,7 +274,7 @@ mod tests {
         for _ in 0..max_new {
             let t = argmax(&logits);
             out.push(t);
-            logits = model.step(&mut state, t);
+            logits = model.step(&mut state, t).unwrap();
         }
         out
     }

@@ -70,6 +70,16 @@ SUBCOMMANDS:
                              into BENCH_serving.json
                              (--requests/--prompt-len/--new/--k/
                              --draft-sparsity/--seed)
+      --serve                bounded-queue overload smoke on the serving
+                             robustness layer: burst past --queue-limit and
+                             require every outcome reported — typed queue-full
+                             rejections, loud Shed / DeadlineExceeded
+                             retirements, never a panic or a silent drop —
+                             then push the same pressure through the async
+                             ServeHandle with backpressure; snapshot folds
+                             into BENCH_serving.json
+                             (--requests/--batch/--queue-limit/--prompt-len/
+                             --new/--seed)
   generate                   continuous-batching generation on the stateful
                              engine (host-only: random weights, byte vocab)
       --requests 8           queued requests
@@ -108,7 +118,8 @@ fn main() {
 }
 
 fn real_main(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["fast", "all", "telemetry", "prefix-cache", "speculate"])?;
+    let args =
+        Args::parse(argv, &["fast", "all", "telemetry", "prefix-cache", "speculate", "serve"])?;
     if let Some(lv) = args.get("log-level") {
         let level = sparsessm::telemetry::log::Level::parse(lv).ok_or_else(|| {
             anyhow::anyhow!("unknown --log-level '{lv}' (try: error, warn, info, debug)")
@@ -341,6 +352,54 @@ fn sparse_bench(args: &Args) -> Result<()> {
         let log = bench::bench_serving_json_path();
         bench::update_bench_serving_json(&log, "speculation", run.section)?;
         println!("speculation snapshot written to {} (speculation section)", log.display());
+        return Ok(());
+    }
+
+    if args.has("serve") {
+        // Overload smoke on the robustness layer: burst past the queue
+        // bound and require every outcome *reported* — typed queue-full
+        // rejections, loud Shed/DeadlineExceeded retirements — then the
+        // same pressure through the async ServeHandle.  Any ledger
+        // imbalance (or a write failure; verify.sh smoke relies on the
+        // snapshot landing on disk) is a hard error.
+        use sparsessm::engine::bench;
+        let fast = args.has("fast");
+        let sparsity = args.get_f64("sparsity", 0.5)?;
+        let mut params = decode::m370_bench_params();
+        if sparsity > 0.0 {
+            magnitude_prune_all(&mut params, sparsity)?;
+        }
+        let policy = PackPolicy::auto().with_dtype(dtype).with_kernel(kernel);
+        let model = std::sync::Arc::new(SparseModel::compile(&params, &policy)?);
+        let queue_limit =
+            args.get_usize("queue-limit", if fast { 6 } else { 8 })?.max(bt + 1);
+        let new_tokens = args.get_usize("new", if fast { 8 } else { 16 })?.max(2);
+        let o = bench::ServeOverloadOpts {
+            requests: args
+                .get_usize("requests", if fast { 12 } else { 24 })?
+                .max(queue_limit + 1),
+            batch: bt,
+            queue_limit,
+            prompt_len: args.get_usize("prompt-len", if fast { 8 } else { 16 })?.max(1),
+            new_tokens,
+            deadline_ticks: (new_tokens / 2).max(1),
+            // Must fit the scheduler queue so every accepted stream can
+            // complete (phase 2 requires zero sheds).
+            stream_requests: queue_limit,
+            seed: args.get_usize("seed", 7)? as u64,
+        };
+        let run = bench::serve_overload_run(model, &o)?;
+        println!(
+            "== serve overload smoke (burst {} > queue {queue_limit}, batch {bt}) ==",
+            o.requests
+        );
+        println!(
+            "  edge-rejected {} | shed {} | deadline-exceeded {} | completed {} | streamed {}",
+            run.edge_rejected, run.shed, run.deadline_exceeded, run.completed, run.streamed
+        );
+        let log = bench::bench_serving_json_path();
+        bench::update_bench_serving_json(&log, "serve_overload", run.section)?;
+        println!("overload snapshot written to {} (serve_overload section)", log.display());
         return Ok(());
     }
 

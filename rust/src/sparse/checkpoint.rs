@@ -386,11 +386,60 @@ impl SparseModel {
         let path = path.as_ref();
         let bytes = std::fs::read(path)
             .with_context(|| format!("reading checkpoint {}", path.display()))?;
-        let mut r = Reader { buf: &bytes, pos: 0 };
+        SparseModel::load_bytes(&bytes)
+            .with_context(|| format!("loading checkpoint {}", path.display()))
+    }
+
+    /// Deserialize a checkpoint from memory.  Hardened against hostile
+    /// input (DESIGN.md §17): every truncation, bad tag, or
+    /// dimension/invariant mismatch is an `Err` — never a panic, and
+    /// never an allocation larger than the bytes actually present
+    /// ([`Reader::seq_len`] pre-validates every count).  Pinned by the
+    /// corruption-fuzzing test below.
+    pub fn load_bytes(bytes: &[u8]) -> Result<SparseModel> {
+        SparseModel::load_bytes_impl(bytes, None)
+    }
+
+    /// [`SparseModel::load_bytes`] with
+    /// [`crate::engine::faultx::Site::CheckpointRead`] failpoints armed:
+    /// the plan is consulted once up front and once per layer, so a
+    /// seeded plan can fail deserialization at a deterministic depth.
+    pub fn load_bytes_with_faults(
+        bytes: &[u8],
+        plan: &crate::engine::faultx::FaultPlan,
+    ) -> Result<SparseModel> {
+        SparseModel::load_bytes_impl(bytes, Some(plan))
+    }
+
+    fn load_bytes_impl(
+        bytes: &[u8],
+        faults: Option<&crate::engine::faultx::FaultPlan>,
+    ) -> Result<SparseModel> {
+        use crate::engine::faultx::Site;
+        let trip = |what: &str| -> Result<()> {
+            if let Some(p) = faults {
+                if p.should_fail(Site::CheckpointRead) {
+                    bail!("faultx: injected checkpoint read fault ({what})");
+                }
+            }
+            Ok(())
+        };
+        trip("header")?;
+        let mut r = Reader { buf: bytes, pos: 0 };
         ensure!(r.take(4)? == MAGIC.as_slice(), "not a SparseModel checkpoint (bad magic)");
         let version = r.u32()?;
         ensure!(version == VERSION, "unsupported checkpoint version {version}");
         let meta = read_meta(&mut r)?;
+        ensure!(
+            meta.n_layer > 0
+                && meta.d_model > 0
+                && meta.d_inner > 0
+                && meta.d_state > 0
+                && meta.dt_rank > 0
+                && meta.d_conv > 0
+                && meta.vocab > 0,
+            "checkpoint meta has zero dimensions"
+        );
         let head = read_packed(&mut r)?;
         // The serving kernels rely on compile-time invariants a corrupt
         // file could violate: the tied head is a dense f32 matrix at
@@ -405,11 +454,13 @@ impl SparseModel {
             "checkpoint head dims disagree with meta"
         );
         let norm_f = r.f32s()?;
+        ensure!(norm_f.len() == meta.d_model, "final-norm length disagrees with meta");
         let n_layers = r.usize()?;
         ensure!(n_layers == meta.n_layer, "layer count disagrees with meta");
         ensure!(n_layers <= 1 << 20, "implausible layer count {n_layers}");
         let mut layers = Vec::with_capacity(n_layers);
         for li in 0..n_layers {
+            trip("layer")?;
             // Field-by-field locals: the reader is strictly sequential,
             // and the scan plan is derived (not serialized) from the
             // x_proj/A_log planes exactly as `compile` derives it, so
@@ -425,6 +476,41 @@ impl SparseModel {
             let a = r.f32s()?;
             let d = r.f32s()?;
             let out_proj = read_packed(&mut r)?;
+            // Every plane's shape must agree with the meta dims before
+            // anything derived (the scan plan, the serving kernels)
+            // indexes into it — a corrupt file fails here, loudly, not
+            // as an out-of-bounds panic later.
+            let (dm, di, ds, dr, dc) =
+                (meta.d_model, meta.d_inner, meta.d_state, meta.dt_rank, meta.d_conv);
+            ensure!(norm.len() == dm, "layer {li}: norm length disagrees with meta");
+            ensure!(
+                in_proj.rows() == 2 * di && in_proj.cols() == dm,
+                "layer {li}: in_proj dims disagree with meta"
+            );
+            ensure!(
+                conv_w.rows == di && conv_w.cols == dc,
+                "layer {li}: conv_w dims disagree with meta"
+            );
+            ensure!(conv_b.len() == di, "layer {li}: conv_b length disagrees with meta");
+            ensure!(
+                x_proj.rows() == dr + 2 * ds && x_proj.cols() == di,
+                "layer {li}: x_proj dims disagree with meta"
+            );
+            ensure!(
+                dt_proj.rows() == di && dt_proj.cols() == dr,
+                "layer {li}: dt_proj dims disagree with meta"
+            );
+            ensure!(dt_b.len() == di, "layer {li}: dt_b length disagrees with meta");
+            ensure!(
+                a_log.rows() == di && a_log.cols() == ds,
+                "layer {li}: a_log dims disagree with meta"
+            );
+            ensure!(a.len() == di * ds, "layer {li}: A length disagrees with meta");
+            ensure!(d.len() == di, "layer {li}: D length disagrees with meta");
+            ensure!(
+                out_proj.rows() == dm && out_proj.cols() == di,
+                "layer {li}: out_proj dims disagree with meta"
+            );
             let scan_active =
                 scan_active_states(&x_proj, &a_log, meta.dt_rank, meta.d_state, meta.d_inner);
             let layer = SparseLayer {
@@ -525,6 +611,67 @@ mod tests {
         std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
         assert!(SparseModel::load(&path).is_err());
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corruption_fuzzing_returns_errors_never_panics() {
+        use crate::rngx::Pcg;
+        let mut p = toy_flat_params_random(4, 10);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        let model =
+            SparseModel::compile(&p, &PackPolicy::auto().with_dtype(Dtype::F16)).unwrap();
+        let path = tmp_path("fuzz");
+        model.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(SparseModel::load_bytes(&bytes).unwrap(), model);
+
+        // Seeded truncations: every strict prefix must fail cleanly (the
+        // trailing-bytes check makes any shorter stream invalid).
+        let mut rng = Pcg::seeded(0xC0_FFEE);
+        for _ in 0..64 {
+            let cut = rng.below(bytes.len());
+            assert!(
+                SparseModel::load_bytes(&bytes[..cut]).is_err(),
+                "truncation at {cut}/{} must be rejected",
+                bytes.len()
+            );
+        }
+        // Seeded random byte flips: a flip may land in a value plane
+        // (still a structurally valid model) or anywhere in the
+        // structure (must be a typed Err) — either way, never a panic
+        // and never an absurd allocation.  Surviving models must still
+        // hold the shape invariants the serving kernels index by.
+        for _ in 0..256 {
+            let mut corrupt = bytes.clone();
+            let at = rng.below(corrupt.len());
+            let bit = 1u8 << rng.below(8);
+            corrupt[at] ^= bit;
+            if let Ok(m) = SparseModel::load_bytes(&corrupt) {
+                assert_eq!(m.meta.n_layer, m.layers.len());
+                assert_eq!(m.norm_f.len(), m.meta.d_model);
+            }
+        }
+    }
+
+    #[test]
+    fn injected_checkpoint_read_faults_fail_deterministically() {
+        use crate::engine::faultx::{FaultPlan, Site};
+        let p = toy_flat_params_random(4, 11);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let path = tmp_path("faultx");
+        model.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+
+        let armed = FaultPlan::new(3).with_rate(Site::CheckpointRead, FaultPlan::RATE_ALWAYS);
+        let err = SparseModel::load_bytes_with_faults(&bytes, &armed).unwrap_err();
+        assert!(err.to_string().contains("faultx"), "{err}");
+        // Disarmed plan: transparent, byte-identical to the plain load.
+        let clean = FaultPlan::new(3);
+        let m = SparseModel::load_bytes_with_faults(&bytes, &clean).unwrap();
+        assert_eq!(m, model);
+        assert_eq!(clean.invocations(Site::CheckpointRead), 0);
     }
 
     #[test]

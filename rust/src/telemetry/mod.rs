@@ -75,6 +75,20 @@ pub struct Registry {
     pub admitted: AtomicU64,
     pub finished: AtomicU64,
 
+    /// Requests shed under load: queue-full submit rejections plus
+    /// shutdown-drain `FinishReason::Shed` retirements (DESIGN.md §17).
+    pub requests_shed: AtomicU64,
+    /// Requests retired by deadline expiry.
+    pub requests_deadline_exceeded: AtomicU64,
+    /// Requests retired by cooperative cancellation.
+    pub requests_cancelled: AtomicU64,
+    /// Requests retired by an isolated backend failure.
+    pub requests_failed: AtomicU64,
+    /// Current submission-queue depth (gauge — `store`d per tick).
+    pub queue_depth: AtomicU64,
+    /// Current overload degrade level, 0–2 (gauge — `store`d per tick).
+    pub degrade_level: AtomicU64,
+
     /// Prefix-cache lookups that resumed from a snapshot.
     pub prefix_hits: AtomicU64,
     /// Prefix-cache lookups that found no usable prefix.
@@ -132,6 +146,12 @@ impl Registry {
             prefill_tokens: AtomicU64::new(0),
             admitted: AtomicU64::new(0),
             finished: AtomicU64::new(0),
+            requests_shed: AtomicU64::new(0),
+            requests_deadline_exceeded: AtomicU64::new(0),
+            requests_cancelled: AtomicU64::new(0),
+            requests_failed: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            degrade_level: AtomicU64::new(0),
             prefix_hits: AtomicU64::new(0),
             prefix_misses: AtomicU64::new(0),
             prefix_hit_tokens: AtomicU64::new(0),
@@ -194,6 +214,12 @@ impl Registry {
             &self.prefill_tokens,
             &self.admitted,
             &self.finished,
+            &self.requests_shed,
+            &self.requests_deadline_exceeded,
+            &self.requests_cancelled,
+            &self.requests_failed,
+            &self.queue_depth,
+            &self.degrade_level,
             &self.prefix_hits,
             &self.prefix_misses,
             &self.prefix_hit_tokens,
@@ -256,7 +282,9 @@ fn stages_json(phase: Phase) -> Json {
     )
 }
 
-/// Current registry contents as a JSON object: `counters`, `latency_us`
+/// Current registry contents as a JSON object: `counters`, `robustness`
+/// (shed / deadline / cancel / failure counters plus the queue-depth and
+/// degrade-level gauges), `latency_us`
 /// (ttft / inter_token / queue_wait / prefill_stall), `batch`
 /// (occupancy / admits / retires per tick / prefill_chunk_tokens /
 /// state_bytes), `prefix_cache` (hit/miss/insert/evict counters plus
@@ -275,6 +303,20 @@ pub fn snapshot_json() -> Json {
                 ("prefill_tokens", json::num(reg.prefill_tokens.load(Relaxed) as f64)),
                 ("admitted", json::num(reg.admitted.load(Relaxed) as f64)),
                 ("finished", json::num(reg.finished.load(Relaxed) as f64)),
+            ]),
+        ),
+        (
+            "robustness",
+            json::obj(vec![
+                ("requests_shed", json::num(reg.requests_shed.load(Relaxed) as f64)),
+                (
+                    "requests_deadline_exceeded",
+                    json::num(reg.requests_deadline_exceeded.load(Relaxed) as f64),
+                ),
+                ("requests_cancelled", json::num(reg.requests_cancelled.load(Relaxed) as f64)),
+                ("requests_failed", json::num(reg.requests_failed.load(Relaxed) as f64)),
+                ("queue_depth", json::num(reg.queue_depth.load(Relaxed) as f64)),
+                ("degrade_level", json::num(reg.degrade_level.load(Relaxed) as f64)),
             ]),
         ),
         (
@@ -384,6 +426,23 @@ pub fn validate_serving_snapshot(s: &Json) -> Result<()> {
     if counters.get("decoded_tokens")?.as_f64()? < 1.0 {
         bail!("snapshot decoded no tokens");
     }
+    let rb = s.get("robustness")?;
+    for key in [
+        "requests_shed",
+        "requests_deadline_exceeded",
+        "requests_cancelled",
+        "requests_failed",
+        "queue_depth",
+        "degrade_level",
+    ] {
+        if rb.get(key).with_context(|| format!("robustness: missing '{key}'"))?.as_f64()? < 0.0 {
+            bail!("robustness.{key} must be non-negative");
+        }
+    }
+    let degrade = rb.get("degrade_level")?.as_f64()?;
+    if degrade > 2.0 {
+        bail!("robustness.degrade_level {degrade} outside the 0–2 ladder");
+    }
     let lat = s.get("latency_us")?;
     for key in ["ttft", "inter_token", "queue_wait", "prefill_stall"] {
         check_hist(lat.get(key)?, &format!("latency_us.{key}"))?;
@@ -438,6 +497,17 @@ mod tests {
     fn snapshot_has_schema_shape() {
         let snap = snapshot_json();
         assert!(snap.get("counters").is_ok());
+        let rb = snap.get("robustness").unwrap();
+        for key in [
+            "requests_shed",
+            "requests_deadline_exceeded",
+            "requests_cancelled",
+            "requests_failed",
+            "queue_depth",
+            "degrade_level",
+        ] {
+            assert!(rb.get(key).is_ok(), "missing robustness.{key}");
+        }
         assert!(snap.get("latency_us").unwrap().get("ttft").is_ok());
         assert!(snap.get("latency_us").unwrap().get("prefill_stall").is_ok());
         assert!(snap.get("batch").unwrap().get("occupancy").is_ok());

@@ -52,7 +52,7 @@ fn prefill_then_steps<B: Backend>(backend: &B, tokens: &[i32], split: usize) -> 
     let (mut logits, mut state) =
         backend.prefill(&tokens[..split]).expect("test prompts are in-vocab");
     for &t in &tokens[split..] {
-        logits.extend(backend.step(&mut state, t));
+        logits.extend(backend.step(&mut state, t).expect("test tokens are in-vocab"));
     }
     logits
 }
@@ -207,7 +207,7 @@ fn prop_interleaved_batch_matches_solo_exactly() {
             let (_, mut st) = model.prefill(prompt).expect("test prompts are in-vocab");
             let mut log = Vec::new();
             for &t in stream {
-                log.extend(model.step(&mut st, t));
+                log.extend(model.step(&mut st, t).expect("test tokens are in-vocab"));
             }
             solo_states.push(st);
             solo_logits.push(log);
@@ -221,7 +221,7 @@ fn prop_interleaved_batch_matches_solo_exactly() {
         let mut batch_logits: Vec<Vec<f32>> = vec![Vec::new(); n_sessions];
         for step in 0..n_steps {
             let tokens: Vec<i32> = streams.iter().map(|s| s[step]).collect();
-            let out = model.step_batch(&mut states, &tokens);
+            let out = model.step_batch(&mut states, &tokens).expect("test tokens are in-vocab");
             for (i, log) in batch_logits.iter_mut().enumerate() {
                 log.extend_from_slice(&out[i * vocab..(i + 1) * vocab]);
             }
@@ -544,7 +544,7 @@ fn greedy_reference<B: Backend + ?Sized>(
     for _ in 0..max_new {
         let t = argmax(&logits);
         out.push(t);
-        logits = backend.step(&mut state, t);
+        logits = backend.step(&mut state, t).map_err(|e| e.to_string())?;
     }
     Ok(out)
 }
@@ -618,10 +618,10 @@ impl Backend for RandomDraft {
         &self.meta
     }
 
-    fn step(&self, state: &mut EngineState, token: i32) -> Vec<f32> {
+    fn step(&self, state: &mut EngineState, token: i32) -> anyhow::Result<Vec<f32>> {
         state.seq_len += 1;
         let mut rng = Pcg::seeded(self.salt ^ ((state.seq_len as u64) << 32) ^ token as u64);
-        (0..self.meta.vocab).map(|_| rng.below(1 << 16) as f32).collect()
+        Ok((0..self.meta.vocab).map(|_| rng.below(1 << 16) as f32).collect())
     }
 }
 
@@ -675,7 +675,7 @@ fn state_is_constant_size_across_steps() {
     let (_, mut state) = model.prefill(&[1, 2, 3]).unwrap();
     let bytes = state.memory_bytes();
     for t in 0..50usize {
-        model.step(&mut state, (t % 16) as i32);
+        model.step(&mut state, (t % 16) as i32).unwrap();
         assert_eq!(state.memory_bytes(), bytes);
     }
     assert_eq!(state.seq_len, 53);

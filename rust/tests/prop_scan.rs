@@ -286,7 +286,7 @@ fn prop_structured_dstate_plan_end_to_end() {
                     let (mut got, mut state) =
                         model.prefill(&tokens[..split]).map_err(|e| e.to_string())?;
                     for &t in &tokens[split..] {
-                        got.extend(model.step(&mut state, t));
+                        got.extend(model.step(&mut state, t).map_err(|e| e.to_string())?);
                     }
                     for (i, (u, v)) in got.iter().zip(&fused).enumerate() {
                         if (u - v).abs() > 1e-4 {

@@ -79,5 +79,19 @@ cargo run --release --quiet -- sparse-bench --speculate --fast
 grep -q '"speculation"' \
     "$(dirname "$(cargo locate-project --message-format plain)")/BENCH_serving.json"
 
+# Fault-injection smoke (DESIGN.md §17): the chaos soak must hold under
+# release codegen — every submitted id retires exactly once with a
+# valid FinishReason under injected backend faults, deadlines, cancels
+# and sheds, and surviving outputs stay bit-identical to solo runs —
+# and the release-mode bounded-queue overload smoke must report its
+# sheds (typed rejections + loud retirements, never a panic) and fold a
+# robustness-group snapshot into BENCH_serving.json.
+step "fault-injection smoke (release chaos props + bounded-queue overload)"
+cargo test --release -q --test prop_chaos
+cargo run --release --quiet -- sparse-bench --serve --fast
+BENCH_SERVING="$(dirname "$(cargo locate-project --message-format plain)")/BENCH_serving.json"
+grep -q '"serve_overload"' "$BENCH_SERVING"
+grep -q '"requests_shed"' "$BENCH_SERVING"
+
 echo
 echo "verify OK"
