@@ -2,8 +2,10 @@
 //! decode (O(1) per token) against the full-recompute baseline (O(L) per
 //! generated token via `sparse::decode::forward_logits`), plus the
 //! serving-telemetry workload driver ([`serve_telemetry_run`]), the
-//! shared-prefix prefix-cache A/B ([`prefix_cache_run`]) and the
-//! speculative-vs-vanilla greedy A/B ([`speculate_run`]) whose
+//! shared-prefix prefix-cache A/B ([`prefix_cache_run`]), the
+//! speculative-vs-vanilla greedy A/B ([`speculate_run`]), the
+//! worker-pool serial-vs-parallel A/B ([`pool_run`]) and the
+//! checkpoint cold-start owned-vs-mmap A/B ([`cold_start_run`]) whose
 //! snapshots fold into `BENCH_serving.json`.
 //!
 //! Shared by the CLI `sparse-bench --mode step` / `--telemetry` /
@@ -767,6 +769,227 @@ pub fn speculate_run<T: Backend, D: Backend>(
     })
 }
 
+/// A worker-pool A/B workload: the same whole-sequence decode measured
+/// serial (`set_threads(1)`) and through the persistent `threadx` pool
+/// at the session's resolved thread count.
+#[derive(Debug, Clone)]
+pub struct PoolOpts {
+    pub bt: usize,
+    pub len: usize,
+    /// Wall-clock budget per leg, ms.
+    pub budget_ms: f64,
+    /// Require the pool leg to dispatch at least one parallel job (set
+    /// for full-size models; toy models can fall below the parallel
+    /// work threshold and legitimately run serial).
+    pub require_parallel: bool,
+    pub seed: u64,
+}
+
+impl PoolOpts {
+    fn workload_json(&self) -> Json {
+        json::obj(vec![
+            ("batch", json::num(self.bt as f64)),
+            ("len", json::num(self.len as f64)),
+            ("budget_ms", json::num(self.budget_ms)),
+            ("seed", json::num(self.seed as f64)),
+        ])
+    }
+}
+
+/// Result of one pool A/B measurement ([`pool_run`]).
+pub struct PoolRun {
+    pub serial_tok_s: f64,
+    pub pool_tok_s: f64,
+    /// `pool_tok_s / serial_tok_s` — > 1 means the pool won.
+    pub speedup: f64,
+    /// Effective thread count of the pool leg.
+    pub threads: usize,
+    /// Pool jobs dispatched / worker wakeups during the pool leg.
+    pub jobs: u64,
+    pub wakes: u64,
+    /// The full `pool` perf-log section.
+    pub section: Json,
+}
+
+/// Run the decode workload twice — serial (`threads = 1`), then through
+/// the persistent worker pool at the resolved thread count — and
+/// assemble the `pool` perf-log section.  Row-panel partitioning hands
+/// each participant a contiguous stripe, so per-row reduction order is
+/// unchanged and the two legs must produce **bit-identical** logits;
+/// this is `ensure!`d, never assumed.  Restores the thread override on
+/// return.
+pub fn pool_run(model: &SparseModel, o: &PoolOpts) -> Result<PoolRun> {
+    ensure!(o.bt > 0 && o.len > 0, "empty pool workload");
+    let threads = crate::threadx::default_threads();
+    let mut rng = Pcg::seeded(o.seed);
+    let tokens: Vec<i32> =
+        (0..o.bt * o.len).map(|_| rng.below(model.meta.vocab) as i32).collect();
+
+    crate::threadx::set_threads(1);
+    let want = decode::forward_logits(model, &tokens, o.bt, o.len);
+    let (serial_bench, serial_tok_s) =
+        decode::decode_throughput(model, o.bt, o.len, o.budget_ms / 2.0, o.seed);
+    // Restore before any `?` so an error can't leave decode pinned serial.
+    crate::threadx::set_threads(threads);
+    let want = want?;
+
+    let got = decode::forward_logits(model, &tokens, o.bt, o.len)?;
+    ensure!(want == got, "pool decode diverged from serial decode");
+    let (j0, w0) = crate::threadx::pool_stats();
+    let (pool_bench, pool_tok_s) =
+        decode::decode_throughput(model, o.bt, o.len, o.budget_ms / 2.0, o.seed);
+    let (j1, w1) = crate::threadx::pool_stats();
+    let (jobs, wakes) = (j1 - j0, w1 - w0);
+    ensure!(
+        !o.require_parallel || threads <= 1 || jobs > 0,
+        "pool leg at {threads} threads dispatched no parallel jobs"
+    );
+
+    let speedup = pool_tok_s / serial_tok_s.max(1e-9);
+    let section = json::obj(vec![
+        ("workload", o.workload_json()),
+        (
+            "serial",
+            json::obj(vec![
+                ("tok_s", json::num(serial_tok_s)),
+                ("p50_ms", json::num(serial_bench.p50_ms)),
+            ]),
+        ),
+        (
+            "pool",
+            json::obj(vec![
+                ("tok_s", json::num(pool_tok_s)),
+                ("p50_ms", json::num(pool_bench.p50_ms)),
+                ("threads", json::num(threads as f64)),
+                ("workers", json::num(crate::threadx::pool_workers() as f64)),
+                ("jobs", json::num(jobs as f64)),
+                ("wakes", json::num(wakes as f64)),
+            ]),
+        ),
+        (
+            "summary",
+            json::obj(vec![
+                ("speedup", json::num(speedup)),
+                ("tokens_equal", Json::Bool(true)),
+            ]),
+        ),
+    ]);
+    Ok(PoolRun { serial_tok_s, pool_tok_s, speedup, threads, jobs, wakes, section })
+}
+
+/// A checkpoint cold-start A/B workload: `iters` repeated loads of the
+/// same saved model, owned-copy [`SparseModel::load`] vs zero-copy
+/// [`SparseModel::load_mmap`], each leg keeping its best (minimum) wall
+/// time, plus a `bt × len` decode to pin bit-identical outputs.
+#[derive(Debug, Clone)]
+pub struct ColdStartOpts {
+    pub iters: usize,
+    pub bt: usize,
+    pub len: usize,
+    pub seed: u64,
+}
+
+impl ColdStartOpts {
+    fn workload_json(&self, bytes: u64) -> Json {
+        json::obj(vec![
+            ("iters", json::num(self.iters as f64)),
+            ("batch", json::num(self.bt as f64)),
+            ("len", json::num(self.len as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("checkpoint_bytes", json::num(bytes as f64)),
+        ])
+    }
+}
+
+/// Result of one cold-start A/B measurement ([`cold_start_run`]).
+pub struct ColdStartRun {
+    /// Best owned-load wall time over the iters, ms.
+    pub owned_ms: f64,
+    /// Best mmap-load wall time over the iters, ms.
+    pub mmap_ms: f64,
+    /// `owned_ms / mmap_ms` — > 1 means mmap won.
+    pub speedup: f64,
+    /// Checkpoint size on disk.
+    pub bytes: u64,
+    /// Whether the mmap leg actually borrowed planes from the mapping
+    /// (false on non-unix / big-endian hosts, where it falls back to the
+    /// owned path).
+    pub mapped: bool,
+    /// The full `cold_start` perf-log section.
+    pub section: Json,
+}
+
+/// Save `model` once to a scratch file, then time `iters` owned loads
+/// against `iters` mmap loads (minimum wall time each — the cold-start
+/// figure).  Both loads must `==` the source model and decode
+/// **bit-identically**; this is `ensure!`d, never assumed.  The scratch
+/// file is removed on return, error included.
+pub fn cold_start_run(model: &SparseModel, o: &ColdStartOpts) -> Result<ColdStartRun> {
+    ensure!(o.iters > 0 && o.bt > 0 && o.len > 0, "empty cold-start workload");
+    let path = std::env::temp_dir()
+        .join(format!("sparsessm-coldstart-{}.ckpt", std::process::id()));
+    struct Scratch<'a>(&'a Path);
+    impl Drop for Scratch<'_> {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_file(self.0);
+        }
+    }
+    let _scratch = Scratch(&path);
+    model.save(&path)?;
+    let bytes = std::fs::metadata(&path)?.len();
+
+    let mut owned_ms = f64::INFINITY;
+    let mut owned = None;
+    for _ in 0..o.iters {
+        let sw = Stopwatch::new();
+        let m = SparseModel::load(&path)?;
+        owned_ms = owned_ms.min(sw.millis());
+        owned = Some(m);
+    }
+    let mut mmap_ms = f64::INFINITY;
+    let mut via_mmap = None;
+    for _ in 0..o.iters {
+        let sw = Stopwatch::new();
+        let m = SparseModel::load_mmap(&path)?;
+        mmap_ms = mmap_ms.min(sw.millis());
+        via_mmap = Some(m);
+    }
+    let owned = owned.expect("iters >= 1");
+    let via_mmap = via_mmap.expect("iters >= 1");
+    ensure!(owned == *model, "owned checkpoint load drifted from the saved model");
+    ensure!(via_mmap == *model, "mmap checkpoint load drifted from the saved model");
+    let mapped = via_mmap.is_mapped();
+
+    let mut rng = Pcg::seeded(o.seed);
+    let tokens: Vec<i32> =
+        (0..o.bt * o.len).map(|_| rng.below(model.meta.vocab) as i32).collect();
+    let a = decode::forward_logits(&owned, &tokens, o.bt, o.len)?;
+    let b = decode::forward_logits(&via_mmap, &tokens, o.bt, o.len)?;
+    ensure!(a == b, "mmap-loaded model decoded differently from the owned load");
+
+    let speedup = owned_ms / mmap_ms.max(1e-9);
+    let section = json::obj(vec![
+        ("workload", o.workload_json(bytes)),
+        ("owned", json::obj(vec![("load_ms", json::num(owned_ms))])),
+        (
+            "mmap",
+            json::obj(vec![
+                ("load_ms", json::num(mmap_ms)),
+                ("mapped", Json::Bool(mapped)),
+            ]),
+        ),
+        (
+            "summary",
+            json::obj(vec![
+                ("speedup", json::num(speedup)),
+                ("model_equal", Json::Bool(true)),
+                ("decode_equal", Json::Bool(true)),
+            ]),
+        ),
+    ]);
+    Ok(ColdStartRun { owned_ms, mmap_ms, speedup, bytes, mapped, section })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -828,6 +1051,34 @@ mod tests {
         // speculate_run itself (which resets the global telemetry
         // registry) is exercised under the telemetry lock in
         // tests/prop_telemetry.rs and by the CLI smoke.
+    }
+
+    #[test]
+    fn pool_run_is_bit_identical_and_restores_threads() {
+        let p = toy_flat_params_random(4, 1);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let before = crate::threadx::default_threads();
+        let o = PoolOpts { bt: 2, len: 8, budget_ms: 1.0, require_parallel: false, seed: 5 };
+        let run = pool_run(&model, &o).unwrap();
+        assert!(run.serial_tok_s > 0.0 && run.pool_tok_s > 0.0);
+        assert!(run.threads >= 1);
+        assert_eq!(crate::threadx::default_threads(), before, "thread override restored");
+        let eq = run.section.get("summary").unwrap().get("tokens_equal").unwrap();
+        assert_eq!(eq, &Json::Bool(true));
+    }
+
+    #[test]
+    fn cold_start_run_matches_owned_and_mapped_loads() {
+        let p = toy_flat_params_random(4, 1);
+        let model = SparseModel::compile(&p, &PackPolicy::auto()).unwrap();
+        let o = ColdStartOpts { iters: 2, bt: 1, len: 8, seed: 3 };
+        let run = cold_start_run(&model, &o).unwrap();
+        assert!(run.owned_ms.is_finite() && run.mmap_ms.is_finite());
+        assert!(run.bytes > 0);
+        #[cfg(all(unix, target_endian = "little"))]
+        assert!(run.mapped, "unix little-endian hosts must take the zero-copy path");
+        let eq = run.section.get("summary").unwrap().get("decode_equal").unwrap();
+        assert_eq!(eq, &Json::Bool(true));
     }
 
     #[test]

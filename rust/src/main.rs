@@ -47,6 +47,10 @@ SUBCOMMANDS:
                              --dtype), checkpoint it, verify the roundtrip
       --load PATH            load a packed checkpoint (no re-packing) and
                              bench its decode throughput
+      --mmap                 with --load: map the checkpoint instead of
+                             copying it — structure/value planes borrow
+                             from the mapping (v2 files on unix; v1 or
+                             non-unix hosts fall back to the owned path)
       --sparsity 0.5         magnitude-prune level for --save
       --telemetry            serve a continuous-batching workload with the
                              telemetry layer on: per-stage time breakdown,
@@ -76,10 +80,13 @@ SUBCOMMANDS:
                              rejections, loud Shed / DeadlineExceeded
                              retirements, never a panic or a silent drop —
                              then push the same pressure through the async
-                             ServeHandle with backpressure; snapshot folds
-                             into BENCH_serving.json
+                             ServeHandle with backpressure; also runs the
+                             worker-pool serial-vs-parallel A/B and the
+                             checkpoint cold-start owned-vs-mmap A/B
+                             (tokens/models checked bit-identical); all
+                             snapshots fold into BENCH_serving.json
                              (--requests/--batch/--queue-limit/--prompt-len/
-                             --new/--seed)
+                             --new/--len/--seed)
   generate                   continuous-batching generation on the stateful
                              engine (host-only: random weights, byte vocab)
       --requests 8           queued requests
@@ -106,6 +113,11 @@ GLOBAL FLAGS:
   --runs DIR                 checkpoint/run dir (default: runs)
   --reports DIR              experiment report dir (default: reports)
   --fast                     reduced scales/samples for CI
+  --threads N                worker-pool width for host-side math
+                             (default: SPARSESSM_THREADS env var, else
+                             all cores; 1 = serial, no pool)
+  --pin                      pin pool workers to cores (Linux only;
+                             env: SPARSESSM_PIN=1)
   --log-level info           library log verbosity: error|warn|info|debug
                              (env: SPARSESSM_LOG; SPARSESSM_QUIET → error)";
 
@@ -118,13 +130,25 @@ fn main() {
 }
 
 fn real_main(argv: &[String]) -> Result<()> {
-    let args =
-        Args::parse(argv, &["fast", "all", "telemetry", "prefix-cache", "speculate", "serve"])?;
+    let args = Args::parse(
+        argv,
+        &["fast", "all", "telemetry", "prefix-cache", "speculate", "serve", "pin", "mmap"],
+    )?;
     if let Some(lv) = args.get("log-level") {
         let level = sparsessm::telemetry::log::Level::parse(lv).ok_or_else(|| {
             anyhow::anyhow!("unknown --log-level '{lv}' (try: error, warn, info, debug)")
         })?;
         sparsessm::telemetry::log::set_level(level);
+    }
+    if let Some(t) = args.get("threads") {
+        let n: usize = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads expects a positive integer, got '{t}'"))?;
+        anyhow::ensure!(n > 0, "--threads expects a positive integer, got 0");
+        sparsessm::threadx::set_threads(n);
+    }
+    if args.has("pin") {
+        sparsessm::threadx::set_pin(true);
     }
     let artifacts = args.get_or("artifacts", "artifacts").to_string();
     let runs = args.get_or("runs", "runs").to_string();
@@ -388,7 +412,7 @@ fn sparse_bench(args: &Args) -> Result<()> {
             stream_requests: queue_limit,
             seed: args.get_usize("seed", 7)? as u64,
         };
-        let run = bench::serve_overload_run(model, &o)?;
+        let run = bench::serve_overload_run(model.clone(), &o)?;
         println!(
             "== serve overload smoke (burst {} > queue {queue_limit}, batch {bt}) ==",
             o.requests
@@ -400,17 +424,57 @@ fn sparse_bench(args: &Args) -> Result<()> {
         let log = bench::bench_serving_json_path();
         bench::update_bench_serving_json(&log, "serve_overload", run.section)?;
         println!("overload snapshot written to {} (serve_overload section)", log.display());
+
+        // Worker-pool and checkpoint cold-start A/Bs ride along with the
+        // serve smoke, so one `--serve` invocation refreshes every
+        // serving-infrastructure section of the perf log.
+        let po = bench::PoolOpts {
+            bt,
+            len: args.get_usize("len", if fast { 32 } else { 128 })?.max(1),
+            budget_ms: if fast { 120.0 } else { 600.0 },
+            require_parallel: true,
+            seed: args.get_usize("seed", 7)? as u64,
+        };
+        let pr = bench::pool_run(&model, &po)?;
+        println!(
+            "  pool: serial {:.0} tok/s vs pool {:.0} tok/s ({:.2}x at {} threads, \
+             {} jobs / {} wakes, tokens bit-identical)",
+            pr.serial_tok_s, pr.pool_tok_s, pr.speedup, pr.threads, pr.jobs, pr.wakes
+        );
+        bench::update_bench_serving_json(&log, "pool", pr.section)?;
+
+        let co = bench::ColdStartOpts {
+            iters: if fast { 2 } else { 4 },
+            bt: 1,
+            len: 16,
+            seed: args.get_usize("seed", 7)? as u64,
+        };
+        let cr = bench::cold_start_run(&model, &co)?;
+        println!(
+            "  cold start: owned load {:.2} ms vs mmap {:.2} ms ({:.2}x, {} bytes, mapped: {})",
+            cr.owned_ms, cr.mmap_ms, cr.speedup, cr.bytes, cr.mapped
+        );
+        bench::update_bench_serving_json(&log, "cold_start", cr.section)?;
+        println!("pool + cold_start snapshots written to {}", log.display());
         return Ok(());
     }
 
     if let Some(path) = args.get("load") {
-        let mut model = SparseModel::load(path)?;
+        let mut model =
+            if args.has("mmap") { SparseModel::load_mmap(path)? } else { SparseModel::load(path)? };
         model.kernel = kernel;
         println!(
-            "loaded {} [{}] {:.2} MB from {path} (packed planes, no re-packing)",
+            "loaded {} [{}] {:.2} MB from {path} ({})",
             model.meta.name,
             model.format_summary(),
-            model.memory_bytes() as f64 / 1e6
+            model.memory_bytes() as f64 / 1e6,
+            if model.is_mapped() {
+                "zero-copy mmap planes"
+            } else if args.has("mmap") {
+                "mmap requested; fell back to owned planes (v1 file or non-unix host)"
+            } else {
+                "packed planes, no re-packing"
+            }
         );
         let (bench, tps) = decode::decode_throughput(&model, bt, len, budget, 7);
         println!("  decode B={bt} L={len}: {tps:.0} tok/s (p50 {:.3} ms)", bench.p50_ms);

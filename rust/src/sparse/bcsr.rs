@@ -19,6 +19,7 @@
 //! of 8) stores zero padding past `cols`; kernels clip to the real
 //! width.
 
+use super::plane::PlaneBuf;
 use super::values::{f16_to_f32, Dtype, I8_GROUP, ValueStore};
 use anyhow::{ensure, Result};
 
@@ -31,10 +32,10 @@ pub struct BcsrMatrix {
     pub rows: usize,
     pub cols: usize,
     /// `row_ptr[r]..row_ptr[r+1]` spans row `r`'s blocks in `col_blk`.
-    pub row_ptr: Vec<u32>,
+    pub row_ptr: PlaneBuf<u32>,
     /// Column-block index of each stored block (block `b` covers columns
     /// `b·8 .. b·8+8`), strictly increasing within a row.
-    pub col_blk: Vec<u32>,
+    pub col_blk: PlaneBuf<u32>,
     /// True nonzero count (padding zeros excluded), recorded at pack
     /// time so lossy dtypes don't blur it.
     nnz: usize,
@@ -77,19 +78,28 @@ impl BcsrMatrix {
             }
             row_ptr.push(col_blk.len() as u32);
         }
-        BcsrMatrix { rows, cols, row_ptr, col_blk, nnz, vals: ValueStore::encode(&vals, dtype) }
+        BcsrMatrix {
+            rows,
+            cols,
+            row_ptr: row_ptr.into(),
+            col_blk: col_blk.into(),
+            nnz,
+            vals: ValueStore::encode(&vals, dtype),
+        }
     }
 
     /// Reassemble from already-packed planes (the checkpoint load path —
-    /// no re-packing), validating structure-plane invariants.
+    /// no re-packing, owned or mapped), validating structure-plane
+    /// invariants.
     pub fn from_parts(
         rows: usize,
         cols: usize,
         nnz: usize,
-        row_ptr: Vec<u32>,
-        col_blk: Vec<u32>,
+        row_ptr: impl Into<PlaneBuf<u32>>,
+        col_blk: impl Into<PlaneBuf<u32>>,
         vals: ValueStore,
     ) -> Result<BcsrMatrix> {
+        let (row_ptr, col_blk) = (row_ptr.into(), col_blk.into());
         ensure!(rows < usize::MAX && row_ptr.len() == rows + 1, "bcsr: row_ptr length");
         ensure!(row_ptr.first() == Some(&0), "bcsr: row_ptr[0] != 0");
         ensure!(row_ptr.windows(2).all(|w| w[0] <= w[1]), "bcsr: row_ptr not monotone");
@@ -287,7 +297,7 @@ mod tests {
         );
         assert_eq!(ok.unwrap(), m);
         // Out-of-range column block must be rejected.
-        let mut bad = m.col_blk.clone();
+        let mut bad = m.col_blk.to_vec();
         if let Some(b) = bad.first_mut() {
             *b = 99;
         }
@@ -311,7 +321,7 @@ mod tests {
         let w = vec![1.0f32; 10];
         let m = BcsrMatrix::from_dense(&w, 1, 10);
         let mut vals = match &m.vals {
-            ValueStore::F32(v) => v.clone(),
+            ValueStore::F32(v) => v.to_vec(),
             _ => unreachable!(),
         };
         *vals.last_mut().unwrap() = 7.0; // padding slot past cols
@@ -321,7 +331,7 @@ mod tests {
             m.nnz(),
             m.row_ptr.clone(),
             m.col_blk.clone(),
-            ValueStore::F32(vals),
+            ValueStore::F32(vals.into()),
         );
         assert!(bad.is_err());
     }

@@ -12,6 +12,7 @@
 //! the nonzeros live in a [`ValueStore`] value plane (f32 / f16 / i8 +
 //! scales), with `row_dot` monomorphized per dtype.
 
+use super::plane::PlaneBuf;
 use super::values::{f16_to_f32, Dtype, I8_GROUP, ValueStore};
 use anyhow::{ensure, Result};
 
@@ -23,10 +24,10 @@ pub struct BitmaskMatrix {
     blocks_per_row: usize,
     /// Occupancy bit `k` of `masks[r * blocks_per_row + b]` covers column
     /// `b * 64 + k`.
-    pub masks: Vec<u64>,
+    pub masks: PlaneBuf<u64>,
     /// Prefix offsets into `vals`, one per block plus a terminator
     /// (`block_off[i+1] - block_off[i] == masks[i].count_ones()`).
-    pub block_off: Vec<u32>,
+    pub block_off: PlaneBuf<u32>,
     pub vals: ValueStore,
 }
 
@@ -63,21 +64,23 @@ impl BitmaskMatrix {
             rows,
             cols,
             blocks_per_row,
-            masks,
-            block_off,
+            masks: masks.into(),
+            block_off: block_off.into(),
             vals: ValueStore::encode(&vals, dtype),
         }
     }
 
     /// Reassemble from already-packed planes (the checkpoint load path —
-    /// no re-packing), validating structure-plane invariants.
+    /// no re-packing, owned or mapped), validating structure-plane
+    /// invariants.
     pub fn from_parts(
         rows: usize,
         cols: usize,
-        masks: Vec<u64>,
-        block_off: Vec<u32>,
+        masks: impl Into<PlaneBuf<u64>>,
+        block_off: impl Into<PlaneBuf<u32>>,
         vals: ValueStore,
     ) -> Result<BitmaskMatrix> {
+        let (masks, block_off) = (masks.into(), block_off.into());
         let blocks_per_row = cols.div_ceil(64).max(1);
         // checked_mul: dims come from an untrusted file, keep the
         // error-not-panic contract even for absurd values.
@@ -278,7 +281,7 @@ mod tests {
             m.vals.clone(),
         );
         assert_eq!(ok.unwrap(), m);
-        let mut bad_masks = m.masks.clone();
+        let mut bad_masks = m.masks.to_vec();
         bad_masks[0] ^= 1; // flip one occupancy bit: popcount now disagrees
         assert!(BitmaskMatrix::from_parts(3, 70, bad_masks, m.block_off, m.vals).is_err());
     }

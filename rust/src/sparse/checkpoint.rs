@@ -5,23 +5,35 @@
 //! reassembles the exact packed matrices **without re-packing** — no
 //! dense reconstruction, no density dispatch, no re-quantization.
 //!
-//! Layout (all integers little-endian; `vec` = u64 count + payload):
+//! Layout (all integers little-endian):
 //!
 //! ```text
-//! "SPSM" · version u32
+//! "SPSM" · version u32     (2 current; 1 still read — see below)
 //! meta    — name string + the 11 dimension fields as u64
 //! head    — packed matrix (format tag + planes)
 //! norm_f  — f32 vec
 //! layers  — u64 count, then per layer:
 //!           norm · in_proj · conv_w(CSR) · conv_b · x_proj · dt_proj ·
 //!           dt_b · a_log · a · d · out_proj
+//!
+//! vec  (v2) = u64 count · zero pad to an 8-byte file offset · payload
+//! vec  (v1) = u64 count · payload                  (strings never pad)
 //! ```
 //!
+//! The v2 padding is what buys the zero-copy load: an `mmap` base is
+//! page-aligned, so an 8-byte-aligned *file* offset is an 8-byte-aligned
+//! *memory* address, and [`SparseModel::load_mmap`] can hand each typed
+//! plane out as a [`PlaneBuf::Mapped`] borrow of the mapping instead of
+//! copying it into a `Vec` (`sparse::plane` holds the aliasing
+//! argument).  v1 files (unpadded) still load through the owned path.
+//!
 //! Load validates the structure-plane invariants through each format's
-//! `from_parts` (offset monotonicity, popcount agreement, index bounds),
-//! so a corrupt file fails with an error instead of a bad model.
+//! `from_parts` (offset monotonicity, popcount agreement, index bounds)
+//! — mapped and owned planes alike — so a corrupt file fails with an
+//! error instead of a bad model.
 
 use super::compile::scan_active_states;
+use super::plane::{Mmap, PlaneBuf, PlaneElem};
 use super::values::{Dtype, I8_GROUP, ValueStore};
 use super::{
     BcsrMatrix, BitmaskMatrix, CsrMatrix, DenseMatrix, Kernel, NmMatrix, Packed, SparseLayer,
@@ -30,16 +42,23 @@ use super::{
 use crate::model::ModelMeta;
 use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 const MAGIC: &[u8; 4] = b"SPSM";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-#[derive(Default)]
 struct Writer {
     buf: Vec<u8>,
+    /// v2 pads every vec payload to an 8-byte file offset; the v1
+    /// serializer (kept for the compat test) writes payloads unpadded.
+    pad: bool,
 }
 
 impl Writer {
+    fn new(pad: bool) -> Writer {
+        Writer { buf: Vec::new(), pad }
+    }
+
     fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
@@ -61,8 +80,35 @@ impl Writer {
         self.buf.extend_from_slice(s.as_bytes());
     }
 
+    /// Zero-pad to the next 8-byte offset (v2 only) — called between a
+    /// vec's count and its payload so every typed plane lands aligned.
+    fn pad8(&mut self) {
+        if self.pad {
+            while self.buf.len() % 8 != 0 {
+                self.buf.push(0);
+            }
+        }
+    }
+
+    /// Bulk little-endian payload write: on LE targets the in-memory
+    /// representation of any [`PlaneElem`] slice *is* the on-disk format,
+    /// so the whole plane goes out as one `extend_from_slice` instead of
+    /// a per-element loop.
+    #[cfg(target_endian = "little")]
+    fn raw<T: PlaneElem>(&mut self, v: &[T]) {
+        // SAFETY: PlaneElem types are padding-free primitives; any `[T]`
+        // reinterprets as initialized bytes.
+        let b =
+            unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) };
+        self.buf.extend_from_slice(b);
+    }
+
     fn f32s(&mut self, v: &[f32]) {
         self.usize(v.len());
+        self.pad8();
+        #[cfg(target_endian = "little")]
+        self.raw(v);
+        #[cfg(not(target_endian = "little"))]
         for &x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
@@ -70,6 +116,10 @@ impl Writer {
 
     fn u16s(&mut self, v: &[u16]) {
         self.usize(v.len());
+        self.pad8();
+        #[cfg(target_endian = "little")]
+        self.raw(v);
+        #[cfg(not(target_endian = "little"))]
         for &x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
@@ -77,6 +127,10 @@ impl Writer {
 
     fn u32s(&mut self, v: &[u32]) {
         self.usize(v.len());
+        self.pad8();
+        #[cfg(target_endian = "little")]
+        self.raw(v);
+        #[cfg(not(target_endian = "little"))]
         for &x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
@@ -84,6 +138,10 @@ impl Writer {
 
     fn u64s(&mut self, v: &[u64]) {
         self.usize(v.len());
+        self.pad8();
+        #[cfg(target_endian = "little")]
+        self.raw(v);
+        #[cfg(not(target_endian = "little"))]
         for &x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
@@ -91,11 +149,16 @@ impl Writer {
 
     fn u8s(&mut self, v: &[u8]) {
         self.usize(v.len());
+        self.pad8();
         self.buf.extend_from_slice(v);
     }
 
     fn i8s(&mut self, v: &[i8]) {
         self.usize(v.len());
+        self.pad8();
+        #[cfg(target_endian = "little")]
+        self.raw(v);
+        #[cfg(not(target_endian = "little"))]
         self.buf.extend(v.iter().map(|&x| x as u8));
     }
 }
@@ -103,9 +166,19 @@ impl Writer {
 struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
+    /// v2 streams pad vec payloads to 8-byte offsets (validated zeros).
+    v2: bool,
+    /// When set (the `load_mmap` path, v2 + little-endian only), typed
+    /// plane reads return [`PlaneBuf::Mapped`] borrows of this mapping
+    /// instead of copying into owned `Vec`s.
+    map: Option<Arc<Mmap>>,
 }
 
 impl<'a> Reader<'a> {
+    fn owned(buf: &'a [u8], v2: bool) -> Reader<'a> {
+        Reader { buf, pos: 0, v2, map: None }
+    }
+
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         ensure!(n <= self.buf.len() - self.pos, "checkpoint truncated");
         let s = &self.buf[self.pos..self.pos + n];
@@ -129,54 +202,98 @@ impl<'a> Reader<'a> {
         Ok(self.u64()? as usize)
     }
 
+    /// Skip (and validate) a v2 alignment pad: the payload that follows
+    /// must start on an 8-byte file offset, and pad bytes must be zero
+    /// so corruption there is caught, not silently skipped.
+    fn align8(&mut self) -> Result<()> {
+        if self.v2 {
+            let pad = (8 - self.pos % 8) % 8;
+            ensure!(self.take(pad)?.iter().all(|&b| b == 0), "nonzero plane padding");
+        }
+        Ok(())
+    }
+
     /// Element count of the next vec, pre-validated against the bytes
     /// actually left (so a corrupt count can't trigger a huge alloc).
+    /// Consumes the alignment pad, leaving `pos` at the payload start.
     fn seq_len(&mut self, elem: usize) -> Result<usize> {
         let n = self.usize()?;
+        self.align8()?;
         let bytes = n.checked_mul(elem).unwrap_or(usize::MAX);
         ensure!(bytes <= self.buf.len() - self.pos, "checkpoint truncated");
         Ok(n)
     }
 
     fn str(&mut self) -> Result<String> {
-        let n = self.seq_len(1)?;
+        // Strings are unpadded in both versions (they are metadata, not
+        // planes — nothing ever maps them).
+        let n = self.usize()?;
+        ensure!(n <= self.buf.len() - self.pos, "checkpoint truncated");
         Ok(std::str::from_utf8(self.take(n)?)?.to_string())
     }
 
+    /// Owned f32 vec (the small per-layer vectors: norms, biases, A, D).
     fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.seq_len(4)?;
         let b = self.take(n * 4)?;
+        #[cfg(target_endian = "little")]
+        {
+            let mut v: Vec<f32> = Vec::with_capacity(n);
+            // SAFETY: the source holds n*4 readable bytes; f32 accepts
+            // any bit pattern; length is set to exactly what was copied.
+            unsafe {
+                std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr() as *mut u8, n * 4);
+                v.set_len(n);
+            }
+            Ok(v)
+        }
+        #[cfg(not(target_endian = "little"))]
         Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
-
-    fn u16s(&mut self) -> Result<Vec<u16>> {
-        let n = self.seq_len(2)?;
-        let b = self.take(n * 2)?;
-        Ok(b.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect())
-    }
-
-    fn u32s(&mut self) -> Result<Vec<u32>> {
-        let n = self.seq_len(4)?;
-        let b = self.take(n * 4)?;
-        Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
-    }
-
-    fn u64s(&mut self) -> Result<Vec<u64>> {
-        let n = self.seq_len(8)?;
-        let b = self.take(n * 8)?;
-        Ok(b.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
-    }
-
-    fn u8s(&mut self) -> Result<Vec<u8>> {
-        let n = self.seq_len(1)?;
-        Ok(self.take(n)?.to_vec())
-    }
-
-    fn i8s(&mut self) -> Result<Vec<i8>> {
-        let n = self.seq_len(1)?;
-        Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
-    }
 }
+
+/// Typed plane readers: mapped borrow when the reader runs in mmap mode,
+/// a bulk LE copy otherwise (per-element decode only on big-endian).
+macro_rules! plane_reader {
+    ($fn:ident, $t:ty, $sz:expr) => {
+        impl<'a> Reader<'a> {
+            fn $fn(&mut self) -> Result<PlaneBuf<$t>> {
+                let n = self.seq_len($sz)?;
+                let off = self.pos;
+                let b = self.take(n * $sz)?;
+                #[cfg(target_endian = "little")]
+                {
+                    if let Some(map) = &self.map {
+                        return PlaneBuf::mapped(map.clone(), off, n);
+                    }
+                    let mut v: Vec<$t> = Vec::with_capacity(n);
+                    // SAFETY: the source holds n*$sz readable bytes;
+                    // PlaneElem types accept any bit pattern; length is
+                    // set to exactly what was copied.
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr() as *mut u8, n * $sz);
+                        v.set_len(n);
+                    }
+                    Ok(v.into())
+                }
+                #[cfg(not(target_endian = "little"))]
+                {
+                    let _ = off;
+                    Ok(b.chunks_exact($sz)
+                        .map(|c| <$t>::from_le_bytes(c.try_into().unwrap()))
+                        .collect::<Vec<$t>>()
+                        .into())
+                }
+            }
+        }
+    };
+}
+plane_reader!(f32_plane, f32, 4);
+plane_reader!(u16_plane, u16, 2);
+plane_reader!(u32_plane, u32, 4);
+plane_reader!(u64_plane, u64, 8);
+plane_reader!(u8_plane, u8, 1);
+plane_reader!(i8_plane, i8, 1);
 
 fn write_store(w: &mut Writer, s: &ValueStore) {
     match s {
@@ -198,11 +315,11 @@ fn write_store(w: &mut Writer, s: &ValueStore) {
 
 fn read_store(r: &mut Reader) -> Result<ValueStore> {
     match r.u8()? {
-        0 => Ok(ValueStore::F32(r.f32s()?)),
-        1 => Ok(ValueStore::F16(r.u16s()?)),
+        0 => Ok(ValueStore::F32(r.f32_plane()?)),
+        1 => Ok(ValueStore::F16(r.u16_plane()?)),
         2 => {
-            let codes = r.i8s()?;
-            let scales = r.f32s()?;
+            let codes = r.i8_plane()?;
+            let scales = r.f32_plane()?;
             ensure!(scales.len() == codes.len().div_ceil(I8_GROUP), "i8 scale plane length");
             Ok(ValueStore::I8 { codes, scales })
         }
@@ -221,8 +338,8 @@ fn write_csr(w: &mut Writer, m: &CsrMatrix) {
 fn read_csr(r: &mut Reader) -> Result<CsrMatrix> {
     let rows = r.usize()?;
     let cols = r.usize()?;
-    let row_ptr = r.u32s()?;
-    let col_idx = r.u32s()?;
+    let row_ptr = r.u32_plane()?;
+    let col_idx = r.u32_plane()?;
     let vals = read_store(r)?;
     CsrMatrix::from_parts(rows, cols, row_ptr, col_idx, vals)
 }
@@ -281,8 +398,8 @@ fn read_packed(r: &mut Reader) -> Result<Packed> {
         2 => {
             let rows = r.usize()?;
             let cols = r.usize()?;
-            let masks = r.u64s()?;
-            let block_off = r.u32s()?;
+            let masks = r.u64_plane()?;
+            let block_off = r.u32_plane()?;
             let vals = read_store(r)?;
             Ok(Packed::Bitmask(BitmaskMatrix::from_parts(rows, cols, masks, block_off, vals)?))
         }
@@ -292,7 +409,7 @@ fn read_packed(r: &mut Reader) -> Result<Packed> {
             let n = r.usize()?;
             let m = r.usize()?;
             let nnz = r.usize()?;
-            let idx = r.u8s()?;
+            let idx = r.u8_plane()?;
             let vals = read_store(r)?;
             Ok(Packed::Nm(NmMatrix::from_parts(rows, cols, n, m, nnz, idx, vals)?))
         }
@@ -300,8 +417,8 @@ fn read_packed(r: &mut Reader) -> Result<Packed> {
             let rows = r.usize()?;
             let cols = r.usize()?;
             let nnz = r.usize()?;
-            let row_ptr = r.u32s()?;
-            let col_blk = r.u32s()?;
+            let row_ptr = r.u32_plane()?;
+            let col_blk = r.u32_plane()?;
             let vals = read_store(r)?;
             Ok(Packed::Bcsr(BcsrMatrix::from_parts(rows, cols, nnz, row_ptr, col_blk, vals)?))
         }
@@ -350,44 +467,84 @@ fn read_meta(r: &mut Reader) -> Result<ModelMeta> {
     })
 }
 
+/// Serialize at an explicit version (2 = padded/current, 1 = the legacy
+/// unpadded layout, kept so the compat test can mint real v1 streams).
+fn serialize(model: &SparseModel, version: u32) -> Vec<u8> {
+    let mut w = Writer::new(version >= 2);
+    w.buf.extend_from_slice(MAGIC);
+    w.u32(version);
+    write_meta(&mut w, &model.meta);
+    write_packed(&mut w, &model.head);
+    w.f32s(&model.norm_f);
+    w.usize(model.layers.len());
+    for l in &model.layers {
+        w.f32s(&l.norm);
+        write_packed(&mut w, &l.in_proj);
+        write_csr(&mut w, &l.conv_w);
+        w.f32s(&l.conv_b);
+        write_packed(&mut w, &l.x_proj);
+        write_packed(&mut w, &l.dt_proj);
+        w.f32s(&l.dt_b);
+        write_packed(&mut w, &l.a_log);
+        w.f32s(&l.a);
+        w.f32s(&l.d);
+        write_packed(&mut w, &l.out_proj);
+    }
+    w.buf
+}
+
 impl SparseModel {
     /// Write the packed model as a versioned flat binary (structure +
     /// value planes as-is — the ROADMAP's "zero-copy checkpoint").
+    /// Writes the v2 layout: every plane payload starts on an 8-byte
+    /// file offset so [`SparseModel::load_mmap`] can borrow it in place.
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
-        let mut w = Writer::default();
-        w.buf.extend_from_slice(MAGIC);
-        w.u32(VERSION);
-        write_meta(&mut w, &self.meta);
-        write_packed(&mut w, &self.head);
-        w.f32s(&self.norm_f);
-        w.usize(self.layers.len());
-        for l in &self.layers {
-            w.f32s(&l.norm);
-            write_packed(&mut w, &l.in_proj);
-            write_csr(&mut w, &l.conv_w);
-            w.f32s(&l.conv_b);
-            write_packed(&mut w, &l.x_proj);
-            write_packed(&mut w, &l.dt_proj);
-            w.f32s(&l.dt_b);
-            write_packed(&mut w, &l.a_log);
-            w.f32s(&l.a);
-            w.f32s(&l.d);
-            write_packed(&mut w, &l.out_proj);
-        }
         let path = path.as_ref();
-        std::fs::write(path, &w.buf)
+        std::fs::write(path, serialize(self, VERSION))
             .with_context(|| format!("writing checkpoint {}", path.display()))?;
         Ok(())
     }
 
     /// Load a checkpoint written by [`SparseModel::save`], reassembling
-    /// the packed planes directly (no re-packing).
+    /// the packed planes directly (no re-packing).  Every plane is
+    /// copied into owned memory; see [`SparseModel::load_mmap`] for the
+    /// zero-copy variant.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<SparseModel> {
         let path = path.as_ref();
         let bytes = std::fs::read(path)
             .with_context(|| format!("reading checkpoint {}", path.display()))?;
         SparseModel::load_bytes(&bytes)
             .with_context(|| format!("loading checkpoint {}", path.display()))
+    }
+
+    /// Zero-copy load: `mmap` the checkpoint read-only and hand every
+    /// typed plane out as a borrow of the mapping ([`PlaneBuf::Mapped`])
+    /// instead of copying it — the kernel pages weights in lazily and N
+    /// processes share one physical copy.  All `from_parts` validation
+    /// still runs against the mapped planes, and the loaded model
+    /// compares equal to [`SparseModel::load`] of the same file.
+    ///
+    /// Falls back to the owned path (still one read, no re-packing) for
+    /// v1 files (unpadded planes can't be reinterpreted in place) and on
+    /// big-endian targets (the on-disk payload is little-endian).
+    ///
+    /// Caveat inherent to mmap'd IO: truncating or rewriting the file
+    /// while a model borrows it can deliver `SIGBUS` on a later page
+    /// fault — treat checkpoint files as immutable while serving.
+    pub fn load_mmap<P: AsRef<Path>>(path: P) -> Result<SparseModel> {
+        let path = path.as_ref();
+        let map = Arc::new(Mmap::open(path)?);
+        let mappable = cfg!(target_endian = "little")
+            && map.len() >= 8
+            && &map[..4] == MAGIC
+            && u32::from_le_bytes(map[4..8].try_into().unwrap()) == VERSION;
+        let res = if mappable {
+            SparseModel::load_bytes_impl(&map, None, Some(map.clone()))
+        } else {
+            // Bad magic/version surfaces the ordinary typed error here.
+            SparseModel::load_bytes(&map)
+        };
+        res.with_context(|| format!("loading checkpoint {}", path.display()))
     }
 
     /// Deserialize a checkpoint from memory.  Hardened against hostile
@@ -397,7 +554,7 @@ impl SparseModel {
     /// ([`Reader::seq_len`] pre-validates every count).  Pinned by the
     /// corruption-fuzzing test below.
     pub fn load_bytes(bytes: &[u8]) -> Result<SparseModel> {
-        SparseModel::load_bytes_impl(bytes, None)
+        SparseModel::load_bytes_impl(bytes, None, None)
     }
 
     /// [`SparseModel::load_bytes`] with
@@ -408,12 +565,13 @@ impl SparseModel {
         bytes: &[u8],
         plan: &crate::engine::faultx::FaultPlan,
     ) -> Result<SparseModel> {
-        SparseModel::load_bytes_impl(bytes, Some(plan))
+        SparseModel::load_bytes_impl(bytes, Some(plan), None)
     }
 
     fn load_bytes_impl(
         bytes: &[u8],
         faults: Option<&crate::engine::faultx::FaultPlan>,
+        map: Option<Arc<Mmap>>,
     ) -> Result<SparseModel> {
         use crate::engine::faultx::Site;
         let trip = |what: &str| -> Result<()> {
@@ -425,10 +583,16 @@ impl SparseModel {
             Ok(())
         };
         trip("header")?;
-        let mut r = Reader { buf: bytes, pos: 0 };
+        let mut r = Reader::owned(bytes, false);
         ensure!(r.take(4)? == MAGIC.as_slice(), "not a SparseModel checkpoint (bad magic)");
         let version = r.u32()?;
-        ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        ensure!(version == 1 || version == VERSION, "unsupported checkpoint version {version}");
+        r.v2 = version == VERSION;
+        // Mapped planes need the v2 alignment guarantee; a v1 stream
+        // keeps the owned path even if a mapping was offered.
+        if r.v2 {
+            r.map = map;
+        }
         let meta = read_meta(&mut r)?;
         ensure!(
             meta.n_layer > 0
@@ -557,11 +721,8 @@ mod tests {
         std::env::temp_dir().join(format!("sparsessm-ckpt-{}-{tag}.spsm", std::process::id()))
     }
 
-    #[test]
-    fn save_load_roundtrips_every_policy() {
-        let mut p = toy_flat_params_random(4, 7);
-        magnitude_prune_all(&mut p, 0.5).unwrap();
-        let policies = [
+    fn policies() -> [PackPolicy; 7] {
+        [
             PackPolicy::auto(),
             PackPolicy::dense(),
             PackPolicy::of(Format::Csr),
@@ -569,8 +730,14 @@ mod tests {
             PackPolicy::of(Format::Bitmask).with_dtype(Dtype::I8),
             PackPolicy::of(Format::Bcsr),
             PackPolicy::of(Format::Bcsr).with_dtype(Dtype::I8),
-        ];
-        for (i, policy) in policies.iter().enumerate() {
+        ]
+    }
+
+    #[test]
+    fn save_load_roundtrips_every_policy() {
+        let mut p = toy_flat_params_random(4, 7);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        for (i, policy) in policies().iter().enumerate() {
             let model = SparseModel::compile(&p, policy).unwrap();
             let path = tmp_path(&format!("policy{i}"));
             model.save(&path).unwrap();
@@ -580,6 +747,109 @@ mod tests {
             assert_eq!(loaded.memory_bytes(), model.memory_bytes());
             assert_eq!(loaded.format_summary(), model.format_summary());
         }
+    }
+
+    #[test]
+    fn load_mmap_equals_owned_load_every_policy() {
+        let mut p = toy_flat_params_random(4, 12);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        for (i, policy) in policies().iter().enumerate() {
+            let model = SparseModel::compile(&p, policy).unwrap();
+            let path = tmp_path(&format!("mmap{i}"));
+            model.save(&path).unwrap();
+            let owned = SparseModel::load(&path).unwrap();
+            let mapped = SparseModel::load_mmap(&path).unwrap();
+            std::fs::remove_file(&path).unwrap();
+            assert_eq!(mapped, owned, "policy {i}: mapped load drifted from owned");
+            assert_eq!(mapped, model, "policy {i}: mapped load drifted from source");
+            assert_eq!(mapped.memory_bytes(), owned.memory_bytes());
+            // On LE unix the planes must actually borrow the mapping
+            // (elsewhere load_mmap legitimately degrades to a copy).
+            #[cfg(all(unix, target_endian = "little"))]
+            {
+                match mapped.head.as_ref() {
+                    Packed::Dense(m) => {
+                        assert!(m.vals.is_mapped(), "policy {i}: head plane not mapped")
+                    }
+                    other => panic!("head must be dense, got {:?}", other.format()),
+                }
+                assert!(
+                    mapped.layers.iter().all(|l| l.conv_w.row_ptr.is_mapped()),
+                    "policy {i}: conv_w structure plane not mapped"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn v1_checkpoints_still_load() {
+        let mut p = toy_flat_params_random(4, 13);
+        magnitude_prune_all(&mut p, 0.5).unwrap();
+        for (i, policy) in policies().iter().enumerate() {
+            let model = SparseModel::compile(&p, policy).unwrap();
+            let v1 = serialize(&model, 1);
+            let loaded = SparseModel::load_bytes(&v1).unwrap();
+            assert_eq!(loaded, model, "policy {i}: v1 stream drifted");
+            // A v1 stream has no alignment guarantee — load_mmap of a
+            // v1 file must take the owned fallback and still agree.
+            let path = tmp_path(&format!("v1-{i}"));
+            std::fs::write(&path, &v1).unwrap();
+            let mapped = SparseModel::load_mmap(&path).unwrap();
+            std::fs::remove_file(&path).unwrap();
+            assert_eq!(mapped, model, "policy {i}: v1 mmap fallback drifted");
+        }
+    }
+
+    #[test]
+    fn v2_planes_land_on_aligned_offsets_and_padding_is_checked() {
+        // Unit-level pin of the padding rule: a 3-byte string leaves the
+        // cursor misaligned, so the next vec's payload must be preceded
+        // by pad zeros up to the 8-byte boundary.
+        let mut w = Writer::new(true);
+        w.str("abc"); // 8 (len) + 3 = 11 bytes
+        w.f32s(&[1.0, 2.0]); // 11+8 = 19 → 5 pad bytes → payload at 24
+        assert_eq!(w.buf.len(), 19 + 5 + 8);
+        assert!(w.buf[19..24].iter().all(|&b| b == 0));
+        let mut r = Reader::owned(&w.buf, true);
+        assert_eq!(r.str().unwrap(), "abc");
+        assert_eq!(r.f32s().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(r.pos, w.buf.len());
+        // A nonzero pad byte is corruption, not slack to ignore.
+        let mut bad = w.buf.clone();
+        bad[20] = 7;
+        let mut r = Reader::owned(&bad, true);
+        r.str().unwrap();
+        let err = r.f32s().unwrap_err().to_string();
+        assert!(err.contains("padding"), "{err}");
+    }
+
+    #[test]
+    fn mmap_load_rejects_corrupt_structure_planes() {
+        let mut p = toy_flat_params_random(4, 14);
+        magnitude_prune_all(&mut p, 0.9).unwrap();
+        let model = SparseModel::compile(&p, &PackPolicy::of(Format::Csr)).unwrap();
+        let path = tmp_path("mmap-corrupt");
+        model.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Flip every byte position until one load fails — from_parts
+        // must reject through the mapped path exactly as the owned path
+        // does (same validation, different backing).
+        let mut rejected = 0usize;
+        for at in (8..bytes.len()).step_by(97) {
+            let mut corrupt = bytes.clone();
+            corrupt[at] ^= 0x80;
+            std::fs::write(&path, &corrupt).unwrap();
+            let owned = SparseModel::load_bytes(&corrupt);
+            let mapped = SparseModel::load_mmap(&path);
+            assert_eq!(owned.is_err(), mapped.is_err(), "divergence at byte {at}");
+            if mapped.is_err() {
+                rejected += 1;
+            } else {
+                assert_eq!(mapped.unwrap(), owned.unwrap(), "byte {at}");
+            }
+        }
+        assert!(rejected > 0, "corruption sweep never hit a validated plane");
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]
@@ -593,11 +863,15 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = SparseModel::load(&path).unwrap_err().to_string();
         assert!(err.contains("magic"), "{err}");
+        let err = SparseModel::load_mmap(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
         bytes[0] = b'S';
         bytes[4] = 99; // version
         std::fs::write(&path, &bytes).unwrap();
         let err = SparseModel::load(&path).unwrap_err().to_string();
         assert!(err.contains("version"), "{err}");
+        let err = SparseModel::load_mmap(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
         std::fs::remove_file(&path).unwrap();
     }
 
@@ -610,6 +884,7 @@ mod tests {
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
         assert!(SparseModel::load(&path).is_err());
+        assert!(SparseModel::load_mmap(&path).is_err());
         std::fs::remove_file(&path).unwrap();
     }
 
@@ -639,9 +914,10 @@ mod tests {
         }
         // Seeded random byte flips: a flip may land in a value plane
         // (still a structurally valid model) or anywhere in the
-        // structure (must be a typed Err) — either way, never a panic
-        // and never an absurd allocation.  Surviving models must still
-        // hold the shape invariants the serving kernels index by.
+        // structure or pad bytes (must be a typed Err) — either way,
+        // never a panic and never an absurd allocation.  Surviving
+        // models must still hold the shape invariants the serving
+        // kernels index by.
         for _ in 0..256 {
             let mut corrupt = bytes.clone();
             let at = rng.below(corrupt.len());
@@ -681,9 +957,9 @@ mod tests {
             ValueStore::encode(&[1.0, -2.0, 0.0], Dtype::F16),
             ValueStore::encode(&[1.0, -2.0, 0.0], Dtype::I8),
         ] {
-            let mut w = Writer::default();
+            let mut w = Writer::new(true);
             write_store(&mut w, &store);
-            let mut r = Reader { buf: &w.buf, pos: 0 };
+            let mut r = Reader::owned(&w.buf, true);
             assert_eq!(read_store(&mut r).unwrap(), store);
             assert_eq!(r.pos, w.buf.len());
         }

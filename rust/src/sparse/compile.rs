@@ -317,6 +317,21 @@ impl SparseModel {
         total
     }
 
+    /// True when any plane of the model borrows from an mmap'd
+    /// checkpoint ([`SparseModel::load_mmap`]) instead of owning its
+    /// buffer.  Owned loads and freshly compiled models report `false`.
+    pub fn is_mapped(&self) -> bool {
+        self.head.is_mapped()
+            || self.layers.iter().any(|l| {
+                l.conv_w.row_ptr.is_mapped()
+                    || l.conv_w.col_idx.is_mapped()
+                    || l.conv_w.vals.is_mapped()
+                    || [&l.in_proj, &l.x_proj, &l.dt_proj, &l.a_log, &l.out_proj]
+                        .iter()
+                        .any(|p| p.is_mapped())
+            })
+    }
+
     /// What the same parameters cost fully dense.
     pub fn dense_memory_bytes(&self) -> usize {
         let meta = &self.meta;

@@ -10,6 +10,7 @@
 //! the nonzeros live in a [`ValueStore`] value plane (f32 / f16 / i8 +
 //! scales), with `row_dot` monomorphized per dtype.
 
+use super::plane::PlaneBuf;
 use super::values::{f16_to_f32, Dtype, I8_GROUP, ValueStore};
 use anyhow::{ensure, Result};
 
@@ -19,8 +20,8 @@ pub struct CsrMatrix {
     pub rows: usize,
     pub cols: usize,
     /// `row_ptr[r]..row_ptr[r+1]` spans row `r` in `col_idx`/`vals`.
-    pub row_ptr: Vec<u32>,
-    pub col_idx: Vec<u32>,
+    pub row_ptr: PlaneBuf<u32>,
+    pub col_idx: PlaneBuf<u32>,
     pub vals: ValueStore,
 }
 
@@ -46,18 +47,26 @@ impl CsrMatrix {
             }
             row_ptr.push(vals.len() as u32);
         }
-        CsrMatrix { rows, cols, row_ptr, col_idx, vals: ValueStore::encode(&vals, dtype) }
+        CsrMatrix {
+            rows,
+            cols,
+            row_ptr: row_ptr.into(),
+            col_idx: col_idx.into(),
+            vals: ValueStore::encode(&vals, dtype),
+        }
     }
 
     /// Reassemble from already-packed planes (the checkpoint load path —
-    /// no re-packing), validating structure-plane invariants.
+    /// no re-packing, owned or mapped), validating structure-plane
+    /// invariants.
     pub fn from_parts(
         rows: usize,
         cols: usize,
-        row_ptr: Vec<u32>,
-        col_idx: Vec<u32>,
+        row_ptr: impl Into<PlaneBuf<u32>>,
+        col_idx: impl Into<PlaneBuf<u32>>,
         vals: ValueStore,
     ) -> Result<CsrMatrix> {
+        let (row_ptr, col_idx) = (row_ptr.into(), col_idx.into());
         ensure!(rows < usize::MAX && row_ptr.len() == rows + 1, "csr: row_ptr length");
         ensure!(row_ptr.first() == Some(&0), "csr: row_ptr[0] != 0");
         ensure!(row_ptr.windows(2).all(|w| w[0] <= w[1]), "csr: row_ptr not monotone");

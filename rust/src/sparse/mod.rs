@@ -15,6 +15,9 @@
 //! * [`bcsr`]     — blocked CSR (1×8 column blocks stored whole): the
 //!                  wider-stripe format whose inner loop needs no
 //!                  gather; wins when nonzeros cluster into runs.
+//! * [`plane`]    — the plane backing layer: [`PlaneBuf`] lets every
+//!                  structure/value plane borrow from an [`Mmap`]-held
+//!                  checkpoint mapping instead of owning a `Vec`.
 //! * [`values`]   — the value planes: every format stores its nonzeros
 //!                  in a [`ValueStore`] (f32 / f16 / i8+scales), split
 //!                  from the dtype-independent structure planes.
@@ -47,6 +50,7 @@ pub mod csr;
 pub mod decode;
 pub mod kernels;
 pub mod nm;
+pub mod plane;
 pub mod testutil;
 pub mod values;
 
@@ -56,6 +60,7 @@ pub use compile::{PackPolicy, SparseLayer, SparseModel};
 pub use csr::CsrMatrix;
 pub use kernels::Kernel;
 pub use nm::NmMatrix;
+pub use plane::{Mmap, PlaneBuf};
 pub use values::{Dtype, ValueStore};
 
 use crate::threadx;
@@ -330,6 +335,24 @@ impl Packed {
             Packed::Bitmask(m) => m.memory_bytes(),
             Packed::Nm(m) => m.memory_bytes(),
             Packed::Bcsr(m) => m.memory_bytes(),
+        }
+    }
+
+    /// True when any structure or value plane borrows from an mmap'd
+    /// checkpoint ([`PlaneBuf::Mapped`]) instead of owning its buffer.
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            Packed::Dense(m) => m.vals.is_mapped(),
+            Packed::Csr(m) => {
+                m.row_ptr.is_mapped() || m.col_idx.is_mapped() || m.vals.is_mapped()
+            }
+            Packed::Bitmask(m) => {
+                m.masks.is_mapped() || m.block_off.is_mapped() || m.vals.is_mapped()
+            }
+            Packed::Nm(m) => m.idx.is_mapped() || m.vals.is_mapped(),
+            Packed::Bcsr(m) => {
+                m.row_ptr.is_mapped() || m.col_blk.is_mapped() || m.vals.is_mapped()
+            }
         }
     }
 

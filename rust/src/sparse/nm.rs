@@ -17,6 +17,7 @@
 //! plane (f32 / f16 / i8 + scales), with `row_dot` monomorphized per
 //! dtype.  Padding slots encode exact `0.0`, which every dtype preserves.
 
+use super::plane::PlaneBuf;
 use super::values::{f16_to_f32, Dtype, I8_GROUP, ValueStore};
 use anyhow::{ensure, Result};
 
@@ -36,7 +37,7 @@ pub struct NmMatrix {
     /// `rows * (cols/m) * keep` packed values (padding slots are `0.0`).
     pub vals: ValueStore,
     /// In-group column index of each packed value (`< m`, fits `u8`).
-    pub idx: Vec<u8>,
+    pub idx: PlaneBuf<u8>,
 }
 
 impl NmMatrix {
@@ -94,20 +95,31 @@ impl NmMatrix {
                 }
             }
         }
-        Some(NmMatrix { rows, cols, n, m, keep, nnz, vals: ValueStore::encode(&vals, dtype), idx })
+        Some(NmMatrix {
+            rows,
+            cols,
+            n,
+            m,
+            keep,
+            nnz,
+            vals: ValueStore::encode(&vals, dtype),
+            idx: idx.into(),
+        })
     }
 
     /// Reassemble from already-packed planes (the checkpoint load path —
-    /// no re-packing), validating structure-plane invariants.
+    /// no re-packing, owned or mapped), validating structure-plane
+    /// invariants.
     pub fn from_parts(
         rows: usize,
         cols: usize,
         n: usize,
         m: usize,
         nnz: usize,
-        idx: Vec<u8>,
+        idx: impl Into<PlaneBuf<u8>>,
         vals: ValueStore,
     ) -> Result<NmMatrix> {
+        let idx = idx.into();
         ensure!(n < m && m > 0 && m <= 256, "nm: bad pattern {n}:{m}");
         ensure!(cols > 0 && cols % m == 0, "nm: cols not divisible by m");
         let keep = m - n;

@@ -1,0 +1,368 @@
+//! Plane backing storage: every structure plane (row offsets, occupancy
+//! bitmasks, N:M indices) and value plane (f32 / f16 / i8 + scales) is a
+//! [`PlaneBuf`] — either an owned `Vec` (the compile/pack path and v1
+//! checkpoints) or a borrowed range of an `Arc`-held read-only file
+//! mapping (the v2 `SparseModel::load_mmap` path, DESIGN.md §18).
+//!
+//! The mapped backing is what makes model load near-instant and lets N
+//! worker processes share one physical copy of the weights: the kernel
+//! pages weight bytes in lazily and keeps them in the shared page cache.
+//!
+//! ## Aliasing / safety argument
+//!
+//! A `Mapped` plane reinterprets `map[off .. off + len·size_of::<T>()]`
+//! as `&[T]`.  That is sound because:
+//!
+//! * the mapping is `PROT_READ`/`MAP_PRIVATE` and never written through —
+//!   no mutable aliases exist anywhere in the process;
+//! * the `Arc<Mmap>` keeps the pages mapped for as long as any plane
+//!   borrows them (`munmap` runs only in the last `Drop`);
+//! * `off` is validated against `align_of::<T>()` and the mapping length
+//!   at construction ([`PlaneBuf::mapped`] returns `Err`, never UB, on a
+//!   corrupt/misaligned offset — the v2 writer 8-byte-aligns every plane
+//!   payload and mmap bases are page-aligned, so file offset alignment
+//!   equals memory alignment);
+//! * every [`PlaneElem`] type is `Copy`, has no padding, no invalid bit
+//!   patterns, and is stored little-endian on disk — the reinterpreting
+//!   constructor is compiled only on little-endian targets (big-endian
+//!   falls back to the owned copy path).
+//!
+//! Truncating the checkpoint file while it is mapped is the one hazard
+//! an mmap consumer cannot validate away (`SIGBUS` on a fault past EOF);
+//! that is inherent to mmap'd IO and documented on
+//! [`SparseModel::load_mmap`](super::SparseModel::load_mmap).
+
+use anyhow::{ensure, Context, Result};
+use std::ops::Deref;
+use std::path::Path;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------
+// Mmap: a read-only file mapping (raw mmap/munmap syscalls on unix — the
+// offline vendor set has no libc/memmap crate; an owned read elsewhere).
+// ---------------------------------------------------------------------
+
+/// Read-only mapping of an entire file.  On unix this is a real
+/// `mmap(PROT_READ, MAP_PRIVATE)`; on other platforms it degrades to an
+/// owned read with the same API (correct, just not zero-copy).
+pub struct Mmap {
+    #[cfg(unix)]
+    ptr: *mut u8,
+    #[cfg(unix)]
+    len: usize,
+    #[cfg(not(unix))]
+    buf: Vec<u8>,
+}
+
+// SAFETY: the mapping is read-only for its entire lifetime; shared
+// references to immutable memory are Send + Sync.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+#[cfg(unix)]
+mod sys {
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+}
+
+impl Mmap {
+    /// Map `path` read-only in full.
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Mmap> {
+        let path = path.as_ref();
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = std::fs::File::open(path)
+                .with_context(|| format!("opening {} for mmap", path.display()))?;
+            let len = file.metadata()?.len() as usize;
+            ensure!(len > 0, "cannot mmap empty file {}", path.display());
+            // SAFETY: fd is valid for the call; a MAP_FAILED return is
+            // checked below; the mapping is released in Drop.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            ensure!(ptr as usize != usize::MAX, "mmap({}) failed", path.display());
+            Ok(Mmap { ptr, len })
+        }
+        #[cfg(not(unix))]
+        {
+            let buf = std::fs::read(path)
+                .with_context(|| format!("reading {} (mmap fallback)", path.display()))?;
+            ensure!(!buf.is_empty(), "cannot map empty file {}", path.display());
+            Ok(Mmap { buf })
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        #[cfg(unix)]
+        {
+            self.len
+        }
+        #[cfg(not(unix))]
+        {
+            self.buf.len()
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        #[cfg(unix)]
+        // SAFETY: ptr/len describe a live PROT_READ mapping (unmapped
+        // only in Drop), and u8 has no alignment or validity demands.
+        unsafe {
+            std::slice::from_raw_parts(self.ptr, self.len)
+        }
+        #[cfg(not(unix))]
+        &self.buf
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len came from a successful mmap and are unmapped
+        // exactly once.
+        unsafe {
+            let _ = sys::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mmap({} bytes)", self.len())
+    }
+}
+
+// ---------------------------------------------------------------------
+// PlaneElem: the closed set of element types planes may store.
+// ---------------------------------------------------------------------
+
+mod sealed {
+    pub trait Sealed {}
+}
+
+/// Element types a [`PlaneBuf`] may store.
+///
+/// # Safety
+///
+/// Implementors must be `Copy`, have no padding bytes, no invalid bit
+/// patterns, and `align_of` ≤ 8 (the v2 checkpoint plane alignment) —
+/// i.e. any properly-aligned byte range reinterprets as a valid `[T]`.
+pub unsafe trait PlaneElem: sealed::Sealed + Copy + Send + Sync + 'static {}
+
+macro_rules! plane_elem {
+    ($($t:ty),*) => {$(
+        impl sealed::Sealed for $t {}
+        // SAFETY: primitive scalar — no padding, every bit pattern valid.
+        unsafe impl PlaneElem for $t {}
+    )*};
+}
+plane_elem!(u8, i8, u16, u32, u64, f32);
+
+// ---------------------------------------------------------------------
+// PlaneBuf: Owned(Vec) | Mapped{Arc<Mmap>, byte range}.
+// ---------------------------------------------------------------------
+
+/// Backing storage of one plane: an owned `Vec<T>` or a borrowed range
+/// of a shared read-only file mapping.  Everything downstream reads it
+/// through `Deref<Target = [T]>`, so kernels are backing-agnostic.
+#[derive(Clone)]
+pub enum PlaneBuf<T: PlaneElem> {
+    Owned(Vec<T>),
+    Mapped {
+        map: Arc<Mmap>,
+        /// Byte offset of the first element inside the mapping.
+        off: usize,
+        /// Element count.
+        len: usize,
+    },
+}
+
+impl<T: PlaneElem> PlaneBuf<T> {
+    /// Borrow `len` elements at byte offset `off` of `map`.  Validates
+    /// alignment and bounds — a corrupt or misaligned plane offset is an
+    /// `Err`, never UB.  Compiled only on little-endian targets, where
+    /// the on-disk little-endian payload reinterprets directly.
+    #[cfg(target_endian = "little")]
+    pub fn mapped(map: Arc<Mmap>, off: usize, len: usize) -> Result<PlaneBuf<T>> {
+        let bytes = len.checked_mul(std::mem::size_of::<T>()).unwrap_or(usize::MAX);
+        ensure!(
+            off.checked_add(bytes).is_some_and(|end| end <= map.len()),
+            "mapped plane range {off}+{bytes} outside {}-byte mapping",
+            map.len()
+        );
+        ensure!(
+            off % std::mem::align_of::<T>() == 0,
+            "mapped plane offset {off} misaligned for {}-byte elements",
+            std::mem::size_of::<T>()
+        );
+        // The mmap base is page-aligned, so the file offset's alignment
+        // is the memory address's alignment.
+        debug_assert_eq!((map.as_ptr() as usize) % std::mem::align_of::<T>(), 0);
+        Ok(PlaneBuf::Mapped { map, off, len })
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            PlaneBuf::Owned(v) => v.len(),
+            PlaneBuf::Mapped { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when this plane borrows from a file mapping.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, PlaneBuf::Mapped { .. })
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        self
+    }
+}
+
+impl<T: PlaneElem> Deref for PlaneBuf<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        match self {
+            PlaneBuf::Owned(v) => v,
+            PlaneBuf::Mapped { map, off, len } => {
+                // SAFETY: range and alignment were validated in
+                // `mapped`; the Arc keeps the read-only mapping alive;
+                // PlaneElem types accept any bit pattern.
+                unsafe { std::slice::from_raw_parts(map.as_ptr().add(*off) as *const T, *len) }
+            }
+        }
+    }
+}
+
+impl<T: PlaneElem> From<Vec<T>> for PlaneBuf<T> {
+    fn from(v: Vec<T>) -> PlaneBuf<T> {
+        PlaneBuf::Owned(v)
+    }
+}
+
+impl<T: PlaneElem> Default for PlaneBuf<T> {
+    fn default() -> PlaneBuf<T> {
+        PlaneBuf::Owned(Vec::new())
+    }
+}
+
+/// Content equality, backing-agnostic: a mapped plane equals an owned
+/// plane holding the same elements (this is what makes
+/// `load_mmap(..)? == load(..)?` hold by construction).
+impl<T: PlaneElem + PartialEq> PartialEq for PlaneBuf<T> {
+    fn eq(&self, other: &PlaneBuf<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: PlaneElem + PartialEq> PartialEq<Vec<T>> for PlaneBuf<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: PlaneElem + PartialEq> PartialEq<PlaneBuf<T>> for Vec<T> {
+    fn eq(&self, other: &PlaneBuf<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: PlaneElem + std::fmt::Debug> std::fmt::Debug for PlaneBuf<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlaneBuf::Owned(v) => write!(f, "Owned{v:?}"),
+            PlaneBuf::Mapped { off, .. } => write!(f, "Mapped{{off: {off}, {:?}}}", &self[..]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_roundtrip_and_eq() {
+        let p: PlaneBuf<u32> = vec![1u32, 2, 3].into();
+        assert_eq!(p.len(), 3);
+        assert!(!p.is_mapped());
+        assert_eq!(p[1], 2);
+        assert_eq!(&p[1..], &[2, 3]);
+        assert_eq!(p, vec![1u32, 2, 3]);
+        assert_eq!(p.to_vec(), vec![1u32, 2, 3]);
+        let q = p.clone();
+        assert_eq!(p, q);
+    }
+
+    #[cfg(all(unix, target_endian = "little"))]
+    #[test]
+    fn mapped_matches_owned_and_rejects_misalignment() {
+        let path = std::env::temp_dir()
+            .join(format!("sparsessm-plane-{}.bin", std::process::id()));
+        // 4 bytes of header junk, then 3 u32 at offset 4, one u8 tail.
+        let mut bytes = vec![0xAAu8, 0xBB, 0xCC, 0xDD];
+        for v in [7u32, 8, 9] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.push(0x5A);
+        std::fs::write(&path, &bytes).unwrap();
+        let map = Arc::new(Mmap::open(&path).unwrap());
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(&map[..4], &[0xAA, 0xBB, 0xCC, 0xDD]);
+
+        let p: PlaneBuf<u32> = PlaneBuf::mapped(map.clone(), 4, 3).unwrap();
+        assert!(p.is_mapped());
+        assert_eq!(p, vec![7u32, 8, 9]);
+        let cheap = p.clone(); // Arc clone, not a copy of the bytes
+        assert_eq!(cheap, p);
+
+        // Misaligned offset: typed Err, never UB.
+        assert!(PlaneBuf::<u32>::mapped(map.clone(), 5, 2).is_err());
+        // Out-of-bounds range: typed Err.
+        assert!(PlaneBuf::<u32>::mapped(map.clone(), 4, 1000).is_err());
+        assert!(PlaneBuf::<u32>::mapped(map.clone(), usize::MAX - 2, 1).is_err());
+        // u8 planes have no alignment demands.
+        let tail: PlaneBuf<u8> = PlaneBuf::mapped(map.clone(), bytes.len() - 1, 1).unwrap();
+        assert_eq!(tail, vec![0x5Au8]);
+        // The mapping outlives drops of individual planes.
+        drop(p);
+        drop(cheap);
+        assert_eq!(tail[0], 0x5A);
+    }
+
+    #[test]
+    fn mmap_open_missing_file_errors() {
+        assert!(Mmap::open("/nonexistent/sparsessm-plane-test").is_err());
+    }
+}

@@ -25,6 +25,8 @@
 //! (see the `row_dot_with` helpers), so the f32 fast path compiles to
 //! exactly the direct-indexing loop it was before the split.
 
+use super::plane::PlaneBuf;
+
 /// Packed values per i8 scale group.
 pub const I8_GROUP: usize = 64;
 
@@ -70,23 +72,28 @@ impl Dtype {
 }
 
 /// The value plane of one packed matrix: the nonzeros in packing order,
-/// stored at one of the three dtypes.
+/// stored at one of the three dtypes.  Each plane is a [`PlaneBuf`]:
+/// owned on the compile/pack path, or borrowed zero-copy from a
+/// checkpoint mapping on the `load_mmap` path — equality compares
+/// contents, so the two backings of the same model compare `==`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ValueStore {
-    F32(Vec<f32>),
+    F32(PlaneBuf<f32>),
     /// IEEE-754 binary16 bits.
-    F16(Vec<u16>),
+    F16(PlaneBuf<u16>),
     /// Absmax-quantized codes plus one f32 scale per [`I8_GROUP`]
     /// consecutive values (`scales[k / I8_GROUP]` decodes `codes[k]`).
-    I8 { codes: Vec<i8>, scales: Vec<f32> },
+    I8 { codes: PlaneBuf<i8>, scales: PlaneBuf<f32> },
 }
 
 impl ValueStore {
     /// Encode a packed f32 value stream at `dtype`.
     pub fn encode(vals: &[f32], dtype: Dtype) -> ValueStore {
         match dtype {
-            Dtype::F32 => ValueStore::F32(vals.to_vec()),
-            Dtype::F16 => ValueStore::F16(vals.iter().map(|&v| f32_to_f16(v)).collect()),
+            Dtype::F32 => ValueStore::F32(vals.to_vec().into()),
+            Dtype::F16 => {
+                ValueStore::F16(vals.iter().map(|&v| f32_to_f16(v)).collect::<Vec<_>>().into())
+            }
             Dtype::I8 => {
                 let mut codes = Vec::with_capacity(vals.len());
                 let mut scales = Vec::with_capacity(vals.len().div_ceil(I8_GROUP));
@@ -102,8 +109,17 @@ impl ValueStore {
                         codes.resize(codes.len() + group.len(), 0);
                     }
                 }
-                ValueStore::I8 { codes, scales }
+                ValueStore::I8 { codes: codes.into(), scales: scales.into() }
             }
+        }
+    }
+
+    /// True when this plane borrows from a checkpoint mapping.
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            ValueStore::F32(v) => v.is_mapped(),
+            ValueStore::F16(v) => v.is_mapped(),
+            ValueStore::I8 { codes, .. } => codes.is_mapped(),
         }
     }
 
@@ -142,7 +158,7 @@ impl ValueStore {
     /// Decode the whole plane back to f32 (lossless only for `F32`).
     pub fn to_f32(&self) -> Vec<f32> {
         match self {
-            ValueStore::F32(v) => v.clone(),
+            ValueStore::F32(v) => v.to_vec(),
             ValueStore::F16(v) => v.iter().map(|&h| f16_to_f32(h)).collect(),
             ValueStore::I8 { codes, scales } => codes
                 .iter()
@@ -156,7 +172,7 @@ impl ValueStore {
     /// slice — tied head rows, conv taps — require this dtype).
     pub fn as_f32(&self) -> Option<&[f32]> {
         match self {
-            ValueStore::F32(v) => Some(v),
+            ValueStore::F32(v) => Some(&v[..]),
             _ => None,
         }
     }

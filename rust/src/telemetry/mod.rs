@@ -125,6 +125,12 @@ pub struct Registry {
     /// Tokens replayed through both models after a rollback.
     pub spec_replayed_tokens: AtomicU64,
 
+    /// Parallel jobs dispatched through the `threadx` worker pool.
+    pub pool_jobs: AtomicU64,
+    /// Worker wakeups across those jobs (≤ jobs × workers; lower means
+    /// workers found the queue already drained).
+    pub pool_wakes: AtomicU64,
+
     stages: Vec<StageCell>,
 }
 
@@ -166,6 +172,8 @@ impl Registry {
             spec_accepted: AtomicU64::new(0),
             spec_rejected_rounds: AtomicU64::new(0),
             spec_replayed_tokens: AtomicU64::new(0),
+            pool_jobs: AtomicU64::new(0),
+            pool_wakes: AtomicU64::new(0),
             stages: (0..Phase::ALL.len() * Stage::ALL.len())
                 .map(|_| StageCell { ns: AtomicU64::new(0), calls: AtomicU64::new(0) })
                 .collect(),
@@ -231,6 +239,8 @@ impl Registry {
             &self.spec_accepted,
             &self.spec_rejected_rounds,
             &self.spec_replayed_tokens,
+            &self.pool_jobs,
+            &self.pool_wakes,
         ] {
             c.store(0, Relaxed);
         }
@@ -290,7 +300,9 @@ fn stages_json(phase: Phase) -> Json {
 /// state_bytes), `prefix_cache` (hit/miss/insert/evict counters plus
 /// the residency gauge), `speculation` (round/accept counters, the
 /// derived accept rate, and accept-length + draft/verify timing
-/// histograms), and `stages` (per phase, per stage `{ms, calls}`).
+/// histograms), `pool` (threadx worker-pool job/wake counters and the
+/// resolved worker/thread counts), and `stages` (per phase, per stage
+/// `{ms, calls}`).
 pub fn snapshot_json() -> Json {
     let reg = registry();
     json::obj(vec![
@@ -365,6 +377,15 @@ pub fn snapshot_json() -> Json {
                 ("accept_len", hist_json(&reg.spec_accept_len)),
                 ("draft_us", hist_json(&reg.spec_draft_us)),
                 ("verify_us", hist_json(&reg.spec_verify_us)),
+            ]),
+        ),
+        (
+            "pool",
+            json::obj(vec![
+                ("jobs", json::num(reg.pool_jobs.load(Relaxed) as f64)),
+                ("wakes", json::num(reg.pool_wakes.load(Relaxed) as f64)),
+                ("workers", json::num(crate::threadx::pool_workers() as f64)),
+                ("threads", json::num(crate::threadx::default_threads() as f64)),
             ]),
         ),
         (
@@ -458,6 +479,15 @@ pub fn validate_serving_snapshot(s: &Json) -> Result<()> {
         pc.get(key).with_context(|| format!("prefix_cache: missing '{key}'"))?;
     }
     validate_speculation_group(s.get("speculation")?)?;
+    let pool = s.get("pool")?;
+    for key in ["jobs", "wakes", "workers", "threads"] {
+        if pool.get(key).with_context(|| format!("pool: missing '{key}'"))?.as_f64()? < 0.0 {
+            bail!("pool.{key} must be non-negative");
+        }
+    }
+    if pool.get("threads")?.as_f64()? < 1.0 {
+        bail!("pool.threads must be at least 1");
+    }
     let stages = s.get("stages")?;
     let mut stage_ms = 0.0;
     for phase in Phase::ALL {
@@ -529,5 +559,10 @@ mod tests {
         for key in ["accept_len", "draft_us", "verify_us"] {
             assert!(spec.get(key).unwrap().get("p99").is_ok(), "missing speculation.{key}.p99");
         }
+        let pool = snap.get("pool").unwrap();
+        for key in ["jobs", "wakes", "workers", "threads"] {
+            assert!(pool.get(key).is_ok(), "missing pool.{key}");
+        }
+        assert!(pool.get("threads").unwrap().as_f64().unwrap() >= 1.0);
     }
 }

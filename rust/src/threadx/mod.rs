@@ -1,15 +1,323 @@
-//! Scoped-thread parallelism substrate (no rayon/tokio offline).
+//! Persistent worker-pool parallelism substrate (no rayon/tokio offline).
 //!
-//! The pruning hot paths (per-row OBS solves, per-layer scoring) are
-//! embarrassingly parallel over independent chunks; `parallel_map` fans
-//! them out over `std::thread::scope` workers with a simple atomic work
-//! queue.
+//! The pruning hot paths (per-row OBS solves, per-layer scoring) and the
+//! serving hot paths (striped matvec/matmul, batched conv/scan stages in
+//! `step_batch`) are embarrassingly parallel over independent chunks.
+//! Earlier revisions spawned scoped OS threads on **every**
+//! `parallel_map` call — tens of microseconds of spawn/join per decode
+//! tick.  This module instead keeps a lazily-initialized pool of parked
+//! workers that are woken per job through one shared condvar'd queue:
+//!
+//! * **No per-call spawn, no per-call allocation.**  A job is published
+//!   as a type-erased `&dyn Fn(usize)` plus an item count; workers and
+//!   the caller claim contiguous index stripes from one atomic cursor.
+//! * **Contiguous stripes.**  Claims hand out `grain` consecutive
+//!   indices at a time, so a worker walks a contiguous run of row
+//!   panels and keeps them hot in its own core's cache.
+//! * **Optional core pinning.**  `set_pin(true)` (CLI `--pin`, env
+//!   `SPARSESSM_PIN=1`) pins worker *w* to core *w + 1* via a raw
+//!   `sched_setaffinity` syscall on Linux — no libc crate, and a no-op
+//!   on every other platform.
+//! * **Serial fallback.**  `threads <= 1`, single-item jobs, and nested
+//!   calls from inside a pool worker all run inline on the caller.
+//!
+//! ## Safety argument
+//!
+//! The published closure reference is lifetime-erased, so the pool must
+//! guarantee no worker touches it after `run_job` returns:
+//!
+//! 1. A worker may only enter the claim loop after **registering** under
+//!    the state mutex (`active += 1`) while the job's `task` is visibly
+//!    `Some`.
+//! 2. The caller returns only after `completed == n` **and**
+//!    `active == 0`, and it clears `task` under the same mutex first.
+//! 3. A worker that wakes late therefore finds `task == None` under the
+//!    mutex and goes back to sleep — it can never observe, let alone
+//!    call, a dangling closure.
+//!
+//! Result writes happen before a `Release` increment of `completed`; the
+//! caller re-reads `completed` with `Acquire` before touching results.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Thread-count override set by `set_threads` (0 = unset).
+static THREADS_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+/// Pin workers to cores (Linux only; no-op elsewhere).
+static PIN: AtomicBool = AtomicBool::new(false);
 
 /// Number of worker threads to use for host-side math.
+///
+/// Resolution order: `set_threads` (CLI `--threads`) >
+/// `SPARSESSM_THREADS` env var > `available_parallelism()`.  There is no
+/// hard cap anymore — big boxes get all their cores — only a sanity
+/// clamp to `1..=512`.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+    let o = THREADS_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o.min(512);
+    }
+    // Env + core-count resolution is cached: this sits on the per-tick
+    // decode path and must stay one atomic load.
+    static BASE: OnceLock<usize> = OnceLock::new();
+    *BASE.get_or_init(|| {
+        if let Ok(v) = std::env::var("SPARSESSM_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n > 0 {
+                    return n.min(512);
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(512)
+    })
+}
+
+/// Override the worker count (0 clears the override).  Takes full effect
+/// if called before the first parallel call; after the pool exists, a
+/// *smaller* count still applies (fewer stripes are claimed in parallel
+/// is not enforced, but `<=1` falls back to serial), while a *larger*
+/// count cannot grow the already-spawned pool.
+pub fn set_threads(n: usize) {
+    THREADS_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Request worker→core pinning (effective for workers spawned after the
+/// call; call before the first parallel call to cover the whole pool).
+pub fn set_pin(on: bool) {
+    PIN.store(on, Ordering::Relaxed);
+}
+
+fn pin_requested() -> bool {
+    if PIN.load(Ordering::Relaxed) {
+        return true;
+    }
+    matches!(std::env::var("SPARSESSM_PIN").as_deref(), Ok("1") | Ok("true"))
+}
+
+/// Pin the calling thread to one core.  Raw glibc `sched_setaffinity`
+/// (pid 0 = self) so the offline build needs no libc crate; failures are
+/// ignored (pinning is a performance hint, never a correctness need).
+#[cfg(target_os = "linux")]
+fn pin_self_to_core(core: usize) {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u8) -> i32;
+    }
+    let mut mask = [0u8; 128]; // 1024-CPU set, glibc's default width
+    if core / 8 < mask.len() {
+        mask[core / 8] = 1 << (core % 8);
+        unsafe {
+            let _ = sched_setaffinity(0, mask.len(), mask.as_ptr());
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_self_to_core(_core: usize) {}
+
+/// Type-erased job closure.  Only dereferenced between a worker's
+/// register and deregister (see the module safety argument).
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync + 'static));
+unsafe impl Send for TaskPtr {}
+
+struct PoolState {
+    /// Job sequence number; bumped once per published job.
+    seq: u64,
+    /// Item count of the current job.
+    n: usize,
+    /// Contiguous-claim stripe width of the current job.
+    grain: usize,
+    /// The current job's closure, `Some` only while a job is live.
+    task: Option<TaskPtr>,
+    /// Workers currently inside the claim loop for the live job.
+    active: usize,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    cv_job: Condvar,
+    cv_done: Condvar,
+    /// Next unclaimed index of the live job.
+    next: AtomicUsize,
+    /// Items finished for the live job.
+    completed: AtomicUsize,
+    /// Serializes external callers (one live job at a time).
+    job_gate: Mutex<()>,
+    /// Jobs published since process start.
+    jobs: AtomicU64,
+    /// Worker wake-ups that registered for a job.
+    wakes: AtomicU64,
+    workers: usize,
+}
+
+impl Pool {
+    fn run_job(&self, n: usize, grain: usize, task: &(dyn Fn(usize) + Sync)) {
+        let _gate = self.job_gate.lock().unwrap();
+        // Lifetime erasure: workers provably stop using the pointer
+        // before this frame returns (module safety argument).
+        let ptr: TaskPtr = unsafe {
+            TaskPtr(std::mem::transmute::<
+                *const (dyn Fn(usize) + Sync),
+                *const (dyn Fn(usize) + Sync + 'static),
+            >(task as *const _))
+        };
+        {
+            let mut st = self.state.lock().unwrap();
+            self.next.store(0, Ordering::Relaxed);
+            self.completed.store(0, Ordering::Relaxed);
+            st.seq += 1;
+            st.n = n;
+            st.grain = grain;
+            st.task = Some(ptr);
+        }
+        self.cv_job.notify_all();
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        if crate::telemetry::enabled() {
+            crate::telemetry::registry().pool_jobs.fetch_add(1, Ordering::Relaxed);
+        }
+        // The caller is a full participant — T-1 workers + this thread.
+        IN_POOL.with(|b| b.set(true));
+        claim_loop(&self.next, &self.completed, n, grain, task);
+        IN_POOL.with(|b| b.set(false));
+        // Wait for stragglers, then retract the job so a late-waking
+        // worker can never see (or call) the dead closure.
+        let mut st = self.state.lock().unwrap();
+        while self.completed.load(Ordering::Acquire) < n || st.active > 0 {
+            st = self.cv_done.wait(st).unwrap();
+        }
+        st.task = None;
+    }
+
+    fn worker_loop(&self, worker: usize) {
+        if pin_requested() {
+            // Worker w → core w+1; the (unpinned) caller tends to run
+            // on core 0's free slot.
+            pin_self_to_core(worker + 1);
+        }
+        let mut last_seq = 0u64;
+        loop {
+            let (seq, n, grain, task) = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.seq != last_seq {
+                        if let Some(t) = st.task {
+                            st.active += 1;
+                            break (st.seq, st.n, st.grain, t);
+                        }
+                        // Job already fully retired — don't re-register
+                        // for it when the next one lands.
+                        last_seq = st.seq;
+                    }
+                    st = self.cv_job.wait(st).unwrap();
+                }
+            };
+            last_seq = seq;
+            self.wakes.fetch_add(1, Ordering::Relaxed);
+            if crate::telemetry::enabled() {
+                crate::telemetry::registry().pool_wakes.fetch_add(1, Ordering::Relaxed);
+            }
+            IN_POOL.with(|b| b.set(true));
+            // SAFETY: registered above; the publisher cannot free the
+            // closure until we deregister below.
+            claim_loop(&self.next, &self.completed, n, grain, unsafe { &*task.0 });
+            IN_POOL.with(|b| b.set(false));
+            let mut st = self.state.lock().unwrap();
+            st.active -= 1;
+            drop(st);
+            self.cv_done.notify_all();
+        }
+    }
+}
+
+/// Claim contiguous `grain`-wide stripes of `0..n` and run `task` on
+/// each index; shared by workers and the publishing caller.
+#[inline]
+fn claim_loop(
+    next: &AtomicUsize,
+    completed: &AtomicUsize,
+    n: usize,
+    grain: usize,
+    task: &(dyn Fn(usize) + Sync),
+) {
+    loop {
+        let start = next.fetch_add(grain, Ordering::Relaxed);
+        if start >= n {
+            break;
+        }
+        let end = (start + grain).min(n);
+        for i in start..end {
+            task(i);
+        }
+        // The caller's done-wait also requires `active == 0`, and every
+        // worker notifies cv_done when it deregisters — so no extra
+        // notification is needed here.
+        completed.fetch_add(end - start, Ordering::Release);
+    }
+}
+
+thread_local! {
+    /// Set while this thread executes inside a pool job (worker claim
+    /// loop or the publishing caller's own participation).  Nested
+    /// parallel calls run serially instead of deadlocking on the gate.
+    static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn in_pool_context() -> bool {
+    IN_POOL.with(|b| b.get())
+}
+
+static POOL: OnceLock<Option<&'static Pool>> = OnceLock::new();
+
+/// The process-global pool, spawned on first use with
+/// `default_threads() - 1` parked workers (`None` when that is zero —
+/// serial machines never spawn anything).
+fn pool() -> Option<&'static Pool> {
+    *POOL.get_or_init(|| {
+        let threads = default_threads();
+        if threads <= 1 {
+            return None;
+        }
+        let p: &'static Pool = Box::leak(Box::new(Pool {
+            state: Mutex::new(PoolState { seq: 0, n: 0, grain: 1, task: None, active: 0 }),
+            cv_job: Condvar::new(),
+            cv_done: Condvar::new(),
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            job_gate: Mutex::new(()),
+            jobs: AtomicU64::new(0),
+            wakes: AtomicU64::new(0),
+            workers: threads - 1,
+        }));
+        for w in 0..threads - 1 {
+            std::thread::Builder::new()
+                .name(format!("threadx-{w}"))
+                .spawn(move || p.worker_loop(w))
+                .expect("spawn threadx worker");
+        }
+        Some(p)
+    })
+}
+
+/// `(jobs published, worker wakes)` since process start — 0/0 until the
+/// first parallel call spawns the pool.
+pub fn pool_stats() -> (u64, u64) {
+    match POOL.get().copied().flatten() {
+        Some(p) => (p.jobs.load(Ordering::Relaxed), p.wakes.load(Ordering::Relaxed)),
+        None => (0, 0),
+    }
+}
+
+/// Number of parked workers in the live pool (0 before first use or in
+/// serial mode).  The effective parallel width is `pool_workers() + 1`:
+/// the caller always participates.
+pub fn pool_workers() -> usize {
+    POOL.get().copied().flatten().map_or(0, |p| p.workers)
+}
+
+/// Contiguous-claim stripe width: aim for ~4 claims per participant so
+/// the tail balances, but never less than 1.
+fn job_grain(n: usize, participants: usize) -> usize {
+    (n / (participants.max(1) * 4)).max(1)
 }
 
 /// Apply `f` to every index in `0..n`, in parallel, collecting results in
@@ -20,31 +328,23 @@ where
     T: Send + Default,
     F: Fn(usize) -> T + Sync,
 {
-    let threads = default_threads().min(n.max(1));
-    if threads <= 1 || n <= 1 {
+    if n <= 1 || default_threads() <= 1 || in_pool_context() {
         return (0..n).map(f).collect();
     }
+    let Some(pool) = pool() else {
+        return (0..n).map(f).collect();
+    };
     let mut out: Vec<T> = Vec::with_capacity(n);
     out.resize_with(n, T::default);
-    let next = AtomicUsize::new(0);
     let out_ptr = SendPtr(out.as_mut_ptr());
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| {
-                let out_ptr = &out_ptr;
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let v = f(i);
-                    // SAFETY: each index i is claimed exactly once via the
-                    // atomic counter; slots are disjoint and pre-initialised.
-                    unsafe { *out_ptr.0.add(i) = v };
-                }
-            });
-        }
-    });
+    let task = |i: usize| {
+        let v = f(i);
+        // SAFETY: each index is claimed exactly once via the pool's
+        // atomic cursor; slots are disjoint and pre-initialised, and the
+        // caller only reads them after the job's completion barrier.
+        unsafe { *out_ptr.0.add(i) = v };
+    };
+    pool.run_job(n, job_grain(n, pool.workers + 1), &task);
     out
 }
 
@@ -52,36 +352,40 @@ struct SendPtr<T>(*mut T);
 unsafe impl<T> Sync for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
 
-/// Parallel for-each over mutable chunks of a slice.
+/// Parallel for-each over mutable chunks of a slice.  Chunk indices are
+/// dispatched through the shared pool queue — no per-call allocation at
+/// all (the old implementation built a `Vec<Mutex<Option<..>>>` per
+/// call).
 pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
-    let threads = default_threads();
-    if threads <= 1 || data.len() <= chunk {
+    let chunk = chunk.max(1);
+    let len = data.len();
+    let n = len.div_ceil(chunk);
+    if n <= 1 || default_threads() <= 1 || in_pool_context() {
         for (i, c) in data.chunks_mut(chunk).enumerate() {
             f(i, c);
         }
         return;
     }
-    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
-    let next = AtomicUsize::new(0);
-    let cells: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
-        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
-                    break;
-                }
-                if let Some((idx, c)) = cells[i].lock().unwrap().take() {
-                    f(idx, c);
-                }
-            });
+    let Some(pool) = pool() else {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
         }
-    });
+        return;
+    };
+    let base = SendPtr(data.as_mut_ptr());
+    let task = |i: usize| {
+        let start = i * chunk;
+        let end = (start + chunk).min(len);
+        // SAFETY: chunk index i maps to the disjoint half-open range
+        // [start, end) of `data`; each index is claimed exactly once.
+        let c = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        f(i, c);
+    };
+    pool.run_job(n, job_grain(n, pool.workers + 1), &task);
 }
 
 #[cfg(test)]
@@ -113,5 +417,55 @@ mod tests {
         for (i, x) in v.iter().enumerate() {
             assert_eq!(*x, i as u64);
         }
+    }
+
+    #[test]
+    fn repeated_jobs_reuse_one_pool() {
+        let (jobs0, _) = pool_stats();
+        for round in 0..50 {
+            let v = parallel_map(64, move |i| i + round);
+            assert_eq!(v[63], 63 + round);
+        }
+        let (jobs1, _) = pool_stats();
+        if default_threads() > 1 {
+            assert!(jobs1 - jobs0 >= 50, "jobs {jobs0} -> {jobs1}");
+            assert!(pool_workers() >= 1);
+        }
+    }
+
+    #[test]
+    fn nested_calls_run_serially_without_deadlock() {
+        let v = parallel_map(16, |i| {
+            let inner = parallel_map(8, move |j| i * 8 + j);
+            inner.iter().sum::<usize>()
+        });
+        for (i, s) in v.iter().enumerate() {
+            assert_eq!(*s, (0..8).map(|j| i * 8 + j).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn concurrent_external_callers_serialize_cleanly() {
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..4usize {
+                handles.push(s.spawn(move || {
+                    let v = parallel_map(257, move |i| (t, i * i));
+                    for (i, &(tt, x)) in v.iter().enumerate() {
+                        assert_eq!((tt, x), (t, i * i));
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn grain_is_sane() {
+        assert_eq!(job_grain(0, 8), 1);
+        assert_eq!(job_grain(7, 8), 1);
+        assert_eq!(job_grain(640, 8), 20);
     }
 }

@@ -1,0 +1,156 @@
+//! Property-based tests for the persistent `threadx` worker pool and
+//! the zero-copy mmap checkpoint path (same in-repo `proptest`
+//! substitute as prop_sparse.rs: seeded generators + a case runner
+//! that reports the failing seed).
+//!
+//! Invariants pinned here are the PR's acceptance contract: the pooled
+//! parallel matmul is **bit-identical** to the serial walk across
+//! formats × kernels (row-panel striping never reorders a row's
+//! reduction), the whole-model decode is bit-identical serial vs
+//! pooled, and `SparseModel::load_mmap` produces a model `==` the
+//! owned `SparseModel::load` with bit-identical logits across
+//! formats × dtypes — with planes actually borrowing from the mapping
+//! on unix little-endian hosts.
+
+use sparsessm::model::toy::toy_flat_params_random;
+use sparsessm::rngx::Pcg;
+use sparsessm::sparse::compile::{magnitude_prune_all, PackPolicy};
+use sparsessm::sparse::testutil::masked_random;
+use sparsessm::sparse::{decode, Dtype, Format, Kernel, Packed, SparseModel, PARALLEL_MIN_WORK};
+use sparsessm::threadx;
+use std::sync::Mutex;
+
+/// Serializes tests that toggle the process-global thread override so
+/// concurrently running cases can't observe each other's setting.
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Mini property harness: run `f` for `cases` seeds; on failure report
+/// the seed so the case can be replayed.
+fn check<F: Fn(&mut Pcg) -> Result<(), String>>(name: &str, cases: u64, f: F) {
+    for seed in 0..cases {
+        let mut rng = Pcg::seeded(0xB007 ^ seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Run `f` serial (threads = 1), then pooled (threads = n), restoring
+/// the override either way, and return both results.
+fn serial_vs_pool<T>(n: usize, f: impl Fn() -> T) -> (T, T) {
+    let _guard = THREADS_LOCK.lock().unwrap();
+    let restore = threadx::default_threads();
+    threadx::set_threads(1);
+    let serial = f();
+    threadx::set_threads(n.max(2));
+    let pooled = f();
+    threadx::set_threads(restore);
+    (serial, pooled)
+}
+
+#[test]
+fn prop_pool_matmul_bit_identical_to_serial_across_formats_and_kernels() {
+    check("pool-matmul-bit-identical", 6, |rng| {
+        // Shapes big enough that t·stored crosses PARALLEL_MIN_WORK even
+        // at 90% sparsity, so the striped parallel branch really runs.
+        let rows = 96 + rng.below(64);
+        let cols = 64 + rng.below(64);
+        let t = 9 + rng.below(8);
+        for sparsity in [0.0, 0.5, 0.9] {
+            let w = masked_random(rng, rows, cols, sparsity);
+            let x: Vec<f32> = (0..t * cols).map(|_| (rng.normal() * 0.5) as f32).collect();
+            for fmt in [Format::Dense, Format::Csr, Format::Bitmask, Format::Bcsr] {
+                let p = Packed::pack_as(&w, rows, cols, fmt);
+                if sparsity == 0.0 && t * p.stored() < PARALLEL_MIN_WORK {
+                    return Err(format!("dense {rows}x{cols} t={t} below parallel threshold"));
+                }
+                for kernel in Kernel::ALL {
+                    let (serial, pooled) =
+                        serial_vs_pool(threadx::default_threads(), || p.matmul_k(&x, t, kernel));
+                    if serial != pooled {
+                        return Err(format!(
+                            "{fmt:?}/{kernel:?} at sparsity {sparsity}: pooled matmul \
+                             diverged from serial"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pool_model_decode_bit_identical_to_serial() {
+    // m370 dims so the head matmul crosses the parallel threshold; one
+    // compile, both kernels.
+    let mut params = decode::m370_bench_params();
+    magnitude_prune_all(&mut params, 0.5).unwrap();
+    for kernel in Kernel::ALL {
+        let policy = PackPolicy::auto().with_kernel(kernel);
+        let model = SparseModel::compile(&params, &policy).unwrap();
+        let mut rng = Pcg::seeded(0xDECO);
+        let (bt, l) = (2usize, 24usize);
+        let tokens: Vec<i32> =
+            (0..bt * l).map(|_| rng.below(model.meta.vocab) as i32).collect();
+        let (serial, pooled) = serial_vs_pool(threadx::default_threads(), || {
+            decode::forward_logits(&model, &tokens, bt, l).unwrap()
+        });
+        assert_eq!(serial, pooled, "{kernel:?}: pooled decode diverged from serial");
+    }
+}
+
+#[test]
+fn prop_load_mmap_equals_owned_load_with_bit_identical_decode() {
+    let dir = std::env::temp_dir();
+    check("load-mmap-equals-owned", 3, |rng| {
+        let p = toy_flat_params_random(16, 2);
+        for (fmt, dtype) in [
+            (Format::Dense, Dtype::F32),
+            (Format::Csr, Dtype::F16),
+            (Format::Bitmask, Dtype::I8),
+            (Format::Bcsr, Dtype::F32),
+        ] {
+            let mut pruned = p.clone();
+            magnitude_prune_all(&mut pruned, 0.25 + 0.5 * rng.uniform())
+                .map_err(|e| e.to_string())?;
+            let policy = PackPolicy::of(fmt).with_dtype(dtype);
+            let model = SparseModel::compile(&pruned, &policy).map_err(|e| e.to_string())?;
+
+            let path = dir.join(format!(
+                "sparsessm-prop-mmap-{}-{}-{}.ckpt",
+                std::process::id(),
+                fmt.name(),
+                dtype.name()
+            ));
+            let res = (|| -> Result<(), String> {
+                model.save(&path).map_err(|e| e.to_string())?;
+                let owned = SparseModel::load(&path).map_err(|e| e.to_string())?;
+                let mapped = SparseModel::load_mmap(&path).map_err(|e| e.to_string())?;
+                if owned != model || mapped != model {
+                    return Err(format!("{fmt:?}/{dtype:?}: loaded model drifted"));
+                }
+                #[cfg(all(unix, target_endian = "little"))]
+                if !mapped.is_mapped() {
+                    return Err(format!(
+                        "{fmt:?}/{dtype:?}: v2 load_mmap fell back to owned planes"
+                    ));
+                }
+                let (bt, l) = (2usize, 8usize);
+                let tokens: Vec<i32> =
+                    (0..bt * l).map(|_| rng.below(model.meta.vocab) as i32).collect();
+                let a =
+                    decode::forward_logits(&owned, &tokens, bt, l).map_err(|e| e.to_string())?;
+                let b =
+                    decode::forward_logits(&mapped, &tokens, bt, l).map_err(|e| e.to_string())?;
+                if a != b {
+                    return Err(format!("{fmt:?}/{dtype:?}: mapped decode diverged from owned"));
+                }
+                Ok(())
+            })();
+            let _ = std::fs::remove_file(&path);
+            res?;
+        }
+        Ok(())
+    });
+}

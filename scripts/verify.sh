@@ -93,5 +93,15 @@ BENCH_SERVING="$(dirname "$(cargo locate-project --message-format plain)")/BENCH
 grep -q '"serve_overload"' "$BENCH_SERVING"
 grep -q '"requests_shed"' "$BENCH_SERVING"
 
+# Worker-pool + mmap smoke (DESIGN.md §18): the pooled matmul/decode
+# must be bit-identical to serial and load_mmap must equal the owned
+# load with bit-identical logits, all under release codegen; the
+# `--serve` run above also folds the pool serial-vs-parallel and
+# cold-start owned-vs-mmap A/B sections into BENCH_serving.json.
+step "pool + mmap smoke (release bit-identity props + A/B sections)"
+cargo test --release -q --test prop_pool
+grep -q '"pool"' "$BENCH_SERVING"
+grep -q '"cold_start"' "$BENCH_SERVING"
+
 echo
 echo "verify OK"
